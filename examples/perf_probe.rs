@@ -1,0 +1,29 @@
+//! Internal: wall-clock profile target / sim diagnostics (one engine run).
+use ghs_mst::coordinator::Workload;
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::engine::Engine;
+use ghs_mst::graph::generators::GraphFamily;
+
+fn main() {
+    let scale: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+    let ranks: u32 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let fam = match std::env::args().nth(3).as_deref() {
+        Some("ssca2") => GraphFamily::Ssca2,
+        Some("random") => GraphFamily::Random,
+        _ => GraphFamily::Rmat,
+    };
+    let g = Workload::new(fam, scale).build();
+    let t0 = std::time::Instant::now();
+    let run = Engine::new(&g, GhsConfig::final_version(ranks)).unwrap().run().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let maxc = run.sim.compute.iter().cloned().fold(0.0, f64::max);
+    let maxw = run.sim.comm_wait.iter().cloned().fold(0.0, f64::max);
+    // which rank has max clock?
+    let (argmax, _) = run.sim.compute.iter().zip(&run.sim.comm_wait).map(|(c, w)| c + w)
+        .enumerate().fold((0, 0.0), |acc, (i, t)| if t > acc.1 { (i, t) } else { acc });
+    println!("sim={:.4} comp_max={:.4} wait_max={:.4} critical_rank={} (c={:.4} w={:.4}) supersteps={} msgs={} retries={} wall={:.2}s tput={:.2}M/s",
+        run.sim.total_time, maxc, maxw, argmax,
+        run.sim.compute[argmax], run.sim.comm_wait[argmax],
+        run.supersteps, run.sent.total(), run.profile.msgs_postponed, dt,
+        run.sent.total() as f64 / dt / 1e6);
+}

@@ -1,0 +1,46 @@
+//! End-to-end driver: the paper's headline experiment on a real (small)
+//! workload. Generates all three graph families, runs the full distributed
+//! engine across 1..N simulated MVS-10P nodes, verifies every first run
+//! against Kruskal, and reports the paper's headline metric — strong
+//! scaling of the final optimized version — plus the optimization-stack
+//! ablation on one node. Results land in results/scaling_study.md.
+//!
+//! Run: `cargo run --release --example scaling_study [-- <scale> <max_nodes>]`
+//! (defaults: scale 14, 32 nodes; the paper used scale 24 and 64 nodes on
+//! the 207-node MVS-10P cluster — see DESIGN.md §Substitutions.)
+
+use ghs_mst::coordinator::experiments::{fig2, sweep_search, table2, ExpOptions};
+use ghs_mst::coordinator::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let scale: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(14);
+    let max_nodes: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let opts = ExpOptions { scale, max_nodes, verify: true, quiet: false };
+
+    println!("== ghs-mst end-to-end scaling study ==");
+    println!("workloads: RMAT/SSCA2/Random scale {scale}, 8 ranks/node, up to {max_nodes} nodes");
+    println!("(simulated MVS-10P cluster — LogGOPS 4xFDR + calibrated cost model)\n");
+
+    let t = table2(&opts)?;
+    print_table(&t, "scaling_study")?;
+
+    println!("\n== optimization stack (paper Fig 2) on the same workload ==\n");
+    let (a, b) = fig2(&opts)?;
+    print_table(&a, "scaling_study_fig2a")?;
+    print_table(&b, "scaling_study_fig2b")?;
+
+    println!("\n== local-edge search strategies (paper §4.1) ==\n");
+    let s = sweep_search(&opts)?;
+    print_table(&s, "scaling_study_search")?;
+
+    println!("\nAll runs verified against the Kruskal oracle. ✓");
+    Ok(())
+}
+
+fn print_table(t: &Table, name: &str) -> anyhow::Result<()> {
+    println!("{}", t.to_markdown());
+    let path = t.write(name)?;
+    eprintln!("[wrote {path:?}]");
+    Ok(())
+}

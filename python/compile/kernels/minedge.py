@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: masked per-vertex minimum-outgoing-edge reduction.
+
+This is the compute hot-spot of fragment-based MST (Boruvka / GHS level-0):
+for a tile of vertices with padded adjacency rows, find each vertex's
+minimum-weight edge leaving its fragment.
+
+Inputs (one [B, K] adjacency block; B rows of K padded slots):
+  frag     [B]    int32  fragment (union-find root) id of each row vertex
+  nbr_frag [B, K] int32  fragment id of the far endpoint of each slot
+  w        [B, K] f32    edge weight of each slot; +inf in padding slots
+
+Outputs:
+  best_w   [B]    f32    min weight over slots with nbr_frag != frag
+                         (+inf when the vertex has no outgoing edge)
+  best_i   [B]    int32  argmin slot index (0 when none)
+
+Weights are *edge ranks* encoded as f32 (the Rust caller sorts edges once
+by exact extended weight and ships the rank), so the reduction is exact:
+f32 holds integers up to 2^24 exactly and ranks are unique.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper targets a
+CPU/MPI cluster; on a TPU this reduction is a VPU row-reduce over VMEM
+tiles. BlockSpec tiles the [B, K] block HBM->VMEM in (TB, K) slabs; the
+masked min/argmin vectorizes along the K lanes. interpret=True is required
+for CPU-PJRT execution (real TPU lowering emits a Mosaic custom-call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile height. (TB, K) f32 slabs of 256x32 are 32 KiB — far
+# under VMEM limits, leaving room for double buffering.
+DEFAULT_TB = 256
+
+
+def _minedge_tile_kernel(frag_ref, nbrf_ref, w_ref, bw_ref, bi_ref):
+    """One (TB, K) tile: masked row min + argmin."""
+    frag = frag_ref[...]  # [TB]
+    nbrf = nbrf_ref[...]  # [TB, K]
+    w = w_ref[...]        # [TB, K]
+    outgoing = nbrf != frag[:, None]
+    wm = jnp.where(outgoing, w, jnp.inf)
+    bw_ref[...] = jnp.min(wm, axis=1)
+    bi_ref[...] = jnp.argmin(wm, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def minedge(frag, nbr_frag, w, *, tb=DEFAULT_TB):
+    """Masked per-row min/argmin over a padded adjacency block.
+
+    Args:
+      frag:     int32[B]      row fragment ids.
+      nbr_frag: int32[B, K]   slot fragment ids.
+      w:        f32[B, K]     slot weights (+inf padding).
+      tb:       row-tile height; must divide B.
+
+    Returns:
+      (best_w f32[B], best_i int32[B])
+    """
+    b, k = w.shape
+    assert frag.shape == (b,) and nbr_frag.shape == (b, k)
+    tb = min(tb, b)
+    assert b % tb == 0, f"rows {b} not divisible by tile {tb}"
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _minedge_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only.
+    )(frag, nbr_frag, w)

@@ -1,0 +1,44 @@
+"""L2: the JAX compute graph around the L1 kernel.
+
+`boruvka_round` is the model the Rust runtime executes per fragment round:
+mask construction + the Pallas masked row-reduction, fused by XLA into one
+executable. The fragment-level reduction (segment-min over union-find
+roots) is O(B) scalar work and stays in the Rust coordinator, which owns
+the union-find state; shipping it to the accelerator would serialize a
+hashmap through the device for no FLOP gain.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.minedge import minedge
+
+
+def boruvka_round(frag, nbr_frag, w):
+    """One Boruvka/GHS-level-0 round over a padded adjacency block.
+
+    Args:
+      frag:     int32[B]    fragment (root) id per row vertex.
+      nbr_frag: int32[B,K]  fragment id of each slot's far endpoint.
+      w:        f32[B,K]    slot weights (+inf padding), rank-encoded.
+
+    Returns:
+      (best_w f32[B], best_i int32[B]) — each row's cheapest outgoing slot.
+    """
+    return minedge(frag, nbr_frag, w)
+
+
+def boruvka_round_ref(frag, nbr_frag, w):
+    """Same computation without Pallas (used to cross-check lowering)."""
+    from compile.kernels.ref import minedge_ref
+
+    return minedge_ref(frag, nbr_frag, w)
+
+
+def example_args(b, k):
+    """ShapeDtypeStructs for AOT lowering at block shape [b, k]."""
+    return (
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+    )

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Fig 2a/2b (runtime and scaling as the
+//! optimizations stack: base -> +hash -> +hash+test-queue -> final).
+//! Run: `cargo bench --bench bench_fig2`
+
+use ghs_mst::coordinator::experiments::{ablation_test_queue, fig2, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_fig2] scale {} max_nodes {}", opts.scale, opts.max_nodes);
+    let (a, b) = fig2(&opts)?;
+    println!("{}", a.to_markdown());
+    println!("{}", b.to_markdown());
+    a.write("fig2a")?;
+    let p = b.write("fig2b")?;
+    // The §3.4 mechanism behind Fig 2b's 2x-scaling claim, shown where the
+    // postponed-Test churn actually builds up at this scale.
+    let abl = ablation_test_queue(&opts)?;
+    println!("{}", abl.to_markdown());
+    abl.write("ablation_test_queue")?;
+    eprintln!("[bench_fig2] wrote {p:?} (+fig2a, +ablation_test_queue)");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig 3 (profile breakdown of the process loop,
+//! hash-only version vs final version).
+//! Run: `cargo bench --bench bench_fig3`
+
+use ghs_mst::coordinator::experiments::{fig3, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_fig3] scale {}", opts.scale);
+    let t = fig3(&opts)?;
+    println!("{}", t.to_markdown());
+    let p = t.write("fig3")?;
+    eprintln!("[bench_fig3] wrote {p:?}");
+    Ok(())
+}

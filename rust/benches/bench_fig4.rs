@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig 4 (average aggregated message size per
+//! execution-time interval for several node counts, MAX_MSG_SIZE=20000).
+//! Run: `cargo bench --bench bench_fig4`
+
+use ghs_mst::coordinator::experiments::{fig4, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_fig4] scale {}", opts.scale);
+    let t = fig4(&opts)?;
+    println!("{}", t.to_markdown());
+    let p = t.write("fig4")?;
+    eprintln!("[bench_fig4] wrote {p:?}");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig 5 (weak scaling: growing RMAT scales on a
+//! fixed 32 nodes / 256 ranks).
+//! Run: `cargo bench --bench bench_fig5`
+
+use ghs_mst::coordinator::experiments::{fig5, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_fig5] scales {}..={}", opts.scale.saturating_sub(4).max(8), opts.scale);
+    let t = fig5(&opts)?;
+    println!("{}", t.to_markdown());
+    let p = t.write("fig5")?;
+    eprintln!("[bench_fig5] wrote {p:?}");
+    Ok(())
+}

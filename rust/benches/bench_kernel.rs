@@ -1,0 +1,71 @@
+//! Bench: the L1/runtime micro-benchmark — throughput of the AOT Pallas
+//! min-edge kernel through PJRT vs a scalar Rust reduction, plus the
+//! bytes-touched roofline estimate recorded in EXPERIMENTS.md §Perf.
+//! Run: `make artifacts && cargo bench --bench bench_kernel`
+
+use std::time::Instant;
+
+use ghs_mst::coordinator::report::Table;
+use ghs_mst::runtime::minedge::MinEdgeExecutable;
+use ghs_mst::runtime::Runtime;
+use ghs_mst::util::prng::Xoshiro256;
+
+fn scalar_minedge(frag: &[i32], nbrf: &[i32], w: &[f32], k: usize, bw: &mut [f32], bi: &mut [i32]) {
+    for (r, f) in frag.iter().enumerate() {
+        let (mut best, mut idx) = (f32::INFINITY, 0i32);
+        for s in 0..k {
+            let j = r * k + s;
+            if nbrf[j] != *f && w[j] < best {
+                best = w[j];
+                idx = s as i32;
+            }
+        }
+        bw[r] = best;
+        bi[r] = idx;
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let mut t = Table::new(
+        "Kernel micro-benchmark — PJRT minedge vs scalar Rust",
+        &["Block", "Reps", "Device ms/block", "Scalar ms/block", "Device Mrows/s", "GB/s touched"],
+    );
+    for (b, k, reps) in [(128usize, 16usize, 50u32), (4096, 32, 20)] {
+        let exe = MinEdgeExecutable::load(&rt, b, k)?;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let frag: Vec<i32> = (0..b).map(|_| rng.next_below(64) as i32).collect();
+        let nbrf: Vec<i32> = (0..b * k).map(|_| rng.next_below(64) as i32).collect();
+        let w: Vec<f32> = (0..b * k).map(|i| i as f32).collect();
+        // Warm-up (compile caches, first-touch).
+        exe.run(&frag, &nbrf, &w)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            exe.run(&frag, &nbrf, &w)?;
+        }
+        let dev = t0.elapsed().as_secs_f64() / reps as f64;
+        let (mut bw, mut bi) = (vec![0f32; b], vec![0i32; b]);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            scalar_minedge(&frag, &nbrf, &w, k, &mut bw, &mut bi);
+        }
+        let scalar = t0.elapsed().as_secs_f64() / reps as f64;
+        let bytes = (b * k * 8 + b * 4) as f64; // nbrf + w read, frag re-read
+        t.push_row(vec![
+            format!("{b}x{k}"),
+            reps.to_string(),
+            format!("{:.3}", dev * 1e3),
+            format!("{:.3}", scalar * 1e3),
+            format!("{:.2}", b as f64 / dev / 1e6),
+            format!("{:.2}", bytes / dev / 1e9),
+        ]);
+    }
+    t.note(
+        "interpret-mode Pallas on the CPU PJRT client measures dispatch + reduction, not TPU \
+         perf; DESIGN.md §Hardware-Adaptation estimates VMEM/VPU roofline for real hardware.",
+    );
+    println!("{}", t.to_markdown());
+    let p = t.write("kernel_bench")?;
+    eprintln!("[bench_kernel] wrote {p:?}");
+    Ok(())
+}

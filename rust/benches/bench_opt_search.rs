@@ -1,0 +1,15 @@
+//! Bench: regenerate the paper's §4.1 study (linear vs binary vs hash
+//! local-edge search on one node; paper: -2 % / -18 %).
+//! Run: `cargo bench --bench bench_opt_search`
+
+use ghs_mst::coordinator::experiments::{sweep_search, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_opt_search] scale {}", opts.scale);
+    let t = sweep_search(&opts)?;
+    println!("{}", t.to_markdown());
+    let p = t.write("sweep_search")?;
+    eprintln!("[bench_opt_search] wrote {p:?}");
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Table 2 (strong scaling of the final version on
+//! RMAT / SSCA2 / Random). `GHS_SCALE` / `GHS_MAX_NODES` override the
+//! laptop-sized defaults.
+//! Run: `cargo bench --bench bench_table2`
+
+use ghs_mst::coordinator::experiments::{table2, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions::default();
+    eprintln!("[bench_table2] scale {} max_nodes {}", opts.scale, opts.max_nodes);
+    let t = table2(&opts)?;
+    println!("{}", t.to_markdown());
+    let p = t.write("table2")?;
+    eprintln!("[bench_table2] wrote {p:?}");
+    Ok(())
+}

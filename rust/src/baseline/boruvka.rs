@@ -1,0 +1,151 @@
+//! Borůvka's algorithm (paper ref [6]).
+//!
+//! Each round, every fragment (component of chosen edges) selects its
+//! minimum-weight outgoing edge; all selected edges are added and fragments
+//! merged. This is exactly the fragment structure GHS distributes, and the
+//! per-round "min outgoing edge per fragment" reduction is the compute
+//! hot-spot the L1 Pallas kernel accelerates (see `runtime::minedge`).
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::ghs::weight::EdgeWeight;
+use crate::graph::EdgeList;
+
+/// One Borůvka round: for the current fragments, the index of the
+/// minimum-weight outgoing edge per fragment (by root id), or `u32::MAX`.
+///
+/// Exposed separately so the XLA-accelerated path can be compared
+/// against this scalar reference round-for-round.
+pub fn min_outgoing_per_fragment(g: &EdgeList, uf: &mut UnionFind) -> Vec<(u32, u32)> {
+    // (fragment root, best edge index) pairs, sparse.
+    let mut best: std::collections::HashMap<u32, (EdgeWeight, u32)> = std::collections::HashMap::new();
+    for (i, e) in g.edges.iter().enumerate() {
+        let (ru, rv) = (uf.find(e.u), uf.find(e.v));
+        if ru == rv {
+            continue;
+        }
+        let w = e.unique_weight();
+        for r in [ru, rv] {
+            match best.get_mut(&r) {
+                None => {
+                    best.insert(r, (w, i as u32));
+                }
+                Some(cur) => {
+                    if w < cur.0 {
+                        *cur = (w, i as u32);
+                    }
+                }
+            }
+        }
+    }
+    let mut out: Vec<(u32, u32)> = best.into_iter().map(|(r, (_, i))| (r, i)).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Minimum spanning forest via Borůvka rounds.
+pub fn boruvka(g: &EdgeList) -> Forest {
+    boruvka_with_rounds(g).0
+}
+
+/// Borůvka returning the number of rounds executed (≤ ⌈log2 n⌉ + 1).
+pub fn boruvka_with_rounds(g: &EdgeList) -> (Forest, u32) {
+    let mut uf = UnionFind::new(g.n_vertices);
+    let mut edges = Vec::new();
+    let mut rounds = 0u32;
+    loop {
+        let picks = min_outgoing_per_fragment(g, &mut uf);
+        if picks.is_empty() {
+            break;
+        }
+        rounds += 1;
+        let mut merged_any = false;
+        for &(_, i) in &picks {
+            let e = g.edges[i as usize];
+            if uf.union(e.u, e.v) {
+                edges.push(e);
+                merged_any = true;
+            }
+        }
+        debug_assert!(merged_any, "a pick round must merge at least one pair");
+    }
+    (Forest { edges, n_components: uf.n_sets() }, rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn empty_and_single() {
+        let f = boruvka(&EdgeList::with_vertices(0));
+        assert_eq!(f.edges.len(), 0);
+        let f = boruvka(&EdgeList::with_vertices(3));
+        assert_eq!(f.n_components, 3);
+    }
+
+    #[test]
+    fn round_bound_holds() {
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 10, 5));
+        let (f, rounds) = boruvka_with_rounds(&g);
+        assert!(f.check_edge_count(&g));
+        assert!(rounds <= 11, "rounds {rounds} exceeds log bound");
+    }
+
+    #[test]
+    fn property_boruvka_equals_kruskal() {
+        props("boruvka == kruskal", 150, |gen| {
+            let n = gen.usize_in(1, 60) as u32;
+            let g0 = structured::connected_random(n, gen.usize_in(0, 150), gen.rng());
+            let (g, _) = preprocess(&g0);
+            let fb = boruvka(&g);
+            let fk = kruskal(&g);
+            assert_eq!(fb.canonical_edges(), fk.canonical_edges());
+        });
+    }
+
+    #[test]
+    fn property_disconnected_and_duplicates() {
+        props("boruvka forest dup weights", 80, |gen| {
+            let n = gen.usize_in(2, 30) as u32;
+            let mut el = EdgeList::with_vertices(n * 2);
+            // Two halves, never connected; many duplicate weights.
+            for _ in 0..gen.usize_in(0, 80) {
+                let u = gen.u64_below(n as u64) as u32;
+                let v = gen.u64_below(n as u64) as u32;
+                if u != v {
+                    el.push(u, v, 0.25);
+                }
+            }
+            for _ in 0..gen.usize_in(0, 80) {
+                let u = n + gen.u64_below(n as u64) as u32;
+                let v = n + gen.u64_below(n as u64) as u32;
+                if u != v {
+                    el.push(u, v, 0.75);
+                }
+            }
+            let (g, _) = preprocess(&el);
+            let fb = boruvka(&g);
+            let fk = kruskal(&g);
+            assert_eq!(fb.canonical_edges(), fk.canonical_edges());
+            assert_eq!(fb.n_components, fk.n_components);
+        });
+    }
+
+    #[test]
+    fn all_generators_match_oracle() {
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let (g, _) = preprocess(&generate(family, 8, 21));
+            assert_eq!(
+                boruvka(&g).canonical_edges(),
+                kruskal(&g).canonical_edges(),
+                "{family:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Kruskal's algorithm (paper ref [5]) — the sequential correctness oracle.
+//!
+//! Sorting uses the *extended* unique weight (weight + `special_id`), the
+//! same total order GHS uses, so on inputs with duplicate raw weights both
+//! algorithms select the identical edge set — allowing edge-for-edge
+//! comparison, not just weight comparison.
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::graph::EdgeList;
+
+/// Minimum spanning forest via Kruskal's algorithm.
+pub fn kruskal(g: &EdgeList) -> Forest {
+    let mut order: Vec<u32> = (0..g.n_edges() as u32).collect();
+    order.sort_unstable_by_key(|&i| g.edges[i as usize].unique_weight());
+    let mut uf = UnionFind::new(g.n_vertices);
+    let mut edges = Vec::new();
+    for &i in &order {
+        let e = g.edges[i as usize];
+        if e.u != e.v && uf.union(e.u, e.v) {
+            edges.push(e);
+            if uf.n_sets() == 1 {
+                break;
+            }
+        }
+    }
+    Forest { edges, n_components: uf.n_sets() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+    use crate::util::minitest::props;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn path_mst_is_whole_path() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = structured::path(10, &mut rng);
+        let f = kruskal(&g);
+        assert_eq!(f.edges.len(), 9);
+        assert_eq!(f.n_components, 1);
+        assert!((f.total_weight() - g.total_weight()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cycle_drops_heaviest_edge() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = structured::cycle(8, &mut rng);
+        let f = kruskal(&g);
+        assert_eq!(f.edges.len(), 7);
+        let heaviest = g.edges.iter().map(|e| e.w).fold(f64::MIN, f64::max);
+        assert!((f.total_weight() - (g.total_weight() - heaviest)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_small_graph() {
+        // CLRS-style example with hand-computed MST weight.
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 1, 1.0);
+        g.push(1, 2, 2.0);
+        g.push(2, 3, 3.0);
+        g.push(3, 0, 4.0);
+        g.push(0, 2, 5.0);
+        let f = kruskal(&g);
+        assert_eq!(f.edges.len(), 3);
+        assert!((f.total_weight() - 6.0).abs() < 1e-12);
+        assert_eq!(f.canonical_edges(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn forest_on_disconnected_graph() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = structured::connected_random(10, 5, &mut rng);
+        let b = structured::connected_random(6, 2, &mut rng);
+        let g = structured::disjoint_union(&a, &b);
+        let f = kruskal(&g);
+        assert_eq!(f.n_components, 2);
+        assert_eq!(f.edges.len(), 14); // (10-1) + (6-1)
+        assert!(f.check_edge_count(&g));
+    }
+
+    #[test]
+    fn duplicate_weights_still_give_spanning_tree() {
+        props("kruskal dup weights", 50, |g| {
+            let n = g.usize_in(2, 40) as u32;
+            let mut el = EdgeList::with_vertices(n);
+            // Everything weight 0.5: the tiebreak must make it deterministic.
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    el.push(u, v, 0.5);
+                }
+            }
+            let f = kruskal(&el);
+            assert_eq!(f.edges.len() as u32, n - 1);
+            assert_eq!(f.n_components, 1);
+        });
+    }
+
+    #[test]
+    fn matches_prim_on_generators() {
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let (g, _) = preprocess(&generate(family, 8, 11));
+            let fk = kruskal(&g);
+            let fp = crate::baseline::prim::prim(&g);
+            assert_eq!(fk.canonical_edges(), fp.canonical_edges(), "{family:?}");
+        }
+    }
+}

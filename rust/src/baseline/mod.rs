@@ -1,0 +1,54 @@
+//! Sequential MST baselines: Kruskal (the correctness oracle used by every
+//! property test), Prim, and Borůvka (whose fragment structure is what the
+//! XLA-accelerated path and GHS itself compute distributedly).
+
+pub mod boruvka;
+pub mod kruskal;
+pub mod prim;
+pub mod union_find;
+
+use crate::graph::{EdgeList, WeightedEdge};
+
+/// A minimum spanning forest: the selected edges plus summary fields.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    /// Edges of the forest.
+    pub edges: Vec<WeightedEdge>,
+    /// Number of trees (connected components of the input).
+    pub n_components: u32,
+}
+
+impl Forest {
+    /// Total raw weight of the forest.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+
+    /// Canonical sorted list of (min-endpoint, max-endpoint) pairs — used to
+    /// compare forests from different algorithms edge-for-edge.
+    pub fn canonical_edges(&self) -> Vec<(u32, u32)> {
+        let mut v: Vec<(u32, u32)> = self.edges.iter().map(|e| e.canonical()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Sanity: |edges| == n - #components must hold for any spanning forest.
+    pub fn check_edge_count(&self, g: &EdgeList) -> bool {
+        self.edges.len() as u64 + self.n_components as u64 == g.n_vertices as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forest_weight_and_canonical() {
+        let f = Forest {
+            edges: vec![WeightedEdge::new(3, 1, 0.5), WeightedEdge::new(0, 2, 0.25)],
+            n_components: 1,
+        };
+        assert!((f.total_weight() - 0.75).abs() < 1e-12);
+        assert_eq!(f.canonical_edges(), vec![(0, 2), (1, 3)]);
+    }
+}

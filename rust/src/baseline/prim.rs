@@ -1,0 +1,108 @@
+//! Prim's algorithm (paper ref [4]) with a binary heap, run from every
+//! unvisited vertex so it also yields a spanning forest.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::baseline::Forest;
+use crate::ghs::weight::EdgeWeight;
+use crate::graph::csr::Csr;
+use crate::graph::EdgeList;
+
+/// Minimum spanning forest via repeated Prim.
+pub fn prim(g: &EdgeList) -> Forest {
+    let csr = Csr::full(g);
+    let n = g.n_vertices as usize;
+    let mut in_tree = vec![false; n];
+    let mut edges = Vec::new();
+    let mut n_components = 0u32;
+    // Heap entries: (unique weight, adjacency index, tree-side vertex).
+    let mut heap: BinaryHeap<Reverse<(EdgeWeight, usize, u32)>> = BinaryHeap::new();
+
+    for start in 0..g.n_vertices {
+        if in_tree[start as usize] {
+            continue;
+        }
+        n_components += 1;
+        in_tree[start as usize] = true;
+        fn push_frontier(
+            csr: &Csr,
+            in_tree: &[bool],
+            heap: &mut BinaryHeap<Reverse<(EdgeWeight, usize, u32)>>,
+            v: u32,
+        ) {
+            for (i, nbr, w) in csr.neighbours(v) {
+                if !in_tree[nbr as usize] {
+                    heap.push(Reverse((EdgeWeight::new(w, v, nbr), i, v)));
+                }
+            }
+        }
+        push_frontier(&csr, &in_tree, &mut heap, start);
+        while let Some(Reverse((_uw, i, from))) = heap.pop() {
+            let to = csr.col(i);
+            if in_tree[to as usize] {
+                continue;
+            }
+            in_tree[to as usize] = true;
+            edges.push(csr.edge_at(from, i));
+            push_frontier(&csr, &in_tree, &mut heap, to);
+        }
+    }
+    Forest { edges, n_components }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::structured;
+    use crate::graph::preprocess::preprocess;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn single_vertex() {
+        let g = EdgeList::with_vertices(1);
+        let f = prim(&g);
+        assert_eq!(f.edges.len(), 0);
+        assert_eq!(f.n_components, 1);
+    }
+
+    #[test]
+    fn star_takes_all_edges() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(4);
+        let g = structured::star(12, &mut rng);
+        let f = prim(&g);
+        assert_eq!(f.edges.len(), 11);
+    }
+
+    #[test]
+    fn property_prim_equals_kruskal() {
+        props("prim == kruskal", 150, |gen| {
+            let n = gen.usize_in(1, 60) as u32;
+            let extra = gen.usize_in(0, 120);
+            let g0 = structured::connected_random(n, extra, gen.rng());
+            let (g, _) = preprocess(&g0);
+            let fp = prim(&g);
+            let fk = kruskal(&g);
+            assert_eq!(fp.canonical_edges(), fk.canonical_edges());
+            assert_eq!(fp.n_components, fk.n_components);
+        });
+    }
+
+    #[test]
+    fn property_forest_on_disconnected() {
+        props("prim forest", 80, |gen| {
+            let a = structured::connected_random(gen.usize_in(1, 20) as u32, 5, gen.rng());
+            let b = structured::connected_random(gen.usize_in(1, 20) as u32, 5, gen.rng());
+            let g0 = structured::with_isolated(
+                &structured::disjoint_union(&a, &b),
+                gen.usize_in(0, 4) as u32,
+            );
+            let (g, _) = preprocess(&g0);
+            let fp = prim(&g);
+            let fk = kruskal(&g);
+            assert_eq!(fp.canonical_edges(), fk.canonical_edges());
+            assert!(fp.check_edge_count(&g));
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Disjoint-set union (union by rank + path halving). Substrate for the
+//! Kruskal oracle, the Borůvka baseline and forest verification.
+
+/// Union-find over `0..n`.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    n_sets: u32,
+}
+
+impl UnionFind {
+    /// `n` singleton sets.
+    pub fn new(n: u32) -> Self {
+        Self { parent: (0..n).collect(), rank: vec![0; n as usize], n_sets: n }
+    }
+
+    /// Representative of `x`'s set (path halving).
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    /// Merge the sets of `a` and `b`; returns `true` if they were distinct.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        self.n_sets -= 1;
+        true
+    }
+
+    /// Are `a` and `b` in the same set?
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Current number of disjoint sets.
+    pub fn n_sets(&self) -> u32 {
+        self.n_sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.n_sets(), 5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0), "already merged");
+        assert_eq!(uf.n_sets(), 3);
+        assert!(uf.same(0, 1));
+        assert!(!uf.same(0, 2));
+        assert!(uf.union(1, 3));
+        assert!(uf.same(0, 2));
+        assert_eq!(uf.n_sets(), 2);
+    }
+
+    #[test]
+    fn property_matches_naive_labels() {
+        // Compare against a naive O(n) relabelling implementation.
+        props("union-find vs naive", 100, |g| {
+            let n = g.usize_in(1, 100) as u32;
+            let mut uf = UnionFind::new(n);
+            let mut naive: Vec<u32> = (0..n).collect();
+            for _ in 0..g.usize_in(0, 200) {
+                let a = g.u64_below(n as u64) as u32;
+                let b = g.u64_below(n as u64) as u32;
+                let merged_uf = uf.union(a, b);
+                let (la, lb) = (naive[a as usize], naive[b as usize]);
+                let merged_naive = la != lb;
+                if merged_naive {
+                    for l in naive.iter_mut() {
+                        if *l == lb {
+                            *l = la;
+                        }
+                    }
+                }
+                assert_eq!(merged_uf, merged_naive);
+            }
+            // Same partition.
+            for x in 0..n {
+                for y in 0..n.min(20) {
+                    assert_eq!(uf.same(x, y), naive[x as usize] == naive[y as usize]);
+                }
+            }
+            // Same set count.
+            let mut labels: Vec<u32> = naive.clone();
+            labels.sort_unstable();
+            labels.dedup();
+            assert_eq!(uf.n_sets() as usize, labels.len());
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (the offline vendor set has no `clap`).
+//!
+//! Grammar: `ghs-mst <command> [--flag value]...`. Flags accept both
+//! `--flag value` and `--flag=value`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + flag map + positional args.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(stripped.to_string(), it.next().expect("peeked"));
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Self { command, flags, positional })
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().with_context(|| format!("--{key} {v}: invalid value")),
+        }
+    }
+
+    /// Boolean flag (present or `--flag true/false`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error out on unknown flags (catches typos).
+    pub fn expect_flags(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for `{}` (known: {known:?})", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("run --scale 14 --family rmat out.txt");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get_num::<u32>("scale", 0).unwrap(), 14);
+        assert_eq!(a.get("family", "x"), "rmat");
+        assert_eq!(a.positional, vec!["out.txt"]);
+    }
+
+    #[test]
+    fn equals_form_and_bools() {
+        let a = parse("bench --scale=9 --verify");
+        assert_eq!(a.get_num::<u32>("scale", 0).unwrap(), 9);
+        assert!(a.get_bool("verify"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("table2");
+        assert_eq!(a.get_num::<u32>("scale", 14).unwrap(), 14);
+        assert_eq!(a.get("family", "rmat"), "rmat");
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("run --scalee 14");
+        assert!(a.expect_flags(&["scale"]).is_err());
+        assert!(a.expect_flags(&["scalee"]).is_ok());
+    }
+
+    #[test]
+    fn invalid_numbers_error() {
+        let a = parse("run --scale abc");
+        assert!(a.get_num::<u32>("scale", 1).is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! One driver per table/figure of the paper's evaluation (§4).
+//!
+//! Scales default to laptop-feasible sizes (the paper used a 207-node
+//! cluster; see DESIGN.md §Substitutions). Override with `GHS_SCALE` /
+//! `GHS_MAX_NODES` or CLI flags — every driver reproduces the paper's
+//! *shape* claims, which are scale-relative ratios.
+
+use anyhow::Result;
+
+use crate::coordinator::report::{fmt_time, Table};
+use crate::coordinator::{run_once, run_verified, Workload};
+use crate::ghs::config::GhsConfig;
+use crate::ghs::edge_lookup::SearchStrategy;
+use crate::graph::generators::GraphFamily;
+use crate::sim::profile::{Breakdown, Category};
+use crate::sim::timeline::interval_series;
+use crate::sim::SimConfig;
+
+/// Common experiment options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpOptions {
+    /// Graph scale (2^scale vertices). Paper: 23–24 (29 for weak scaling).
+    pub scale: u32,
+    /// Largest node count to sweep (8 ranks per node, paper Table 2: 64).
+    pub max_nodes: u32,
+    /// Verify each graph's first run against Kruskal.
+    pub verify: bool,
+    /// Suppress progress logging on stderr.
+    pub quiet: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        let env_u32 = |k: &str, d: u32| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Self {
+            scale: env_u32("GHS_SCALE", 15),
+            max_nodes: env_u32("GHS_MAX_NODES", 64),
+            verify: true,
+            quiet: false,
+        }
+    }
+}
+
+impl ExpOptions {
+    fn progress(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("  [exp] {msg}");
+        }
+    }
+
+    fn node_counts(&self) -> Vec<u32> {
+        [1u32, 2, 4, 8, 16, 32, 64].into_iter().filter(|&n| n <= self.max_nodes).collect()
+    }
+}
+
+fn run_config(
+    opts: &ExpOptions,
+    clean: &crate::graph::EdgeList,
+    cfg: GhsConfig,
+    verify: bool,
+) -> Result<crate::ghs::result::GhsRun> {
+    if verify && opts.verify {
+        run_verified(clean, cfg, SimConfig::default())
+    } else {
+        run_once(clean, cfg, SimConfig::default())
+    }
+}
+
+/// **Table 2**: strong scaling of the final version over RMAT / SSCA2 /
+/// Random graphs, 1..64 nodes × 8 ranks.
+pub fn table2(opts: &ExpOptions) -> Result<Table> {
+    let nodes = opts.node_counts();
+    let mut t = Table::new(
+        format!("Table 2 — strong scaling, scale {} (paper: 24)", opts.scale),
+        &[],
+    );
+    t.header = vec!["Graph".to_string(), "Metric".to_string()];
+    t.header.extend(nodes.iter().map(|n| n.to_string()));
+    for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+        let w = Workload::new(family, opts.scale);
+        opts.progress(&format!("Table 2: generating {}", w.label()));
+        let clean = w.build();
+        let mut times = Vec::new();
+        for (i, &n) in nodes.iter().enumerate() {
+            opts.progress(&format!("Table 2: {} on {n} nodes", w.label()));
+            let run = run_config(opts, &clean, GhsConfig::final_version(n * 8), i == 0)?;
+            times.push(run.sim.total_time);
+        }
+        let t1 = times[0];
+        let mut time_row = vec![w.label(), "Time (s)".to_string()];
+        time_row.extend(times.iter().map(|&x| fmt_time(x)));
+        t.push_row(time_row);
+        let mut scal_row = vec![w.label(), "Scaling".to_string()];
+        scal_row.extend(times.iter().map(|&x| format!("{:.2}", t1 / x)));
+        t.push_row(scal_row);
+    }
+    t.note(format!(
+        "Paper (scale 24): RMAT scaling 1.00/1.75/3.52/7.47/11.7/31.0/43.6; at reduced scale \
+         the latency floor and hub skew bind earlier — see EXPERIMENTS.md for the regime map."
+    ));
+    Ok(t)
+}
+
+/// **Fig 2a/2b**: runtime and scaling as the optimizations stack up:
+/// base → +hash → +hash+Test-queue → final (+compression).
+pub fn fig2(opts: &ExpOptions) -> Result<(Table, Table)> {
+    let nodes: Vec<u32> = opts.node_counts().into_iter().filter(|&n| n <= 32).collect();
+    let w = Workload::new(GraphFamily::Rmat, opts.scale);
+    opts.progress(&format!("Fig 2: generating {}", w.label()));
+    let clean = w.build();
+
+    let versions: Vec<(&str, Box<dyn Fn(u32) -> GhsConfig>)> = vec![
+        ("base", Box::new(GhsConfig::base_version)),
+        (
+            "+hash",
+            Box::new(|r| GhsConfig {
+                search: SearchStrategy::Hash,
+                ..GhsConfig::base_version(r)
+            }),
+        ),
+        (
+            "+hash+test-queue",
+            Box::new(|r| GhsConfig {
+                search: SearchStrategy::Hash,
+                separate_test_queue: true,
+                ..GhsConfig::base_version(r)
+            }),
+        ),
+        ("final (+compression)", Box::new(GhsConfig::final_version)),
+    ];
+
+    let mut hdr = vec!["Version".to_string()];
+    hdr.extend(nodes.iter().map(|n| format!("{n} node(s)")));
+    let mut ta = Table::new(
+        format!("Fig 2a — runtime (s) as optimizations stack, {}", w.label()),
+        &[],
+    );
+    ta.header = hdr.clone();
+    ta.header.push("Retries @ max".to_string());
+    let mut tb = Table::new(format!("Fig 2b — scaling (T1/TN), {}", w.label()), &[]);
+    tb.header = hdr;
+
+    for (vi, (name, mk)) in versions.iter().enumerate() {
+        let mut times = Vec::new();
+        let mut retries_at_max = 0u64;
+        for (i, &n) in nodes.iter().enumerate() {
+            opts.progress(&format!("Fig 2: {name} on {n} nodes"));
+            let run = run_config(opts, &clean, mk(n * 8), vi == 0 && i == 0)?;
+            times.push(run.sim.total_time);
+            retries_at_max = run.profile.msgs_postponed;
+        }
+        let mut row = vec![name.to_string()];
+        row.extend(times.iter().map(|&x| fmt_time(x)));
+        row.push(retries_at_max.to_string());
+        ta.push_row(row);
+        let mut row = vec![name.to_string()];
+        row.extend(times.iter().map(|&x| format!("{:.2}", times[0] / x)));
+        tb.push_row(row);
+    }
+    ta.note(
+        "Paper: each optimization reduces runtime at every node count; compression ≈ −50 %. \
+         The Retries column shows the §3.4 mechanism: the separate Test queue roughly halves \
+         postponed-message reprocessing.",
+    );
+    tb.note(
+        "Paper: the Test-queue relaxation doubled the scaling limit. Its benefit appears in \
+         queue-saturated regimes (scale ≥ 20); at reduced scale queues are near-empty and the \
+         retry savings (see Fig 2a Retries) do not dominate.",
+    );
+    Ok((ta, tb))
+}
+
+/// **Fig 3a/3b**: profile breakdown (percent of execution time per loop
+/// part) for the hash-only version vs the final version.
+pub fn fig3(opts: &ExpOptions) -> Result<Table> {
+    let nodes = 4u32.min(opts.max_nodes);
+    let w = Workload::new(GraphFamily::Rmat, opts.scale);
+    opts.progress(&format!("Fig 3: generating {}", w.label()));
+    let clean = w.build();
+    let hash_only = GhsConfig {
+        search: SearchStrategy::Hash,
+        ..GhsConfig::base_version(nodes * 8)
+    };
+    let final_v = GhsConfig::final_version(nodes * 8);
+
+    let mut t = Table::new(
+        format!("Fig 3 — profile breakdown (%), {} on {nodes} node(s)", w.label()),
+        &["Category", "a) hash-only version", "b) final version"],
+    );
+    let costs = SimConfig::default().costs;
+    let mut columns = Vec::new();
+    for (name, cfg) in [("hash-only", hash_only), ("final", final_v)] {
+        opts.progress(&format!("Fig 3: {name}"));
+        let run = run_config(opts, &clean, cfg, true)?;
+        columns.push(Breakdown::of(&run.profile, &costs).percentages());
+    }
+    for (i, cat) in Category::ALL.iter().enumerate() {
+        t.push_row(vec![
+            cat.label().to_string(),
+            format!("{:.1}", columns[0][i].1),
+            format!("{:.1}", columns[1][i].1),
+        ]);
+    }
+    t.note(
+        "Paper: queue processing dominates; the final version (Test queue processed less \
+         frequently) spends a smaller share in queue processing than the hash-only version.",
+    );
+    Ok(t)
+}
+
+/// **Fig 4**: average aggregated-message size per execution-time interval,
+/// for several node counts (paper: MAX_MSG_SIZE = 20000 bytes here).
+pub fn fig4(opts: &ExpOptions) -> Result<Table> {
+    const INTERVALS: usize = 14;
+    let node_list: Vec<u32> =
+        [4u32, 8, 16, 32].into_iter().filter(|&n| n <= opts.max_nodes.max(4)).collect();
+    let w = Workload::new(GraphFamily::Rmat, opts.scale);
+    opts.progress(&format!("Fig 4: generating {}", w.label()));
+    let clean = w.build();
+
+    let mut t = Table::new(
+        format!(
+            "Fig 4 — mean aggregated message size (bytes) per time interval, {} \
+             (MAX_MSG_SIZE=20000)",
+            w.label()
+        ),
+        &[],
+    );
+    t.header = vec!["Interval".to_string()];
+    t.header.extend(node_list.iter().map(|n| format!("{n} nodes")));
+
+    let mut series = Vec::new();
+    for (i, &n) in node_list.iter().enumerate() {
+        opts.progress(&format!("Fig 4: {n} nodes"));
+        let mut cfg = GhsConfig::final_version(n * 8);
+        cfg.max_msg_size = 20_000;
+        let run = run_config(opts, &clean, cfg, i == 0)?;
+        series.push(interval_series(&run.sim.flush_log, run.sim.total_time, INTERVALS));
+    }
+    for i in 0..INTERVALS {
+        let mut row = vec![format!("{}", i + 1)];
+        for s in &series {
+            row.push(format!("{:.0}", s.points[i].0));
+        }
+        t.push_row(row);
+    }
+    let mut row = vec!["overall mean".to_string()];
+    for s in &series {
+        row.push(format!("{:.0}", s.overall_mean()));
+    }
+    t.push_row(row);
+    t.note(
+        "Paper: message size decreases with node count; on 32 nodes buffers stay under ~2 KB \
+         (short-message latency / injection rate becomes the limit).",
+    );
+    Ok(t)
+}
+
+/// **Fig 5**: weak scaling — execution time for growing RMAT scales on a
+/// fixed 32 nodes (256 ranks).
+pub fn fig5(opts: &ExpOptions) -> Result<Table> {
+    let nodes = 32u32.min(opts.max_nodes);
+    let lo = opts.scale.saturating_sub(4).max(8);
+    let mut t = Table::new(
+        format!("Fig 5 — weak scaling on {nodes} nodes (paper: RMAT-24..29 on 32 nodes)"),
+        &["Graph", "Vertices", "Edges", "Time (s)", "Time / edge (ns)"],
+    );
+    for scale in lo..=opts.scale {
+        let w = Workload::new(GraphFamily::Rmat, scale);
+        opts.progress(&format!("Fig 5: {}", w.label()));
+        let clean = w.build();
+        let run = run_config(opts, &clean, GhsConfig::final_version(nodes * 8), scale == lo)?;
+        t.push_row(vec![
+            w.label(),
+            clean.n_vertices.to_string(),
+            clean.n_edges().to_string(),
+            fmt_time(run.sim.total_time),
+            format!("{:.0}", run.sim.total_time * 1e9 / clean.n_edges() as f64),
+        ]);
+    }
+    t.note("Paper: time grows ≈linearly with graph size (in-memory scalable).");
+    Ok(t)
+}
+
+/// **§3.4 ablation**: the Test-queue relaxation on vs off, per graph
+/// family and node count — the paper credits this with a 2× scaling
+/// improvement. The effect appears wherever postponed-Test churn builds
+/// up (clique-structured SSCA2 at moderate scales; RMAT at paper scales).
+pub fn ablation_test_queue(opts: &ExpOptions) -> Result<Table> {
+    let nodes: Vec<u32> = opts.node_counts().into_iter().filter(|&n| n >= 4).collect();
+    let mut t = Table::new(
+        format!("§3.4 ablation — Test-queue relaxation, scale {}", opts.scale),
+        &[],
+    );
+    t.header = vec!["Graph".to_string(), "Test queue".to_string()];
+    t.header.extend(nodes.iter().map(|n| format!("{n} nodes")));
+    t.header.push("Retries @ max".to_string());
+    for family in [GraphFamily::Rmat, GraphFamily::Ssca2] {
+        let w = Workload::new(family, opts.scale);
+        opts.progress(&format!("§3.4: generating {}", w.label()));
+        let clean = w.build();
+        let mut times: Vec<Vec<f64>> = Vec::new();
+        for (vi, separate) in [true, false].into_iter().enumerate() {
+            let mut row_times = Vec::new();
+            let mut retries = 0;
+            for (i, &n) in nodes.iter().enumerate() {
+                opts.progress(&format!("§3.4: {} queue={separate} {n} nodes", w.label()));
+                let mut cfg = GhsConfig::final_version(n * 8);
+                cfg.separate_test_queue = separate;
+                let run = run_config(opts, &clean, cfg, vi == 0 && i == 0)?;
+                row_times.push(run.sim.total_time);
+                retries = run.profile.msgs_postponed;
+            }
+            let mut row = vec![w.label(), if separate { "on" } else { "off" }.to_string()];
+            row.extend(row_times.iter().map(|&x| fmt_time(x)));
+            row.push(retries.to_string());
+            t.push_row(row);
+            times.push(row_times);
+        }
+        let mut row = vec![w.label(), "off/on ratio".to_string()];
+        row.extend(times[1].iter().zip(&times[0]).map(|(&off, &on)| format!("{:.2}×", off / on)));
+        row.push(String::new());
+        t.push_row(row);
+    }
+    t.note(
+        "Paper §3.4/Fig 2b: the relaxation doubled scaling. The churn it removes (postponed \
+         Tests reprocessed every pass) concentrates where many same-level fragments probe \
+         across rank boundaries — visible on SSCA2 here; on RMAT it needs paper-scale queues.",
+    );
+    Ok(t)
+}
+
+/// **§4.1**: local-edge search strategy sweep (linear vs binary vs hash)
+/// on one node — the paper reports −2 % (binary) and −18 % (hash).
+pub fn sweep_search(opts: &ExpOptions) -> Result<Table> {
+    let w = Workload::new(GraphFamily::Rmat, opts.scale);
+    opts.progress(&format!("§4.1: generating {}", w.label()));
+    let clean = w.build();
+    let mut t = Table::new(
+        format!("§4.1 — local-edge search strategies, {} on 1 node (8 ranks)", w.label()),
+        &["Strategy", "Time (s)", "Δ vs linear", "Probes/lookup"],
+    );
+    let mut linear_time = 0.0;
+    for (i, s) in [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash]
+        .into_iter()
+        .enumerate()
+    {
+        opts.progress(&format!("§4.1: {s:?}"));
+        let mut cfg = GhsConfig::base_version(8);
+        cfg.search = s;
+        let run = run_config(opts, &clean, cfg, i == 0)?;
+        let time = run.sim.total_time;
+        if i == 0 {
+            linear_time = time;
+        }
+        let probes = run.profile.lookup_probes as f64 / run.profile.lookups.max(1) as f64;
+        t.push_row(vec![
+            format!("{s:?}"),
+            fmt_time(time),
+            format!("{:+.1} %", 100.0 * (time - linear_time) / linear_time),
+            format!("{probes:.2}"),
+        ]);
+    }
+    t.note("Paper: binary ≈ −2 %, hashing ≈ −18 % of node execution time.");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ExpOptions {
+        ExpOptions { scale: 8, max_nodes: 4, verify: true, quiet: true }
+    }
+
+    #[test]
+    fn table2_shape() {
+        let t = table2(&tiny_opts()).unwrap();
+        assert_eq!(t.rows.len(), 6, "3 graphs x (time, scaling)");
+        assert_eq!(t.header.len(), 2 + 3, "nodes 1,2,4");
+        // Scaling row starts at 1.00.
+        assert_eq!(t.rows[1][2], "1.00");
+    }
+
+    #[test]
+    fn fig2_has_four_versions() {
+        let (a, b) = fig2(&tiny_opts()).unwrap();
+        assert_eq!(a.rows.len(), 4);
+        assert_eq!(b.rows.len(), 4);
+        assert_eq!(b.rows[0][1], "1.00");
+    }
+
+    #[test]
+    fn fig3_percentages_sum() {
+        let t = fig3(&tiny_opts()).unwrap();
+        for col in [1usize, 2] {
+            let sum: f64 = t.rows.iter().map(|r| r[col].parse::<f64>().unwrap()).sum();
+            assert!((sum - 100.0).abs() < 1.0, "col {col} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn fig4_rows_and_series() {
+        let t = fig4(&tiny_opts()).unwrap();
+        assert_eq!(t.rows.len(), 15, "14 intervals + overall mean");
+    }
+
+    #[test]
+    fn fig5_weak_scaling_rows() {
+        let t = fig5(&ExpOptions { scale: 10, ..tiny_opts() }).unwrap();
+        assert!(t.rows.len() >= 2);
+        // Edges grow with scale.
+        let e0: u64 = t.rows.first().unwrap()[2].parse().unwrap();
+        let e1: u64 = t.rows.last().unwrap()[2].parse().unwrap();
+        assert!(e1 > e0);
+    }
+
+    #[test]
+    fn sweep_search_reports_three() {
+        let t = sweep_search(&tiny_opts()).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][2], "+0.0 %");
+        // Hash uses fewer probes per lookup than linear.
+        let pl: f64 = t.rows[0][3].parse().unwrap();
+        let ph: f64 = t.rows[2][3].parse().unwrap();
+        assert!(ph < pl);
+    }
+}

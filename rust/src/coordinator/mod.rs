@@ -1,0 +1,92 @@
+//! Experiment coordinator: ties generators → preprocessing → engine →
+//! verification → reporting. One driver per paper table/figure lives in
+//! [`experiments`]; [`report`] renders markdown/CSV.
+
+pub mod experiments;
+pub mod report;
+
+use anyhow::{bail, Result};
+
+use crate::baseline::kruskal::kruskal;
+use crate::ghs::config::GhsConfig;
+use crate::ghs::engine::Engine;
+use crate::ghs::result::GhsRun;
+use crate::graph::generators::{generate_with_factor, GraphFamily, DEFAULT_EDGE_FACTOR};
+use crate::graph::preprocess::preprocess;
+use crate::graph::EdgeList;
+use crate::sim::SimConfig;
+
+/// A workload specification.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub family: GraphFamily,
+    pub scale: u32,
+    pub edge_factor: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Paper-style workload: average degree 32, deterministic seed.
+    pub fn new(family: GraphFamily, scale: u32) -> Self {
+        Self { family, scale, edge_factor: DEFAULT_EDGE_FACTOR, seed: 0xC0FFEE ^ scale as u64 }
+    }
+
+    /// Paper-style label, e.g. `RMAT-23`.
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.family.label(), self.scale)
+    }
+
+    /// Generate and preprocess the graph.
+    pub fn build(&self) -> EdgeList {
+        let g = generate_with_factor(self.family, self.scale, self.edge_factor, self.seed);
+        preprocess(&g).0
+    }
+}
+
+/// Run one engine configuration over a prebuilt (preprocessed) graph.
+/// The cost model's probe price is matched to the configured lookup
+/// strategy (see [`crate::sim::costmodel::probe_cost`]).
+pub fn run_once(clean: &EdgeList, config: GhsConfig, mut sim: SimConfig) -> Result<GhsRun> {
+    sim.costs = sim.costs.for_strategy(config.search);
+    Engine::with_sim(clean, config, sim)?.run()
+}
+
+/// Run and verify against the Kruskal oracle (used by `ghs-mst verify` and
+/// the integration tests; experiment drivers verify the first run of each
+/// graph).
+pub fn run_verified(clean: &EdgeList, config: GhsConfig, sim: SimConfig) -> Result<GhsRun> {
+    let run = run_once(clean, config, sim)?;
+    let oracle = kruskal(clean);
+    if run.forest.canonical_edges() != oracle.canonical_edges() {
+        bail!(
+            "GHS forest mismatch: {} edges / weight {} vs oracle {} / {}",
+            run.forest.edges.len(),
+            run.total_weight(),
+            oracle.edges.len(),
+            oracle.total_weight()
+        );
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_builds_and_verifies() {
+        let w = Workload::new(GraphFamily::Rmat, 8);
+        assert_eq!(w.label(), "RMAT-8");
+        let g = w.build();
+        assert_eq!(g.n_vertices, 256);
+        let run = run_verified(&g, GhsConfig::final_version(8), SimConfig::default()).unwrap();
+        assert!(run.forest.check_edge_count(&g));
+    }
+
+    #[test]
+    fn workloads_are_deterministic() {
+        let a = Workload::new(GraphFamily::Ssca2, 7).build();
+        let b = Workload::new(GraphFamily::Ssca2, 7).build();
+        assert_eq!(a.n_edges(), b.n_edges());
+    }
+}

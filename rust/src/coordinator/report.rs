@@ -1,0 +1,122 @@
+//! Report rendering: markdown tables and CSV, written under `results/`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::markdown_table;
+
+/// A tabular experiment result.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (paper expectation vs ours).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn push_row(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Append a note line.
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render as markdown.
+    pub fn to_markdown(&self) -> String {
+        let hdr: Vec<&str> = self.header.iter().map(String::as_str).collect();
+        let mut out = format!("## {}\n\n{}", self.title, markdown_table(&hdr, &self.rows));
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `results/<name>.md` and `results/<name>.csv`.
+    pub fn write(&self, name: &str) -> Result<PathBuf> {
+        let dir = results_dir();
+        fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let md = dir.join(format!("{name}.md"));
+        fs::write(&md, self.to_markdown())?;
+        fs::write(dir.join(format!("{name}.csv")), self.to_csv())?;
+        Ok(md)
+    }
+}
+
+/// Results directory: `$GHS_MST_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("GHS_MST_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new("results").to_path_buf())
+}
+
+/// Format seconds like the paper's tables (comma decimal in the original;
+/// we use a dot with 2-3 significant decimals).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 10.0 {
+        format!("{s:.2}")
+    } else if s >= 0.01 {
+        format!("{s:.3}")
+    } else {
+        format!("{:.1}e-3", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.push_row(vec!["1".into(), "x,y".into()]);
+        t.note("shape matches");
+        let md = t.to_markdown();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("> shape matches"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(63.27), "63.27");
+        assert_eq!(fmt_time(2.04), "2.040");
+        assert_eq!(fmt_time(0.0005), "0.5e-3");
+    }
+}

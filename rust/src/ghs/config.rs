@@ -1,0 +1,163 @@
+//! Algorithm configuration — the paper's §3.6 parameters plus the ablation
+//! switches used by the Fig 2 optimization study.
+
+use crate::ghs::edge_lookup::SearchStrategy;
+use crate::ghs::wire::WireFormat;
+
+/// Hash table sizing. Paper default: `local_actual_m * 5 * 11 / 13` slots,
+/// "several times larger than the number of local edges".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HashTableSizing {
+    pub numerator: u64,
+    pub denominator: u64,
+}
+
+impl Default for HashTableSizing {
+    fn default() -> Self {
+        Self { numerator: 5 * 11, denominator: 13 }
+    }
+}
+
+impl HashTableSizing {
+    /// Table size for `local_m` local edges (≥ local_m + 1 so probing
+    /// always terminates; the default factor ≈ 4.23× guarantees this).
+    pub fn table_size(&self, local_m: usize) -> u64 {
+        let raw = (local_m as u64).saturating_mul(self.numerator) / self.denominator;
+        raw.max(local_m as u64 + 1).max(8)
+    }
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GhsConfig {
+    /// Number of simulated MPI ranks.
+    pub n_ranks: u32,
+    /// Ranks per cluster node (paper: 8). Only affects the interconnect
+    /// cost model (intra-node messages are cheaper) and node-count labels.
+    pub ranks_per_node: u32,
+
+    // ---- §3.6 parameters (paper defaults) ----
+    /// Maximum size of an aggregated message in bytes (default 10000).
+    pub max_msg_size: usize,
+    /// Flush aggregated sends every this many while-loop iterations (5).
+    pub sending_frequency: u32,
+    /// Process the Test queue every this many iterations (5).
+    pub check_frequency: u32,
+    /// Check for completion every this many iterations (100000 in the
+    /// paper; our superstep iterations are coarser, so default lower).
+    pub empty_iter_cnt_to_break: u32,
+    /// Hash table sizing (default local_m * 5 * 11 / 13).
+    pub hash_sizing: HashTableSizing,
+    /// Messages processed per queue per loop iteration. Bounds the work of
+    /// one iteration so an engine iteration corresponds to (a few of) the
+    /// paper's while-loop iterations; the frequency parameters above are
+    /// expressed in these units.
+    pub burst_size: usize,
+
+    // ---- ablation switches (Fig 2 / §4.1) ----
+    /// Local-edge search strategy (base: Linear; final: Hash).
+    pub search: SearchStrategy,
+    /// Separate relaxed-order queue for Test messages (§3.4; final: true).
+    pub separate_test_queue: bool,
+    /// Wire format (base: Naive; final: CompactProcId when the per-process
+    /// uniqueness check passes, else CompactSpecialId).
+    pub wire_format: WireFormat,
+
+    /// Safety bound on engine supersteps (deadlock detection in tests).
+    pub max_supersteps: u64,
+    /// Record per-interval message sizes for the Fig 4 timeline.
+    pub record_timeline: bool,
+}
+
+impl Default for GhsConfig {
+    fn default() -> Self {
+        Self {
+            n_ranks: 8,
+            ranks_per_node: 8,
+            max_msg_size: 10_000,
+            sending_frequency: 5,
+            check_frequency: 5,
+            empty_iter_cnt_to_break: 2048,
+            hash_sizing: HashTableSizing::default(),
+            burst_size: 32,
+            search: SearchStrategy::Hash,
+            separate_test_queue: true,
+            wire_format: WireFormat::CompactProcId,
+            max_supersteps: u64::MAX,
+            record_timeline: false,
+        }
+    }
+}
+
+impl GhsConfig {
+    /// The paper's *base version* (§3.2): linear search, single queue,
+    /// naive message structs. Aggregation is present even in the base
+    /// version ("The aggregation of messages is implemented to speed up
+    /// the algorithm" — §3.2).
+    pub fn base_version(n_ranks: u32) -> Self {
+        Self {
+            n_ranks,
+            search: SearchStrategy::Linear,
+            separate_test_queue: false,
+            wire_format: WireFormat::Naive,
+            ..Self::default()
+        }
+    }
+
+    /// The paper's *final version*: all optimizations on.
+    pub fn final_version(n_ranks: u32) -> Self {
+        Self { n_ranks, ..Self::default() }
+    }
+
+    /// Number of cluster nodes this configuration models.
+    pub fn n_nodes(&self) -> u32 {
+        self.n_ranks.div_ceil(self.ranks_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = GhsConfig::default();
+        assert_eq!(c.max_msg_size, 10_000);
+        assert_eq!(c.sending_frequency, 5);
+        assert_eq!(c.check_frequency, 5);
+        assert_eq!(c.ranks_per_node, 8);
+        assert_eq!(c.search, SearchStrategy::Hash);
+        assert!(c.separate_test_queue);
+        assert_eq!(c.wire_format, WireFormat::CompactProcId);
+    }
+
+    #[test]
+    fn hash_sizing_default_factor() {
+        let s = HashTableSizing::default();
+        // 5*11/13 ≈ 4.23x
+        assert_eq!(s.table_size(13_000), 55_000);
+        // Never smaller than m+1.
+        assert!(s.table_size(1) >= 2);
+        assert!(s.table_size(0) >= 8);
+    }
+
+    #[test]
+    fn base_vs_final() {
+        let b = GhsConfig::base_version(16);
+        assert_eq!(b.search, SearchStrategy::Linear);
+        assert!(!b.separate_test_queue);
+        assert_eq!(b.wire_format, WireFormat::Naive);
+        let f = GhsConfig::final_version(16);
+        assert_eq!(f.search, SearchStrategy::Hash);
+        assert_eq!(f.n_nodes(), 2);
+    }
+
+    #[test]
+    fn node_count_rounds_up() {
+        let mut c = GhsConfig::default();
+        c.n_ranks = 9;
+        assert_eq!(c.n_nodes(), 2);
+        c.n_ranks = 8;
+        assert_eq!(c.n_nodes(), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Local-edge search (paper §3.3): given an incoming message over graph
+//! edge `(u -> v)`, find the adjacency index of that edge in the receiving
+//! rank's CRS row for `v`, "because the change of the local data related to
+//! that edge may be required".
+//!
+//! Three strategies, matching the paper's study:
+//! * **Linear** — base version: scan the CRS row.
+//! * **Binary** — rows pre-sorted by neighbour id, binary search (−2 %).
+//! * **Hash**  — a linear-probing hash table over all local edges keyed by
+//!   the paper's hash `((u << 32) | v) mod hash_table_size` (−18 %); method
+//!   "linear search and insertion" [Knuth TAOCP v3].
+
+use crate::ghs::config::HashTableSizing;
+use crate::graph::csr::Csr;
+use crate::graph::VertexId;
+
+/// Search strategy selector (paper §3.3 / §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    Linear,
+    Binary,
+    Hash,
+}
+
+impl SearchStrategy {
+    /// Parse a strategy name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(Self::Linear),
+            "binary" => Some(Self::Binary),
+            "hash" => Some(Self::Hash),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's hash function (1): `((u << 32) | v) mod hash_table_size`.
+#[inline]
+pub fn paper_hash(u: VertexId, v: VertexId, table_size: u64) -> u64 {
+    (((u as u64) << 32) | v as u64) % table_size
+}
+
+/// Probe-count statistics (exposed for the §4.1 sweep and the cost model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LookupStats {
+    pub lookups: u64,
+    pub probes: u64,
+}
+
+/// A built lookup structure over one rank's local CSR block.
+#[derive(Debug)]
+pub enum EdgeLookup {
+    /// Linear scan of the receiver's row.
+    Linear,
+    /// Binary search; requires rows sorted by neighbour id.
+    Binary,
+    /// Open-addressing table of `(key, adjacency index + 1)` pairs where
+    /// `key = (src << 32) | dst` — matching on the stored key avoids
+    /// dereferencing the CSR on every probe. `idx = 0` marks empty; `key`
+    /// can never collide with a live 0 because self-loops are removed, so
+    /// `(0, 0)` is not an edge.
+    Hash { table: Vec<(u64, u64)>, size: u64 },
+}
+
+impl EdgeLookup {
+    /// Build the chosen structure for a CSR block. For `Binary` the rows
+    /// must already be sorted (see [`Csr::sort_rows_by_neighbour`]); for
+    /// `Hash` the table is created and populated here — the paper counts
+    /// this in initialization, not solve time.
+    pub fn build(strategy: SearchStrategy, csr: &Csr, sizing: HashTableSizing) -> Self {
+        match strategy {
+            SearchStrategy::Linear => EdgeLookup::Linear,
+            SearchStrategy::Binary => EdgeLookup::Binary,
+            SearchStrategy::Hash => {
+                let size = sizing.table_size(csr.nnz());
+                let mut table = vec![(0u64, 0u64); size as usize];
+                for row in 0..csr.rows() {
+                    let v = csr.first_vertex() + row;
+                    for (i, u, _) in csr.neighbours(v) {
+                        // Keyed by (sender u, receiver v): the direction a
+                        // message travels.
+                        let key = ((u as u64) << 32) | v as u64;
+                        let mut slot = key % size;
+                        loop {
+                            if table[slot as usize].1 == 0 {
+                                table[slot as usize] = (key, i as u64 + 1);
+                                break;
+                            }
+                            slot = (slot + 1) % size;
+                        }
+                    }
+                }
+                EdgeLookup::Hash { table, size }
+            }
+        }
+    }
+
+    /// Find the adjacency index (into the CSR arrays) of edge `(src -> dst)`
+    /// in `dst`'s row. Returns `None` if the edge does not exist locally.
+    /// `stats` accumulates probe counts for profiling.
+    pub fn find(
+        &self,
+        csr: &Csr,
+        src: VertexId,
+        dst: VertexId,
+        stats: &mut LookupStats,
+    ) -> Option<usize> {
+        stats.lookups += 1;
+        match self {
+            EdgeLookup::Linear => {
+                for i in csr.row_range(dst) {
+                    stats.probes += 1;
+                    if csr.col(i) == src {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            EdgeLookup::Binary => {
+                let range = csr.row_range(dst);
+                let (mut lo, mut hi) = (range.start, range.end);
+                while lo < hi {
+                    stats.probes += 1;
+                    let mid = lo + (hi - lo) / 2;
+                    match csr.col(mid).cmp(&src) {
+                        std::cmp::Ordering::Equal => return Some(mid),
+                        std::cmp::Ordering::Less => lo = mid + 1,
+                        std::cmp::Ordering::Greater => hi = mid,
+                    }
+                }
+                None
+            }
+            EdgeLookup::Hash { table, size } => {
+                let key = ((src as u64) << 32) | dst as u64;
+                let mut slot = key % size;
+                loop {
+                    stats.probes += 1;
+                    let (k, idx) = table[slot as usize];
+                    if idx == 0 {
+                        return None;
+                    }
+                    if k == key {
+                        return Some((idx - 1) as usize);
+                    }
+                    slot = (slot + 1) % size;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ghs::config::HashTableSizing;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+    use crate::util::minitest::props;
+
+    fn build_all(csr: &Csr) -> Vec<EdgeLookup> {
+        vec![
+            EdgeLookup::build(SearchStrategy::Linear, csr, HashTableSizing::default()),
+            EdgeLookup::build(SearchStrategy::Binary, csr, HashTableSizing::default()),
+            EdgeLookup::build(SearchStrategy::Hash, csr, HashTableSizing::default()),
+        ]
+    }
+
+    #[test]
+    fn all_strategies_find_every_edge() {
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 8, 5));
+        let mut csr = Csr::full(&g);
+        csr.sort_rows_by_neighbour();
+        let lookups = build_all(&csr);
+        let mut stats = LookupStats::default();
+        for e in &g.edges {
+            for l in &lookups {
+                let i = l.find(&csr, e.u, e.v, &mut stats).expect("edge must be found");
+                assert_eq!(csr.col(i), e.u);
+                assert!(csr.row_range(e.v).contains(&i));
+                let j = l.find(&csr, e.v, e.u, &mut stats).expect("reverse direction");
+                assert_eq!(csr.col(j), e.v);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_edges_return_none() {
+        props("lookup missing edges", 50, |gen| {
+            let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3 + gen.case as u64));
+            let mut csr = Csr::full(&g);
+            csr.sort_rows_by_neighbour();
+            let present: std::collections::HashSet<(u32, u32)> =
+                g.edges.iter().map(|e| e.canonical()).collect();
+            let lookups = build_all(&csr);
+            let mut stats = LookupStats::default();
+            for _ in 0..50 {
+                let u = gen.u64_below(g.n_vertices as u64) as u32;
+                let v = gen.u64_below(g.n_vertices as u64) as u32;
+                if u == v || present.contains(&(u.min(v), u.max(v))) {
+                    continue;
+                }
+                for l in &lookups {
+                    assert_eq!(l.find(&csr, u, v, &mut stats), None);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hash_uses_fewer_probes_than_linear_on_skewed_graphs() {
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 10, 77));
+        let mut csr = Csr::full(&g);
+        csr.sort_rows_by_neighbour();
+        let linear = EdgeLookup::build(SearchStrategy::Linear, &csr, HashTableSizing::default());
+        let hash = EdgeLookup::build(SearchStrategy::Hash, &csr, HashTableSizing::default());
+        let (mut sl, mut sh) = (LookupStats::default(), LookupStats::default());
+        for e in &g.edges {
+            linear.find(&csr, e.u, e.v, &mut sl);
+            hash.find(&csr, e.u, e.v, &mut sh);
+        }
+        assert!(
+            sh.probes * 3 < sl.probes,
+            "hash probes {} should be far fewer than linear {}",
+            sh.probes,
+            sl.probes
+        );
+    }
+
+    #[test]
+    fn paper_hash_formula() {
+        // ((u << 32) | v) mod size, exactly as printed.
+        assert_eq!(paper_hash(1, 2, 1 << 40), ((1u64 << 32) | 2) % (1 << 40));
+        assert_eq!(paper_hash(0, 7, 5), 7 % 5);
+    }
+
+    #[test]
+    fn block_local_lookup() {
+        // Lookup over a partitioned block only sees local rows.
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 7, 9));
+        let rows = g.n_vertices / 2;
+        let mut csr = Csr::from_edges(&g, rows, rows);
+        csr.sort_rows_by_neighbour();
+        let lookups = build_all(&csr);
+        let mut stats = LookupStats::default();
+        for e in &g.edges {
+            for (dst, src) in [(e.v, e.u), (e.u, e.v)] {
+                if !csr.owns(dst) {
+                    continue;
+                }
+                for l in &lookups {
+                    assert!(l.find(&csr, src, dst, &mut stats).is_some());
+                }
+            }
+        }
+    }
+}

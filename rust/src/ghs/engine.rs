@@ -1,0 +1,475 @@
+//! Deterministic sequential superstep engine.
+//!
+//! Simulates P MPI ranks executing the paper's per-process loop (§3.2):
+//!
+//! ```text
+//! While (True) {
+//!   read_msgs();                       // decode arrived buffers
+//!   if (time_to_process_queue) process_queue();
+//!   if (time_to_send)          send_all_bufs();
+//!   check_finish();                    // MPI_Allreduce on silence
+//! }
+//! ```
+//!
+//! One *superstep* runs every rank's loop body once; buffers flushed in
+//! superstep s are readable by their destination in superstep s+1. This
+//! preserves per-rank-pair FIFO (and hence the per-edge FIFO GHS needs),
+//! is fully deterministic, and leaves timing to `sim::costmodel`, which
+//! converts the recorded operation counts into LogGOPS-clocked time.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::ghs::config::GhsConfig;
+use crate::ghs::message::MessageCounts;
+use crate::ghs::rank::RankState;
+use crate::ghs::result::{GhsRun, ProfileCounters};
+use crate::ghs::vertex::Outcome;
+use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
+use crate::graph::partition::BlockPartition;
+use crate::graph::preprocess::is_simple;
+use crate::graph::EdgeList;
+use crate::sim::{SimConfig, SimState, TimingMode};
+
+/// The sequential multi-rank GHS engine.
+pub struct Engine {
+    ranks: Vec<RankState>,
+    /// Per-destination inbox: aggregated buffers in arrival order.
+    inboxes: Vec<VecDeque<(u32, Vec<u8>, u32, f64)>>, // (src, bytes, n_msgs, arrival)
+    /// Messages inside inbox buffers (for the silence check).
+    inbox_msgs: u64,
+    /// Reused scratch deque for the inbox compaction pass.
+    scratch: VecDeque<(u32, Vec<u8>, u32, f64)>,
+    config: GhsConfig,
+    /// Virtual-time cluster simulation (LogGOPS + cost model).
+    pub sim: SimState,
+    /// Effective wire format after the proc-id feasibility check.
+    pub effective_wire: WireFormat,
+}
+
+impl Engine {
+    /// Build an engine over a *preprocessed* graph (no self-loops or
+    /// multi-edges — run [`crate::graph::preprocess::preprocess`] first)
+    /// with the default (MVS-10P, calibrated) simulation.
+    pub fn new(g: &EdgeList, config: GhsConfig) -> Result<Self> {
+        Self::with_sim(g, config, SimConfig::default())
+    }
+
+    /// Build with an explicit cluster simulation configuration.
+    pub fn with_sim(g: &EdgeList, mut config: GhsConfig, sim_config: SimConfig) -> Result<Self> {
+        if !is_simple(g) {
+            bail!("graph must be preprocessed (self-loops / multi-edges present)");
+        }
+        if config.n_ranks == 0 {
+            bail!("need at least one rank");
+        }
+        let part = BlockPartition::new(g.n_vertices.max(1), config.n_ranks);
+        // Proc-id wire compression requires per-process weight uniqueness
+        // and ranks to fit the 8-bit field (paper §3.5); otherwise fall
+        // back to the 64-bit special_id form.
+        if config.wire_format == WireFormat::CompactProcId {
+            let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
+            if !feasible {
+                config.wire_format = WireFormat::CompactSpecialId;
+            }
+        }
+        let codec = match config.wire_format {
+            WireFormat::CompactProcId => IdentityCodec::ProcId,
+            _ => IdentityCodec::SpecialId,
+        };
+        let ranks: Vec<RankState> = (0..config.n_ranks)
+            .map(|r| RankState::new(r, g, part, &config, codec))
+            .collect();
+        let sim = SimState::new(sim_config, config.n_ranks, config.ranks_per_node);
+        Ok(Self {
+            ranks,
+            inboxes: (0..config.n_ranks).map(|_| VecDeque::new()).collect(),
+            inbox_msgs: 0,
+            scratch: VecDeque::new(),
+            sim,
+            effective_wire: config.wire_format,
+            config,
+        })
+    }
+
+    /// Total undelivered / unprocessed messages anywhere in the system.
+    fn global_pending(&self) -> u64 {
+        self.inbox_msgs + self.ranks.iter().map(|r| r.pending_local()).sum::<u64>()
+    }
+
+    /// Run to silence; returns the spanning forest and run statistics.
+    pub fn run(&mut self) -> Result<GhsRun> {
+        // Iteration 0: wake every vertex (spontaneous start).
+        for r in &mut self.ranks {
+            r.wakeup_all();
+        }
+        let mut superstep: u64 = 0;
+        loop {
+            superstep += 1;
+            if superstep > self.config.max_supersteps {
+                bail!(
+                    "exceeded max_supersteps={} with {} messages pending (deadlock?)",
+                    self.config.max_supersteps,
+                    self.global_pending()
+                );
+            }
+            let mut staged: Vec<(u32, u32, Vec<u8>, u32, f64)> = Vec::new(); // (src,dst,buf,n,arrival)
+            let measured_mode = self.sim.timing() == TimingMode::Measured;
+            for rank in self.ranks.iter_mut() {
+                rank.superstep = superstep;
+                rank.prof.iterations += 1;
+                // Fast path: nothing to read, process or flush — charge one
+                // poll iteration and move on (the common case once a rank's
+                // subgraph has quiesced).
+                if self.inboxes[rank.rank as usize].is_empty()
+                    && rank.queues.total_len() == 0
+                    && !rank.has_dirty_outbox()
+                {
+                    self.sim.idle_step(rank.rank);
+                    continue;
+                }
+                // 1. read_msgs. A buffer is only visible once its simulated
+                // arrival time has passed; a rank with queued work keeps
+                // processing and picks late buffers up in a later iteration,
+                // while an idle rank blocks (comm wait) until the earliest
+                // arrival. Arrivals from one source are monotone, so
+                // selective consumption preserves per-channel FIFO.
+                let r_i = rank.rank as usize;
+                let mut consumed_any = false;
+                if !self.inboxes[r_i].is_empty() {
+                    // Single compaction pass: consume arrived buffers in
+                    // order, keep future ones (relative order preserved;
+                    // `scratch` is a reused allocation).
+                    let clock = self.sim.clock[r_i];
+                    std::mem::swap(&mut self.inboxes[r_i], &mut self.scratch);
+                    for (src, buf, n, arrival) in self.scratch.drain(..) {
+                        if arrival <= clock {
+                            let same = self.sim.is_same_node(src, rank.rank);
+                            self.sim.on_buffer_read(rank.rank, arrival, same);
+                            rank.read_buffer(&buf);
+                            self.inbox_msgs -= n as u64;
+                            consumed_any = true;
+                        } else {
+                            self.inboxes[r_i].push_back((src, buf, n, arrival));
+                        }
+                    }
+                }
+                let step_t0 = measured_mode.then(std::time::Instant::now);
+                let mut progressed = consumed_any;
+                // 2. process_queue (bounded burst: an engine iteration
+                // corresponds to a handful of the paper's loop iterations,
+                // keeping the latency model fine-grained; postponed
+                // messages are retried blindly, as in the paper — §3.4's
+                // Test-queue relaxation exists precisely to bound that
+                // churn, and the ablation depends on it being visible).
+                let burst = rank.queues.main_len().min(rank.config.burst_size);
+                for _ in 0..burst {
+                    let msg = rank.queues.pop_main().expect("len checked");
+                    if rank.handle(msg) == Outcome::Postponed {
+                        rank.prof.msgs_postponed += 1;
+                        rank.queues.postpone(msg);
+                    } else {
+                        rank.prof.msgs_processed_main += 1;
+                        progressed = true;
+                    }
+                }
+                // 3. Test queue, every CHECK_FREQUENCY iterations (§3.4).
+                if rank.queues.has_separate_test()
+                    && superstep % rank.config.check_frequency as u64 == 0
+                {
+                    let burst = rank.queues.test_len().min(rank.config.burst_size);
+                    for _ in 0..burst {
+                        let msg = rank.queues.pop_test().expect("len checked");
+                        if rank.handle(msg) == Outcome::Postponed {
+                            rank.prof.msgs_postponed += 1;
+                            rank.queues.postpone(msg);
+                        } else {
+                            rank.prof.msgs_processed_test += 1;
+                            progressed = true;
+                        }
+                    }
+                }
+                // Stalled (idle or only-postponed queue) with traffic still
+                // in flight: the real rank would spin; in virtual time it
+                // waits for the earliest arrival.
+                if !progressed && !self.inboxes[r_i].is_empty() {
+                    let min_arrival =
+                        self.inboxes[r_i].iter().map(|e| e.3).fold(f64::INFINITY, f64::min);
+                    if min_arrival > self.sim.clock[r_i] {
+                        self.sim.comm_wait[r_i] += min_arrival - self.sim.clock[r_i];
+                        self.sim.clock[r_i] = min_arrival;
+                    }
+                }
+                // 4. send_all_bufs every SENDING_FREQUENCY iterations.
+                if superstep % rank.config.sending_frequency as u64 == 0 {
+                    rank.flush_all();
+                }
+                // Charge the step's compute to the rank's virtual clock,
+                // then price each flushed buffer's injection + transit.
+                let measured = step_t0.map(|t0| t0.elapsed().as_secs_f64());
+                // Lookup probes feed the cost model; sync them first.
+                rank.prof.lookups = rank.lookup_stats.lookups;
+                rank.prof.lookup_probes = rank.lookup_stats.probes;
+                self.sim.after_step(rank.rank, &rank.prof, measured, progressed);
+                for (dst, buf, n) in rank.flushed.drain(..) {
+                    let arrival = self.sim.on_flush(rank.rank, dst, buf.len() as u32, n);
+                    staged.push((rank.rank, dst, buf, n, arrival));
+                }
+            }
+            // Deliver staged buffers (arrive for superstep s+1).
+            for (src, dst, buf, n, arrival) in staged {
+                self.inbox_msgs += n as u64;
+                self.inboxes[dst as usize].push_back((src, buf, n, arrival));
+            }
+            // 5. check_finish via simulated Allreduce.
+            if superstep % self.config.empty_iter_cnt_to_break as u64 == 0 {
+                for rank in self.ranks.iter_mut() {
+                    rank.prof.finish_checks += 1;
+                }
+                let done = self.global_pending() == 0;
+                self.sim.on_allreduce(done);
+                if done {
+                    break;
+                }
+            }
+        }
+        self.collect(superstep)
+    }
+
+    /// Assemble the run result after silence.
+    fn collect(&mut self, supersteps: u64) -> Result<GhsRun> {
+        // Sync lookup stats into profile counters.
+        for r in &mut self.ranks {
+            r.prof.lookups = r.lookup_stats.lookups;
+            r.prof.lookup_probes = r.lookup_stats.probes;
+        }
+        let n_vertices = self.ranks[0].part.n_vertices();
+        let mut edges = Vec::new();
+        for r in &self.ranks {
+            edges.extend(r.branch_edges());
+        }
+        // Forest validation: branch edges must be acyclic.
+        let mut uf = UnionFind::new(n_vertices);
+        for e in &edges {
+            if !uf.union(e.u, e.v) {
+                bail!("branch edges contain a cycle at ({}, {})", e.u, e.v);
+            }
+        }
+        let n_components = uf.n_sets();
+        // Halt accounting: every component of ≥2 vertices halts at both
+        // core vertices; single-vertex components halt once at wakeup.
+        let halts: u64 = self.ranks.iter().map(|r| r.halts).sum();
+        if halts % 2 != 0 {
+            bail!("odd number of core halts: {halts}");
+        }
+        let mut profile = ProfileCounters::default();
+        let mut per_rank = Vec::with_capacity(self.ranks.len());
+        let mut sent = MessageCounts::default();
+        let mut timeline = Vec::new();
+        for r in &mut self.ranks {
+            profile.merge(&r.prof);
+            per_rank.push(r.prof);
+            sent.merge(&r.sent_counts);
+            timeline.append(&mut r.timeline);
+        }
+        timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
+        Ok(GhsRun {
+            forest: Forest { edges, n_components },
+            supersteps,
+            sent,
+            profile,
+            per_rank,
+            timeline,
+            sim: self.sim.summary(),
+        })
+    }
+
+    /// Access per-rank states (read-only, for inspection in tests).
+    pub fn ranks(&self) -> &[RankState] {
+        &self.ranks
+    }
+}
+
+/// Convenience: preprocess + run GHS with `config`, returning the result.
+pub fn run_ghs(g: &EdgeList, config: GhsConfig) -> Result<GhsRun> {
+    let (clean, _) = crate::graph::preprocess::preprocess(g);
+    Engine::new(&clean, config)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::ghs::edge_lookup::SearchStrategy;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+    use crate::util::minitest::props;
+
+    fn cfg(n_ranks: u32) -> GhsConfig {
+        GhsConfig { n_ranks, max_supersteps: 500_000, ..GhsConfig::default() }
+    }
+
+    fn assert_matches_kruskal(g: &EdgeList, config: GhsConfig) {
+        let (clean, _) = preprocess(g);
+        let run = Engine::new(&clean, config).unwrap().run().unwrap();
+        let oracle = kruskal(&clean);
+        assert_eq!(
+            run.forest.canonical_edges(),
+            oracle.canonical_edges(),
+            "GHS forest != Kruskal forest"
+        );
+        assert_eq!(run.forest.n_components, oracle.n_components);
+        assert!(run.forest.check_edge_count(&clean));
+    }
+
+    #[test]
+    fn two_vertex_graph() {
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.5);
+        assert_matches_kruskal(&g, cfg(1));
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.5);
+        assert_matches_kruskal(&g, cfg(2));
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = EdgeList::with_vertices(5);
+        let run = run_ghs(&g, cfg(2)).unwrap();
+        assert_eq!(run.forest.edges.len(), 0);
+        assert_eq!(run.forest.n_components, 5);
+    }
+
+    #[test]
+    fn structured_graphs_all_rank_counts() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(7);
+        let graphs = vec![
+            structured::path(17, &mut rng),
+            structured::cycle(12, &mut rng),
+            structured::star(9, &mut rng),
+            structured::grid(4, 5, &mut rng),
+            structured::complete(10, &mut rng),
+        ];
+        for g in &graphs {
+            for p in [1u32, 2, 3, 8] {
+                assert_matches_kruskal(g, cfg(p));
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_forest() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(8);
+        let a = structured::connected_random(12, 8, &mut rng);
+        let b = structured::connected_random(9, 4, &mut rng);
+        let g = structured::with_isolated(&structured::disjoint_union(&a, &b), 3);
+        for p in [1u32, 4] {
+            assert_matches_kruskal(&g, cfg(p));
+        }
+    }
+
+    #[test]
+    fn all_generators_match_kruskal() {
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let g = generate(family, 7, 31);
+            for p in [1u32, 8] {
+                assert_matches_kruskal(&g, cfg(p));
+            }
+        }
+    }
+
+    #[test]
+    fn all_ablation_configs_agree() {
+        let g = generate(GraphFamily::Rmat, 6, 13);
+        for search in [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash] {
+            for separate in [false, true] {
+                for wire in
+                    [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId]
+                {
+                    let mut c = cfg(4);
+                    c.search = search;
+                    c.separate_test_queue = separate;
+                    c.wire_format = wire;
+                    assert_matches_kruskal(&g, c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_weights_handled() {
+        props("ghs duplicate weights", 30, |gen| {
+            let n = gen.usize_in(2, 25) as u32;
+            let mut el = EdgeList::with_vertices(n);
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    if gen.bool(0.4) {
+                        // Coarse weights: many exact duplicates.
+                        el.push(u, v, (gen.u64_below(4) as f64 + 1.0) / 8.0);
+                    }
+                }
+            }
+            // Duplicates force the special_id codec (proc-id uniqueness
+            // check fails), exercising the fallback path.
+            assert_matches_kruskal(&el, cfg(3));
+        });
+    }
+
+    #[test]
+    fn property_random_graphs_match_kruskal() {
+        props("ghs == kruskal random", 60, |gen| {
+            let n = gen.usize_in(1, 50) as u32;
+            let g = structured::connected_random(n, gen.usize_in(0, 100), gen.rng());
+            let p = 1 + gen.u64_below(6) as u32;
+            assert_matches_kruskal(&g, cfg(p));
+        });
+    }
+
+    #[test]
+    fn supersteps_guard_detects_limit() {
+        let g = generate(GraphFamily::Random, 5, 3);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(2);
+        c.max_supersteps = 1; // absurdly small
+        let err = Engine::new(&clean, c).unwrap().run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_unpreprocessed_graph() {
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 0, 0.5);
+        assert!(Engine::new(&g, cfg(1)).is_err());
+    }
+
+    #[test]
+    fn procid_fallback_when_many_ranks() {
+        let g = generate(GraphFamily::Random, 5, 3);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(2);
+        c.n_ranks = 300; // > 256: proc-id field too narrow
+        c.wire_format = WireFormat::CompactProcId;
+        let e = Engine::new(&clean, c).unwrap();
+        assert_eq!(e.effective_wire, WireFormat::CompactSpecialId);
+    }
+
+    #[test]
+    fn message_counts_track_complexity_bound() {
+        // GHS bound: ≤ 5*N*log2(N) + 2*M messages.
+        let g = generate(GraphFamily::Random, 8, 17);
+        let (clean, _) = preprocess(&g);
+        let run = Engine::new(&clean, cfg(4)).unwrap().run().unwrap();
+        let n = clean.n_vertices as u64;
+        let m = clean.n_edges() as u64;
+        let bound = 5 * n * (n as f64).log2().ceil() as u64 + 2 * m;
+        assert!(
+            run.sent.total() <= bound,
+            "messages {} exceed GHS bound {bound}",
+            run.sent.total()
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! The seven GHS message types (GHS83), addressed by global vertex ids.
+//!
+//! "Besides information that is necessary for algorithm execution messages
+//! also contain service information: the number of sending vertex and the
+//! number of the receiving vertex, as well as the message type." (§3.2)
+
+use crate::ghs::types::{Level, VertexState};
+use crate::ghs::weight::FragmentId;
+use crate::graph::VertexId;
+
+/// Message payload (the GHS argument list per type).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Payload {
+    /// Attempt to join over this edge; argument is the sender's level.
+    Connect { level: Level },
+    /// Broadcast new fragment (level, identity) and search state.
+    Initiate { level: Level, fragment: FragmentId, state: VertexState },
+    /// Probe: is the far endpoint in a different fragment?
+    Test { level: Level, fragment: FragmentId },
+    /// Positive answer to Test.
+    Accept,
+    /// Negative answer to Test (same fragment).
+    Reject,
+    /// Minimum outgoing edge weight of a subtree.
+    Report { best: FragmentId },
+    /// Redirect the fragment root towards the minimum outgoing edge.
+    ChangeCore,
+}
+
+impl Payload {
+    /// 3-bit wire type tag (§3.5: "3 bits for message type").
+    pub fn type_tag(&self) -> u8 {
+        match self {
+            Payload::Connect { .. } => 0,
+            Payload::Initiate { .. } => 1,
+            Payload::Test { .. } => 2,
+            Payload::Accept => 3,
+            Payload::Reject => 4,
+            Payload::Report { .. } => 5,
+            Payload::ChangeCore => 6,
+        }
+    }
+
+    /// Is this a "long" message (§3.5: Initiate, Test, Report carry the
+    /// 64-bit weight)?
+    pub fn is_long(&self) -> bool {
+        matches!(
+            self,
+            Payload::Initiate { .. } | Payload::Test { .. } | Payload::Report { .. }
+        )
+    }
+
+    /// Human-readable type name.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Payload::Connect { .. } => "Connect",
+            Payload::Initiate { .. } => "Initiate",
+            Payload::Test { .. } => "Test",
+            Payload::Accept => "Accept",
+            Payload::Reject => "Reject",
+            Payload::Report { .. } => "Report",
+            Payload::ChangeCore => "ChangeCore",
+        }
+    }
+}
+
+/// A GHS message travelling over graph edge `(src, dst)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Message {
+    /// Sending vertex (global id).
+    pub src: VertexId,
+    /// Receiving vertex (global id).
+    pub dst: VertexId,
+    /// GHS payload.
+    pub payload: Payload,
+}
+
+impl Message {
+    /// Construct a message.
+    pub fn new(src: VertexId, dst: VertexId, payload: Payload) -> Self {
+        Self { src, dst, payload }
+    }
+}
+
+/// Per-type message counters (for the paper's profiling figures).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MessageCounts {
+    pub connect: u64,
+    pub initiate: u64,
+    pub test: u64,
+    pub accept: u64,
+    pub reject: u64,
+    pub report: u64,
+    pub change_core: u64,
+}
+
+impl MessageCounts {
+    /// Bump the counter for a payload type.
+    pub fn bump(&mut self, p: &Payload) {
+        match p {
+            Payload::Connect { .. } => self.connect += 1,
+            Payload::Initiate { .. } => self.initiate += 1,
+            Payload::Test { .. } => self.test += 1,
+            Payload::Accept => self.accept += 1,
+            Payload::Reject => self.reject += 1,
+            Payload::Report { .. } => self.report += 1,
+            Payload::ChangeCore => self.change_core += 1,
+        }
+    }
+
+    /// Total messages.
+    pub fn total(&self) -> u64 {
+        self.connect + self.initiate + self.test + self.accept + self.reject + self.report
+            + self.change_core
+    }
+
+    /// Merge another counter set.
+    pub fn merge(&mut self, o: &MessageCounts) {
+        self.connect += o.connect;
+        self.initiate += o.initiate;
+        self.test += o.test;
+        self.accept += o.accept;
+        self.reject += o.reject;
+        self.report += o.report;
+        self.change_core += o.change_core;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ghs::weight::EdgeWeight;
+
+    #[test]
+    fn type_tags_are_unique_and_3bit() {
+        let payloads = [
+            Payload::Connect { level: 0 },
+            Payload::Initiate { level: 1, fragment: EdgeWeight::new(0.5, 0, 1), state: VertexState::Find },
+            Payload::Test { level: 1, fragment: EdgeWeight::new(0.5, 0, 1) },
+            Payload::Accept,
+            Payload::Reject,
+            Payload::Report { best: EdgeWeight::infinity() },
+            Payload::ChangeCore,
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for p in &payloads {
+            let t = p.type_tag();
+            assert!(t < 8, "3-bit tag");
+            assert!(seen.insert(t), "duplicate tag {t}");
+        }
+    }
+
+    #[test]
+    fn long_short_split_matches_paper() {
+        // §3.5: short = Connect, Accept, Reject, ChangeCore;
+        //       long  = Initiate, Test, Report.
+        assert!(!Payload::Connect { level: 0 }.is_long());
+        assert!(!Payload::Accept.is_long());
+        assert!(!Payload::Reject.is_long());
+        assert!(!Payload::ChangeCore.is_long());
+        let f = EdgeWeight::new(0.5, 0, 1);
+        assert!(Payload::Initiate { level: 0, fragment: f, state: VertexState::Found }.is_long());
+        assert!(Payload::Test { level: 0, fragment: f }.is_long());
+        assert!(Payload::Report { best: f }.is_long());
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = MessageCounts::default();
+        c.bump(&Payload::Accept);
+        c.bump(&Payload::Accept);
+        c.bump(&Payload::ChangeCore);
+        assert_eq!(c.accept, 2);
+        assert_eq!(c.total(), 3);
+        let mut d = MessageCounts::default();
+        d.bump(&Payload::Reject);
+        c.merge(&d);
+        assert_eq!(c.total(), 4);
+    }
+}

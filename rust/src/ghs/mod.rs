@@ -1,0 +1,27 @@
+//! The GHS distributed MST engine — the paper's core contribution.
+//!
+//! Layout:
+//! * [`types`] — vertex/edge state enums and levels
+//! * [`weight`] — unique extended weights / fragment identities
+//! * [`message`] — the seven GHS message types
+//! * [`wire`] — compact (80/152-bit) and naive wire encodings (§3.5)
+//! * [`edge_lookup`] — linear / binary / hash local-edge search (§3.3)
+//! * [`queues`] — main + separate Test queue with postponement (§3.4)
+//! * [`vertex`] — the per-vertex GHS automaton (GHS83 rules + forest halt)
+//! * [`rank`] — per-rank (simulated MPI process) state incl. aggregation
+//! * [`engine`] — the superstep engine with silence termination
+//! * [`parallel`] — threaded engine (one OS thread per rank)
+//! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
+
+pub mod config;
+pub mod edge_lookup;
+pub mod engine;
+pub mod message;
+pub mod parallel;
+pub mod queues;
+pub mod rank;
+pub mod result;
+pub mod types;
+pub mod vertex;
+pub mod weight;
+pub mod wire;

@@ -1,0 +1,272 @@
+//! Threaded engine: one OS thread per rank, mpsc channels as the
+//! interconnect. Unlike [`crate::ghs::engine::Engine`] this runs ranks
+//! truly concurrently (wall-clock mode); scheduling is nondeterministic but
+//! the result is still the unique MSF (verified against Kruskal in tests).
+//!
+//! Termination mirrors the paper's interconnect-"silence" criterion with a
+//! single shared counter of not-yet-fully-processed messages: a message
+//! counts from the moment it is enqueued/encoded until its processing
+//! completes without postponement. When the counter is zero the network is
+//! silent and every thread exits (the distributed analogue is the paper's
+//! `MPI_Allreduce` check every `EMPTY_ITER_CNT_TO_BREAK` iterations).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::ghs::config::GhsConfig;
+use crate::ghs::message::MessageCounts;
+use crate::ghs::rank::RankState;
+use crate::ghs::result::{GhsRun, ProfileCounters};
+use crate::ghs::vertex::Outcome;
+use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
+use crate::graph::partition::BlockPartition;
+use crate::graph::preprocess::is_simple;
+use crate::graph::EdgeList;
+
+type Packet = (u32, Vec<u8>, u32); // (src, bytes, n_msgs)
+
+/// Run GHS with one thread per rank. The graph must be preprocessed.
+pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
+    if !is_simple(g) {
+        bail!("graph must be preprocessed (self-loops / multi-edges present)");
+    }
+    if config.n_ranks == 0 {
+        bail!("need at least one rank");
+    }
+    let part = BlockPartition::new(g.n_vertices.max(1), config.n_ranks);
+    if config.wire_format == WireFormat::CompactProcId {
+        let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
+        if !feasible {
+            config.wire_format = WireFormat::CompactSpecialId;
+        }
+    }
+    let codec = match config.wire_format {
+        WireFormat::CompactProcId => IdentityCodec::ProcId,
+        _ => IdentityCodec::SpecialId,
+    };
+
+    let p = config.n_ranks as usize;
+    let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(p);
+    let mut receivers: Vec<Receiver<Packet>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // Startup tokens: one per rank, released after its wakeup_all, so the
+    // counter cannot hit zero before any work is injected.
+    let pending = Arc::new(AtomicI64::new(p as i64));
+
+    let mut handles = Vec::with_capacity(p);
+    for (rank_id, rx) in receivers.into_iter().enumerate() {
+        let mut rank = RankState::new(rank_id as u32, g, part, &config, codec);
+        let senders = senders.clone();
+        let pending = Arc::clone(&pending);
+        let max_iters = config.max_supersteps;
+        handles.push(std::thread::spawn(move || -> Result<RankState> {
+            run_rank(&mut rank, rx, &senders, &pending, max_iters)?;
+            Ok(rank)
+        }));
+    }
+    drop(senders);
+
+    let t0 = std::time::Instant::now();
+    let mut ranks = Vec::with_capacity(p);
+    for h in handles {
+        match h.join() {
+            Ok(r) => ranks.push(r?),
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+    collect(ranks, g.n_vertices, t0.elapsed().as_secs_f64())
+}
+
+fn run_rank(
+    rank: &mut RankState,
+    rx: Receiver<Packet>,
+    senders: &[Sender<Packet>],
+    pending: &AtomicI64,
+    max_iters: u64,
+) -> Result<()> {
+    // Each enqueued message adds 1; processing-without-postpone removes 1.
+    // RankState::send enqueues locally or into an outbox; count both.
+    let count_sends = |rank: &RankState, before: u64, pending: &AtomicI64| {
+        let delta = rank.prof.msgs_sent - before;
+        if delta > 0 {
+            pending.fetch_add(delta as i64, Ordering::AcqRel);
+        }
+    };
+    rank.wakeup_all();
+    count_sends(rank, 0, pending);
+    pending.fetch_sub(1, Ordering::AcqRel); // release the startup token
+
+    let mut iter: u64 = 0;
+    loop {
+        iter += 1;
+        rank.prof.iterations += 1;
+        if iter > max_iters {
+            bail!("rank {}: exceeded max iterations {max_iters}", rank.rank);
+        }
+        // read_msgs
+        loop {
+            match rx.try_recv() {
+                Ok((_src, buf, _n)) => rank.read_buffer(&buf),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        // process_queue
+        let burst = rank.queues.main_len().min(rank.config.burst_size);
+        for _ in 0..burst {
+            let msg = rank.queues.pop_main().expect("len checked");
+            rank.prof.msgs_processed_main += 1;
+            let sent_before = rank.prof.msgs_sent;
+            let outcome = rank.handle(msg);
+            count_sends(rank, sent_before, pending);
+            if outcome == Outcome::Postponed {
+                rank.prof.msgs_postponed += 1;
+                rank.queues.postpone(msg);
+            } else {
+                pending.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        // Test queue (§3.4)
+        if rank.queues.has_separate_test() && iter % rank.config.check_frequency as u64 == 0 {
+            let burst = rank.queues.test_len().min(rank.config.burst_size);
+            for _ in 0..burst {
+                let msg = rank.queues.pop_test().expect("len checked");
+                rank.prof.msgs_processed_test += 1;
+                let sent_before = rank.prof.msgs_sent;
+                let outcome = rank.handle(msg);
+                count_sends(rank, sent_before, pending);
+                if outcome == Outcome::Postponed {
+                    rank.prof.msgs_postponed += 1;
+                    rank.queues.postpone(msg);
+                } else {
+                    pending.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+        // send_all_bufs
+        if iter % rank.config.sending_frequency as u64 == 0 {
+            rank.superstep = iter;
+            rank.flush_all();
+        }
+        for (dst, buf, n) in rank.flushed.drain(..) {
+            // Channel send failure means the peer exited after global
+            // silence; that cannot happen while messages are pending.
+            let _ = senders[dst as usize].send((rank.rank, buf, n));
+        }
+        // check_finish
+        if iter % rank.config.empty_iter_cnt_to_break as u64 == 0 {
+            rank.prof.finish_checks += 1;
+            if pending.load(Ordering::Acquire) == 0 {
+                return Ok(());
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+fn collect(mut ranks: Vec<RankState>, n_vertices: u32, wall: f64) -> Result<GhsRun> {
+    for r in &mut ranks {
+        r.prof.lookups = r.lookup_stats.lookups;
+        r.prof.lookup_probes = r.lookup_stats.probes;
+    }
+    let mut edges = Vec::new();
+    for r in &ranks {
+        edges.extend(r.branch_edges());
+    }
+    let mut uf = UnionFind::new(n_vertices);
+    for e in &edges {
+        if !uf.union(e.u, e.v) {
+            bail!("branch edges contain a cycle at ({}, {})", e.u, e.v);
+        }
+    }
+    let n_components = uf.n_sets();
+    let mut profile = ProfileCounters::default();
+    let mut per_rank = Vec::with_capacity(ranks.len());
+    let mut sent = MessageCounts::default();
+    let mut timeline = Vec::new();
+    let supersteps = ranks.iter().map(|r| r.prof.iterations).max().unwrap_or(0);
+    for r in &mut ranks {
+        profile.merge(&r.prof);
+        per_rank.push(r.prof);
+        sent.merge(&r.sent_counts);
+        timeline.append(&mut r.timeline);
+    }
+    timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
+    Ok(GhsRun {
+        forest: Forest { edges, n_components },
+        supersteps,
+        sent,
+        profile,
+        per_rank,
+        timeline,
+        // Threaded mode: real wall clock, no virtual network.
+        sim: crate::sim::SimSummary { total_time: wall, ..Default::default() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    fn cfg(n_ranks: u32) -> GhsConfig {
+        GhsConfig { n_ranks, max_supersteps: 50_000_000, ..GhsConfig::default() }
+    }
+
+    fn check(g: &EdgeList, p: u32) {
+        let (clean, _) = preprocess(g);
+        let run = run_threaded(&clean, cfg(p)).unwrap();
+        let oracle = kruskal(&clean);
+        assert_eq!(run.forest.canonical_edges(), oracle.canonical_edges());
+        assert_eq!(run.forest.n_components, oracle.n_components);
+    }
+
+    #[test]
+    fn threaded_matches_kruskal_small() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(17);
+        let g = structured::connected_random(40, 80, &mut rng);
+        for p in [1u32, 2, 4] {
+            check(&g, p);
+        }
+    }
+
+    #[test]
+    fn threaded_generators() {
+        for family in [GraphFamily::Rmat, GraphFamily::Random] {
+            let g = generate(family, 7, 5);
+            check(&g, 4);
+        }
+    }
+
+    #[test]
+    fn threaded_disconnected() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(18);
+        let a = structured::connected_random(15, 10, &mut rng);
+        let b = structured::connected_random(11, 6, &mut rng);
+        let g = structured::disjoint_union(&a, &b);
+        check(&g, 3);
+    }
+
+    #[test]
+    fn threaded_repeated_runs_stable() {
+        // Nondeterministic scheduling must not change the result.
+        let g = generate(GraphFamily::Rmat, 6, 9);
+        let (clean, _) = preprocess(&g);
+        let oracle = kruskal(&clean).canonical_edges();
+        for _ in 0..5 {
+            let run = run_threaded(&clean, cfg(4)).unwrap();
+            assert_eq!(run.forest.canonical_edges(), oracle);
+        }
+    }
+}

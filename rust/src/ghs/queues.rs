@@ -1,0 +1,135 @@
+//! Message queues with postponement (paper §3.2/§3.4).
+//!
+//! Every rank has a main FIFO queue; when `separate_test_queue` is enabled
+//! (§3.4) incoming `Test` messages are diverted to a second queue that is
+//! processed only every `CHECK_FREQUENCY` iterations — the paper's
+//! message-order relaxation ("it was found that it is beneficial to organize
+//! a separate queue for Test messages, and to process it much less
+//! frequently than the main queue"). Messages that cannot be processed yet
+//! are postponed by re-appending to the back of their queue, exactly as in
+//! the original GHS ("place the received message on the end of the queue").
+
+use std::collections::VecDeque;
+
+use crate::ghs::message::{Message, Payload};
+
+/// The two queues of one rank.
+#[derive(Debug, Default)]
+pub struct RankQueues {
+    main: VecDeque<Message>,
+    test: VecDeque<Message>,
+    separate_test: bool,
+    /// Total messages ever postponed (re-queued), for profiling.
+    pub postponed: u64,
+}
+
+impl RankQueues {
+    /// Create queues; `separate_test` enables the §3.4 relaxation.
+    pub fn new(separate_test: bool) -> Self {
+        Self { separate_test, ..Self::default() }
+    }
+
+    /// Route an incoming (or locally delivered) message to its queue.
+    pub fn push_incoming(&mut self, msg: Message) {
+        if self.separate_test && matches!(msg.payload, Payload::Test { .. }) {
+            self.test.push_back(msg);
+        } else {
+            self.main.push_back(msg);
+        }
+    }
+
+    /// Re-queue a message that could not be processed yet.
+    pub fn postpone(&mut self, msg: Message) {
+        self.postponed += 1;
+        self.push_incoming(msg);
+    }
+
+    /// Pop from the main queue.
+    pub fn pop_main(&mut self) -> Option<Message> {
+        self.main.pop_front()
+    }
+
+    /// Pop from the Test queue.
+    pub fn pop_test(&mut self) -> Option<Message> {
+        self.test.pop_front()
+    }
+
+    /// Messages currently waiting in the main queue.
+    pub fn main_len(&self) -> usize {
+        self.main.len()
+    }
+
+    /// Messages currently waiting in the Test queue.
+    pub fn test_len(&self) -> usize {
+        self.test.len()
+    }
+
+    /// Total queued messages.
+    pub fn total_len(&self) -> usize {
+        self.main.len() + self.test.len()
+    }
+
+    /// Is the Test queue separate (relaxed ordering enabled)?
+    pub fn has_separate_test(&self) -> bool {
+        self.separate_test
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ghs::weight::EdgeWeight;
+
+    fn test_msg() -> Message {
+        Message::new(0, 1, Payload::Test { level: 0, fragment: EdgeWeight::new(0.5, 0, 1) })
+    }
+
+    fn accept_msg() -> Message {
+        Message::new(1, 0, Payload::Accept)
+    }
+
+    #[test]
+    fn unified_queue_keeps_fifo_order() {
+        let mut q = RankQueues::new(false);
+        q.push_incoming(test_msg());
+        q.push_incoming(accept_msg());
+        assert_eq!(q.test_len(), 0, "no separate test queue");
+        assert!(matches!(q.pop_main().unwrap().payload, Payload::Test { .. }));
+        assert!(matches!(q.pop_main().unwrap().payload, Payload::Accept));
+    }
+
+    #[test]
+    fn separate_queue_diverts_tests_only() {
+        let mut q = RankQueues::new(true);
+        q.push_incoming(test_msg());
+        q.push_incoming(accept_msg());
+        assert_eq!(q.main_len(), 1);
+        assert_eq!(q.test_len(), 1);
+        assert!(matches!(q.pop_main().unwrap().payload, Payload::Accept));
+        assert!(matches!(q.pop_test().unwrap().payload, Payload::Test { .. }));
+    }
+
+    #[test]
+    fn postpone_goes_to_back_of_same_queue() {
+        let mut q = RankQueues::new(true);
+        q.push_incoming(test_msg());
+        let first = q.pop_test().unwrap();
+        q.push_incoming(test_msg());
+        q.postpone(first);
+        assert_eq!(q.postponed, 1);
+        assert_eq!(q.test_len(), 2);
+        // The postponed message is now behind the newer one.
+        let _newer = q.pop_test().unwrap();
+        let back = q.pop_test().unwrap();
+        assert_eq!(back, first);
+    }
+
+    #[test]
+    fn totals() {
+        let mut q = RankQueues::new(true);
+        q.push_incoming(test_msg());
+        q.push_incoming(accept_msg());
+        q.push_incoming(accept_msg());
+        assert_eq!(q.total_len(), 3);
+    }
+}

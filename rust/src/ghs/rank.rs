@@ -1,0 +1,383 @@
+//! Per-rank (simulated MPI process) state: local CRS block, per-vertex GHS
+//! variables, the edge-lookup structure, queues and per-destination
+//! aggregation buffers (paper §3.2: "a separate buffer is created in every
+//! process for every possible receiving process").
+
+use crate::ghs::config::GhsConfig;
+use crate::ghs::edge_lookup::{EdgeLookup, LookupStats, SearchStrategy};
+use crate::ghs::message::{Message, MessageCounts, Payload};
+use crate::ghs::queues::RankQueues;
+use crate::ghs::result::{FlushEvent, ProfileCounters};
+use crate::ghs::types::{EdgeState, Level, VertexState};
+use crate::ghs::weight::{EdgeWeight, FragmentId};
+use crate::ghs::wire::{self, IdentityCodec, WireFormat};
+use crate::graph::csr::Csr;
+use crate::graph::partition::BlockPartition;
+use crate::graph::{EdgeList, VertexId};
+
+/// Sentinel for "nil" adjacency-index variables (best_edge, test_edge,
+/// in_branch).
+pub const NIL: u32 = u32::MAX;
+
+/// GHS variables of one local vertex (GHS83 notation in comments).
+#[derive(Debug, Clone)]
+pub struct VertexVars {
+    /// SN: Sleeping / Find / Found.
+    pub sn: VertexState,
+    /// LN: fragment level.
+    pub ln: Level,
+    /// FN: fragment identity.
+    pub fragment: FragmentId,
+    /// find_count: outstanding Reports expected from subtrees.
+    pub find_count: i32,
+    /// best_edge: adjacency index of the current best outgoing candidate.
+    pub best_edge: u32,
+    /// best_wt: weight of best_edge (∞ if none).
+    pub best_wt: EdgeWeight,
+    /// test_edge: adjacency index currently being probed.
+    pub test_edge: u32,
+    /// in_branch: adjacency index towards the core.
+    pub in_branch: u32,
+    /// Has this vertex executed the core halt (forest: component done)?
+    pub halted: bool,
+    /// Cursor into the row's weight-sorted adjacency order: entries before
+    /// it are permanently non-Basic (edge states never revert), so the
+    /// minimum-weight Basic edge scan of `test()` is O(1) amortized.
+    pub cursor: u32,
+}
+
+impl VertexVars {
+    fn new() -> Self {
+        Self {
+            sn: VertexState::Sleeping,
+            ln: 0,
+            fragment: EdgeWeight::infinity(),
+            find_count: 0,
+            best_edge: NIL,
+            best_wt: EdgeWeight::infinity(),
+            test_edge: NIL,
+            in_branch: NIL,
+            halted: false,
+            cursor: 0,
+        }
+    }
+}
+
+/// One simulated MPI process.
+pub struct RankState {
+    /// This rank's id.
+    pub rank: u32,
+    /// Vertex block partition (shared layout).
+    pub part: BlockPartition,
+    /// Local CRS block.
+    pub csr: Csr,
+    /// Per-vertex GHS variables (indexed by local row).
+    pub vars: Vec<VertexVars>,
+    /// Per-adjacency-entry edge state (parallel to the CSR arrays).
+    pub edge_state: Vec<EdgeState>,
+    /// Precomputed codec weight per adjacency entry (hot in `test`).
+    pub adj_weight: Vec<EdgeWeight>,
+    /// Per row: adjacency indices sorted ascending by codec weight.
+    pub sorted_adj: Vec<u32>,
+    /// Per row: adjacency indices currently in the Branch state (appended
+    /// by [`Self::mark_branch`]; Branch is permanent, so no removal).
+    pub branch_list: Vec<Vec<u32>>,
+    /// Local-edge search structure (§3.3).
+    pub lookup: EdgeLookup,
+    /// Lookup probe statistics.
+    pub lookup_stats: LookupStats,
+    /// Message queues (§3.2/§3.4).
+    pub queues: RankQueues,
+    /// Per-destination aggregation buffers (encoded bytes + message count).
+    pub outbox: Vec<(Vec<u8>, u32)>,
+    /// Destinations with a non-empty aggregation buffer (so `flush_all`
+    /// does not scan all P buffers every SENDING_FREQUENCY iterations).
+    dirty_dsts: Vec<u32>,
+    /// Buffers flushed this superstep, to hand to the interconnect.
+    pub flushed: Vec<(u32, Vec<u8>, u32)>, // (dst, bytes, n_msgs)
+    /// Identity codec used for all weights/identities on this run.
+    pub codec: IdentityCodec,
+    /// Wire format for encode/decode.
+    pub wire: WireFormat,
+    /// Engine configuration.
+    pub config: GhsConfig,
+    /// Profile counters.
+    pub prof: ProfileCounters,
+    /// Per-type sent-message counts.
+    pub sent_counts: MessageCounts,
+    /// Core-halt events observed at this rank (2 per ≥2-vertex component).
+    pub halts: u64,
+    /// Flush events for the Fig 4 timeline (when enabled).
+    pub timeline: Vec<FlushEvent>,
+    /// Current superstep (set by the engine before each step).
+    pub superstep: u64,
+}
+
+impl RankState {
+    /// Build rank `rank` of the partitioned engine over the (preprocessed)
+    /// graph. `codec` must be chosen consistently for all ranks.
+    pub fn new(
+        rank: u32,
+        g: &EdgeList,
+        part: BlockPartition,
+        config: &GhsConfig,
+        codec: IdentityCodec,
+    ) -> Self {
+        let first = part.first_vertex(rank);
+        let rows = part.block_size(rank);
+        let mut csr = Csr::from_edges(g, first, rows);
+        if config.search == SearchStrategy::Binary {
+            csr.sort_rows_by_neighbour();
+        }
+        let lookup = EdgeLookup::build(config.search, &csr, config.hash_sizing);
+        let nnz = csr.nnz();
+        let n_local = rows as usize;
+        // Precompute codec weights and per-row weight-sorted adjacency
+        // order (initialization time, like the paper's hash table build).
+        let mut adj_weight = Vec::with_capacity(nnz);
+        for row in 0..rows {
+            let v = first + row;
+            for i in csr.row_range(v) {
+                adj_weight.push(codec.weight_of(csr.weight(i), v, csr.col(i), &part));
+            }
+        }
+        let mut sorted_adj: Vec<u32> = (0..nnz as u32).collect();
+        for row in 0..rows {
+            let range = csr.row_range(first + row);
+            sorted_adj[range.clone()].sort_unstable_by_key(|&i| adj_weight[i as usize]);
+        }
+        Self {
+            rank,
+            part,
+            csr,
+            vars: vec![VertexVars::new(); n_local],
+            edge_state: vec![EdgeState::Basic; nnz],
+            adj_weight,
+            sorted_adj,
+            branch_list: vec![Vec::new(); n_local],
+            lookup,
+            lookup_stats: LookupStats::default(),
+            queues: RankQueues::new(config.separate_test_queue),
+            outbox: (0..part.n_ranks()).map(|_| (Vec::new(), 0)).collect(),
+            dirty_dsts: Vec::new(),
+            flushed: Vec::new(),
+            codec,
+            wire: config.wire_format,
+            config: config.clone(),
+            prof: ProfileCounters::default(),
+            sent_counts: MessageCounts::default(),
+            halts: 0,
+            timeline: Vec::new(),
+            superstep: 0,
+        }
+    }
+
+    /// Mutable vertex variables of a local vertex.
+    #[inline]
+    pub fn vars_mut(&mut self, v: VertexId) -> &mut VertexVars {
+        let row = self.csr.row_of(v);
+        &mut self.vars[row]
+    }
+
+    /// Vertex variables of a local vertex.
+    #[inline]
+    pub fn vars_of(&self, v: VertexId) -> &VertexVars {
+        &self.vars[self.csr.row_of(v)]
+    }
+
+    /// Extended (codec) weight of the adjacency entry `adj`.
+    #[inline]
+    pub fn edge_weight(&self, _v: VertexId, adj: usize) -> EdgeWeight {
+        self.adj_weight[adj]
+    }
+
+    /// Mark adjacency entry `adj` of vertex `v` as a Branch, keeping the
+    /// per-row branch list in sync (used by the Initiate broadcast).
+    #[inline]
+    pub fn mark_branch(&mut self, v: VertexId, adj: usize) {
+        debug_assert_ne!(self.edge_state[adj], EdgeState::Branch);
+        self.edge_state[adj] = EdgeState::Branch;
+        let row = self.csr.row_of(v);
+        self.branch_list[row].push(adj as u32);
+    }
+
+    /// Send `payload` from local vertex `v` along adjacency entry `adj`.
+    /// Local destinations are delivered straight into this rank's queues;
+    /// remote ones are encoded into the destination's aggregation buffer
+    /// (flushed early if it reaches MAX_MSG_SIZE).
+    pub fn send(&mut self, v: VertexId, adj: usize, payload: Payload) {
+        let dst = self.csr.col(adj);
+        let msg = Message::new(v, dst, payload);
+        self.sent_counts.bump(&payload);
+        self.prof.msgs_sent += 1;
+        let owner = self.part.owner(dst);
+        if owner == self.rank {
+            self.queues.push_incoming(msg);
+        } else {
+            let (buf, n) = &mut self.outbox[owner as usize];
+            if buf.is_empty() {
+                self.dirty_dsts.push(owner);
+            }
+            wire::encode(&msg, self.wire, buf);
+            *n += 1;
+            self.prof.bytes_sent += self.wire.size_of(&payload) as u64;
+            if buf.len() >= self.config.max_msg_size {
+                self.flush_one(owner);
+            }
+        }
+    }
+
+    /// Flush one destination's aggregation buffer to the interconnect.
+    pub fn flush_one(&mut self, dst: u32) {
+        let (buf, n) = &mut self.outbox[dst as usize];
+        if buf.is_empty() {
+            return;
+        }
+        let bytes = std::mem::take(buf);
+        let n_msgs = std::mem::replace(n, 0);
+        self.prof.flushes += 1;
+        if self.config.record_timeline {
+            self.timeline.push(FlushEvent {
+                superstep: self.superstep,
+                src: self.rank,
+                dst,
+                bytes: bytes.len() as u32,
+                n_msgs,
+            });
+        }
+        self.flushed.push((dst, bytes, n_msgs));
+    }
+
+    /// Flush all non-empty buffers ("send_all_bufs" in the paper's scheme).
+    pub fn flush_all(&mut self) {
+        let dirty = std::mem::take(&mut self.dirty_dsts);
+        for dst in dirty {
+            self.flush_one(dst);
+        }
+    }
+
+    /// Any unflushed aggregated bytes?
+    pub fn has_dirty_outbox(&self) -> bool {
+        !self.dirty_dsts.is_empty()
+    }
+
+    /// Decode an arrived aggregated buffer into the queues ("read_msgs").
+    pub fn read_buffer(&mut self, buf: &[u8]) {
+        self.prof.bytes_decoded += buf.len() as u64;
+        for msg in wire::Decoder::new(buf, self.wire) {
+            self.prof.msgs_decoded += 1;
+            self.queues.push_incoming(msg);
+        }
+    }
+
+    /// Total work pending at this rank (queues + unflushed + flushed-not-
+    /// yet-delivered is tracked by the engine).
+    pub fn pending_local(&self) -> u64 {
+        let outbox_msgs: u64 = self.outbox.iter().map(|(_, n)| *n as u64).sum();
+        self.queues.total_len() as u64 + outbox_msgs
+    }
+
+    /// Collect this rank's Branch edges, each reported once (by the
+    /// endpoint with the smaller id when both sides are Branch; the engine
+    /// dedups cross-rank duplicates via canonical form anyway).
+    pub fn branch_edges(&self) -> Vec<crate::graph::WeightedEdge> {
+        let mut out = Vec::new();
+        let first = self.csr.first_vertex();
+        for row in 0..self.csr.rows() {
+            let v = first + row;
+            for (i, nbr, w) in self.csr.neighbours(v) {
+                if self.edge_state[i] == EdgeState::Branch && v < nbr {
+                    out.push(crate::graph::WeightedEdge::new(v, nbr, w));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    fn mk_rank(n_ranks: u32, rank: u32) -> (EdgeList, RankState) {
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = BlockPartition::new(g.n_vertices, n_ranks);
+        let cfg = GhsConfig { n_ranks, ..GhsConfig::default() };
+        let r = RankState::new(rank, &g, part, &cfg, IdentityCodec::SpecialId);
+        (g, r)
+    }
+
+    #[test]
+    fn local_send_goes_to_own_queue() {
+        let (_, mut r) = mk_rank(1, 0);
+        // Find any local edge.
+        let v = r.csr.first_vertex();
+        if r.csr.degree(v) > 0 {
+            let adj = r.csr.row_range(v).start;
+            r.send(v, adj, Payload::Accept);
+            assert_eq!(r.queues.total_len(), 1);
+            assert_eq!(r.prof.msgs_sent, 1);
+            assert!(r.flushed.is_empty());
+        }
+    }
+
+    #[test]
+    fn remote_send_aggregates_and_flushes_at_cap() {
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = BlockPartition::new(g.n_vertices, 2);
+        let mut cfg = GhsConfig { n_ranks: 2, ..GhsConfig::default() };
+        cfg.max_msg_size = 25; // tiny: 3 short messages (10 B) exceed it
+        let mut r = RankState::new(0, &g, part, &cfg, IdentityCodec::SpecialId);
+        // Find a cross-rank edge from rank 0.
+        let mut cross = None;
+        'outer: for row in 0..r.csr.rows() {
+            let v = r.csr.first_vertex() + row;
+            for (i, nbr, _) in r.csr.neighbours(v) {
+                if part.owner(nbr) == 1 {
+                    cross = Some((v, i));
+                    break 'outer;
+                }
+            }
+        }
+        let (v, adj) = cross.expect("scale-6 random graph must have cross edges");
+        r.send(v, adj, Payload::Accept);
+        r.send(v, adj, Payload::Accept);
+        assert!(r.flushed.is_empty(), "20 bytes under cap");
+        r.send(v, adj, Payload::Accept);
+        assert_eq!(r.flushed.len(), 1, "30 bytes over 25-byte cap -> early flush");
+        let (dst, buf, n) = &r.flushed[0];
+        assert_eq!(*dst, 1);
+        assert_eq!(*n, 3);
+        assert_eq!(buf.len(), 30);
+    }
+
+    #[test]
+    fn read_buffer_decodes_into_queues() {
+        let (_, mut r0) = mk_rank(2, 0);
+        let (_, mut r1) = mk_rank(2, 1);
+        // Encode from r0 to r1 manually.
+        let mut buf = Vec::new();
+        let msg = Message::new(0, r1.csr.first_vertex(), Payload::Accept);
+        wire::encode(&msg, r0.wire, &mut buf);
+        r1.read_buffer(&buf);
+        assert_eq!(r1.prof.msgs_decoded, 1);
+        assert_eq!(r1.queues.total_len(), 1);
+        let got = r1.queues.pop_main().unwrap();
+        assert_eq!(got.payload, Payload::Accept);
+        let _ = &mut r0;
+    }
+
+    #[test]
+    fn branch_edges_dedup_within_rank() {
+        let (_, mut r) = mk_rank(1, 0);
+        // Mark every adjacency entry Branch; each undirected edge appears
+        // twice in the CSR but must be reported once.
+        for s in r.edge_state.iter_mut() {
+            *s = EdgeState::Branch;
+        }
+        let edges = r.branch_edges();
+        assert_eq!(edges.len() * 2, r.csr.nnz());
+    }
+}

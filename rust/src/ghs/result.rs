@@ -1,0 +1,116 @@
+//! Output of a GHS run: the minimum spanning forest plus execution
+//! statistics used by the experiment harness.
+
+use crate::baseline::Forest;
+use crate::ghs::message::MessageCounts;
+use crate::graph::WeightedEdge;
+
+/// Per-category profile counters (Fig 3); values are abstract op counts
+/// converted to time by `sim::costmodel`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProfileCounters {
+    /// Messages decoded from incoming aggregated buffers.
+    pub msgs_decoded: u64,
+    /// Bytes decoded from incoming aggregated buffers.
+    pub bytes_decoded: u64,
+    /// Messages processed from the main queue.
+    pub msgs_processed_main: u64,
+    /// Messages processed from the Test queue.
+    pub msgs_processed_test: u64,
+    /// Messages postponed (re-queued).
+    pub msgs_postponed: u64,
+    /// Local-edge lookups performed.
+    pub lookups: u64,
+    /// Total probes across all lookups (linear scan steps / binary steps /
+    /// hash probes).
+    pub lookup_probes: u64,
+    /// Aggregated buffers flushed to the interconnect.
+    pub flushes: u64,
+    /// Bytes of encoded messages sent.
+    pub bytes_sent: u64,
+    /// Messages sent (to any destination, incl. rank-local).
+    pub msgs_sent: u64,
+    /// Completion checks (simulated Allreduce participations).
+    pub finish_checks: u64,
+    /// While-loop iterations executed.
+    pub iterations: u64,
+}
+
+impl ProfileCounters {
+    /// Merge another rank's counters.
+    pub fn merge(&mut self, o: &ProfileCounters) {
+        self.msgs_decoded += o.msgs_decoded;
+        self.bytes_decoded += o.bytes_decoded;
+        self.msgs_processed_main += o.msgs_processed_main;
+        self.msgs_processed_test += o.msgs_processed_test;
+        self.msgs_postponed += o.msgs_postponed;
+        self.lookups += o.lookups;
+        self.lookup_probes += o.lookup_probes;
+        self.flushes += o.flushes;
+        self.bytes_sent += o.bytes_sent;
+        self.msgs_sent += o.msgs_sent;
+        self.finish_checks += o.finish_checks;
+        self.iterations += o.iterations;
+    }
+}
+
+/// One flushed aggregated message, for the Fig 4 timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct FlushEvent {
+    /// Engine superstep at which the buffer was flushed.
+    pub superstep: u64,
+    /// Source rank.
+    pub src: u32,
+    /// Destination rank.
+    pub dst: u32,
+    /// Aggregated buffer size in bytes.
+    pub bytes: u32,
+    /// Number of GHS messages inside the buffer.
+    pub n_msgs: u32,
+}
+
+/// Full result of a GHS engine run.
+#[derive(Debug, Clone)]
+pub struct GhsRun {
+    /// The minimum spanning forest found.
+    pub forest: Forest,
+    /// Engine supersteps executed until silence.
+    pub supersteps: u64,
+    /// Per-type message counts (sent).
+    pub sent: MessageCounts,
+    /// Aggregated profile counters over all ranks.
+    pub profile: ProfileCounters,
+    /// Per-rank profile counters.
+    pub per_rank: Vec<ProfileCounters>,
+    /// Flush events (only populated when `record_timeline` is set).
+    pub timeline: Vec<FlushEvent>,
+    /// Virtual-time simulation summary (clocks, comm waits, flush log).
+    pub sim: crate::sim::SimSummary,
+}
+
+impl GhsRun {
+    /// Total raw forest weight.
+    pub fn total_weight(&self) -> f64 {
+        self.forest.total_weight()
+    }
+
+    /// Forest edges.
+    pub fn edges(&self) -> &[WeightedEdge] {
+        &self.forest.edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge() {
+        let mut a = ProfileCounters { msgs_decoded: 1, lookups: 5, ..Default::default() };
+        let b = ProfileCounters { msgs_decoded: 2, bytes_sent: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.msgs_decoded, 3);
+        assert_eq!(a.lookups, 5);
+        assert_eq!(a.bytes_sent, 7);
+    }
+}

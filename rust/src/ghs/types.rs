@@ -1,0 +1,47 @@
+//! Core GHS state enums (GHS83 §3): vertex states, edge states, levels.
+
+/// Vertex automaton state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VertexState {
+    /// Initial state, before wakeup.
+    Sleeping,
+    /// Participating in the fragment's minimum-outgoing-edge search.
+    Find,
+    /// Not currently searching.
+    Found,
+}
+
+/// Edge classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeState {
+    /// Not yet known whether the edge is in the MST.
+    Basic,
+    /// In the MST.
+    Branch,
+    /// Known not to be in the MST.
+    Rejected,
+}
+
+/// Fragment level. GHS guarantees level ≤ log2(N); the paper's wire format
+/// allocates 5 bits, i.e. levels up to 31 (graphs up to 2^31 vertices).
+pub type Level = u8;
+
+/// Maximum level representable in the paper's 5-bit wire field.
+pub const MAX_WIRE_LEVEL: Level = 31;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn states_are_small_copies() {
+        assert_eq!(std::mem::size_of::<VertexState>(), 1);
+        assert_eq!(std::mem::size_of::<EdgeState>(), 1);
+    }
+
+    #[test]
+    fn wire_level_bound() {
+        assert_eq!(MAX_WIRE_LEVEL, 31);
+        assert!((1u64 << 5) > MAX_WIRE_LEVEL as u64);
+    }
+}

@@ -1,0 +1,448 @@
+//! The per-vertex GHS automaton — a faithful implementation of the response
+//! procedures of Gallager, Humblet, Spira (TOPLAS 1983), extended with the
+//! paper's forest halt (a fragment core that sees `Report(∞)` on both sides
+//! stops; disconnected inputs yield a minimum spanning forest).
+//!
+//! Why the paper's §3.4 Test-queue relaxation is safe (and implemented
+//! as-is here): while a vertex has an outstanding `Test`, it cannot report,
+//! so its fragment's search cannot complete, so its fragment can neither
+//! merge nor be the sender of any later message on the tested edge — i.e.
+//! on any edge direction a `Test` is never followed by another message it
+//! could be reordered with. Delaying Tests in a separate queue therefore
+//! preserves per-edge-direction FIFO semantics for every ordering the
+//! algorithm relies on. (Messages of *other* vertices routed through the
+//! same rank pair may overtake a Test; GHS never requires cross-edge
+//! ordering.)
+
+use crate::ghs::message::{Message, Payload};
+use crate::ghs::rank::{RankState, NIL};
+use crate::ghs::types::{EdgeState, Level, VertexState, MAX_WIRE_LEVEL};
+use crate::ghs::weight::{EdgeWeight, FragmentId};
+use crate::graph::VertexId;
+
+/// Result of processing one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Fully processed.
+    Done,
+    /// Cannot be processed yet; re-queue ("place on end of queue").
+    Postponed,
+}
+
+impl RankState {
+    /// Wake up every local Sleeping vertex (the engine does this in each
+    /// rank's first iteration; the original GHS also allows wakeup on first
+    /// message receipt, which cannot occur under this schedule).
+    pub fn wakeup_all(&mut self) {
+        let first = self.csr.first_vertex();
+        for row in 0..self.csr.rows() {
+            if self.vars[row as usize].sn == VertexState::Sleeping {
+                self.wakeup(first + row);
+            }
+        }
+    }
+
+    /// GHS procedure `wakeup`: mark the minimum-weight adjacent edge as a
+    /// Branch and try to connect over it at level 0.
+    fn wakeup(&mut self, v: VertexId) {
+        // The weight-sorted adjacency order makes the minimum edge the
+        // first entry of the row's sorted segment.
+        let best = self.csr.row_range(v).start..self.csr.row_range(v).end;
+        let best = if best.is_empty() {
+            None
+        } else {
+            Some(self.sorted_adj[best.start] as usize)
+        };
+        let vars = self.vars_mut(v);
+        debug_assert_eq!(vars.sn, VertexState::Sleeping);
+        vars.ln = 0;
+        vars.sn = VertexState::Found;
+        vars.find_count = 0;
+        match best {
+            None => {
+                // Isolated vertex: a complete single-vertex component.
+                vars.halted = true;
+            }
+            Some(m) => {
+                self.mark_branch(v, m);
+                self.send(v, m, Payload::Connect { level: 0 });
+            }
+        }
+    }
+
+    /// Dispatch one message to its destination vertex's automaton.
+    pub fn handle(&mut self, msg: Message) -> Outcome {
+        let v = msg.dst;
+        debug_assert!(self.csr.owns(v), "message routed to wrong rank");
+        // NOTE on a rejected optimization (kept as documentation): one
+        // could postpone a higher-level Test *before* the §3.3 edge lookup
+        // (`if level > LN { return Postponed }` here), making retries
+        // nearly free. We implemented and measured it: wall-clock gain was
+        // <5 %, but it ERASES the paper's §3.4 phenomenon — with cheap
+        // retries the separate Test queue no longer buys the ~2× the paper
+        // (and our SSCA2 ablation) attributes to it, because that gain
+        // comes exactly from not re-paying lookup+dispatch per retry. The
+        // paper's implementation reprocesses messages fully per attempt
+        // ("Some messages are processed repeatedly"), so we keep that
+        // semantics: every attempt pays the full lookup.
+        let j = self
+            .lookup
+            .find(&self.csr, msg.src, v, &mut self.lookup_stats)
+            .unwrap_or_else(|| panic!("message over non-existent edge {} -> {}", msg.src, v));
+        match msg.payload {
+            Payload::Connect { level } => self.on_connect(v, j, level),
+            Payload::Initiate { level, fragment, state } => {
+                self.on_initiate(v, j, level, fragment, state);
+                Outcome::Done
+            }
+            Payload::Test { level, fragment } => self.on_test(v, j, level, fragment),
+            Payload::Accept => {
+                self.on_accept(v, j);
+                Outcome::Done
+            }
+            Payload::Reject => {
+                self.on_reject(v, j);
+                Outcome::Done
+            }
+            Payload::Report { best } => self.on_report(v, j, best),
+            Payload::ChangeCore => {
+                self.change_core(v);
+                Outcome::Done
+            }
+        }
+    }
+
+    /// GHS (3): response to Connect(L) on edge j.
+    fn on_connect(&mut self, v: VertexId, j: usize, l: Level) -> Outcome {
+        let (ln, fragment, sn) = {
+            let vars = self.vars_of(v);
+            (vars.ln, vars.fragment, vars.sn)
+        };
+        if l < ln {
+            // Absorb the lower-level fragment: j becomes a Branch and the
+            // absorbed subtree receives our (level, identity, state).
+            self.mark_branch(v, j);
+            self.send(v, j, Payload::Initiate { level: ln, fragment, state: sn });
+            if sn == VertexState::Find {
+                self.vars_mut(v).find_count += 1;
+            }
+            Outcome::Done
+        } else if self.edge_state[j] == EdgeState::Basic {
+            // Equal (or higher) level over a Basic edge: cannot answer yet.
+            Outcome::Postponed
+        } else {
+            // Equal level over a Branch edge: both sides connected over j —
+            // merge. j becomes the core of a level L+1 fragment whose
+            // identity is the weight of j.
+            debug_assert_eq!(self.edge_state[j], EdgeState::Branch, "Connect over Rejected edge");
+            debug_assert!(ln < MAX_WIRE_LEVEL, "fragment level overflows 5-bit wire field");
+            let fid: FragmentId = self.edge_weight(v, j);
+            self.send(
+                v,
+                j,
+                Payload::Initiate { level: ln + 1, fragment: fid, state: VertexState::Find },
+            );
+            Outcome::Done
+        }
+    }
+
+    /// GHS (4): response to Initiate(L, F, S) on edge j.
+    fn on_initiate(&mut self, v: VertexId, j: usize, l: Level, f: FragmentId, s: VertexState) {
+        {
+            let vars = self.vars_mut(v);
+            vars.ln = l;
+            vars.fragment = f;
+            vars.sn = s;
+            vars.in_branch = j as u32;
+            vars.best_edge = NIL;
+            vars.best_wt = EdgeWeight::infinity();
+        }
+        // Propagate down every other Branch edge (the maintained per-row
+        // branch list avoids rescanning the whole adjacency row).
+        let row = self.csr.row_of(v);
+        let mut n_children = 0i32;
+        for bi in 0..self.branch_list[row].len() {
+            let i = self.branch_list[row][bi] as usize;
+            if i != j {
+                debug_assert_eq!(self.edge_state[i], EdgeState::Branch);
+                self.send(v, i, Payload::Initiate { level: l, fragment: f, state: s });
+                n_children += 1;
+            }
+        }
+        if s == VertexState::Find {
+            self.vars_mut(v).find_count += n_children;
+            self.test(v);
+        }
+    }
+
+    /// GHS (5): procedure test — probe the minimum-weight Basic edge, or
+    /// report if none remain.
+    ///
+    /// Uses the per-row weight-sorted order with a monotone cursor: edge
+    /// states never revert to Basic, so entries skipped once stay
+    /// skippable and the scan is O(degree) amortized over the whole run.
+    fn test(&mut self, v: VertexId) {
+        let range = self.csr.row_range(v);
+        let row = self.csr.row_of(v);
+        let mut cur = self.vars[row].cursor as usize;
+        let mut best: Option<usize> = None;
+        while range.start + cur < range.end {
+            let i = self.sorted_adj[range.start + cur] as usize;
+            if self.edge_state[i] == EdgeState::Basic {
+                best = Some(i);
+                break;
+            }
+            cur += 1;
+        }
+        self.vars[row].cursor = cur as u32;
+        match best {
+            Some(i) => {
+                let (ln, fragment) = {
+                    let vars = self.vars_mut(v);
+                    vars.test_edge = i as u32;
+                    (vars.ln, vars.fragment)
+                };
+                self.send(v, i, Payload::Test { level: ln, fragment });
+            }
+            None => {
+                self.vars_mut(v).test_edge = NIL;
+                self.report(v);
+            }
+        }
+    }
+
+    /// GHS (6): response to Test(L, F) on edge j.
+    fn on_test(&mut self, v: VertexId, j: usize, l: Level, f: FragmentId) -> Outcome {
+        let (ln, fragment) = {
+            let vars = self.vars_of(v);
+            (vars.ln, vars.fragment)
+        };
+        if l > ln {
+            return Outcome::Postponed;
+        }
+        if f != fragment {
+            self.send(v, j, Payload::Accept);
+            return Outcome::Done;
+        }
+        // Same fragment: the edge is internal.
+        if self.edge_state[j] == EdgeState::Basic {
+            self.edge_state[j] = EdgeState::Rejected;
+        }
+        if self.vars_of(v).test_edge != j as u32 {
+            self.send(v, j, Payload::Reject);
+        } else {
+            // Our own probe of this edge is moot; move to the next one.
+            self.test(v);
+        }
+        Outcome::Done
+    }
+
+    /// GHS (7): response to Accept on edge j.
+    fn on_accept(&mut self, v: VertexId, j: usize) {
+        let w = self.edge_weight(v, j);
+        {
+            let vars = self.vars_mut(v);
+            vars.test_edge = NIL;
+            if w < vars.best_wt {
+                vars.best_edge = j as u32;
+                vars.best_wt = w;
+            }
+        }
+        self.report(v);
+    }
+
+    /// GHS (8): response to Reject on edge j.
+    fn on_reject(&mut self, v: VertexId, j: usize) {
+        if self.edge_state[j] == EdgeState::Basic {
+            self.edge_state[j] = EdgeState::Rejected;
+        }
+        self.test(v);
+    }
+
+    /// GHS (9): procedure report — once all subtree Reports arrived and the
+    /// local probe finished, report the best weight towards the core.
+    fn report(&mut self, v: VertexId) {
+        let (ready, in_branch, best_wt) = {
+            let vars = self.vars_of(v);
+            (
+                vars.find_count == 0 && vars.test_edge == NIL,
+                vars.in_branch,
+                vars.best_wt,
+            )
+        };
+        if ready {
+            self.vars_mut(v).sn = VertexState::Found;
+            debug_assert_ne!(in_branch, NIL, "report before any Initiate");
+            self.send(v, in_branch as usize, Payload::Report { best: best_wt });
+        }
+    }
+
+    /// GHS (10): response to Report(w) on edge j.
+    fn on_report(&mut self, v: VertexId, j: usize, w: EdgeWeight) -> Outcome {
+        let in_branch = self.vars_of(v).in_branch;
+        if j as u32 != in_branch {
+            // A child subtree reports.
+            {
+                let vars = self.vars_mut(v);
+                vars.find_count -= 1;
+                debug_assert!(vars.find_count >= 0, "find_count underflow");
+                if w < vars.best_wt {
+                    vars.best_wt = w;
+                    vars.best_edge = j as u32;
+                }
+            }
+            self.report(v);
+            Outcome::Done
+        } else {
+            // The other core half reports.
+            let (sn, best_wt) = {
+                let vars = self.vars_of(v);
+                (vars.sn, vars.best_wt)
+            };
+            if sn == VertexState::Find {
+                return Outcome::Postponed;
+            }
+            if w > best_wt {
+                self.change_core(v);
+            } else if w == best_wt && w.is_infinite() {
+                // Forest halt: no outgoing edge on either side — this
+                // fragment spans its entire connected component.
+                self.vars_mut(v).halted = true;
+                self.halts += 1;
+            }
+            // w < best_wt: the other core vertex performs change_core.
+            Outcome::Done
+        }
+    }
+
+    /// GHS (11): procedure change_core — forward towards the fragment's
+    /// minimum outgoing edge; the vertex adjacent to it sends Connect.
+    fn change_core(&mut self, v: VertexId) {
+        let best_edge = self.vars_of(v).best_edge;
+        debug_assert_ne!(best_edge, NIL, "change_core without a best edge");
+        let be = best_edge as usize;
+        if self.edge_state[be] == EdgeState::Branch {
+            self.send(v, be, Payload::ChangeCore);
+        } else {
+            let ln = self.vars_of(v).ln;
+            self.send(v, be, Payload::Connect { level: ln });
+            self.mark_branch(v, be);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests drive a single-rank RankState by hand; full-protocol
+    //! correctness (GHS == Kruskal over thousands of graphs) lives in
+    //! `engine::tests` and `rust/tests/`.
+    use super::*;
+    use crate::ghs::config::GhsConfig;
+    use crate::ghs::wire::IdentityCodec;
+    use crate::graph::partition::BlockPartition;
+    use crate::graph::EdgeList;
+
+    fn one_rank(g: &EdgeList) -> RankState {
+        let part = BlockPartition::new(g.n_vertices, 1);
+        let cfg = GhsConfig { n_ranks: 1, ..GhsConfig::default() };
+        RankState::new(0, g, part, &cfg, IdentityCodec::SpecialId)
+    }
+
+    #[test]
+    fn wakeup_marks_min_edge_branch_and_connects() {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 1, 0.9);
+        g.push(0, 2, 0.1); // min edge of vertex 0
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        // Vertex 0's min edge (to 2) must be Branch.
+        let adj0: Vec<_> = r.csr.neighbours(0).collect();
+        for (i, nbr, _) in adj0 {
+            let expect = if nbr == 2 { EdgeState::Branch } else { EdgeState::Basic };
+            assert_eq!(r.edge_state[i], expect);
+        }
+        // All three vertices sent Connect(0).
+        assert_eq!(r.sent_counts.connect, 3);
+        // All local: queued in own queues.
+        assert_eq!(r.queues.total_len(), 3);
+        for v in 0..3 {
+            assert_eq!(r.vars_of(v).sn, VertexState::Found);
+            assert_eq!(r.vars_of(v).ln, 0);
+        }
+    }
+
+    #[test]
+    fn isolated_vertex_halts_immediately() {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 1, 0.5);
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        assert!(r.vars_of(2).halted, "degree-0 vertex is its own component");
+        assert!(!r.vars_of(0).halted);
+    }
+
+    #[test]
+    fn two_vertices_merge_to_level_1() {
+        // Smallest possible merge: both vertices pick the single edge,
+        // exchange Connect(0), then Initiate(1, w, Find).
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.5);
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        // Drain queues until silent.
+        let mut guard = 0;
+        while r.queues.total_len() > 0 {
+            let msg = r.queues.pop_main().or_else(|| r.queues.pop_test()).unwrap();
+            if r.handle(msg) == Outcome::Postponed {
+                r.queues.postpone(msg);
+            }
+            guard += 1;
+            assert!(guard < 100, "no convergence");
+        }
+        for v in 0..2 {
+            assert_eq!(r.vars_of(v).ln, 1, "merged to level 1");
+            assert_eq!(r.vars_of(v).fragment, EdgeWeight::new(0.5, 0, 1));
+        }
+        // Both core vertices halted with no outgoing edges.
+        assert_eq!(r.halts, 2);
+    }
+
+    #[test]
+    fn connect_equal_level_over_basic_edge_postpones() {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 1, 0.1);
+        g.push(1, 2, 0.2);
+        g.push(0, 2, 0.3);
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        // Hand-craft: vertex 2 receives Connect(0) from 0 over edge (0,2),
+        // which is Basic at 2, and 2 is at level 0 -> postpone.
+        let msg = Message::new(0, 2, Payload::Connect { level: 0 });
+        assert_eq!(r.handle(msg), Outcome::Postponed);
+    }
+
+    #[test]
+    fn test_message_from_higher_level_postpones() {
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.5);
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        let f = EdgeWeight::new(0.9, 0, 1);
+        let msg = Message::new(0, 1, Payload::Test { level: 5, fragment: f });
+        assert_eq!(r.handle(msg), Outcome::Postponed);
+    }
+
+    #[test]
+    fn test_from_other_fragment_accepts() {
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.5);
+        let mut r = one_rank(&g);
+        r.wakeup_all();
+        // Level 0, different fragment id -> Accept.
+        let f = EdgeWeight::new(0.123, 0, 1);
+        let before = r.sent_counts.accept;
+        let msg = Message::new(0, 1, Payload::Test { level: 0, fragment: f });
+        assert_eq!(r.handle(msg), Outcome::Done);
+        assert_eq!(r.sent_counts.accept, before + 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Unique edge weights (paper §3.2).
+//!
+//! GHS requires all edge weights to be distinct. The paper extends the raw
+//! weight with a `special_id`: the binary concatenation of
+//! `(min(u,v), max(u,v))`. Two distinct undirected edges always differ in
+//! `special_id`, so the extended weight `(w, special_id)` is a strict total
+//! order even when raw weights collide.
+//!
+//! Fragment identities in GHS are core-edge weights, so [`EdgeWeight`] also
+//! serves as the fragment-identity type.
+
+use std::cmp::Ordering;
+
+use crate::graph::VertexId;
+
+/// Extended, globally-unique edge weight: raw weight plus `special_id`
+/// tiebreak. Also used as the GHS fragment identity (the core edge weight).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EdgeWeight {
+    /// Raw weight, compared first. Stored as ordered bits (see
+    /// [`f64_to_ordered_bits`]) so `Eq`/`Hash`/`Ord` are total and exact.
+    wbits: u64,
+    /// `special_id`: `(min(u,v) << 32) | max(u,v)`.
+    sid: u64,
+}
+
+/// Map an `f64` to `u64` bits whose unsigned order matches the float order
+/// (for non-NaN values; weights are in (0,1) so always finite).
+#[inline]
+pub fn f64_to_ordered_bits(w: f64) -> u64 {
+    debug_assert!(!w.is_nan());
+    let b = w.to_bits();
+    // Flip sign bit for positives, all bits for negatives.
+    if b >> 63 == 0 { b ^ (1 << 63) } else { !b }
+}
+
+/// Inverse of [`f64_to_ordered_bits`].
+#[inline]
+pub fn ordered_bits_to_f64(b: u64) -> f64 {
+    let raw = if b >> 63 == 1 { b ^ (1 << 63) } else { !b };
+    f64::from_bits(raw)
+}
+
+impl EdgeWeight {
+    /// Extended weight of edge `(u, v)` with raw weight `w`.
+    pub fn new(w: f64, u: VertexId, v: VertexId) -> Self {
+        let (lo, hi) = (u.min(v), u.max(v));
+        Self { wbits: f64_to_ordered_bits(w), sid: ((lo as u64) << 32) | hi as u64 }
+    }
+
+    /// Rebuild from wire components.
+    pub fn from_parts(wbits: u64, sid: u64) -> Self {
+        Self { wbits, sid }
+    }
+
+    /// Extended weight with an explicit tiebreak value. Used by the
+    /// process-id identity codec (paper §3.5 final optimization), where the
+    /// tiebreak is the minimum owning rank instead of the vertex-pair
+    /// `special_id`. All identities in one run must use one codec.
+    pub fn with_tie(w: f64, tie: u64) -> Self {
+        Self { wbits: f64_to_ordered_bits(w), sid: tie }
+    }
+
+    /// Positive infinity: "no outgoing edge" in Report messages.
+    pub fn infinity() -> Self {
+        Self { wbits: f64_to_ordered_bits(f64::INFINITY), sid: u64::MAX }
+    }
+
+    /// Is this the infinity sentinel?
+    pub fn is_infinite(&self) -> bool {
+        *self == Self::infinity()
+    }
+
+    /// Raw weight value.
+    pub fn raw(&self) -> f64 {
+        ordered_bits_to_f64(self.wbits)
+    }
+
+    /// Order-preserving weight bits (wire form).
+    pub fn weight_bits(&self) -> u64 {
+        self.wbits
+    }
+
+    /// `special_id` tiebreak (wire form).
+    pub fn special_id(&self) -> u64 {
+        self.sid
+    }
+
+    /// Endpoints recorded in the `special_id`.
+    pub fn endpoints(&self) -> (VertexId, VertexId) {
+        ((self.sid >> 32) as u32, (self.sid & 0xFFFF_FFFF) as u32)
+    }
+}
+
+impl PartialOrd for EdgeWeight {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdgeWeight {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.wbits.cmp(&other.wbits).then(self.sid.cmp(&other.sid))
+    }
+}
+
+impl std::fmt::Display for EdgeWeight {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_infinite() {
+            write!(f, "∞")
+        } else {
+            let (u, v) = self.endpoints();
+            write!(f, "{:.6}#({},{})", self.raw(), u, v)
+        }
+    }
+}
+
+/// GHS fragment identity = weight of the fragment's core edge.
+pub type FragmentId = EdgeWeight;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn ordered_bits_roundtrip_and_order() {
+        props("ordered bits", 2000, |g| {
+            let a = g.f64();
+            let b = g.f64();
+            assert_eq!(ordered_bits_to_f64(f64_to_ordered_bits(a)), a);
+            assert_eq!(a < b, f64_to_ordered_bits(a) < f64_to_ordered_bits(b));
+        });
+    }
+
+    #[test]
+    fn ordered_bits_handle_negative_and_zero() {
+        for (a, b) in [(-1.0, 0.0), (-2.0, -1.0), (0.0, 1.0), (-0.5, 0.5)] {
+            assert!(f64_to_ordered_bits(a) < f64_to_ordered_bits(b), "{a} {b}");
+            assert_eq!(ordered_bits_to_f64(f64_to_ordered_bits(a)), a);
+        }
+    }
+
+    #[test]
+    fn weight_order_uses_raw_weight_first() {
+        let light = EdgeWeight::new(0.1, 9, 10);
+        let heavy = EdgeWeight::new(0.9, 0, 1);
+        assert!(light < heavy);
+    }
+
+    #[test]
+    fn ties_broken_by_special_id() {
+        let a = EdgeWeight::new(0.5, 0, 1);
+        let b = EdgeWeight::new(0.5, 0, 2);
+        assert!(a < b);
+        assert_ne!(a, b);
+        // Orientation-independent.
+        assert_eq!(EdgeWeight::new(0.5, 1, 0), a);
+    }
+
+    #[test]
+    fn infinity_is_greatest() {
+        let inf = EdgeWeight::infinity();
+        assert!(inf.is_infinite());
+        let w = EdgeWeight::new(0.999999, u32::MAX - 1, u32::MAX);
+        assert!(w < inf);
+    }
+
+    #[test]
+    fn endpoints_recovered() {
+        let w = EdgeWeight::new(0.25, 7, 3);
+        assert_eq!(w.endpoints(), (3, 7));
+    }
+
+    #[test]
+    fn distinctness_property() {
+        // Any two distinct edges have distinct extended weights, even with
+        // equal raw weights.
+        props("distinct extended weights", 500, |g| {
+            let u1 = g.u64_below(1000) as u32;
+            let v1 = (g.u64_below(999) as u32 + u1 + 1) % 1000;
+            let u2 = g.u64_below(1000) as u32;
+            let v2 = (g.u64_below(999) as u32 + u2 + 1) % 1000;
+            let w = g.f64();
+            let a = EdgeWeight::new(w, u1, v1);
+            let b = EdgeWeight::new(w, u2, v2);
+            let same_edge = (u1.min(v1), u1.max(v1)) == (u2.min(v2), u2.max(v2));
+            assert_eq!(a == b, same_edge);
+        });
+    }
+}

@@ -1,0 +1,437 @@
+//! Wire encodings (paper §3.5, "Messages Length Optimization").
+//!
+//! Three formats, selectable for the Fig 2 ablation:
+//!
+//! * **Naive** — the base version: a fixed 32-byte struct for every message.
+//! * **Compact + special_id** — packed 16-bit header (3 b type, 5 b level,
+//!   1 b state, 7 b reserved), two 32-bit vertex ids; long messages add the
+//!   64-bit weight and the 64-bit `special_id` → 80 / 208 bits.
+//! * **Compact + proc-id** — the paper's final form: after verifying that
+//!   all edge weights within each process are distinct, the 64-bit
+//!   `special_id` is replaced by the 8-bit minimal owning process rank →
+//!   80 / 152 bits ("As a result short and long messages are 80 and 152
+//!   bits size respectively").
+//!
+//! All three formats are byte-aligned per message (10 / 19 / 26 / 32 bytes),
+//! so aggregated buffers decode as a simple sequential stream.
+
+use crate::ghs::message::{Message, Payload};
+use crate::ghs::types::{Level, VertexState};
+use crate::ghs::weight::{f64_to_ordered_bits, EdgeWeight, FragmentId};
+use crate::graph::partition::BlockPartition;
+use crate::graph::{EdgeList, VertexId};
+#[cfg(test)]
+use crate::util::bitpack::BitWriter;
+
+/// Wire format selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Fixed 32-byte struct per message (base version).
+    Naive,
+    /// Packed header; long messages carry the 64-bit `special_id`.
+    CompactSpecialId,
+    /// Packed header; long messages carry the 8-bit min-owner rank.
+    CompactProcId,
+}
+
+impl WireFormat {
+    /// Encoded size in bytes of a message with the given payload.
+    pub fn size_of(&self, payload: &Payload) -> usize {
+        match self {
+            WireFormat::Naive => 32,
+            WireFormat::CompactSpecialId => {
+                if payload.is_long() {
+                    26 // 208 bits
+                } else {
+                    10 // 80 bits
+                }
+            }
+            WireFormat::CompactProcId => {
+                if payload.is_long() {
+                    19 // 152 bits
+                } else {
+                    10 // 80 bits
+                }
+            }
+        }
+    }
+}
+
+/// Identity codec: how fragment identities / report weights derive their
+/// tiebreak component. Must be consistent across all ranks of a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdentityCodec {
+    /// Tiebreak = `special_id` = (min(u,v) << 32) | max(u,v).
+    SpecialId,
+    /// Tiebreak = minimal rank that stores the edge (requires per-process
+    /// weight uniqueness; paper §3.5).
+    ProcId,
+}
+
+impl IdentityCodec {
+    /// Identity / extended weight of edge `(u, v)` with raw weight `w`.
+    pub fn weight_of(&self, w: f64, u: VertexId, v: VertexId, part: &BlockPartition) -> EdgeWeight {
+        match self {
+            IdentityCodec::SpecialId => EdgeWeight::new(w, u, v),
+            IdentityCodec::ProcId => {
+                let tie = part.owner(u).min(part.owner(v)) as u64;
+                EdgeWeight::with_tie(w, tie)
+            }
+        }
+    }
+}
+
+/// Verify the paper's precondition for the proc-id codec: within every
+/// rank's local edge set, all raw weights are pairwise distinct.
+pub fn per_process_weights_unique(g: &EdgeList, part: &BlockPartition) -> bool {
+    use std::collections::HashSet;
+    let mut per_rank: Vec<HashSet<u64>> = (0..part.n_ranks()).map(|_| HashSet::new()).collect();
+    for e in &g.edges {
+        let bits = e.w.to_bits();
+        let (ru, rv) = (part.owner(e.u), part.owner(e.v));
+        if !per_rank[ru as usize].insert(bits) {
+            return false;
+        }
+        // A cross-rank edge is stored on both owning ranks; a local edge once.
+        if rv != ru && !per_rank[rv as usize].insert(bits) {
+            return false;
+        }
+    }
+    true
+}
+
+const INF_TIE8: u64 = 0xFF;
+
+/// Encode `msg` into `buf` (appending). Returns bytes written.
+pub fn encode(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) -> usize {
+    let before = buf.len();
+    match fmt {
+        WireFormat::Naive => encode_naive(msg, buf),
+        WireFormat::CompactSpecialId | WireFormat::CompactProcId => encode_compact(msg, fmt, buf),
+    }
+    let written = buf.len() - before;
+    debug_assert_eq!(written, fmt.size_of(&msg.payload));
+    written
+}
+
+fn payload_fields(p: &Payload) -> (u8, Level, u8, Option<FragmentId>) {
+    // (type tag, level, state bit, weight field)
+    match *p {
+        Payload::Connect { level } => (0, level, 0, None),
+        Payload::Initiate { level, fragment, state } => {
+            (1, level, (state == VertexState::Find) as u8, Some(fragment))
+        }
+        Payload::Test { level, fragment } => (2, level, 0, Some(fragment)),
+        Payload::Accept => (3, 0, 0, None),
+        Payload::Reject => (4, 0, 0, None),
+        Payload::Report { best } => (5, 0, 0, Some(best)),
+        Payload::ChangeCore => (6, 0, 0, None),
+    }
+}
+
+fn encode_naive(msg: &Message, buf: &mut Vec<u8>) {
+    let (tag, level, state, wf) = payload_fields(&msg.payload);
+    buf.push(tag);
+    buf.push(level);
+    buf.push(state);
+    buf.push(0);
+    buf.extend_from_slice(&msg.src.to_le_bytes());
+    buf.extend_from_slice(&msg.dst.to_le_bytes());
+    let (wbits, tie) = match wf {
+        Some(w) => (w.weight_bits(), w.special_id()),
+        None => (0, 0),
+    };
+    buf.extend_from_slice(&wbits.to_le_bytes());
+    buf.extend_from_slice(&tie.to_le_bytes());
+    // Struct padding: the base version ships a fixed 32-byte struct.
+    buf.extend_from_slice(&[0u8; 4]);
+}
+
+// The compact layouts are byte-aligned after the 16-bit packed header
+// (3 b type at bits 0..3, 5 b level at 3..8, 1 b state at bit 8, 7 b
+// reserved), so encoding is direct little-endian byte writes. The layout
+// is bit-identical to the BitWriter-based reference encoder, which the
+// `direct_codec_matches_bitpacked_reference` test asserts.
+fn encode_compact(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
+    let (tag, level, state, wf) = payload_fields(&msg.payload);
+    let header: u16 = tag as u16 | (level as u16) << 3 | (state as u16) << 8;
+    buf.extend_from_slice(&header.to_le_bytes());
+    buf.extend_from_slice(&msg.src.to_le_bytes());
+    buf.extend_from_slice(&msg.dst.to_le_bytes());
+    if msg.payload.is_long() {
+        let weight = wf.expect("long payload carries weight");
+        buf.extend_from_slice(&weight.weight_bits().to_le_bytes());
+        match fmt {
+            WireFormat::CompactProcId => {
+                let tie = if weight.is_infinite() { INF_TIE8 } else { weight.special_id() };
+                debug_assert!(tie <= 0xFF, "proc-id tie {tie} exceeds 8 bits");
+                buf.push(tie as u8);
+            }
+            _ => buf.extend_from_slice(&weight.special_id().to_le_bytes()),
+        }
+    }
+}
+
+/// Reference encoder via the generic bit packer (kept for the layout
+/// equivalence test — the paper's §3.5 defines the format in bit fields).
+#[cfg(test)]
+fn encode_compact_bitpacked(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
+    let (tag, level, state, wf) = payload_fields(&msg.payload);
+    let mut w = BitWriter::new();
+    w.write(tag as u64, 3);
+    w.write(level as u64, 5);
+    w.write(state as u64, 1);
+    w.write(0, 7); // reserved, pads header to 16 bits
+    w.write(msg.src as u64, 32);
+    w.write(msg.dst as u64, 32);
+    if msg.payload.is_long() {
+        let weight = wf.expect("long payload carries weight");
+        w.write(weight.weight_bits(), 64);
+        match fmt {
+            WireFormat::CompactProcId => {
+                let tie = if weight.is_infinite() { INF_TIE8 } else { weight.special_id() };
+                w.write(tie & 0xFF, 8);
+            }
+            _ => w.write(weight.special_id(), 64),
+        }
+    }
+    buf.extend_from_slice(&w.into_bytes());
+}
+
+/// Streaming decoder over an aggregated buffer.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    at: usize, // byte offset
+    fmt: WireFormat,
+}
+
+impl<'a> Decoder<'a> {
+    /// Decode messages from `buf` encoded with `fmt`.
+    pub fn new(buf: &'a [u8], fmt: WireFormat) -> Self {
+        Self { buf, at: 0, fmt }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
+        if fmt == WireFormat::CompactProcId
+            && tie == INF_TIE8
+            && wbits == f64_to_ordered_bits(f64::INFINITY)
+        {
+            return EdgeWeight::infinity();
+        }
+        EdgeWeight::from_parts(wbits, tie)
+    }
+}
+
+impl Iterator for Decoder<'_> {
+    type Item = Message;
+
+    fn next(&mut self) -> Option<Message> {
+        if self.remaining() == 0 {
+            return None;
+        }
+        match self.fmt {
+            WireFormat::Naive => {
+                assert!(self.remaining() >= 32, "truncated naive message");
+                let b = &self.buf[self.at..self.at + 32];
+                self.at += 32;
+                let tag = b[0];
+                let level = b[1];
+                let state = b[2];
+                let src = u32::from_le_bytes(b[4..8].try_into().unwrap());
+                let dst = u32::from_le_bytes(b[8..12].try_into().unwrap());
+                let wbits = u64::from_le_bytes(b[12..20].try_into().unwrap());
+                let tie = u64::from_le_bytes(b[20..28].try_into().unwrap());
+                let weight = EdgeWeight::from_parts(wbits, tie);
+                Some(Message::new(src, dst, assemble(tag, level, state, weight)))
+            }
+            WireFormat::CompactSpecialId | WireFormat::CompactProcId => {
+                let b = &self.buf[self.at..];
+                assert!(b.len() >= 10, "truncated compact message");
+                let header = u16::from_le_bytes(b[0..2].try_into().unwrap());
+                let tag = (header & 0b111) as u8;
+                let level = ((header >> 3) & 0b1_1111) as Level;
+                let state = ((header >> 8) & 1) as u8;
+                let src = u32::from_le_bytes(b[2..6].try_into().unwrap());
+                let dst = u32::from_le_bytes(b[6..10].try_into().unwrap());
+                let is_long = matches!(tag, 1 | 2 | 5);
+                let weight = if is_long {
+                    let wbits = u64::from_le_bytes(b[10..18].try_into().unwrap());
+                    let tie = if self.fmt == WireFormat::CompactProcId {
+                        self.at += 19;
+                        b[18] as u64
+                    } else {
+                        self.at += 26;
+                        u64::from_le_bytes(b[18..26].try_into().unwrap())
+                    };
+                    Self::decode_weight(wbits, tie, self.fmt)
+                } else {
+                    self.at += 10;
+                    EdgeWeight::infinity() // unused by short payloads
+                };
+                Some(Message::new(src, dst, assemble(tag, level, state, weight)))
+            }
+        }
+    }
+}
+
+fn assemble(tag: u8, level: Level, state: u8, weight: FragmentId) -> Payload {
+    match tag {
+        0 => Payload::Connect { level },
+        1 => Payload::Initiate {
+            level,
+            fragment: weight,
+            state: if state == 1 { VertexState::Find } else { VertexState::Found },
+        },
+        2 => Payload::Test { level, fragment: weight },
+        3 => Payload::Accept,
+        4 => Payload::Reject,
+        5 => Payload::Report { best: weight },
+        6 => Payload::ChangeCore,
+        t => panic!("invalid message tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    fn sample_messages(g: &mut crate::util::minitest::Gen, proc_mode: bool) -> Vec<Message> {
+        let mut msgs = Vec::new();
+        let n = g.usize_in(1, 30);
+        for _ in 0..n {
+            let src = g.u64() as u32;
+            let dst = g.u64() as u32;
+            let level = (g.u64_below(32)) as Level;
+            let tie = if proc_mode { g.u64_below(0xFF) } else { g.u64() };
+            let w = EdgeWeight::with_tie(g.f64(), tie);
+            let payload = match g.u64_below(8) {
+                0 => Payload::Connect { level },
+                1 => Payload::Initiate {
+                    level,
+                    fragment: w,
+                    state: if g.bool(0.5) { VertexState::Find } else { VertexState::Found },
+                },
+                2 => Payload::Test { level, fragment: w },
+                3 => Payload::Accept,
+                4 => Payload::Reject,
+                5 => Payload::Report { best: w },
+                6 => Payload::Report { best: EdgeWeight::infinity() },
+                _ => Payload::ChangeCore,
+            };
+            msgs.push(Message::new(src, dst, payload));
+        }
+        msgs
+    }
+
+    #[test]
+    fn sizes_match_paper() {
+        let f = EdgeWeight::with_tie(0.5, 3);
+        let short = Payload::Accept;
+        let long = Payload::Test { level: 1, fragment: f };
+        assert_eq!(WireFormat::CompactProcId.size_of(&short) * 8, 80);
+        assert_eq!(WireFormat::CompactProcId.size_of(&long) * 8, 152);
+        assert_eq!(WireFormat::CompactSpecialId.size_of(&short) * 8, 80);
+        assert_eq!(WireFormat::CompactSpecialId.size_of(&long) * 8, 208);
+        assert_eq!(WireFormat::Naive.size_of(&short) * 8, 256);
+    }
+
+    #[test]
+    fn roundtrip_all_formats() {
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            props(&format!("wire roundtrip {fmt:?}"), 300, |g| {
+                let msgs = sample_messages(g, fmt == WireFormat::CompactProcId);
+                let mut buf = Vec::new();
+                let mut expect_bytes = 0;
+                for m in &msgs {
+                    expect_bytes += encode(m, fmt, &mut buf);
+                }
+                assert_eq!(buf.len(), expect_bytes);
+                let decoded: Vec<Message> = Decoder::new(&buf, fmt).collect();
+                assert_eq!(decoded.len(), msgs.len());
+                for (a, b) in msgs.iter().zip(&decoded) {
+                    assert_eq!(a.src, b.src);
+                    assert_eq!(a.dst, b.dst);
+                    match (&a.payload, &b.payload) {
+                        // Short payloads decode exactly.
+                        (x, y) if !x.is_long() => assert_eq!(x, y),
+                        // Long payloads decode exactly too (weights fit codec).
+                        (x, y) => assert_eq!(x, y),
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn direct_codec_matches_bitpacked_reference() {
+        // The hand-rolled byte encoder must be bit-identical to the §3.5
+        // bit-field reference for both compact formats.
+        for fmt in [WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            props(&format!("direct == bitpacked {fmt:?}"), 300, |g| {
+                let msgs = sample_messages(g, fmt == WireFormat::CompactProcId);
+                for m in &msgs {
+                    let mut direct = Vec::new();
+                    encode(m, fmt, &mut direct);
+                    let mut reference = Vec::new();
+                    encode_compact_bitpacked(m, fmt, &mut reference);
+                    assert_eq!(direct, reference, "{m:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn infinity_report_survives_procid() {
+        let m = Message::new(1, 2, Payload::Report { best: EdgeWeight::infinity() });
+        let mut buf = Vec::new();
+        encode(&m, WireFormat::CompactProcId, &mut buf);
+        let out: Vec<Message> = Decoder::new(&buf, WireFormat::CompactProcId).collect();
+        match out[0].payload {
+            Payload::Report { best } => assert!(best.is_infinite()),
+            _ => panic!("wrong payload"),
+        }
+    }
+
+    #[test]
+    fn identity_codecs_are_consistent_between_endpoints() {
+        props("identity codec symmetric", 200, |g| {
+            let n = 1 + g.u64_below(1000) as u32;
+            let ranks = 1 + g.u64_below(64) as u32;
+            let part = BlockPartition::new(n.max(2), ranks.min(n.max(2)));
+            let u = g.u64_below(part.n_vertices() as u64) as u32;
+            let v = g.u64_below(part.n_vertices() as u64) as u32;
+            let w = g.f64();
+            for codec in [IdentityCodec::SpecialId, IdentityCodec::ProcId] {
+                let a = codec.weight_of(w, u, v, &part);
+                let b = codec.weight_of(w, v, u, &part);
+                assert_eq!(a, b, "orientation independence for {codec:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn per_process_uniqueness_check() {
+        let part = BlockPartition::new(4, 2); // ranks own {0,1} and {2,3}
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 1, 0.5); // rank 0 only
+        g.push(2, 3, 0.5); // rank 1 only -> same weight, different ranks: OK
+        assert!(per_process_weights_unique(&g, &part));
+        g.push(0, 2, 0.5); // stored at ranks 0 and 1 -> collides in both
+        assert!(!per_process_weights_unique(&g, &part));
+    }
+
+    #[test]
+    fn cross_rank_edge_checked_on_both_ranks() {
+        let part = BlockPartition::new(4, 2);
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 2, 0.25); // ranks 0 and 1
+        g.push(2, 3, 0.25); // rank 1: collides with the cross edge on rank 1
+        assert!(!per_process_weights_unique(&g, &part));
+    }
+}

@@ -1,0 +1,96 @@
+//! Connected-component labelling (BFS) — used to verify the forest
+//! generalization: a minimum spanning forest must have exactly
+//! `n_vertices - n_components` edges.
+
+use std::collections::VecDeque;
+
+use crate::graph::csr::Csr;
+use crate::graph::EdgeList;
+
+/// Component labelling result.
+#[derive(Debug, Clone)]
+pub struct Components {
+    /// Component id per vertex (ids are 0..count, assigned in BFS order).
+    pub label: Vec<u32>,
+    /// Number of connected components.
+    pub count: u32,
+}
+
+impl Components {
+    /// Are `u` and `v` in the same component?
+    pub fn same(&self, u: u32, v: u32) -> bool {
+        self.label[u as usize] == self.label[v as usize]
+    }
+
+    /// Sizes of each component.
+    pub fn sizes(&self) -> Vec<u32> {
+        let mut sizes = vec![0u32; self.count as usize];
+        for &l in &self.label {
+            sizes[l as usize] += 1;
+        }
+        sizes
+    }
+}
+
+/// Label connected components of an undirected graph.
+pub fn components(g: &EdgeList) -> Components {
+    let csr = Csr::full(g);
+    let n = g.n_vertices as usize;
+    let mut label = vec![u32::MAX; n];
+    let mut count = 0u32;
+    let mut queue = VecDeque::new();
+    for start in 0..n {
+        if label[start] != u32::MAX {
+            continue;
+        }
+        label[start] = count;
+        queue.push_back(start as u32);
+        while let Some(v) = queue.pop_front() {
+            for (_, nbr, _) in csr.neighbours(v) {
+                if label[nbr as usize] == u32::MAX {
+                    label[nbr as usize] = count;
+                    queue.push_back(nbr);
+                }
+            }
+        }
+        count += 1;
+    }
+    Components { label, count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    #[test]
+    fn empty_graph_all_isolated() {
+        let g = EdgeList::with_vertices(5);
+        let c = components(&g);
+        assert_eq!(c.count, 5);
+        assert_eq!(c.sizes(), vec![1; 5]);
+    }
+
+    #[test]
+    fn two_triangles() {
+        let mut g = EdgeList::with_vertices(6);
+        for (u, v) in [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)] {
+            g.push(u, v, 0.5);
+        }
+        let c = components(&g);
+        assert_eq!(c.count, 2);
+        assert!(c.same(0, 2));
+        assert!(c.same(3, 5));
+        assert!(!c.same(0, 3));
+        assert_eq!(c.sizes(), vec![3, 3]);
+    }
+
+    #[test]
+    fn single_component() {
+        let mut g = EdgeList::with_vertices(4);
+        for (u, v) in [(0, 1), (1, 2), (2, 3)] {
+            g.push(u, v, 0.1);
+        }
+        assert_eq!(components(&g).count, 1);
+    }
+}

@@ -1,0 +1,240 @@
+//! CRS (Compressed Row Storage) representation of the *local* part of the
+//! graph held by one rank (paper §3: "The local part of the graph in each
+//! process is stored in the CRS format").
+//!
+//! Rows are the rank-local vertices; each row stores the neighbours of one
+//! vertex together with edge weights. The same physical structure is also
+//! used (with all vertices local) by the sequential baselines.
+
+use crate::graph::{EdgeList, VertexId, WeightedEdge};
+
+/// CRS adjacency over a contiguous block of vertices `[first .. first+rows)`.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// First (global) vertex id stored in this structure.
+    first: VertexId,
+    /// Row offsets, length `rows + 1`.
+    offsets: Vec<usize>,
+    /// Column indices: the global id of the neighbour on the far end.
+    cols: Vec<VertexId>,
+    /// Edge weights, parallel to `cols`.
+    weights: Vec<f64>,
+}
+
+impl Csr {
+    /// Build the CRS rows for vertices `[first, first + rows)` from an
+    /// undirected edge list. Every edge `(u, v)` contributes an entry to
+    /// row `u` *and* row `v` (when each falls within the block).
+    pub fn from_edges(edges: &EdgeList, first: VertexId, rows: u32) -> Self {
+        let in_block = |x: VertexId| x >= first && x < first + rows;
+        let mut degree = vec![0usize; rows as usize];
+        for e in &edges.edges {
+            if in_block(e.u) {
+                degree[(e.u - first) as usize] += 1;
+            }
+            if in_block(e.v) {
+                degree[(e.v - first) as usize] += 1;
+            }
+        }
+        let mut offsets = Vec::with_capacity(rows as usize + 1);
+        offsets.push(0usize);
+        for d in &degree {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let nnz = *offsets.last().unwrap();
+        let mut cols = vec![0 as VertexId; nnz];
+        let mut weights = vec![0.0f64; nnz];
+        let mut cursor = offsets[..rows as usize].to_vec();
+        let mut place = |row: VertexId, other: VertexId, w: f64, cursor: &mut [usize]| {
+            let r = (row - first) as usize;
+            let at = cursor[r];
+            cols[at] = other;
+            weights[at] = w;
+            cursor[r] += 1;
+        };
+        for e in &edges.edges {
+            if in_block(e.u) {
+                place(e.u, e.v, e.w, &mut cursor);
+            }
+            if in_block(e.v) {
+                place(e.v, e.u, e.w, &mut cursor);
+            }
+        }
+        Self { first, offsets, cols, weights }
+    }
+
+    /// Whole-graph CRS (all vertices in one block).
+    pub fn full(edges: &EdgeList) -> Self {
+        Self::from_edges(edges, 0, edges.n_vertices)
+    }
+
+    /// First global vertex id in this block.
+    pub fn first_vertex(&self) -> VertexId {
+        self.first
+    }
+
+    /// Number of rows (local vertices).
+    pub fn rows(&self) -> u32 {
+        (self.offsets.len() - 1) as u32
+    }
+
+    /// Does this block own global vertex `v`?
+    pub fn owns(&self, v: VertexId) -> bool {
+        v >= self.first && v - self.first < self.rows()
+    }
+
+    /// Total local (directed) adjacency entries.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Local row index of a global vertex id.
+    #[inline]
+    pub fn row_of(&self, v: VertexId) -> usize {
+        debug_assert!(self.owns(v));
+        (v - self.first) as usize
+    }
+
+    /// Half-open range of adjacency indices for global vertex `v`.
+    #[inline]
+    pub fn row_range(&self, v: VertexId) -> std::ops::Range<usize> {
+        let r = self.row_of(v);
+        self.offsets[r]..self.offsets[r + 1]
+    }
+
+    /// Degree of global vertex `v`.
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.row_range(v).len()
+    }
+
+    /// Neighbour id at adjacency index `i`.
+    #[inline]
+    pub fn col(&self, i: usize) -> VertexId {
+        self.cols[i]
+    }
+
+    /// Weight at adjacency index `i`.
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Iterate `(adjacency index, neighbour, weight)` over a vertex's row.
+    pub fn neighbours(&self, v: VertexId) -> impl Iterator<Item = (usize, VertexId, f64)> + '_ {
+        self.row_range(v).map(move |i| (i, self.cols[i], self.weights[i]))
+    }
+
+    /// Sort each row by neighbour id (enables binary search lookup,
+    /// paper §3.3 first optimization).
+    pub fn sort_rows_by_neighbour(&mut self) {
+        for r in 0..self.rows() as usize {
+            let range = self.offsets[r]..self.offsets[r + 1];
+            let mut pairs: Vec<(VertexId, f64)> = range
+                .clone()
+                .map(|i| (self.cols[i], self.weights[i]))
+                .collect();
+            pairs.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            for (k, i) in range.enumerate() {
+                self.cols[i] = pairs[k].0;
+                self.weights[i] = pairs[k].1;
+            }
+        }
+    }
+
+    /// Reconstruct the `WeightedEdge` at adjacency index `i` of row `v`.
+    pub fn edge_at(&self, v: VertexId, i: usize) -> WeightedEdge {
+        WeightedEdge::new(v, self.cols[i], self.weights[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+    use crate::util::prng::Xoshiro256;
+
+    fn triangle() -> EdgeList {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 1, 0.1);
+        g.push(1, 2, 0.2);
+        g.push(2, 0, 0.3);
+        g
+    }
+
+    #[test]
+    fn full_csr_degrees() {
+        let csr = Csr::full(&triangle());
+        assert_eq!(csr.rows(), 3);
+        assert_eq!(csr.nnz(), 6);
+        for v in 0..3 {
+            assert_eq!(csr.degree(v), 2, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn block_csr_only_stores_local_rows() {
+        let csr = Csr::from_edges(&triangle(), 1, 2); // vertices 1 and 2
+        assert_eq!(csr.rows(), 2);
+        assert!(!csr.owns(0));
+        assert!(csr.owns(1) && csr.owns(2));
+        assert_eq!(csr.degree(1), 2);
+        let nbrs: Vec<VertexId> = csr.neighbours(1).map(|(_, n, _)| n).collect();
+        assert!(nbrs.contains(&0) && nbrs.contains(&2));
+    }
+
+    #[test]
+    fn weights_travel_with_columns() {
+        let csr = Csr::full(&triangle());
+        for (_, n, w) in csr.neighbours(0) {
+            match n {
+                1 => assert_eq!(w, 0.1),
+                2 => assert_eq!(w, 0.3),
+                _ => panic!("unexpected neighbour {n}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_rows_are_sorted() {
+        props("csr row sorting", 50, |g| {
+            let n = g.usize_in(2, 40) as u32;
+            let mut el = EdgeList::with_vertices(n);
+            let m = g.usize_in(1, 120);
+            for _ in 0..m {
+                let u = g.u64_below(n as u64) as u32;
+                let v = g.u64_below(n as u64) as u32;
+                if u != v {
+                    el.push(u, v, g.f64());
+                }
+            }
+            let mut csr = Csr::full(&el);
+            csr.sort_rows_by_neighbour();
+            for v in 0..n {
+                let cols: Vec<u32> = csr.neighbours(v).map(|(_, c, _)| c).collect();
+                assert!(cols.windows(2).all(|w| w[0] <= w[1]));
+            }
+        });
+    }
+
+    #[test]
+    fn partitioned_blocks_cover_full_graph() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let n = 64u32;
+        let mut el = EdgeList::with_vertices(n);
+        for _ in 0..300 {
+            let u = rng.next_below(n as u64) as u32;
+            let v = rng.next_below(n as u64) as u32;
+            if u != v {
+                el.push(u, v, rng.next_weight());
+            }
+        }
+        let full = Csr::full(&el);
+        let a = Csr::from_edges(&el, 0, 32);
+        let b = Csr::from_edges(&el, 32, 32);
+        assert_eq!(full.nnz(), a.nnz() + b.nnz());
+        for v in 0..n {
+            let block = if v < 32 { &a } else { &b };
+            assert_eq!(block.degree(v), full.degree(v));
+        }
+    }
+}

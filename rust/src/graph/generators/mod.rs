@@ -1,0 +1,129 @@
+//! Synthetic graph generators used in the paper's evaluation (§4):
+//! R-MAT, SSCA2 and Uniformly Random, plus small structured graphs for
+//! tests. All generators follow the paper's conventions: `2^scale`
+//! vertices, average vertex degree 32 (edge factor 16) by default, edge
+//! weights uniform in the open interval (0, 1).
+
+pub mod random;
+pub mod rmat;
+pub mod ssca2;
+pub mod structured;
+
+use crate::graph::EdgeList;
+use crate::util::prng::Xoshiro256;
+
+/// Edge factor: edges = factor * vertices. Average degree = 2 * factor.
+/// The paper uses average degree 32, i.e. factor 16.
+pub const DEFAULT_EDGE_FACTOR: usize = 16;
+
+/// Which synthetic family to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFamily {
+    /// R-MAT power-law graphs (social-network-like), paper ref [20].
+    Rmat,
+    /// SSCA2: randomly connected cliques, paper ref [21].
+    Ssca2,
+    /// Erdős–Rényi uniformly random graphs, paper ref [22].
+    Random,
+}
+
+impl GraphFamily {
+    /// Parse a family name (`rmat` / `ssca2` / `random`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rmat" | "r-mat" => Some(Self::Rmat),
+            "ssca2" | "ssca" => Some(Self::Ssca2),
+            "random" | "uniform" | "er" => Some(Self::Random),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's naming (e.g. `RMAT-24`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Rmat => "RMAT",
+            Self::Ssca2 => "SSCA2",
+            Self::Random => "Random",
+        }
+    }
+}
+
+/// Generate a graph of the given family at `scale` (2^scale vertices) with
+/// the paper's default edge factor, deterministically from `seed`.
+pub fn generate(family: GraphFamily, scale: u32, seed: u64) -> EdgeList {
+    generate_with_factor(family, scale, DEFAULT_EDGE_FACTOR, seed)
+}
+
+/// Generate with an explicit edge factor.
+pub fn generate_with_factor(
+    family: GraphFamily,
+    scale: u32,
+    edge_factor: usize,
+    seed: u64,
+) -> EdgeList {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    match family {
+        GraphFamily::Rmat => rmat::rmat(scale, edge_factor, &mut rng),
+        GraphFamily::Ssca2 => ssca2::ssca2(scale, edge_factor, &mut rng),
+        GraphFamily::Random => random::uniform_random(scale, edge_factor, &mut rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_parsing() {
+        assert_eq!(GraphFamily::parse("rmat"), Some(GraphFamily::Rmat));
+        assert_eq!(GraphFamily::parse("SSCA2"), Some(GraphFamily::Ssca2));
+        assert_eq!(GraphFamily::parse("Random"), Some(GraphFamily::Random));
+        assert_eq!(GraphFamily::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_families_generate_expected_sizes() {
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let g = generate(family, 8, 42);
+            assert_eq!(g.n_vertices, 256, "{family:?}");
+            // Edge factor 16: SSCA2 is clique-based so only approximately.
+            let target = 256 * DEFAULT_EDGE_FACTOR;
+            assert!(
+                g.n_edges() > target / 2 && g.n_edges() < target * 2,
+                "{family:?}: {} edges vs target {target}",
+                g.n_edges()
+            );
+            for e in &g.edges {
+                assert!(e.u < 256 && e.v < 256);
+                assert!(e.w > 0.0 && e.w < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let a = generate(family, 6, 7);
+            let b = generate(family, 6, 7);
+            assert_eq!(a.n_edges(), b.n_edges());
+            for (x, y) in a.edges.iter().zip(&b.edges) {
+                assert_eq!(x.u, y.u);
+                assert_eq!(x.v, y.v);
+                assert_eq!(x.w, y.w);
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(GraphFamily::Rmat, 6, 1);
+        let b = generate(GraphFamily::Rmat, 6, 2);
+        let same = a
+            .edges
+            .iter()
+            .zip(&b.edges)
+            .filter(|(x, y)| x.u == y.u && x.v == y.v)
+            .count();
+        assert!(same < a.n_edges() / 2);
+    }
+}

@@ -1,0 +1,52 @@
+//! Uniformly Random (Erdős–Rényi G(n, m)) generator — the paper's ref [22]:
+//! "neighbours of each vertex are chosen randomly".
+
+use crate::graph::EdgeList;
+use crate::util::prng::Xoshiro256;
+
+/// Generate a uniformly random graph with `2^scale` vertices and
+/// `edge_factor * 2^scale` undirected edges; endpoints drawn i.i.d.
+/// uniformly (self-loops allowed here, removed by preprocessing — matching
+/// the paper, which preprocesses loops/multi-edges away, §3.1).
+pub fn uniform_random(scale: u32, edge_factor: usize, rng: &mut Xoshiro256) -> EdgeList {
+    assert!(scale <= 31, "vertex ids are 32-bit");
+    let n: u64 = 1 << scale;
+    let m = edge_factor * n as usize;
+    let mut g = EdgeList::with_vertices(n as u32);
+    g.edges.reserve(m);
+    for _ in 0..m {
+        let u = rng.next_below(n) as u32;
+        let v = rng.next_below(n) as u32;
+        g.push(u, v, rng.next_weight());
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let g = uniform_random(10, 16, &mut rng);
+        assert_eq!(g.n_vertices, 1024);
+        assert_eq!(g.n_edges(), 16 * 1024);
+    }
+
+    #[test]
+    fn degrees_are_concentrated() {
+        // Unlike R-MAT, the uniform model has a binomial degree
+        // distribution: max degree stays within a small factor of average.
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let g = uniform_random(12, 16, &mut rng);
+        let mut deg = vec![0u32; g.n_vertices as usize];
+        for e in &g.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let avg = 2.0 * g.n_edges() as f64 / g.n_vertices as f64;
+        let max = *deg.iter().max().unwrap() as f64;
+        assert!(max < 3.0 * avg, "max {max} avg {avg}");
+    }
+}

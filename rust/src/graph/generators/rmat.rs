@@ -1,0 +1,108 @@
+//! R-MAT recursive-matrix graph generator (Chakrabarti, Zhan, Faloutsos,
+//! SDM 2004 — the paper's ref [20]).
+//!
+//! Uses the Graph500 parameterization a=0.57, b=0.19, c=0.19, d=0.05,
+//! which produces the skewed power-law degree distributions the paper
+//! describes as "real-world large-scale graphs from social networks and
+//! Internet". Vertex ids are scrambled by a random permutation so locality
+//! does not leak into the block partitioning.
+
+use crate::graph::{EdgeList, VertexId};
+use crate::util::prng::Xoshiro256;
+
+/// Graph500 R-MAT probabilities.
+pub const A: f64 = 0.57;
+pub const B: f64 = 0.19;
+pub const C: f64 = 0.19;
+
+/// Generate an R-MAT graph with `2^scale` vertices and
+/// `edge_factor * 2^scale` undirected edges.
+pub fn rmat(scale: u32, edge_factor: usize, rng: &mut Xoshiro256) -> EdgeList {
+    assert!(scale <= 31, "vertex ids are 32-bit");
+    let n: u64 = 1 << scale;
+    let m = edge_factor * n as usize;
+    let mut g = EdgeList::with_vertices(n as u32);
+    g.edges.reserve(m);
+
+    // Random vertex relabelling (Graph500-style scramble).
+    let mut perm: Vec<VertexId> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+
+    for _ in 0..m {
+        let (u, v) = rmat_edge(scale, rng);
+        g.push(perm[u as usize], perm[v as usize], rng.next_weight());
+    }
+    g
+}
+
+/// Sample one R-MAT edge by recursive quadrant descent with per-level
+/// probability noise (+-10%), as in the reference implementation.
+fn rmat_edge(scale: u32, rng: &mut Xoshiro256) -> (u64, u64) {
+    let mut u = 0u64;
+    let mut v = 0u64;
+    let (mut a, mut b, mut c) = (A, B, C);
+    for level in 0..scale {
+        let bit = 1u64 << (scale - 1 - level);
+        let r = rng.next_f64();
+        if r < a {
+            // top-left: nothing set
+        } else if r < a + b {
+            v |= bit;
+        } else if r < a + b + c {
+            u |= bit;
+        } else {
+            u |= bit;
+            v |= bit;
+        }
+        // Jitter the quadrant probabilities each level (keeps the matrix
+        // from being exactly self-similar; standard R-MAT practice).
+        let noise = |p: f64, rng: &mut Xoshiro256| p * (0.9 + 0.2 * rng.next_f64());
+        a = noise(a, rng);
+        b = noise(b, rng);
+        c = noise(c, rng);
+        let d = noise(1.0 - (A + B + C), rng);
+        let total = a + b + c + d;
+        a /= total;
+        b /= total;
+        c /= total;
+    }
+    (u, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_parameters() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = rmat(10, 16, &mut rng);
+        assert_eq!(g.n_vertices, 1024);
+        assert_eq!(g.n_edges(), 16 * 1024);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        // Power-law-ish: the max degree should far exceed the average.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = rmat(12, 16, &mut rng);
+        let mut deg = vec![0u32; g.n_vertices as usize];
+        for e in &g.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let avg = 2.0 * g.n_edges() as f64 / g.n_vertices as f64;
+        let max = *deg.iter().max().unwrap() as f64;
+        assert!(max > 5.0 * avg, "max {max} avg {avg}");
+        // And some vertices should be isolated or near-isolated (heavy skew).
+        let low = deg.iter().filter(|&&d| d <= 2).count();
+        assert!(low > 0, "expected low-degree tail");
+    }
+
+    #[test]
+    fn weights_in_open_unit_interval() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let g = rmat(8, 8, &mut rng);
+        assert!(g.edges.iter().all(|e| e.w > 0.0 && e.w < 1.0));
+    }
+}

@@ -1,0 +1,122 @@
+//! SSCA2-style generator (Bader & Madduri, HiPC 2005 — the paper's ref
+//! [21]): "set of randomly connected cliques".
+//!
+//! Vertices are partitioned into cliques of random size up to `max_clique`;
+//! all intra-clique edges are present, and cliques are additionally wired
+//! together with random inter-clique edges with probability decreasing in
+//! clique distance — following the SSCA2 kernel-1 structure. The edge
+//! factor steers the number of inter-clique connections so the average
+//! degree lands near the paper's 32.
+
+use crate::graph::EdgeList;
+use crate::util::prng::Xoshiro256;
+
+/// Default maximum clique size (SSCA2 `MaxCliqueSize` is typically ~2^3..2^5
+/// for these scales; cliques of ~8 give intra-clique degree ~7 of the
+/// average-32 target, with inter-clique edges supplying the rest).
+pub const DEFAULT_MAX_CLIQUE: u32 = 8;
+
+/// Generate an SSCA2-style graph with `2^scale` vertices.
+pub fn ssca2(scale: u32, edge_factor: usize, rng: &mut Xoshiro256) -> EdgeList {
+    ssca2_with_cliques(scale, edge_factor, DEFAULT_MAX_CLIQUE, rng)
+}
+
+/// Generate with explicit max clique size.
+pub fn ssca2_with_cliques(
+    scale: u32,
+    edge_factor: usize,
+    max_clique: u32,
+    rng: &mut Xoshiro256,
+) -> EdgeList {
+    assert!(scale <= 31, "vertex ids are 32-bit");
+    assert!(max_clique >= 1);
+    let n: u64 = 1 << scale;
+    let mut g = EdgeList::with_vertices(n as u32);
+
+    // Partition [0, n) into contiguous cliques of random size 1..=max_clique.
+    let mut clique_start: Vec<u32> = Vec::new();
+    let mut at: u64 = 0;
+    while at < n {
+        clique_start.push(at as u32);
+        let size = 1 + rng.next_below(max_clique as u64);
+        at += size;
+    }
+    clique_start.push(n as u32); // sentinel
+    let n_cliques = clique_start.len() - 1;
+
+    // Intra-clique: all pairs.
+    let mut intra = 0usize;
+    for c in 0..n_cliques {
+        let (s, e) = (clique_start[c], clique_start[c + 1]);
+        for u in s..e {
+            for v in (u + 1)..e {
+                g.push(u, v, rng.next_weight());
+                intra += 1;
+            }
+        }
+    }
+
+    // Inter-clique: random edges between members of distinct cliques until
+    // the total edge budget (edge_factor * n) is met. Prefer nearby cliques
+    // (geometric-ish distance decay), as in SSCA2.
+    let budget = (edge_factor * n as usize).saturating_sub(intra);
+    for _ in 0..budget {
+        let c1 = rng.next_index(n_cliques);
+        // Distance decay: step 2^k cliques away, k geometric.
+        let mut dist: usize = 1;
+        while dist < n_cliques && rng.next_bool(0.5) {
+            dist *= 2;
+        }
+        let c2 = (c1 + dist) % n_cliques;
+        if c1 == c2 {
+            continue;
+        }
+        let pick = |c: usize, rng: &mut Xoshiro256| {
+            let (s, e) = (clique_start[c], clique_start[c + 1]);
+            s + rng.next_below((e - s) as u64) as u32
+        };
+        let u = pick(c1, rng);
+        let v = pick(c2, rng);
+        g.push(u, v, rng.next_weight());
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_cliques_and_connections() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let g = ssca2(10, 16, &mut rng);
+        assert_eq!(g.n_vertices, 1024);
+        // Budgeted to land near the edge-factor target.
+        let target = 16 * 1024;
+        assert!(g.n_edges() >= target * 9 / 10, "{} edges", g.n_edges());
+    }
+
+    #[test]
+    fn clique_members_are_fully_connected() {
+        // With max_clique=4 and zero inter-clique budget (edge_factor=0 ->
+        // budget saturates to 0), the graph is exactly a disjoint union of
+        // cliques: every component's edge count is k*(k-1)/2.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let g = ssca2_with_cliques(6, 0, 4, &mut rng);
+        // Count degrees: within a clique of size k every member has k-1.
+        let mut deg = vec![0u32; g.n_vertices as usize];
+        for e in &g.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        // All degrees < max_clique.
+        assert!(deg.iter().all(|&d| d < 4));
+    }
+
+    #[test]
+    fn single_vertex_cliques_allowed() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let g = ssca2_with_cliques(4, 0, 1, &mut rng);
+        assert_eq!(g.n_edges(), 0, "all cliques size 1 -> no intra edges");
+    }
+}

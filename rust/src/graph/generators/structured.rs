@@ -1,0 +1,150 @@
+//! Small structured graphs with known MSTs, used heavily by the test suite:
+//! paths, cycles, stars, grids, complete graphs, and disjoint unions for
+//! the forest generalization.
+
+use crate::graph::{EdgeList, VertexId};
+use crate::util::prng::Xoshiro256;
+
+/// Path 0-1-2-…-(n-1) with the given weights (len n-1). The MST is the
+/// whole path.
+pub fn path(n: u32, rng: &mut Xoshiro256) -> EdgeList {
+    let mut g = EdgeList::with_vertices(n);
+    for i in 0..n.saturating_sub(1) {
+        g.push(i, i + 1, rng.next_weight());
+    }
+    g
+}
+
+/// Cycle of n vertices. The MST drops exactly the heaviest edge.
+pub fn cycle(n: u32, rng: &mut Xoshiro256) -> EdgeList {
+    assert!(n >= 3);
+    let mut g = path(n, rng);
+    g.push(n - 1, 0, rng.next_weight());
+    g
+}
+
+/// Star with center 0 and n-1 leaves. The MST is the whole star.
+pub fn star(n: u32, rng: &mut Xoshiro256) -> EdgeList {
+    let mut g = EdgeList::with_vertices(n);
+    for i in 1..n {
+        g.push(0, i, rng.next_weight());
+    }
+    g
+}
+
+/// rows × cols grid graph.
+pub fn grid(rows: u32, cols: u32, rng: &mut Xoshiro256) -> EdgeList {
+    let n = rows * cols;
+    let mut g = EdgeList::with_vertices(n);
+    let id = |r: u32, c: u32| r * cols + c;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.push(id(r, c), id(r, c + 1), rng.next_weight());
+            }
+            if r + 1 < rows {
+                g.push(id(r, c), id(r + 1, c), rng.next_weight());
+            }
+        }
+    }
+    g
+}
+
+/// Complete graph K_n.
+pub fn complete(n: u32, rng: &mut Xoshiro256) -> EdgeList {
+    let mut g = EdgeList::with_vertices(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.push(u, v, rng.next_weight());
+        }
+    }
+    g
+}
+
+/// Disjoint union: shift `b`'s vertex ids above `a`'s. Used to build
+/// disconnected inputs for the minimum-spanning-forest tests.
+pub fn disjoint_union(a: &EdgeList, b: &EdgeList) -> EdgeList {
+    let mut g = EdgeList::with_vertices(a.n_vertices + b.n_vertices);
+    g.edges.extend_from_slice(&a.edges);
+    for e in &b.edges {
+        g.push(e.u + a.n_vertices, e.v + a.n_vertices, e.w);
+    }
+    g
+}
+
+/// Add `extra` isolated vertices (no incident edges).
+pub fn with_isolated(a: &EdgeList, extra: u32) -> EdgeList {
+    let mut g = a.clone();
+    g.n_vertices += extra;
+    g
+}
+
+/// A connected random graph: random spanning tree + `extra_edges` random
+/// chords. Always connected, arbitrary topology — the workhorse for
+/// property tests.
+pub fn connected_random(n: u32, extra_edges: usize, rng: &mut Xoshiro256) -> EdgeList {
+    assert!(n >= 1);
+    let mut g = EdgeList::with_vertices(n);
+    // Random spanning tree: attach each vertex i>0 to a uniformly random
+    // earlier vertex (random recursive tree).
+    let mut order: Vec<VertexId> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for i in 1..n as usize {
+        let parent = order[rng.next_index(i)];
+        g.push(order[i], parent, rng.next_weight());
+    }
+    for _ in 0..extra_edges {
+        let u = rng.next_below(n as u64) as u32;
+        let v = rng.next_below(n as u64) as u32;
+        if u != v {
+            g.push(u, v, rng.next_weight());
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::connectivity::components;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(123)
+    }
+
+    #[test]
+    fn shapes() {
+        let mut r = rng();
+        assert_eq!(path(5, &mut r).n_edges(), 4);
+        assert_eq!(cycle(5, &mut r).n_edges(), 5);
+        assert_eq!(star(5, &mut r).n_edges(), 4);
+        assert_eq!(grid(3, 4, &mut r).n_edges(), 3 * 3 + 2 * 4);
+        assert_eq!(complete(5, &mut r).n_edges(), 10);
+    }
+
+    #[test]
+    fn connected_random_is_connected() {
+        let mut r = rng();
+        for n in [1u32, 2, 3, 10, 50] {
+            let g = connected_random(n, 5, &mut r);
+            assert_eq!(components(&g).count, 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn disjoint_union_components_add() {
+        let mut r = rng();
+        let a = connected_random(10, 3, &mut r);
+        let b = connected_random(7, 2, &mut r);
+        let u = disjoint_union(&a, &b);
+        assert_eq!(u.n_vertices, 17);
+        assert_eq!(components(&u).count, 2);
+    }
+
+    #[test]
+    fn isolated_vertices_counted() {
+        let mut r = rng();
+        let g = with_isolated(&connected_random(5, 0, &mut r), 3);
+        assert_eq!(components(&g).count, 4);
+    }
+}

@@ -1,0 +1,162 @@
+//! Edge-list I/O: a simple text format (one `u v w` per line, `#`-comments)
+//! and a compact little-endian binary format, for saving generated
+//! workloads and replaying them across runs.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::EdgeList;
+
+const BINARY_MAGIC: &[u8; 8] = b"GHSMSTG1";
+
+/// Write the text format.
+pub fn write_text(g: &EdgeList, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    writeln!(w, "# ghs-mst edge list: n_vertices n_edges, then u v w per line")?;
+    writeln!(w, "{} {}", g.n_vertices, g.n_edges())?;
+    for e in &g.edges {
+        // {:e} round-trips f64 exactly via scientific notation with enough digits.
+        writeln!(w, "{} {} {:.17e}", e.u, e.v, e.w)?;
+    }
+    Ok(())
+}
+
+/// Read the text format.
+pub fn read_text(path: &Path) -> Result<EdgeList> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut lines = r.lines();
+    let header = loop {
+        match lines.next() {
+            Some(line) => {
+                let line = line?;
+                let t = line.trim();
+                if !t.is_empty() && !t.starts_with('#') {
+                    break t.to_string();
+                }
+            }
+            None => bail!("empty edge-list file"),
+        }
+    };
+    let mut parts = header.split_whitespace();
+    let n: u32 = parts.next().context("missing n_vertices")?.parse()?;
+    let m: usize = parts.next().context("missing n_edges")?.parse()?;
+    let mut g = EdgeList::with_vertices(n);
+    g.edges.reserve(m);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it.next().context("missing u")?.parse()?;
+        let v: u32 = it.next().context("missing v")?.parse()?;
+        let w: f64 = it.next().context("missing w")?.parse()?;
+        g.push(u, v, w);
+    }
+    if g.n_edges() != m {
+        bail!("edge count mismatch: header {m}, found {}", g.n_edges());
+    }
+    Ok(g)
+}
+
+/// Write the binary format (magic, n, m, then (u32, u32, f64) triples LE).
+pub fn write_binary(g: &EdgeList, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(BINARY_MAGIC)?;
+    w.write_all(&g.n_vertices.to_le_bytes())?;
+    w.write_all(&(g.n_edges() as u64).to_le_bytes())?;
+    for e in &g.edges {
+        w.write_all(&e.u.to_le_bytes())?;
+        w.write_all(&e.v.to_le_bytes())?;
+        w.write_all(&e.w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format.
+pub fn read_binary(path: &Path) -> Result<EdgeList> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BINARY_MAGIC {
+        bail!("bad magic: not a ghs-mst binary edge list");
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4);
+    r.read_exact(&mut b8)?;
+    let m = u64::from_le_bytes(b8) as usize;
+    let mut g = EdgeList::with_vertices(n);
+    g.edges.reserve(m);
+    for _ in 0..m {
+        r.read_exact(&mut b4)?;
+        let u = u32::from_le_bytes(b4);
+        r.read_exact(&mut b4)?;
+        let v = u32::from_le_bytes(b4);
+        r.read_exact(&mut b8)?;
+        let w = f64::from_le_bytes(b8);
+        g.push(u, v, w);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ghs_mst_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn text_roundtrip_exact() {
+        let g = generate(GraphFamily::Rmat, 6, 3);
+        let p = tmp("roundtrip.txt");
+        write_text(&g, &p).unwrap();
+        let g2 = read_text(&p).unwrap();
+        assert_eq!(g.n_vertices, g2.n_vertices);
+        assert_eq!(g.n_edges(), g2.n_edges());
+        for (a, b) in g.edges.iter().zip(&g2.edges) {
+            assert_eq!((a.u, a.v), (b.u, b.v));
+            assert_eq!(a.w, b.w, "weights must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let g = generate(GraphFamily::Random, 7, 4);
+        let p = tmp("roundtrip.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g.n_vertices, g2.n_vertices);
+        for (a, b) in g.edges.iter().zip(&g2.edges) {
+            assert_eq!((a.u, a.v, a.w.to_bits()), (b.u, b.v, b.w.to_bits()));
+        }
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a graph").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn text_rejects_truncation() {
+        let g = generate(GraphFamily::Rmat, 4, 5);
+        let p = tmp("trunc.txt");
+        write_text(&g, &p).unwrap();
+        let contents = std::fs::read_to_string(&p).unwrap();
+        let truncated: String = contents.lines().take(10).collect::<Vec<_>>().join("\n");
+        std::fs::write(&p, truncated).unwrap();
+        assert!(read_text(&p).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Graph substrate: weighted edge lists, CRS storage, generators,
+//! preprocessing, partitioning and I/O.
+//!
+//! Vertices are `u32` (the paper's "vertex identifier is a 32 bit machine
+//! word"); weights are `f64` in the open interval (0, 1) extended with a
+//! `special_id` tiebreak so all weights are distinct (paper §3.2).
+
+pub mod connectivity;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod partition;
+pub mod preprocess;
+
+use crate::ghs::weight::EdgeWeight;
+
+/// Vertex identifier (paper: 32-bit machine word).
+pub type VertexId = u32;
+
+/// A single weighted undirected edge. `u != v` after preprocessing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightedEdge {
+    pub u: VertexId,
+    pub v: VertexId,
+    pub w: f64,
+}
+
+impl WeightedEdge {
+    /// Construct an edge.
+    pub fn new(u: VertexId, v: VertexId, w: f64) -> Self {
+        Self { u, v, w }
+    }
+
+    /// The GHS-unique weight of this edge: raw weight + `special_id`
+    /// tiebreak derived from the endpoint pair (paper §3.2).
+    pub fn unique_weight(&self) -> EdgeWeight {
+        EdgeWeight::new(self.w, self.u, self.v)
+    }
+
+    /// Canonical endpoint ordering `(min, max)`.
+    pub fn canonical(&self) -> (VertexId, VertexId) {
+        (self.u.min(self.v), self.u.max(self.v))
+    }
+}
+
+/// An undirected weighted graph as an edge list plus vertex count.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    /// Number of vertices; vertex ids are `0..n_vertices`.
+    pub n_vertices: u32,
+    /// Undirected edges (each stored once, in either orientation).
+    pub edges: Vec<WeightedEdge>,
+}
+
+impl EdgeList {
+    /// Empty graph with `n` vertices.
+    pub fn with_vertices(n: u32) -> Self {
+        Self { n_vertices: n, edges: Vec::new() }
+    }
+
+    /// Add an undirected edge.
+    pub fn push(&mut self, u: VertexId, v: VertexId, w: f64) {
+        debug_assert!(u < self.n_vertices && v < self.n_vertices);
+        self.edges.push(WeightedEdge::new(u, v, w));
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Total weight of all edges.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_canonicalization() {
+        let e = WeightedEdge::new(5, 2, 0.5);
+        assert_eq!(e.canonical(), (2, 5));
+        let e2 = WeightedEdge::new(2, 5, 0.5);
+        assert_eq!(e.unique_weight(), e2.unique_weight());
+    }
+
+    #[test]
+    fn edge_list_basics() {
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 1, 0.25);
+        g.push(1, 2, 0.5);
+        assert_eq!(g.n_edges(), 2);
+        assert!((g.total_weight() - 0.75).abs() < 1e-12);
+    }
+}

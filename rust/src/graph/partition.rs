@@ -1,0 +1,136 @@
+//! Block partitioning of vertices over ranks (paper §3: "All graph vertices
+//! are sequentially distributed in blocks among the processes").
+
+use crate::graph::VertexId;
+
+/// Block distribution of `n_vertices` over `n_ranks`: the first
+/// `n % p` ranks get `ceil(n/p)` vertices, the rest `floor(n/p)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockPartition {
+    n_vertices: u32,
+    n_ranks: u32,
+}
+
+impl BlockPartition {
+    /// Create a partition; `n_ranks >= 1`.
+    pub fn new(n_vertices: u32, n_ranks: u32) -> Self {
+        assert!(n_ranks >= 1, "need at least one rank");
+        Self { n_vertices, n_ranks }
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> u32 {
+        self.n_ranks
+    }
+
+    /// Total vertices.
+    pub fn n_vertices(&self) -> u32 {
+        self.n_vertices
+    }
+
+    /// First vertex owned by `rank`.
+    pub fn first_vertex(&self, rank: u32) -> VertexId {
+        debug_assert!(rank < self.n_ranks);
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let r = rank as u64;
+        let base = n / p;
+        let extra = n % p;
+        (r * base + r.min(extra)) as u32
+    }
+
+    /// Number of vertices owned by `rank`.
+    pub fn block_size(&self, rank: u32) -> u32 {
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let base = (n / p) as u32;
+        if (rank as u64) < n % p {
+            base + 1
+        } else {
+            base
+        }
+    }
+
+    /// Which rank owns vertex `v`?
+    pub fn owner(&self, v: VertexId) -> u32 {
+        debug_assert!(v < self.n_vertices);
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let base = n / p;
+        let extra = n % p;
+        let v = v as u64;
+        let boundary = extra * (base + 1);
+        if v < boundary {
+            (v / (base + 1)) as u32
+        } else {
+            (extra + (v - boundary) / base.max(1)) as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn even_split() {
+        let p = BlockPartition::new(100, 4);
+        for r in 0..4 {
+            assert_eq!(p.block_size(r), 25);
+            assert_eq!(p.first_vertex(r), r * 25);
+        }
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(24), 0);
+        assert_eq!(p.owner(25), 1);
+        assert_eq!(p.owner(99), 3);
+    }
+
+    #[test]
+    fn uneven_split() {
+        let p = BlockPartition::new(10, 3); // sizes 4, 3, 3
+        assert_eq!(p.block_size(0), 4);
+        assert_eq!(p.block_size(1), 3);
+        assert_eq!(p.block_size(2), 3);
+        assert_eq!(p.first_vertex(0), 0);
+        assert_eq!(p.first_vertex(1), 4);
+        assert_eq!(p.first_vertex(2), 7);
+    }
+
+    #[test]
+    fn more_ranks_than_vertices() {
+        let p = BlockPartition::new(3, 8);
+        let total: u32 = (0..8).map(|r| p.block_size(r)).sum();
+        assert_eq!(total, 3);
+        for v in 0..3 {
+            let r = p.owner(v);
+            assert!(v >= p.first_vertex(r));
+            assert!(v < p.first_vertex(r) + p.block_size(r));
+        }
+    }
+
+    #[test]
+    fn owner_and_blocks_agree() {
+        props("partition owner/block agreement", 200, |g| {
+            let n = g.usize_in(1, 10_000) as u32;
+            let p_ranks = g.usize_in(1, 64) as u32;
+            let p = BlockPartition::new(n, p_ranks);
+            // Blocks tile [0, n).
+            let mut covered = 0u32;
+            for r in 0..p_ranks {
+                assert_eq!(p.first_vertex(r), covered);
+                covered += p.block_size(r);
+            }
+            assert_eq!(covered, n);
+            // Spot-check owner() consistency on random vertices.
+            for _ in 0..20 {
+                if n == 0 {
+                    break;
+                }
+                let v = g.u64_below(n as u64) as u32;
+                let r = p.owner(v);
+                assert!(v >= p.first_vertex(r) && v < p.first_vertex(r) + p.block_size(r));
+            }
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Graph preprocessing (paper §3.1): remove self-loops and multi-edges
+//! before the MST search. "The removal of multiple edges is used to fulfill
+//! GHS algorithm condition which says that all the edges must be unique."
+//!
+//! For multi-edges we keep the minimum-weight copy — dropping heavier
+//! parallel edges never changes the MST.
+
+use std::collections::HashMap;
+
+use crate::graph::{EdgeList, WeightedEdge};
+
+/// Statistics from a preprocessing pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PreprocessStats {
+    pub self_loops_removed: usize,
+    pub multi_edges_removed: usize,
+    pub edges_kept: usize,
+}
+
+/// Remove self-loops and parallel edges (keeping the lightest copy of each
+/// parallel group). Returns the cleaned graph and statistics.
+pub fn preprocess(g: &EdgeList) -> (EdgeList, PreprocessStats) {
+    let mut stats = PreprocessStats::default();
+    let mut best: HashMap<(u32, u32), WeightedEdge> = HashMap::with_capacity(g.n_edges());
+    for e in &g.edges {
+        if e.u == e.v {
+            stats.self_loops_removed += 1;
+            continue;
+        }
+        let key = e.canonical();
+        match best.get_mut(&key) {
+            None => {
+                best.insert(key, *e);
+            }
+            Some(prev) => {
+                stats.multi_edges_removed += 1;
+                // Keep the lighter copy, tie-broken consistently by the
+                // unique extended weight.
+                if e.unique_weight() < prev.unique_weight() {
+                    *prev = *e;
+                }
+            }
+        }
+    }
+    let mut out = EdgeList::with_vertices(g.n_vertices);
+    out.edges = best.into_values().collect();
+    // Deterministic output order regardless of hash-map iteration.
+    out.edges.sort_unstable_by(|a, b| a.canonical().cmp(&b.canonical()));
+    stats.edges_kept = out.n_edges();
+    (out, stats)
+}
+
+/// Check that no two edges share the same canonical endpoint pair and no
+/// self-loops remain (the GHS precondition after preprocessing).
+pub fn is_simple(g: &EdgeList) -> bool {
+    let mut seen = std::collections::HashSet::with_capacity(g.n_edges());
+    for e in &g.edges {
+        if e.u == e.v || !seen.insert(e.canonical()) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn removes_self_loops() {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 0, 0.5);
+        g.push(0, 1, 0.2);
+        let (clean, stats) = preprocess(&g);
+        assert_eq!(stats.self_loops_removed, 1);
+        assert_eq!(clean.n_edges(), 1);
+    }
+
+    #[test]
+    fn keeps_lightest_parallel_edge() {
+        let mut g = EdgeList::with_vertices(2);
+        g.push(0, 1, 0.9);
+        g.push(1, 0, 0.3); // reversed orientation, still parallel
+        g.push(0, 1, 0.7);
+        let (clean, stats) = preprocess(&g);
+        assert_eq!(stats.multi_edges_removed, 2);
+        assert_eq!(clean.n_edges(), 1);
+        assert_eq!(clean.edges[0].w, 0.3);
+    }
+
+    #[test]
+    fn idempotent_and_simple() {
+        props("preprocess idempotent", 100, |g| {
+            let n = g.usize_in(2, 50) as u32;
+            let mut el = EdgeList::with_vertices(n);
+            for _ in 0..g.usize_in(0, 200) {
+                let u = g.u64_below(n as u64) as u32;
+                let v = g.u64_below(n as u64) as u32;
+                el.push(u, v, g.f64().max(1e-9));
+            }
+            let (once, _) = preprocess(&el);
+            assert!(is_simple(&once));
+            let (twice, stats2) = preprocess(&once);
+            assert_eq!(stats2.self_loops_removed, 0);
+            assert_eq!(stats2.multi_edges_removed, 0);
+            assert_eq!(twice.n_edges(), once.n_edges());
+        });
+    }
+
+    #[test]
+    fn stats_add_up() {
+        props("preprocess stats conserve edges", 100, |g| {
+            let n = g.usize_in(2, 30) as u32;
+            let mut el = EdgeList::with_vertices(n);
+            for _ in 0..g.usize_in(0, 100) {
+                let u = g.u64_below(n as u64) as u32;
+                let v = g.u64_below(n as u64) as u32;
+                el.push(u, v, g.f64().max(1e-9));
+            }
+            let (_, s) = preprocess(&el);
+            assert_eq!(
+                s.edges_kept + s.self_loops_removed + s.multi_edges_removed,
+                el.n_edges()
+            );
+        });
+    }
+}

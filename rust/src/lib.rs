@@ -1,0 +1,37 @@
+//! # ghs-mst
+//!
+//! A distributed-memory minimum spanning tree / forest library reproducing
+//! **Mazeev, Semenov, Simonov — "A Distributed Parallel Algorithm for
+//! Minimum Spanning Tree Problem" (2016)**: a scalable implementation of
+//! the GHS (Gallager–Humblet–Spira) algorithm with relaxed `Test`-message
+//! ordering, hash-based local-edge lookup, and compact message encoding.
+//!
+//! ## Layers
+//! * [`ghs`] — the L3 coordinator: per-vertex GHS automaton, per-rank
+//!   state, wire formats, sequential and threaded engines.
+//! * [`sim`] — simulated cluster: LogGOPS interconnect model, cost-model
+//!   clocks, profiling and message-size timelines.
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas min-edge
+//!   kernel (`artifacts/*.hlo.txt`) and drives the accelerated Borůvka
+//!   fragment engine.
+//! * [`graph`], [`baseline`], [`util`] — substrates: generators, CRS,
+//!   preprocessing, sequential MST oracles, PRNG/bitpack/stats.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use ghs_mst::ghs::{config::GhsConfig, engine::run_ghs};
+//! use ghs_mst::graph::generators::{generate, GraphFamily};
+//!
+//! let g = generate(GraphFamily::Rmat, 14, 42);
+//! let run = run_ghs(&g, GhsConfig::final_version(8)).unwrap();
+//! println!("MSF weight {}", run.total_weight());
+//! ```
+
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod ghs;
+pub mod graph;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,306 @@
+//! `ghs-mst` — command-line launcher for the distributed GHS MST/MSF
+//! engine, its baselines, the XLA-accelerated Borůvka path and every
+//! paper experiment.
+
+use anyhow::{bail, Result};
+
+use ghs_mst::baseline::{boruvka, kruskal, prim};
+use ghs_mst::cli::Args;
+use ghs_mst::coordinator::experiments::{self, ExpOptions};
+use ghs_mst::coordinator::{run_verified, Workload};
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::edge_lookup::SearchStrategy;
+use ghs_mst::ghs::parallel::run_threaded;
+use ghs_mst::ghs::wire::WireFormat;
+use ghs_mst::graph::generators::GraphFamily;
+use ghs_mst::graph::{io, preprocess::preprocess, EdgeList};
+use ghs_mst::runtime::minedge::{accelerated_boruvka, MinEdgeExecutable};
+use ghs_mst::runtime::Runtime;
+use ghs_mst::sim::SimConfig;
+use ghs_mst::util::stats::fmt_seconds;
+
+const USAGE: &str = "\
+ghs-mst — distributed GHS minimum spanning tree/forest (Mazeev et al. 2016 reproduction)
+
+USAGE: ghs-mst <command> [flags]
+
+COMMANDS
+  run           Run the GHS engine on a generated or loaded graph
+                  --family rmat|ssca2|random  --scale N  --ranks N
+                  --search linear|binary|hash  --wire naive|compact|procid
+                  --no-test-queue  --input FILE  --threaded  --verify
+  generate      Generate a graph to a file: --family --scale --out FILE [--binary]
+  verify        Run GHS + all baselines, compare forests: --family --scale --ranks
+  accel         XLA-accelerated Boruvka via PJRT: --family --scale [--block 4096x32]
+  baseline      Run kruskal|prim|boruvka: --algo NAME --family --scale
+  table2        Paper Table 2 (strong scaling, 3 graph families)
+  fig2          Paper Fig 2a/2b (optimization stack: runtime + scaling)
+  fig3          Paper Fig 3 (profile breakdown, hash-only vs final)
+  fig4          Paper Fig 4 (aggregated message size per time interval)
+  fig5          Paper Fig 5 (weak scaling on 32 nodes)
+  sweep-search  Paper §4.1 (linear vs binary vs hash lookup)
+  ablation-test-queue  Paper §3.4 (Test-queue relaxation on/off, RMAT+SSCA2)
+  experiments   Run ALL of the above and write results/
+  help          This text
+
+COMMON FLAGS
+  --scale N       log2 of vertex count        [default 14, paper 23-24]
+  --max-nodes N   largest node count swept    [default 64]
+  --no-verify     skip Kruskal verification
+  --quiet         suppress progress logs
+Experiment output lands in results/*.{md,csv} (override: GHS_MST_RESULTS).";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "generate" => cmd_generate(&args),
+        "verify" => cmd_verify(&args),
+        "accel" => cmd_accel(&args),
+        "baseline" => cmd_baseline(&args),
+        "table2" | "fig2" | "fig3" | "fig4" | "fig5" | "sweep-search" | "ablation-test-queue"
+        | "experiments" => cmd_experiments(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn parse_family(args: &Args) -> Result<GraphFamily> {
+    let name = args.get("family", "rmat");
+    GraphFamily::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown family `{name}` (rmat|ssca2|random)"))
+}
+
+fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
+    if let Some(path) = args.get_opt("input") {
+        let g = io::read_text(std::path::Path::new(path))?;
+        let (clean, stats) = preprocess(&g);
+        eprintln!(
+            "loaded {path}: {} vertices, {} edges ({} loops, {} multi removed)",
+            clean.n_vertices,
+            clean.n_edges(),
+            stats.self_loops_removed,
+            stats.multi_edges_removed
+        );
+        Ok((path.to_string(), clean))
+    } else {
+        let family = parse_family(args)?;
+        let scale = args.get_num("scale", 14u32)?;
+        let w = Workload::new(family, scale);
+        eprintln!("generating {} (avg degree 32)...", w.label());
+        Ok((w.label(), w.build()))
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "family", "scale", "ranks", "search", "wire", "no-test-queue", "input", "threaded",
+        "verify", "quiet",
+    ])?;
+    let (label, clean) = load_or_generate(args)?;
+    let ranks = args.get_num("ranks", 8u32)?;
+    let mut cfg = GhsConfig::final_version(ranks);
+    if let Some(s) = args.get_opt("search") {
+        cfg.search =
+            SearchStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("bad --search {s}"))?;
+    }
+    match args.get("wire", "procid").as_str() {
+        "naive" => cfg.wire_format = WireFormat::Naive,
+        "compact" => cfg.wire_format = WireFormat::CompactSpecialId,
+        "procid" => cfg.wire_format = WireFormat::CompactProcId,
+        w => bail!("bad --wire {w}"),
+    }
+    if args.get_bool("no-test-queue") {
+        cfg.separate_test_queue = false;
+    }
+    let t0 = std::time::Instant::now();
+    let run = if args.get_bool("threaded") {
+        run_threaded(&clean, cfg)?
+    } else if args.get_bool("verify") {
+        run_verified(&clean, cfg, SimConfig::default())?
+    } else {
+        ghs_mst::coordinator::run_once(&clean, cfg, SimConfig::default())?
+    };
+    let wall = t0.elapsed();
+    println!(
+        "graph           : {label} ({} vertices, {} edges)",
+        clean.n_vertices,
+        clean.n_edges()
+    );
+    println!("ranks           : {ranks} ({} nodes)", ranks.div_ceil(8));
+    println!(
+        "forest          : {} edges, {} components, weight {:.6}",
+        run.forest.edges.len(),
+        run.forest.n_components,
+        run.total_weight()
+    );
+    println!(
+        "messages        : {} total  ({} Test, {} Report, {} Connect)",
+        run.sent.total(),
+        run.sent.test,
+        run.sent.report,
+        run.sent.connect
+    );
+    println!("postponed       : {}", run.profile.msgs_postponed);
+    println!("supersteps      : {}", run.supersteps);
+    println!("sim time        : {}", fmt_seconds(run.sim.total_time));
+    println!("wall time       : {}", fmt_seconds(wall.as_secs_f64()));
+    if args.get_bool("verify") {
+        println!("verified        : forest == Kruskal oracle ✓");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    args.expect_flags(&["family", "scale", "out", "binary"])?;
+    let family = parse_family(args)?;
+    let scale = args.get_num("scale", 14u32)?;
+    let out = args.get("out", "graph.txt");
+    let w = Workload::new(family, scale);
+    let g = w.build();
+    let path = std::path::Path::new(&out);
+    if args.get_bool("binary") {
+        io::write_binary(&g, path)?;
+    } else {
+        io::write_text(&g, path)?;
+    }
+    println!("wrote {} ({} vertices, {} edges) to {out}", w.label(), g.n_vertices, g.n_edges());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    args.expect_flags(&["family", "scale", "ranks", "input"])?;
+    let (label, clean) = load_or_generate(args)?;
+    let ranks = args.get_num("ranks", 8u32)?;
+    let oracle = kruskal::kruskal(&clean);
+    println!(
+        "{label}: oracle weight {:.6}, {} components",
+        oracle.total_weight(),
+        oracle.n_components
+    );
+    let expected = oracle.canonical_edges();
+    let report = |name: &str, got: Vec<(u32, u32)>| -> Result<()> {
+        if got == expected {
+            println!("  {name:<18} ✓ identical forest");
+            Ok(())
+        } else {
+            bail!("  {name} MISMATCH: {} vs {} edges", got.len(), expected.len())
+        }
+    };
+    report("prim", prim::prim(&clean).canonical_edges())?;
+    report("boruvka", boruvka::boruvka(&clean).canonical_edges())?;
+    report(
+        "ghs (sequential)",
+        ghs_mst::coordinator::run_once(
+            &clean,
+            GhsConfig::final_version(ranks),
+            SimConfig::default(),
+        )?
+        .forest
+        .canonical_edges(),
+    )?;
+    report(
+        "ghs (threaded)",
+        run_threaded(&clean, GhsConfig::final_version(ranks))?.forest.canonical_edges(),
+    )?;
+    Ok(())
+}
+
+fn cmd_accel(args: &Args) -> Result<()> {
+    args.expect_flags(&["family", "scale", "block", "input"])?;
+    let (label, clean) = load_or_generate(args)?;
+    let block = args.get("block", "4096x32");
+    let (b, k) = block
+        .split_once('x')
+        .and_then(|(b, k)| Some((b.parse().ok()?, k.parse().ok()?)))
+        .ok_or_else(|| anyhow::anyhow!("bad --block {block} (expected e.g. 4096x32)"))?;
+    let rt = Runtime::cpu()?;
+    eprintln!("PJRT platform: {}", rt.platform());
+    let exe = MinEdgeExecutable::load(&rt, b, k)?;
+    let t0 = std::time::Instant::now();
+    let (forest, stats) = accelerated_boruvka(&clean, &exe)?;
+    let wall = t0.elapsed();
+    let oracle = kruskal::kruskal(&clean);
+    println!("graph     : {label} ({} vertices, {} edges)", clean.n_vertices, clean.n_edges());
+    println!("forest    : {} edges, weight {:.6}", forest.edges.len(), forest.total_weight());
+    println!(
+        "rounds    : {} Boruvka rounds, {} device blocks, {} device rows",
+        stats.rounds, stats.blocks_executed, stats.device_rows
+    );
+    println!("wall time : {}", fmt_seconds(wall.as_secs_f64()));
+    if forest.canonical_edges() == oracle.canonical_edges() {
+        println!("verified  : forest == Kruskal oracle ✓");
+        Ok(())
+    } else {
+        bail!("forest mismatch vs Kruskal")
+    }
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    args.expect_flags(&["algo", "family", "scale", "input"])?;
+    let (label, clean) = load_or_generate(args)?;
+    let algo = args.get("algo", "kruskal");
+    let t0 = std::time::Instant::now();
+    let forest = match algo.as_str() {
+        "kruskal" => kruskal::kruskal(&clean),
+        "prim" => prim::prim(&clean),
+        "boruvka" => boruvka::boruvka(&clean),
+        other => bail!("unknown --algo {other}"),
+    };
+    println!(
+        "{algo} on {label}: weight {:.6}, {} edges, {} components in {}",
+        forest.total_weight(),
+        forest.edges.len(),
+        forest.n_components,
+        fmt_seconds(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    args.expect_flags(&["scale", "max-nodes", "no-verify", "quiet"])?;
+    let opts = ExpOptions {
+        scale: args.get_num("scale", ExpOptions::default().scale)?,
+        max_nodes: args.get_num("max-nodes", ExpOptions::default().max_nodes)?,
+        verify: !args.get_bool("no-verify"),
+        quiet: args.get_bool("quiet"),
+    };
+    let run_one = |which: &str| -> Result<()> {
+        match which {
+            "table2" => print_and_write(experiments::table2(&opts)?, "table2"),
+            "fig2" => {
+                let (a, b) = experiments::fig2(&opts)?;
+                print_and_write(a, "fig2a")?;
+                print_and_write(b, "fig2b")
+            }
+            "fig3" => print_and_write(experiments::fig3(&opts)?, "fig3"),
+            "fig4" => print_and_write(experiments::fig4(&opts)?, "fig4"),
+            "fig5" => print_and_write(experiments::fig5(&opts)?, "fig5"),
+            "sweep-search" => print_and_write(experiments::sweep_search(&opts)?, "sweep_search"),
+            "ablation-test-queue" => {
+                print_and_write(experiments::ablation_test_queue(&opts)?, "ablation_test_queue")
+            }
+            _ => unreachable!(),
+        }
+    };
+    if args.command == "experiments" {
+        for which in
+            ["sweep-search", "fig2", "fig3", "fig4", "fig5", "ablation-test-queue", "table2"]
+        {
+            run_one(which)?;
+        }
+        Ok(())
+    } else {
+        run_one(&args.command)
+    }
+}
+
+fn print_and_write(t: ghs_mst::coordinator::report::Table, name: &str) -> Result<()> {
+    println!("{}", t.to_markdown());
+    let path = t.write(name)?;
+    eprintln!("  [exp] wrote {path:?}");
+    Ok(())
+}

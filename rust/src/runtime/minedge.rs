@@ -1,0 +1,277 @@
+//! XLA-accelerated Borůvka: the fragment min-edge reduction (the compute
+//! hot-spot of fragment-based MST) runs through the AOT-compiled
+//! JAX/Pallas kernel; the Rust coordinator owns fragments (union-find),
+//! the per-fragment reduction, and the merge loop.
+//!
+//! Exactness: edges are sorted once by the exact extended weight
+//! ([`crate::ghs::weight::EdgeWeight`]) and the kernel receives each
+//! edge's *rank* encoded as `f32` — integers ≤ 2^24 are exact in f32, so
+//! the device reduction is bit-exact and the resulting forest is THE
+//! minimum spanning forest (verified against Kruskal in tests).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::graph::{EdgeList, VertexId};
+use crate::runtime::{artifacts_dir, Runtime};
+
+/// A compiled `minedge_{B}x{K}` artifact.
+pub struct MinEdgeExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Rows per block.
+    pub b: usize,
+    /// Slots per row.
+    pub k: usize,
+}
+
+impl MinEdgeExecutable {
+    /// Load and compile `artifacts/minedge_{b}x{k}.hlo.txt`.
+    pub fn load(rt: &Runtime, b: usize, k: usize) -> Result<Self> {
+        let path: PathBuf = artifacts_dir().join(format!("minedge_{b}x{k}.hlo.txt"));
+        let exe = rt.load_hlo_text(&path)?;
+        Ok(Self { exe, b, k })
+    }
+
+    /// Execute one block: `frag[b]`, `nbr_frag[b*k]`, `w[b*k]` →
+    /// `(best_w[b], best_idx[b])`.
+    pub fn run(&self, frag: &[i32], nbr_frag: &[i32], w: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let (b, k) = (self.b, self.k);
+        if frag.len() != b || nbr_frag.len() != b * k || w.len() != b * k {
+            bail!(
+                "block shape mismatch: frag {} nbrf {} w {} for [{b}, {k}]",
+                frag.len(),
+                nbr_frag.len(),
+                w.len()
+            );
+        }
+        let frag_l = xla::Literal::vec1(frag);
+        let nbrf_l = xla::Literal::vec1(nbr_frag).reshape(&[b as i64, k as i64])?;
+        let w_l = xla::Literal::vec1(w).reshape(&[b as i64, k as i64])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[frag_l, nbrf_l, w_l])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (f32[b], s32[b]).
+        let (bw, bi) = result.to_tuple2()?;
+        Ok((bw.to_vec::<f32>()?, bi.to_vec::<i32>()?))
+    }
+}
+
+/// Padded row layout of a graph for the `[B, K]` kernel.
+struct PaddedRows {
+    /// Owning vertex of each row (a vertex with degree > K spans several
+    /// consecutive rows).
+    row_vertex: Vec<VertexId>,
+    /// Far-endpoint vertex per slot (row-major `[rows, K]`); `u32::MAX`
+    /// marks padding.
+    slot_nbr: Vec<VertexId>,
+    /// Edge-list index per slot (for mapping winners back to edges).
+    slot_edge: Vec<u32>,
+    /// Rank-encoded weight per slot (+inf padding).
+    slot_w: Vec<f32>,
+}
+
+impl PaddedRows {
+    fn build(g: &EdgeList, order: &[u32], k: usize) -> Self {
+        // Incident lists with the edge's global rank.
+        let n = g.n_vertices as usize;
+        let mut rank_of = vec![0u32; g.n_edges()];
+        for (rank, &e) in order.iter().enumerate() {
+            rank_of[e as usize] = rank as u32;
+        }
+        let mut incident: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); n];
+        for (i, e) in g.edges.iter().enumerate() {
+            incident[e.u as usize].push((e.v, i as u32));
+            incident[e.v as usize].push((e.u, i as u32));
+        }
+        let mut row_vertex = Vec::new();
+        let mut slot_nbr = Vec::new();
+        let mut slot_edge = Vec::new();
+        let mut slot_w = Vec::new();
+        for v in 0..n {
+            let adj = &incident[v];
+            let rows = adj.len().div_ceil(k).max(1);
+            for r in 0..rows {
+                row_vertex.push(v as VertexId);
+                for s in 0..k {
+                    match adj.get(r * k + s) {
+                        Some(&(nbr, edge)) => {
+                            slot_nbr.push(nbr);
+                            slot_edge.push(edge);
+                            slot_w.push(rank_of[edge as usize] as f32);
+                        }
+                        None => {
+                            slot_nbr.push(u32::MAX);
+                            slot_edge.push(u32::MAX);
+                            slot_w.push(f32::INFINITY);
+                        }
+                    }
+                }
+            }
+        }
+        Self { row_vertex, slot_nbr, slot_edge, slot_w }
+    }
+
+    fn n_rows(&self) -> usize {
+        self.row_vertex.len()
+    }
+}
+
+/// Statistics of an accelerated run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccelStats {
+    pub rounds: u32,
+    pub blocks_executed: u64,
+    pub device_rows: u64,
+}
+
+/// Borůvka with the min-edge reduction offloaded to the PJRT executable.
+pub fn accelerated_boruvka(g: &EdgeList, exe: &MinEdgeExecutable) -> Result<(Forest, AccelStats)> {
+    let (b, k) = (exe.b, exe.k);
+    // Global exact order -> rank encoding. f32 holds ranks exactly to 2^24.
+    if g.n_edges() >= (1 << 24) {
+        bail!("rank encoding exceeds f32 exact-integer range (2^24 edges)");
+    }
+    let mut order: Vec<u32> = (0..g.n_edges() as u32).collect();
+    order.sort_unstable_by_key(|&i| g.edges[i as usize].unique_weight());
+    let rows = PaddedRows::build(g, &order, k);
+
+    let mut uf = UnionFind::new(g.n_vertices);
+    let mut forest_edges = Vec::new();
+    let mut stats = AccelStats::default();
+    // Scratch buffers reused across blocks.
+    let mut frag = vec![0i32; b];
+    let mut nbrf = vec![0i32; b * k];
+    let mut wbuf = vec![f32::INFINITY; b * k];
+
+    loop {
+        // Per-fragment best: root -> (rank, edge index).
+        let mut best: std::collections::HashMap<u32, (f32, u32)> = std::collections::HashMap::new();
+        let n_rows = rows.n_rows();
+        let mut at = 0usize;
+        while at < n_rows {
+            let take = (n_rows - at).min(b);
+            for r in 0..b {
+                if r < take {
+                    let v = rows.row_vertex[at + r];
+                    let root = uf.find(v) as i32;
+                    frag[r] = root;
+                    for s in 0..k {
+                        let idx = (at + r) * k + s;
+                        let nbr = rows.slot_nbr[idx];
+                        if nbr == u32::MAX {
+                            nbrf[r * k + s] = root; // padding: masked
+                            wbuf[r * k + s] = f32::INFINITY;
+                        } else {
+                            nbrf[r * k + s] = uf.find(nbr) as i32;
+                            wbuf[r * k + s] = rows.slot_w[idx];
+                        }
+                    }
+                } else {
+                    // Block padding rows: fully masked.
+                    frag[r] = -1;
+                    for s in 0..k {
+                        nbrf[r * k + s] = -1;
+                        wbuf[r * k + s] = f32::INFINITY;
+                    }
+                }
+            }
+            let (bw, bi) = exe.run(&frag, &nbrf, &wbuf)?;
+            stats.blocks_executed += 1;
+            stats.device_rows += take as u64;
+            for r in 0..take {
+                if bw[r].is_finite() {
+                    let slot = (at + r) * k + bi[r] as usize;
+                    let edge = rows.slot_edge[slot];
+                    debug_assert_ne!(edge, u32::MAX);
+                    let root = frag[r] as u32;
+                    let cand = (bw[r], edge);
+                    match best.get_mut(&root) {
+                        None => {
+                            best.insert(root, cand);
+                        }
+                        Some(cur) => {
+                            if cand.0 < cur.0 {
+                                *cur = cand;
+                            }
+                        }
+                    }
+                }
+            }
+            at += take;
+        }
+        if best.is_empty() {
+            break;
+        }
+        stats.rounds += 1;
+        // Deterministic merge order.
+        let mut picks: Vec<(u32, u32)> = best.into_iter().map(|(r, (_, e))| (r, e)).collect();
+        picks.sort_unstable();
+        for (_, e) in picks {
+            let edge = g.edges[e as usize];
+            if uf.union(edge.u, edge.v) {
+                forest_edges.push(edge);
+            }
+        }
+    }
+    Ok((Forest { edges: forest_edges, n_components: uf.n_sets() }, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    fn exe_small() -> Option<(Runtime, MinEdgeExecutable)> {
+        let rt = Runtime::cpu().ok()?;
+        let exe = MinEdgeExecutable::load(&rt, 128, 16).ok()?;
+        Some((rt, exe))
+    }
+
+    #[test]
+    fn accelerated_matches_kruskal_generators() {
+        let Some((_rt, exe)) = exe_small() else {
+            eprintln!("artifacts missing; run `make artifacts`");
+            return;
+        };
+        for family in [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random] {
+            let (g, _) = preprocess(&generate(family, 7, 5));
+            let (forest, stats) = accelerated_boruvka(&g, &exe).unwrap();
+            let oracle = kruskal(&g);
+            assert_eq!(forest.canonical_edges(), oracle.canonical_edges(), "{family:?}");
+            assert!(stats.rounds > 0 && stats.rounds <= 9);
+        }
+    }
+
+    #[test]
+    fn accelerated_handles_disconnected_and_high_degree() {
+        let Some((_rt, exe)) = exe_small() else {
+            return;
+        };
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
+        // Star: center degree 40 > K=16 -> row splitting.
+        let star = structured::star(41, &mut rng);
+        let other = structured::connected_random(13, 6, &mut rng);
+        let g0 = structured::with_isolated(&structured::disjoint_union(&star, &other), 2);
+        let (g, _) = preprocess(&g0);
+        let (forest, _) = accelerated_boruvka(&g, &exe).unwrap();
+        let oracle = kruskal(&g);
+        assert_eq!(forest.canonical_edges(), oracle.canonical_edges());
+        assert_eq!(forest.n_components, oracle.n_components);
+    }
+
+    #[test]
+    fn executable_rejects_bad_shapes() {
+        let Some((_rt, exe)) = exe_small() else {
+            return;
+        };
+        assert!(exe.run(&[0i32; 4], &[0i32; 4], &[0f32; 4]).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the XLA CPU client.
+//! Python never runs on this path — the artifacts are built once by
+//! `make artifacts`.
+
+pub mod minedge;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Lazily-created PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            bail!(
+                "artifact {path:?} not found — run `make artifacts` first \
+                 (python/compile/aot.py builds it)"
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+
+    /// Underlying client (for literal transfers in executors).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Default artifacts directory: `$GHS_MST_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("GHS_MST_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creates() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

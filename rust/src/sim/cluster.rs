@@ -1,0 +1,76 @@
+//! Cluster presets.
+//!
+//! `mvs10p()` models the paper's testbed (Table 1): 2× Xeon E5-2690 per
+//! node, Infiniband 4×FDR (≈54.5 Gbit/s ≈ 6.8 GB/s per link, ≈1.3 µs MPI
+//! latency), Intel MPI 4.1, 8 MPI processes per node.
+
+use crate::sim::loggops::LogGops;
+
+/// MVS-10P: Infiniband 4×FDR inter-node, shared-memory intra-node.
+pub fn mvs10p() -> LogGops {
+    LogGops {
+        // Inter-node: FDR InfiniBand + MPI stack.
+        l: 1.3e-6,
+        o: 0.6e-6,
+        g: 0.3e-6,
+        big_g: 1.0 / 6.8e9, // ≈0.147 ns/B
+        // Intra-node: shared-memory transport.
+        l_intra: 0.35e-6,
+        o_intra: 0.25e-6,
+        g_intra: 0.1e-6,
+        big_g_intra: 1.0 / 12.0e9,
+    }
+}
+
+/// An idealized zero-latency interconnect (upper-bound scaling; useful to
+/// separate algorithmic from network limits in ablations).
+pub fn ideal() -> LogGops {
+    LogGops {
+        l: 0.0,
+        o: 0.0,
+        g: 0.0,
+        big_g: 0.0,
+        l_intra: 0.0,
+        o_intra: 0.0,
+        g_intra: 0.0,
+        big_g_intra: 0.0,
+    }
+}
+
+/// A deliberately slow commodity-Ethernet-like network (for crossover
+/// studies: aggregation matters much more here).
+pub fn slow_ethernet() -> LogGops {
+    LogGops {
+        l: 30e-6,
+        o: 5e-6,
+        g: 2e-6,
+        big_g: 1.0 / 1.1e9,
+        l_intra: 0.5e-6,
+        o_intra: 0.3e-6,
+        g_intra: 0.1e-6,
+        big_g_intra: 1.0 / 8.0e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered() {
+        let fast = mvs10p();
+        let slow = slow_ethernet();
+        assert!(fast.l < slow.l);
+        assert!(fast.big_g < slow.big_g);
+        let zero = ideal();
+        assert_eq!(zero.send_overhead(1000, false), 0.0);
+        assert_eq!(zero.transit(1000, false), 0.0);
+    }
+
+    #[test]
+    fn fdr_bandwidth_sane() {
+        // 4xFDR ≈ 6.8 GB/s -> 1 MB takes ≈147 µs on the wire.
+        let t = mvs10p().send_overhead(1_000_000, false);
+        assert!(t > 100e-6 && t < 200e-6, "{t}");
+    }
+}

@@ -1,0 +1,112 @@
+//! LogGOPS interconnect model (Hoefler et al.): per-message latency `L`,
+//! CPU overhead `o`, inter-message gap `g`, per-byte gap `G`, with distinct
+//! intra-node parameters. The paper names LogGOPS as its intended
+//! analysis model and conjectures "the main limitation factor ... can be
+//! latency or injection rate of short messages" — both are first-class
+//! here (`o`/`g` dominate small buffers, `G` large ones).
+
+/// LogGOPS parameters (seconds / seconds-per-byte).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogGops {
+    /// Wire latency between nodes.
+    pub l: f64,
+    /// CPU send/receive overhead per message (MPI stack).
+    pub o: f64,
+    /// Injection gap per message (rate limit for short messages).
+    pub g: f64,
+    /// Per-byte network time (1 / bandwidth).
+    pub big_g: f64,
+    /// Intra-node (shared-memory transport) variants.
+    pub l_intra: f64,
+    pub o_intra: f64,
+    pub g_intra: f64,
+    pub big_g_intra: f64,
+}
+
+impl LogGops {
+    /// Sender-side cost of injecting one aggregated buffer.
+    pub fn send_overhead(&self, bytes: u32, same_node: bool) -> f64 {
+        let (o, g, big_g) = if same_node {
+            (self.o_intra, self.g_intra, self.big_g_intra)
+        } else {
+            (self.o, self.g, self.big_g)
+        };
+        // Overhead and gap overlap; the slower of the two gates injection,
+        // then bytes stream at G.
+        o.max(g) + bytes as f64 * big_g
+    }
+
+    /// Receiver-side cost of landing one buffer.
+    pub fn recv_overhead(&self, same_node: bool) -> f64 {
+        if same_node {
+            self.o_intra
+        } else {
+            self.o
+        }
+    }
+
+    /// Time from injection completion to availability at the receiver.
+    /// The per-byte streaming time is charged once, on the sender's clock
+    /// (see [`Self::send_overhead`]); transit adds only the wire latency.
+    pub fn transit(&self, _bytes: u32, same_node: bool) -> f64 {
+        if same_node {
+            self.l_intra
+        } else {
+            self.l
+        }
+    }
+
+    /// Cost of a tree Allreduce over `n_ranks` (2·⌈log2 n⌉ hops).
+    pub fn allreduce_cost(&self, n_ranks: u32, ranks_per_node: u32) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        let hops = 2.0 * (n_ranks as f64).log2().ceil();
+        // Hops within a node are cheap; weight by the fraction of tree
+        // levels that cross nodes.
+        let node_levels = (ranks_per_node.max(1) as f64).log2().ceil();
+        let total_levels = (n_ranks as f64).log2().ceil();
+        let inter_frac = ((total_levels - node_levels) / total_levels).clamp(0.0, 1.0);
+        let per_hop = inter_frac * (self.l + self.o) + (1.0 - inter_frac) * (self.l_intra + self.o_intra);
+        hops * per_hop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sim::cluster::mvs10p;
+
+    #[test]
+    fn small_buffers_are_overhead_dominated() {
+        let net = mvs10p();
+        let small = net.send_overhead(80, false);
+        // Doubling a small buffer barely changes cost (o/g dominated)...
+        let small2 = net.send_overhead(160, false);
+        assert!((small2 - small) / small < 0.2);
+        // ...while large buffers scale with bytes (G dominated).
+        let large = net.send_overhead(100_000, false);
+        let large2 = net.send_overhead(200_000, false);
+        assert!(large2 / large > 1.7);
+    }
+
+    #[test]
+    fn intra_node_cheaper_everywhere() {
+        let net = mvs10p();
+        for bytes in [10u32, 1000, 100_000] {
+            assert!(net.send_overhead(bytes, true) < net.send_overhead(bytes, false));
+            assert!(net.transit(bytes, true) < net.transit(bytes, false));
+        }
+        assert!(net.recv_overhead(true) < net.recv_overhead(false));
+    }
+
+    #[test]
+    fn allreduce_grows_logarithmically() {
+        let net = mvs10p();
+        let c8 = net.allreduce_cost(8, 8);
+        let c64 = net.allreduce_cost(64, 8);
+        let c512 = net.allreduce_cost(512, 8);
+        assert!(c8 < c64 && c64 < c512);
+        assert!(c512 / c64 < 3.0, "log growth, not linear");
+        assert_eq!(net.allreduce_cost(1, 8), 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Fig 3-style profile breakdown: the share of execution time spent in
+//! each part of the paper's process loop (read messages / process queue /
+//! process Test queue / send / check finish).
+
+use crate::ghs::result::ProfileCounters;
+use crate::sim::costmodel::OpCosts;
+
+/// Work categories of the paper's profiling figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    ReadMsgs,
+    ProcessQueue,
+    ProcessTestQueue,
+    Send,
+    CheckFinish,
+    LoopOther,
+}
+
+impl Category {
+    /// All categories in display order.
+    pub const ALL: [Category; 6] = [
+        Category::ReadMsgs,
+        Category::ProcessQueue,
+        Category::ProcessTestQueue,
+        Category::Send,
+        Category::CheckFinish,
+        Category::LoopOther,
+    ];
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Category::ReadMsgs => "read_msgs",
+            Category::ProcessQueue => "process_queue",
+            Category::ProcessTestQueue => "process_test_queue",
+            Category::Send => "send",
+            Category::CheckFinish => "check_finish",
+            Category::LoopOther => "loop_other",
+        }
+    }
+}
+
+/// A priced breakdown (seconds per category).
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    pub seconds: Vec<(Category, f64)>,
+}
+
+impl Breakdown {
+    /// Price aggregate counters into the paper's categories.
+    ///
+    /// Lookup probes are attributed to the queue that triggered them; we
+    /// split them pro-rata between main and Test queue processing.
+    pub fn of(c: &ProfileCounters, costs: &OpCosts) -> Self {
+        let total_processed = (c.msgs_processed_main + c.msgs_processed_test).max(1);
+        let probe_t = c.lookup_probes as f64 * costs.probe;
+        let main_share = c.msgs_processed_main as f64 / total_processed as f64;
+        let send_t = c.bytes_sent as f64 * costs.byte_tx + c.msgs_sent as f64 * costs.encode_msg;
+        let read_t =
+            c.msgs_decoded as f64 * costs.decode_msg + c.bytes_decoded as f64 * costs.byte_rx;
+        let seconds = vec![
+            (Category::ReadMsgs, read_t),
+            (
+                Category::ProcessQueue,
+                c.msgs_processed_main as f64 * costs.process_msg
+                    + c.msgs_postponed as f64 * costs.postpone_retry
+                    + probe_t * main_share,
+            ),
+            (
+                Category::ProcessTestQueue,
+                c.msgs_processed_test as f64 * costs.process_msg + probe_t * (1.0 - main_share),
+            ),
+            (Category::Send, send_t),
+            (Category::CheckFinish, c.finish_checks as f64 * costs.finish_check),
+            (Category::LoopOther, c.iterations as f64 * costs.iteration),
+        ];
+        Self { seconds }
+    }
+
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.seconds.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Percentage share per category.
+    pub fn percentages(&self) -> Vec<(Category, f64)> {
+        let t = self.total().max(f64::MIN_POSITIVE);
+        self.seconds.iter().map(|&(c, s)| (c, 100.0 * s / t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let mut c = ProfileCounters::default();
+        c.msgs_decoded = 1000;
+        c.msgs_processed_main = 900;
+        c.msgs_processed_test = 100;
+        c.lookup_probes = 5000;
+        c.bytes_sent = 20_000;
+        c.msgs_sent = 1000;
+        c.finish_checks = 10;
+        c.iterations = 500;
+        let b = Breakdown::of(&c, &OpCosts::default());
+        let pct: f64 = b.percentages().iter().map(|(_, p)| p).sum();
+        assert!((pct - 100.0).abs() < 1e-9);
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn probes_split_pro_rata() {
+        let mut c = ProfileCounters::default();
+        c.msgs_processed_main = 300;
+        c.msgs_processed_test = 100;
+        c.lookup_probes = 4000;
+        let costs = OpCosts::default();
+        let b = Breakdown::of(&c, &costs);
+        let get = |cat: Category| {
+            b.seconds.iter().find(|(c2, _)| *c2 == cat).map(|(_, s)| *s).unwrap()
+        };
+        let main = get(Category::ProcessQueue) - 300.0 * costs.process_msg;
+        let test = get(Category::ProcessTestQueue) - 100.0 * costs.process_msg;
+        assert!((main / test - 3.0).abs() < 1e-9, "3:1 split");
+    }
+
+    #[test]
+    fn empty_counters_no_nan() {
+        let b = Breakdown::of(&ProfileCounters::default(), &OpCosts::default());
+        assert_eq!(b.total(), 0.0);
+        for (_, p) in b.percentages() {
+            assert!(p.is_finite());
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig 4: "the average size (over all MPI processes) of communication
+//! messages in bytes depending on the interval number (total execution
+//! time of the algorithm is divided into equal intervals)".
+
+/// Average aggregated-message size per equal time interval.
+#[derive(Debug, Clone)]
+pub struct IntervalSeries {
+    /// Interval width in (virtual) seconds.
+    pub interval: f64,
+    /// Per interval: (mean size in bytes, number of buffers).
+    pub points: Vec<(f64, u64)>,
+}
+
+/// Bucket `(time, bytes)` flush events into `n_intervals` equal intervals
+/// of `[0, t_total]`, averaging buffer sizes per interval.
+pub fn interval_series(flushes: &[(f64, u32, u32)], t_total: f64, n_intervals: usize) -> IntervalSeries {
+    assert!(n_intervals > 0);
+    let t_total = t_total.max(f64::MIN_POSITIVE);
+    let width = t_total / n_intervals as f64;
+    let mut sums = vec![0u64; n_intervals];
+    let mut counts = vec![0u64; n_intervals];
+    for &(t, bytes, _n) in flushes {
+        let idx = ((t / width) as usize).min(n_intervals - 1);
+        sums[idx] += bytes as u64;
+        counts[idx] += 1;
+    }
+    let points = sums
+        .into_iter()
+        .zip(counts)
+        .map(|(s, c)| (if c == 0 { 0.0 } else { s as f64 / c as f64 }, c))
+        .collect();
+    IntervalSeries { interval: width, points }
+}
+
+impl IntervalSeries {
+    /// Overall mean buffer size.
+    pub fn overall_mean(&self) -> f64 {
+        let (sum, n) = self
+            .points
+            .iter()
+            .fold((0.0, 0u64), |(s, n), &(mean, c)| (s + mean * c as f64, n + c));
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Maximum interval mean (the paper: "their size does not exceed 2 KB"
+    /// on 32 nodes).
+    pub fn max_mean(&self) -> f64 {
+        self.points.iter().map(|&(m, _)| m).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_and_averages() {
+        let flushes = vec![
+            (0.1, 100, 1),
+            (0.2, 300, 3),  // interval 0 (width 0.5): mean 200
+            (0.6, 1000, 5), // interval 1: mean 1000
+        ];
+        let s = interval_series(&flushes, 1.0, 2);
+        assert_eq!(s.points.len(), 2);
+        assert_eq!(s.points[0], (200.0, 2));
+        assert_eq!(s.points[1], (1000.0, 1));
+        assert!((s.overall_mean() - (100.0 + 300.0 + 1000.0) / 3.0).abs() < 1e-9);
+        assert_eq!(s.max_mean(), 1000.0);
+    }
+
+    #[test]
+    fn event_at_t_total_lands_in_last_bucket() {
+        let flushes = vec![(1.0, 64, 1)];
+        let s = interval_series(&flushes, 1.0, 4);
+        assert_eq!(s.points[3], (64.0, 1));
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = interval_series(&[], 0.0, 3);
+        assert_eq!(s.overall_mean(), 0.0);
+        assert_eq!(s.max_mean(), 0.0);
+    }
+}

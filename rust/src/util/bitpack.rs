@@ -1,0 +1,215 @@
+//! Bit-level packing used by the compact wire formats (paper §3.5).
+//!
+//! The paper packs "short" messages into 80 bits and "long" messages into
+//! 152 bits; neither is byte-structure friendly (a 16-bit packed header with
+//! 3-bit type / 5-bit level / 1-bit state fields), so we provide an explicit
+//! little-endian bit writer/reader pair with exact-width field access.
+
+/// Append-only bit writer. Bits are emitted LSB-first within each byte.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in `buf` (may not be byte-aligned).
+    bits: usize,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Writer that appends to an existing byte buffer (must be byte-aligned).
+    pub fn over(buf: Vec<u8>) -> Self {
+        let bits = buf.len() * 8;
+        Self { buf, bits }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.bits
+    }
+
+    /// Write the low `width` bits of `value` (LSB-first). `width <= 64`.
+    pub fn write(&mut self, value: u64, width: usize) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width), "value {value} overflows {width} bits");
+        let mut remaining = width;
+        let mut v = value;
+        while remaining > 0 {
+            let bit_in_byte = self.bits % 8;
+            if bit_in_byte == 0 {
+                self.buf.push(0);
+            }
+            let take = (8 - bit_in_byte).min(remaining);
+            let byte = self.buf.last_mut().expect("pushed above");
+            *byte |= ((v & ((1u64 << take) - 1)) as u8) << bit_in_byte;
+            v >>= take;
+            self.bits += take;
+            remaining -= take;
+        }
+    }
+
+    /// Pad with zero bits up to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        let rem = self.bits % 8;
+        if rem != 0 {
+            self.write(0, 8 - rem);
+        }
+    }
+
+    /// Finish and return the underlying bytes (zero-padded to a whole byte).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.buf
+    }
+}
+
+/// Bit reader over a byte slice; mirror of [`BitWriter`].
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    /// New reader at bit offset 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// New reader starting at a byte offset.
+    pub fn at_byte(buf: &'a [u8], byte: usize) -> Self {
+        Self { buf, pos: byte * 8 }
+    }
+
+    /// Current bit position.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Read `width` bits (LSB-first), advancing the cursor.
+    pub fn read(&mut self, width: usize) -> u64 {
+        debug_assert!(width <= 64);
+        assert!(self.remaining() >= width, "bit underflow: want {width}, have {}", self.remaining());
+        let mut out = 0u64;
+        let mut got = 0usize;
+        while got < width {
+            let byte = self.buf[self.pos / 8];
+            let bit_in_byte = self.pos % 8;
+            let take = (8 - bit_in_byte).min(width - got);
+            let chunk = ((byte >> bit_in_byte) as u64) & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.pos += take;
+        }
+        out
+    }
+
+    /// Skip to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        let rem = self.pos % 8;
+        if rem != 0 {
+            self.pos += 8 - rem;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_single_fields() {
+        for width in 1..=64usize {
+            let value = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let mut w = BitWriter::new();
+            w.write(value, width);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), width.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(r.read(width), value, "width {width}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_header_like_layout() {
+        // The paper's 16-bit header: 3-bit type, 5-bit level, 1-bit state,
+        // 7 bits reserved — then two 32-bit ids.
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(21, 5);
+        w.write(1, 1);
+        w.write(0, 7);
+        w.write(0xDEAD_BEEF, 32);
+        w.write(0x1234_5678, 32);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 10); // exactly 80 bits
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(5), 21);
+        assert_eq!(r.read(1), 1);
+        assert_eq!(r.read(7), 0);
+        assert_eq!(r.read(32), 0xDEAD_BEEF);
+        assert_eq!(r.read(32), 0x1234_5678);
+    }
+
+    #[test]
+    fn property_random_field_sequences_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(0xB17);
+        for _case in 0..500 {
+            let nfields = 1 + rng.next_index(12);
+            let mut fields = Vec::with_capacity(nfields);
+            let mut w = BitWriter::new();
+            for _ in 0..nfields {
+                let width = 1 + rng.next_index(64);
+                let value = if width == 64 {
+                    rng.next_u64()
+                } else {
+                    rng.next_u64() & ((1u64 << width) - 1)
+                };
+                w.write(value, width);
+                fields.push((value, width));
+            }
+            let total: usize = fields.iter().map(|&(_, w)| w).sum();
+            assert_eq!(w.bit_len(), total);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &(value, width) in &fields {
+                assert_eq!(r.read(width), value);
+            }
+        }
+    }
+
+    #[test]
+    fn append_over_existing_buffer() {
+        let mut w = BitWriter::new();
+        w.write(0xAB, 8);
+        let bytes = w.into_bytes();
+        let mut w2 = BitWriter::over(bytes);
+        w2.write(0xCD, 8);
+        let bytes = w2.into_bytes();
+        assert_eq!(bytes, vec![0xAB, 0xCD]);
+    }
+
+    #[test]
+    fn reader_at_byte_offset() {
+        let bytes = vec![0xFF, 0x0F];
+        let mut r = BitReader::at_byte(&bytes, 1);
+        assert_eq!(r.read(8), 0x0F);
+    }
+
+    #[test]
+    #[should_panic(expected = "bit underflow")]
+    fn underflow_panics() {
+        let bytes = vec![0u8];
+        let mut r = BitReader::new(&bytes);
+        r.read(9);
+    }
+}

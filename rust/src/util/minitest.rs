@@ -1,0 +1,151 @@
+//! Minimal property-testing harness (the vendored crate set has no
+//! `proptest`/`quickcheck`, so we provide a small seeded-case runner).
+//!
+//! Usage (`no_run`: doctest binaries do not inherit the workspace rpath
+//! flags needed to locate the PJRT shared library this crate links):
+//! ```no_run
+//! use ghs_mst::util::minitest::{props, Gen};
+//! props("addition commutes", 100, |g| {
+//!     let a = g.u64_below(1000);
+//!     let b = g.u64_below(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a deterministic PRNG derived from (suite-seed, case index);
+//! a failure panics with the case index and seed so the exact case can be
+//! replayed with [`replay`].
+
+use crate::util::prng::Xoshiro256;
+
+/// Per-case random value source handed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Case index within the suite (usable to scale case sizes).
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform u64 in [0, bound).
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound)
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_index(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_bool(p)
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Access the underlying generator (for passing to graph generators).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_index(xs.len())]
+    }
+}
+
+/// Default suite seed; override with env `MINITEST_SEED` for exploration.
+fn suite_seed() -> u64 {
+    std::env::var("MINITEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x6853_4D53_5400_0001) // "GHSMST"
+}
+
+/// Run `cases` property cases. Panics (with replay info) on first failure.
+pub fn props(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let seed = suite_seed();
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Xoshiro256::seed_from_u64(case_seed), case };
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (case_seed={case_seed:#x}): {msg}\n\
+                 replay with ghs_mst::util::minitest::replay({case_seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported `case_seed`.
+pub fn replay(case_seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen { rng: Xoshiro256::seed_from_u64(case_seed), case: 0 };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_run_all_cases() {
+        let mut count = 0;
+        props("counting", 37, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 37);
+    }
+
+    #[test]
+    fn props_are_deterministic_across_runs() {
+        let mut first = Vec::new();
+        props("collect", 10, |g| first.push(g.u64()));
+        let mut second = Vec::new();
+        props("collect", 10, |g| second.push(g.u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed at case 0")]
+    fn failure_reports_case() {
+        props("always fails", 5, |_g| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        props("ranges", 200, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let y = g.u64_below(5);
+            assert!(y < 5);
+            let f = g.f64();
+            assert!((0.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut v1 = 0;
+        replay(0xABCD, |g| v1 = g.u64());
+        let mut v2 = 0;
+        replay(0xABCD, |g| v2 = g.u64());
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared utilities: PRNG, bit packing, statistics, property-test harness.
+
+pub mod bitpack;
+pub mod minitest;
+pub mod prng;
+pub mod stats;

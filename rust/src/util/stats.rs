@@ -1,0 +1,221 @@
+//! Small statistics helpers shared by the benchmark harness and the
+//! simulator: summary statistics, percentiles, fixed-width table rendering
+//! and human time formatting.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute summary statistics of `xs`. Returns `None` for an empty slice.
+    pub fn of(xs: &[f64]) -> Option<Self> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        Some(Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        })
+    }
+}
+
+/// Percentile (0..=100) of an already-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Format a duration in adaptive units (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    fmt_seconds(d.as_secs_f64())
+}
+
+/// Format seconds in adaptive units.
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", fmt_seconds(-s));
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a byte count in adaptive units.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Render a markdown table: header row + aligned body rows.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let emit_row = |out: &mut String, cells: &[String]| {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = cells.get(i).map(String::as_str).unwrap_or("");
+            let _ = write!(out, " {cell:<w$} |", w = w);
+        }
+        out.push('\n');
+    };
+    emit_row(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('|');
+    for w in &widths {
+        let _ = write!(out, "{}|", "-".repeat(w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        emit_row(&mut out, row);
+    }
+    out
+}
+
+/// Simple fixed-bucket histogram for message-size style data.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bucket_width: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Histogram with `nbuckets` buckets of `bucket_width` each; values above
+    /// the range land in the last bucket.
+    pub fn new(bucket_width: f64, nbuckets: usize) -> Self {
+        assert!(bucket_width > 0.0 && nbuckets > 0);
+        Self { bucket_width, counts: vec![0; nbuckets], total: 0, sum: 0.0 }
+    }
+
+    /// Record a value.
+    pub fn record(&mut self, v: f64) {
+        let idx = ((v / self.bucket_width) as usize).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of recorded values (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Bucket counts.
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn duration_formatting_units() {
+        assert_eq!(fmt_seconds(2.5), "2.500 s");
+        assert_eq!(fmt_seconds(0.0025), "2.500 ms");
+        assert_eq!(fmt_seconds(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_seconds(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn bytes_formatting_units() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0), "3.00 MiB");
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let t = markdown_table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | bb |"));
+        assert!(t.lines().count() == 3);
+    }
+
+    #[test]
+    fn histogram_buckets_and_mean() {
+        let mut h = Histogram::new(10.0, 4);
+        for v in [1.0, 11.0, 21.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.buckets(), &[1, 1, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 33.25).abs() < 1e-12);
+    }
+}

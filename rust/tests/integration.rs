@@ -1,0 +1,129 @@
+//! Cross-layer integration tests: generators → preprocessing → engines
+//! (sequential / threaded / XLA-accelerated) → verification, plus
+//! determinism and artifact-loading checks.
+
+use ghs_mst::baseline::{boruvka::boruvka, kruskal::kruskal, prim::prim};
+use ghs_mst::coordinator::Workload;
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::engine::Engine;
+use ghs_mst::ghs::parallel::run_threaded;
+use ghs_mst::graph::generators::GraphFamily;
+use ghs_mst::graph::io;
+use ghs_mst::runtime::minedge::{accelerated_boruvka, MinEdgeExecutable};
+use ghs_mst::runtime::Runtime;
+use ghs_mst::sim::{SimConfig, TimingMode};
+
+fn all_families() -> [GraphFamily; 3] {
+    [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random]
+}
+
+#[test]
+fn every_engine_agrees_with_every_baseline() {
+    for family in all_families() {
+        let g = Workload::new(family, 9).build();
+        let oracle = kruskal(&g).canonical_edges();
+        assert_eq!(prim(&g).canonical_edges(), oracle, "{family:?} prim");
+        assert_eq!(boruvka(&g).canonical_edges(), oracle, "{family:?} boruvka");
+        let seq = Engine::new(&g, GhsConfig::final_version(8)).unwrap().run().unwrap();
+        assert_eq!(seq.forest.canonical_edges(), oracle, "{family:?} ghs sequential");
+        let thr = run_threaded(&g, GhsConfig::final_version(4)).unwrap();
+        assert_eq!(thr.forest.canonical_edges(), oracle, "{family:?} ghs threaded");
+    }
+}
+
+#[test]
+fn sequential_engine_is_fully_deterministic() {
+    let g = Workload::new(GraphFamily::Rmat, 9).build();
+    let run = |_: u32| Engine::new(&g, GhsConfig::final_version(16)).unwrap().run().unwrap();
+    let a = run(0);
+    let b = run(1);
+    assert_eq!(a.supersteps, b.supersteps);
+    assert_eq!(a.sent.total(), b.sent.total());
+    assert_eq!(a.profile.msgs_postponed, b.profile.msgs_postponed);
+    assert_eq!(a.sim.total_time, b.sim.total_time, "virtual time is deterministic");
+    assert_eq!(a.forest.canonical_edges(), b.forest.canonical_edges());
+}
+
+#[test]
+fn artifacts_run_through_pjrt_and_match_kruskal() {
+    // Requires `make artifacts`; fails loudly with instructions otherwise.
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = MinEdgeExecutable::load(&rt, 4096, 32).expect("run `make artifacts` first");
+    for family in all_families() {
+        let g = Workload::new(family, 10).build();
+        let (forest, stats) = accelerated_boruvka(&g, &exe).unwrap();
+        assert_eq!(
+            forest.canonical_edges(),
+            kruskal(&g).canonical_edges(),
+            "{family:?} accelerated"
+        );
+        assert!(stats.device_rows as usize >= g.n_vertices as usize);
+    }
+}
+
+#[test]
+fn io_roundtrip_preserves_engine_results() {
+    let g = Workload::new(GraphFamily::Random, 8).build();
+    let dir = std::env::temp_dir().join("ghs_mst_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.bin");
+    io::write_binary(&g, &path).unwrap();
+    let g2 = io::read_binary(&path).unwrap();
+    let a = Engine::new(&g, GhsConfig::final_version(8)).unwrap().run().unwrap();
+    let b = Engine::new(&g2, GhsConfig::final_version(8)).unwrap().run().unwrap();
+    assert_eq!(a.forest.canonical_edges(), b.forest.canonical_edges());
+    assert_eq!(a.sent.total(), b.sent.total());
+}
+
+#[test]
+fn measured_timing_mode_runs() {
+    let g = Workload::new(GraphFamily::Rmat, 8).build();
+    let sim = SimConfig { timing: TimingMode::Measured, ..Default::default() };
+    let run = Engine::with_sim(&g, GhsConfig::final_version(8), sim).unwrap().run().unwrap();
+    assert!(run.sim.total_time > 0.0);
+    assert_eq!(run.forest.canonical_edges(), kruskal(&g).canonical_edges());
+}
+
+#[test]
+fn message_complexity_within_ghs_bound_all_families() {
+    for family in all_families() {
+        let g = Workload::new(family, 10).build();
+        let run = Engine::new(&g, GhsConfig::final_version(8)).unwrap().run().unwrap();
+        let n = g.n_vertices as u64;
+        let m = g.n_edges() as u64;
+        let bound = 5 * n * (n as f64).log2().ceil() as u64 + 2 * m;
+        assert!(run.sent.total() <= bound, "{family:?}: {} > {bound}", run.sent.total());
+    }
+}
+
+#[test]
+fn timeline_recording_captures_flushes() {
+    let g = Workload::new(GraphFamily::Rmat, 9).build();
+    let mut cfg = GhsConfig::final_version(16);
+    cfg.record_timeline = true;
+    let run = Engine::new(&g, cfg).unwrap().run().unwrap();
+    assert!(!run.timeline.is_empty());
+    assert!(!run.sim.flush_log.is_empty());
+    // Flush log entries carry plausible sizes.
+    for &(t, bytes, n) in &run.sim.flush_log {
+        assert!(t >= 0.0 && bytes > 0 && n > 0);
+        assert!(bytes as usize <= 20_000 + 32, "buffer within MAX_MSG_SIZE + one message");
+    }
+}
+
+#[test]
+fn forest_mode_scales_with_many_components() {
+    // 50 small islands: the silence-based termination must find all trees.
+    use ghs_mst::graph::generators::structured;
+    use ghs_mst::util::prng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let mut g = structured::connected_random(20, 10, &mut rng);
+    for _ in 0..49 {
+        let island = structured::connected_random(20, 10, &mut rng);
+        g = structured::disjoint_union(&g, &island);
+    }
+    let clean = ghs_mst::graph::preprocess::preprocess(&g).0;
+    let run = Engine::new(&clean, GhsConfig::final_version(8)).unwrap().run().unwrap();
+    assert_eq!(run.forest.n_components, 50);
+    assert_eq!(run.forest.canonical_edges(), kruskal(&clean).canonical_edges());
+}
