@@ -96,10 +96,10 @@ pub fn table2(opts: &ExpOptions) -> Result<Table> {
         scal_row.extend(times.iter().map(|&x| format!("{:.2}", t1 / x)));
         t.push_row(scal_row);
     }
-    t.note(format!(
+    t.note(
         "Paper (scale 24): RMAT scaling 1.00/1.75/3.52/7.47/11.7/31.0/43.6; at reduced scale \
-         the latency floor and hub skew bind earlier — see EXPERIMENTS.md for the regime map."
-    ));
+         the latency floor and hub skew bind earlier — see EXPERIMENTS.md for the regime map.",
+    );
     Ok(t)
 }
 

@@ -387,6 +387,81 @@ mod tests {
     }
 
     #[test]
+    fn field_boundary_values_roundtrip_all_formats() {
+        // Property sweep over the wire fields' extreme values: level 31
+        // (the 5-bit maximum), vertex ids at the u32 edges, ties at the
+        // codec-width edges, weights at the (0, 1) interval edges — for all
+        // seven message types in all three formats.
+        use crate::ghs::types::MAX_WIRE_LEVEL;
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            props(&format!("wire boundaries {fmt:?}"), 300, |g| {
+                let src = *g.choose(&[0u32, 1, u32::MAX - 1, u32::MAX]);
+                let dst = *g.choose(&[0u32, 1, u32::MAX - 1, u32::MAX]);
+                let level = *g.choose(&[0, 1, MAX_WIRE_LEVEL - 1, MAX_WIRE_LEVEL]);
+                // Proc-id carries an 8-bit tie; 0xFF is reserved for the
+                // infinity sentinel but must round-trip with finite weights.
+                let tie = if fmt == WireFormat::CompactProcId {
+                    *g.choose(&[0u64, 1, 0x7F, 0xFE, 0xFF])
+                } else {
+                    *g.choose(&[0u64, 1, u64::MAX - 1, u64::MAX])
+                };
+                let raw = *g.choose(&[
+                    f64::MIN_POSITIVE,
+                    f64::EPSILON,
+                    0.5,
+                    1.0 - f64::EPSILON,
+                ]);
+                let w = EdgeWeight::with_tie(raw, tie);
+                let payloads = [
+                    Payload::Connect { level },
+                    Payload::Initiate { level, fragment: w, state: VertexState::Find },
+                    Payload::Initiate { level, fragment: w, state: VertexState::Found },
+                    Payload::Test { level, fragment: w },
+                    Payload::Accept,
+                    Payload::Reject,
+                    Payload::Report { best: w },
+                    Payload::Report { best: EdgeWeight::infinity() },
+                    Payload::ChangeCore,
+                ];
+                for payload in payloads {
+                    let m = Message::new(src, dst, payload);
+                    let mut buf = Vec::new();
+                    let written = encode(&m, fmt, &mut buf);
+                    assert_eq!(written, fmt.size_of(&payload), "size accounting");
+                    let out: Vec<Message> = Decoder::new(&buf, fmt).collect();
+                    assert_eq!(out.len(), 1);
+                    assert_eq!(out[0].src, src);
+                    assert_eq!(out[0].dst, dst);
+                    assert_eq!(out[0].payload, payload, "{fmt:?} payload {payload:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn max_level_survives_mixed_aggregated_buffer() {
+        // A whole aggregation buffer of boundary-value messages decodes as a
+        // sequential stream (byte-aligned framing, §3.5).
+        use crate::ghs::types::MAX_WIRE_LEVEL;
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            let w = EdgeWeight::with_tie(1.0 - f64::EPSILON, 0xFE);
+            let msgs = vec![
+                Message::new(u32::MAX, 0, Payload::Connect { level: MAX_WIRE_LEVEL }),
+                Message::new(0, u32::MAX, Payload::Test { level: MAX_WIRE_LEVEL, fragment: w }),
+                Message::new(7, 9, Payload::Accept),
+                Message::new(9, 7, Payload::Report { best: w }),
+                Message::new(1, 2, Payload::ChangeCore),
+            ];
+            let mut buf = Vec::new();
+            for m in &msgs {
+                encode(m, fmt, &mut buf);
+            }
+            let out: Vec<Message> = Decoder::new(&buf, fmt).collect();
+            assert_eq!(out, msgs, "{fmt:?}");
+        }
+    }
+
+    #[test]
     fn infinity_report_survives_procid() {
         let m = Message::new(1, 2, Payload::Report { best: EdgeWeight::infinity() });
         let mut buf = Vec::new();

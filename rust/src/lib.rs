@@ -13,7 +13,9 @@
 //!   clocks, profiling and message-size timelines.
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas min-edge
 //!   kernel (`artifacts/*.hlo.txt`) and drives the accelerated Borůvka
-//!   fragment engine.
+//!   fragment engine. Gated behind the off-by-default **`accelerate`**
+//!   feature; the default build ships a stub that errors with rebuild
+//!   instructions.
 //! * [`graph`], [`baseline`], [`util`] — substrates: generators, CRS,
 //!   preprocessing, sequential MST oracles, PRNG/bitpack/stats.
 //!

@@ -14,7 +14,9 @@ use ghs_mst::ghs::parallel::run_threaded;
 use ghs_mst::ghs::wire::WireFormat;
 use ghs_mst::graph::generators::GraphFamily;
 use ghs_mst::graph::{io, preprocess::preprocess, EdgeList};
+#[cfg(feature = "accelerate")]
 use ghs_mst::runtime::minedge::{accelerated_boruvka, MinEdgeExecutable};
+#[cfg(feature = "accelerate")]
 use ghs_mst::runtime::Runtime;
 use ghs_mst::sim::SimConfig;
 use ghs_mst::util::stats::fmt_seconds;
@@ -32,6 +34,7 @@ COMMANDS
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
   verify        Run GHS + all baselines, compare forests: --family --scale --ranks
   accel         XLA-accelerated Boruvka via PJRT: --family --scale [--block 4096x32]
+                  (needs a build with `--features accelerate`)
   baseline      Run kruskal|prim|boruvka: --algo NAME --family --scale
   table2        Paper Table 2 (strong scaling, 3 graph families)
   fig2          Paper Fig 2a/2b (optimization stack: runtime + scaling)
@@ -209,6 +212,19 @@ fn cmd_verify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Without the `accelerate` feature the PJRT bridge is not compiled in;
+/// keep the command (and the usage text) but fail with build instructions.
+#[cfg(not(feature = "accelerate"))]
+fn cmd_accel(_args: &Args) -> Result<()> {
+    bail!(
+        "the `accel` command needs the PJRT/XLA runtime, which is behind the \
+         off-by-default `accelerate` feature:\n\
+         \n    cargo run --release --features accelerate -- accel ...\n\
+         \n(the default build is dependency-light and omits the bridge)"
+    )
+}
+
+#[cfg(feature = "accelerate")]
 fn cmd_accel(args: &Args) -> Result<()> {
     args.expect_flags(&["family", "scale", "block", "input"])?;
     let (label, clean) = load_or_generate(args)?;

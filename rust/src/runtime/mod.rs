@@ -2,18 +2,41 @@
 //! (`artifacts/*.hlo.txt`) and executes them on the XLA CPU client.
 //! Python never runs on this path — the artifacts are built once by
 //! `make artifacts`.
+//!
+//! The whole bridge sits behind the off-by-default **`accelerate`** feature
+//! so the default build carries no XLA dependency:
+//!
+//! * `--features accelerate` — compiles against the `xla` crate (the
+//!   workspace vendors an API-only stub; swap in the real xla-rs crate to
+//!   execute artifacts) and exposes [`minedge`], the accelerated Borůvka
+//!   path.
+//! * default — [`Runtime::cpu`] is a stub that returns a clear error
+//!   directing callers to rebuild with the feature; nothing else is
+//!   compiled.
 
+#[cfg(feature = "accelerate")]
 pub mod minedge;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+
+#[cfg(feature = "accelerate")]
+use std::path::Path;
+
+#[cfg(feature = "accelerate")]
+use anyhow::{bail, Context};
+
+#[cfg(not(feature = "accelerate"))]
+use anyhow::bail;
 
 /// Lazily-created PJRT CPU client plus compiled executables.
+#[cfg(feature = "accelerate")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "accelerate")]
 impl Runtime {
     /// Create the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
@@ -48,6 +71,31 @@ impl Runtime {
     }
 }
 
+/// Stub runtime compiled when the `accelerate` feature is off: creation
+/// fails with an actionable message, keeping the CLI and library API
+/// feature-agnostic.
+#[cfg(not(feature = "accelerate"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "accelerate"))]
+impl Runtime {
+    /// Always fails: the PJRT bridge is not compiled in.
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "ghs_mst was built without the `accelerate` feature, so the PJRT/XLA \
+             runtime is not available; rebuild with `cargo build --features accelerate`"
+        )
+    }
+
+    /// Platform name placeholder (unreachable in practice: [`Runtime::cpu`]
+    /// never constructs the stub).
+    pub fn platform(&self) -> String {
+        "accelerate feature disabled".to_string()
+    }
+}
+
 /// Default artifacts directory: `$GHS_MST_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var_os("GHS_MST_ARTIFACTS")
@@ -55,7 +103,7 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "accelerate"))]
 mod tests {
     use super::*;
 
@@ -73,5 +121,26 @@ mod tests {
             Ok(_) => panic!("expected missing-artifact error"),
         };
         assert!(err.to_string().contains("make artifacts"));
+    }
+}
+
+#[cfg(all(test, not(feature = "accelerate")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_errors_helpfully() {
+        let err = match Runtime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub Runtime::cpu must fail"),
+        };
+        assert!(err.to_string().contains("accelerate"));
+    }
+
+    #[test]
+    fn artifacts_dir_defaults_to_relative_artifacts() {
+        if std::env::var_os("GHS_MST_ARTIFACTS").is_none() {
+            assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+        }
     }
 }

@@ -199,6 +199,91 @@ mod tests {
     }
 
     #[test]
+    fn unaligned_fields_pack_lsb_first_exact_bytes() {
+        // Hand-computed layout: 1 + 4 + 3 bits, LSB-first within the byte.
+        //   bit 0        = 1            (value 0b1)
+        //   bits 1..5    = 0,1,0,1     (value 0b1010, LSB first)
+        //   bits 5..8    = 1,1,1       (value 0b111)
+        // => byte = 1 | 0b0101<<1 | 0b111<<5 = 0xF5
+        let mut w = BitWriter::new();
+        w.write(0b1, 1);
+        w.write(0b1010, 4);
+        w.write(0b111, 3);
+        assert_eq!(w.bit_len(), 8);
+        assert_eq!(w.into_bytes(), vec![0xF5]);
+    }
+
+    #[test]
+    fn over_appends_after_unaligned_prefix_was_byte_aligned() {
+        // An unaligned writer must be byte-aligned (align_byte / into_bytes)
+        // before `over` can continue the buffer; appended unaligned fields
+        // then read back across the boundary.
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.align_byte();
+        assert_eq!(w.bit_len(), 8, "align pads to the byte boundary");
+        let prefix = w.into_bytes();
+        assert_eq!(prefix, vec![0b0000_0101]);
+
+        let mut w2 = BitWriter::over(prefix);
+        assert_eq!(w2.bit_len(), 8, "over resumes at the byte boundary");
+        w2.write(0b11, 2);
+        w2.write(0x15, 5); // 0b10101
+        w2.write(0b1, 1);
+        assert_eq!(w2.bit_len(), 16);
+        let bytes = w2.into_bytes();
+        assert_eq!(bytes.len(), 2);
+
+        // Whole-stream read.
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), 0b101);
+        r.align_byte();
+        assert_eq!(r.bit_pos(), 8);
+        assert_eq!(r.read(2), 0b11);
+        assert_eq!(r.read(5), 0x15);
+        assert_eq!(r.read(1), 0b1);
+        assert_eq!(r.remaining(), 0);
+
+        // Suffix-only read via a byte offset.
+        let mut r = BitReader::at_byte(&bytes, 1);
+        assert_eq!(r.read(2), 0b11);
+        assert_eq!(r.read(5), 0x15);
+    }
+
+    #[test]
+    fn property_over_roundtrips_appended_fields() {
+        // `over` on a random aligned prefix + random unaligned field tail:
+        // the tail reads back exactly from the prefix's byte offset.
+        let mut rng = Xoshiro256::seed_from_u64(0x0FE2);
+        for _case in 0..300 {
+            let prefix_len = rng.next_index(9);
+            let prefix: Vec<u8> = (0..prefix_len).map(|_| rng.next_u64() as u8).collect();
+            let mut w = BitWriter::over(prefix.clone());
+            let nfields = 1 + rng.next_index(8);
+            let mut fields = Vec::with_capacity(nfields);
+            for _ in 0..nfields {
+                let width = 1 + rng.next_index(64);
+                let value = if width == 64 {
+                    rng.next_u64()
+                } else {
+                    rng.next_u64() & ((1u64 << width) - 1)
+                };
+                w.write(value, width);
+                fields.push((value, width));
+            }
+            let total_bits: usize = fields.iter().map(|&(_, w)| w).sum();
+            assert_eq!(w.bit_len(), prefix_len * 8 + total_bits);
+            let bytes = w.into_bytes();
+            assert_eq!(&bytes[..prefix_len], &prefix[..], "prefix untouched");
+            let mut r = BitReader::at_byte(&bytes, prefix_len);
+            for &(value, width) in &fields {
+                assert_eq!(r.read(width), value);
+            }
+        }
+    }
+
+    #[test]
     fn reader_at_byte_offset() {
         let bytes = vec![0xFF, 0x0F];
         let mut r = BitReader::at_byte(&bytes, 1);

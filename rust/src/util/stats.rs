@@ -100,9 +100,9 @@ pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
     let mut out = String::new();
     let emit_row = |out: &mut String, cells: &[String]| {
         out.push('|');
-        for (i, w) in widths.iter().enumerate() {
+        for (i, &w) in widths.iter().enumerate() {
             let cell = cells.get(i).map(String::as_str).unwrap_or("");
-            let _ = write!(out, " {cell:<w$} |", w = w);
+            let _ = write!(out, " {cell:<w$} |");
         }
         out.push('\n');
     };

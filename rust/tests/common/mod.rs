@@ -1,0 +1,183 @@
+//! Shared fixture layer for the integration-test targets that declare
+//! `mod common;` (`integration.rs`, `conformance.rs`).
+//!
+//! Provides the axes of the cross-engine conformance matrix — engine kinds,
+//! wire formats, lookup strategies, and a deterministic graph-case builder —
+//! plus the oracle checker that encodes the four conformance assertions
+//! (canonical edges, forest weight, component counts, GHS message bound).
+//!
+//! Each test target compiles this module independently, so not every target
+//! uses every helper.
+#![allow(dead_code)]
+
+use ghs_mst::baseline::kruskal::kruskal;
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::edge_lookup::SearchStrategy;
+use ghs_mst::ghs::engine::Engine;
+use ghs_mst::ghs::parallel::run_threaded;
+use ghs_mst::ghs::result::GhsRun;
+use ghs_mst::ghs::wire::WireFormat;
+use ghs_mst::graph::generators::{generate_with_factor, structured, GraphFamily};
+use ghs_mst::graph::preprocess::preprocess;
+use ghs_mst::graph::EdgeList;
+use ghs_mst::util::prng::Xoshiro256;
+
+/// The paper's three generated graph families (§4).
+pub fn paper_families() -> [GraphFamily; 3] {
+    [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random]
+}
+
+/// Engine implementations under differential test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Deterministic sequential superstep engine (`ghs::engine::Engine`).
+    Sequential,
+    /// One-OS-thread-per-rank engine (`ghs::parallel::run_threaded`).
+    Threaded,
+}
+
+/// Both engines.
+pub const ENGINE_KINDS: [EngineKind; 2] = [EngineKind::Sequential, EngineKind::Threaded];
+
+/// All three §3.5 wire formats.
+pub const WIRE_FORMATS: [WireFormat; 3] =
+    [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId];
+
+/// All three §3.3 local-edge lookup strategies.
+pub const SEARCH_STRATEGIES: [SearchStrategy; 3] =
+    [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash];
+
+/// Number of cases on the conformance graph axis (3 generated + 4
+/// structured).
+pub const N_GRAPH_CASES: usize = 7;
+
+/// Build only the `index`-th conformance graph case — the three generated
+/// families at `scale` (edge factor 8 keeps cases fast) for indices 0..3,
+/// then path / star / grid / complete sized off `scale`. Preprocessed
+/// (simple) and deterministic in `(scale, seed, index)`.
+pub fn graph_case(scale: u32, seed: u64, index: usize) -> (String, EdgeList) {
+    let index = index % N_GRAPH_CASES;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let n = 1u32 << scale;
+    match index {
+        0..=2 => {
+            let family = paper_families()[index];
+            let g = generate_with_factor(family, scale, 8, seed.wrapping_add(index as u64));
+            (format!("{}-{scale}", family.label()), preprocess(&g).0)
+        }
+        3 => ("path".to_string(), preprocess(&structured::path(n, &mut rng)).0),
+        4 => ("star".to_string(), preprocess(&structured::star(n, &mut rng)).0),
+        5 => {
+            let side = ((n as f64).sqrt() as u32).max(2);
+            (
+                format!("grid-{side}x{side}"),
+                preprocess(&structured::grid(side, side, &mut rng)).0,
+            )
+        }
+        _ => {
+            let kn = n.min(16).max(4);
+            (format!("complete-{kn}"), preprocess(&structured::complete(kn, &mut rng)).0)
+        }
+    }
+}
+
+/// All [`N_GRAPH_CASES`] graph cases (see [`graph_case`]).
+pub fn graph_cases(scale: u32, seed: u64) -> Vec<(String, EdgeList)> {
+    (0..N_GRAPH_CASES).map(|i| graph_case(scale, seed, i)).collect()
+}
+
+/// A disconnected "archipelago" (several islands + isolated vertices) for
+/// minimum-spanning-*forest* conformance. Deterministic in the PRNG state.
+pub fn forest_case(rng: &mut Xoshiro256) -> EdgeList {
+    let a = structured::connected_random(24, 30, rng);
+    let b = structured::grid(4, 5, rng);
+    let c = structured::cycle(9, rng);
+    let islands = structured::disjoint_union(&structured::disjoint_union(&a, &b), &c);
+    preprocess(&structured::with_isolated(&islands, 3)).0
+}
+
+/// A graph whose raw weights collide heavily: forces the engine's
+/// per-process uniqueness check to reject the proc-id codec and fall back
+/// to CompactSpecialId (paper §3.5).
+pub fn duplicate_weight_case(rng: &mut Xoshiro256, n: u32) -> EdgeList {
+    let mut g = EdgeList::with_vertices(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.next_bool(0.4) {
+                g.push(u, v, (rng.next_below(4) as f64 + 1.0) / 8.0);
+            }
+        }
+    }
+    preprocess(&g).0
+}
+
+/// Engine configuration for one conformance cell. `max_supersteps` is
+/// bounded so an algorithmic deadlock fails the test instead of hanging it.
+pub fn conformance_config(wire: WireFormat, search: SearchStrategy, n_ranks: u32) -> GhsConfig {
+    GhsConfig {
+        n_ranks,
+        wire_format: wire,
+        search,
+        max_supersteps: 5_000_000,
+        ..GhsConfig::default()
+    }
+}
+
+/// Run one engine kind over a preprocessed graph.
+pub fn run_engine(kind: EngineKind, clean: &EdgeList, cfg: GhsConfig) -> GhsRun {
+    match kind {
+        EngineKind::Sequential => {
+            Engine::new(clean, cfg).expect("engine construction").run().expect("engine run")
+        }
+        EngineKind::Threaded => run_threaded(clean, cfg).expect("threaded run"),
+    }
+}
+
+/// The GHS message-complexity bound: `5·N·⌈log2 N⌉ + 2·M` (GHS83 Thm;
+/// the paper inherits it). Single source of truth for every test target.
+pub fn ghs_message_bound(n_vertices: u64, n_edges: u64) -> u64 {
+    5 * n_vertices * (n_vertices as f64).log2().ceil() as u64 + 2 * n_edges
+}
+
+/// The four conformance assertions against the Kruskal oracle:
+///
+/// 1. canonical-edge equality (edge-for-edge, not just weight),
+/// 2. MSF total-weight equality (identical edges; tolerance only covers
+///    floating summation order),
+/// 3. component-count agreement plus the spanning-forest edge-count
+///    invariant `|E| == n - #components`,
+/// 4. the GHS message-complexity bound `≤ 5·N·⌈log2 N⌉ + 2·M`.
+pub fn verify_against_oracle(label: &str, clean: &EdgeList, run: &GhsRun) {
+    let oracle = kruskal(clean);
+    assert_eq!(
+        run.forest.canonical_edges(),
+        oracle.canonical_edges(),
+        "{label}: forest differs from Kruskal oracle"
+    );
+    let (got_w, want_w) = (run.forest.total_weight(), oracle.total_weight());
+    assert!(
+        (got_w - want_w).abs() <= 1e-9 * want_w.abs().max(1.0),
+        "{label}: forest weight {got_w} != oracle weight {want_w}"
+    );
+    assert_eq!(
+        run.forest.n_components, oracle.n_components,
+        "{label}: component count differs from oracle"
+    );
+    assert!(
+        run.forest.check_edge_count(clean),
+        "{label}: |edges| != n - #components ({} edges, {} vertices, {} components)",
+        run.forest.edges.len(),
+        clean.n_vertices,
+        run.forest.n_components
+    );
+    let n = clean.n_vertices as u64;
+    let m = clean.n_edges() as u64;
+    if n >= 2 {
+        let bound = ghs_message_bound(n, m);
+        assert!(
+            run.sent.total() <= bound,
+            "{label}: {} messages exceed the GHS bound {bound} (n={n}, m={m})",
+            run.sent.total()
+        );
+    }
+}

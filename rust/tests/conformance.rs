@@ -1,0 +1,136 @@
+//! Cross-engine conformance harness — the differential-testing gate every
+//! future scaling/perf PR must keep green.
+//!
+//! Exercises the full matrix
+//!
+//! ```text
+//! {sequential, threaded engine}
+//!   × {Naive, CompactSpecialId, CompactProcId} wire formats   (§3.5)
+//!   × {Linear, Binary, Hash} edge lookups                     (§3.3)
+//!   × {RMAT, SSCA2, Random, path, star, grid, complete}       (§4 + structured)
+//! ```
+//!
+//! (≥ 126 engine/config combinations, plus forest / rank-sweep /
+//! duplicate-weight sweeps) against the sequential Kruskal oracle, asserting
+//! for every cell: canonical-edge equality, MSF-weight equality, component
+//! counts, and the paper's GHS message-complexity bound. All cases are
+//! deterministically seeded through `util::minitest` (override with
+//! `MINITEST_SEED` to explore, replay failures by the printed case seed).
+
+mod common;
+
+use common::{
+    conformance_config, duplicate_weight_case, forest_case, graph_case, graph_cases, run_engine,
+    verify_against_oracle, EngineKind, ENGINE_KINDS, N_GRAPH_CASES, SEARCH_STRATEGIES,
+    WIRE_FORMATS,
+};
+use ghs_mst::ghs::edge_lookup::SearchStrategy;
+use ghs_mst::ghs::wire::WireFormat;
+use ghs_mst::util::minitest::props;
+
+/// Graph scale for the matrix: 2^6 vertices keeps the 126-cell sweep fast
+/// while still crossing every rank boundary at 4 ranks.
+const MATRIX_SCALE: u32 = 6;
+const MATRIX_RANKS: u32 = 4;
+
+fn full_matrix() -> Vec<(EngineKind, WireFormat, SearchStrategy)> {
+    let mut combos = Vec::new();
+    for &kind in &ENGINE_KINDS {
+        for &wire in &WIRE_FORMATS {
+            for &search in &SEARCH_STRATEGIES {
+                combos.push((kind, wire, search));
+            }
+        }
+    }
+    combos
+}
+
+/// The tentpole sweep: every engine × wire × lookup combination over every
+/// graph family, each cell differentially checked against Kruskal.
+#[test]
+fn full_matrix_conforms_to_kruskal_oracle() {
+    let combos = full_matrix();
+    assert_eq!(combos.len(), 18, "2 engines x 3 wire formats x 3 lookups");
+    let mut cells = 0usize;
+    props("conformance matrix", combos.len(), |g| {
+        let (kind, wire, search) = combos[g.case];
+        // Fresh deterministic graphs per combo: coverage diversity without
+        // losing replayability (the case seed fixes the graphs).
+        for (label, clean) in &graph_cases(MATRIX_SCALE, g.u64()) {
+            let cfg = conformance_config(wire, search, MATRIX_RANKS);
+            let run = run_engine(kind, clean, cfg);
+            verify_against_oracle(&format!("{kind:?}/{wire:?}/{search:?}/{label}"), clean, &run);
+            cells += 1;
+        }
+    });
+    assert!(cells >= 100, "conformance matrix covered only {cells} cells (need >= 100)");
+}
+
+/// Rank-count sweep: both engines agree with the oracle from 1 rank up to
+/// more ranks than the partition has "natural" work for.
+#[test]
+fn rank_counts_conform_across_engines() {
+    props("conformance rank sweep", 12, |g| {
+        let kind = ENGINE_KINDS[g.case % ENGINE_KINDS.len()];
+        let ranks = 1 + g.u64_below(9) as u32;
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(5, g.u64(), idx);
+        let cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, ranks);
+        let run = run_engine(kind, &clean, cfg);
+        verify_against_oracle(&format!("{kind:?}/ranks={ranks}/{label}"), &clean, &run);
+    });
+}
+
+/// Minimum spanning *forest* conformance: disconnected archipelagos with
+/// isolated vertices, across both engines and all wire formats.
+#[test]
+fn disconnected_forests_conform() {
+    props("conformance forests", 6, |g| {
+        let kind = ENGINE_KINDS[g.case % ENGINE_KINDS.len()];
+        let wire = WIRE_FORMATS[g.case % WIRE_FORMATS.len()];
+        let clean = forest_case(g.rng());
+        let cfg = conformance_config(wire, SearchStrategy::Hash, 3);
+        let run = run_engine(kind, &clean, cfg);
+        verify_against_oracle(&format!("{kind:?}/{wire:?}/forest"), &clean, &run);
+        assert!(run.forest.n_components >= 4, "archipelago has >= 3 islands + isolated");
+    });
+}
+
+/// Duplicate raw weights defeat the proc-id codec's per-process uniqueness
+/// precondition; the engine must fall back to CompactSpecialId and still
+/// produce the oracle forest (paper §3.5's feasibility check).
+#[test]
+fn duplicate_weights_force_conformant_codec_fallback() {
+    props("conformance duplicate weights", 10, |g| {
+        let kind = ENGINE_KINDS[g.case % ENGINE_KINDS.len()];
+        let n = g.usize_in(6, 28) as u32;
+        let clean = duplicate_weight_case(g.rng(), n);
+        let cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, 3);
+        let run = run_engine(kind, &clean, cfg);
+        verify_against_oracle(&format!("{kind:?}/dup-weights/n={n}"), &clean, &run);
+    });
+}
+
+/// The sequential engine is bit-deterministic per cell of the matrix: same
+/// graph + config => identical forest, traffic, and virtual time.
+#[test]
+fn sequential_matrix_cells_are_deterministic() {
+    props("conformance determinism", 6, |g| {
+        let wire = WIRE_FORMATS[g.case % WIRE_FORMATS.len()];
+        let search = SEARCH_STRATEGIES[g.case % SEARCH_STRATEGIES.len()];
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(5, g.u64(), idx);
+        let mk = || {
+            run_engine(
+                EngineKind::Sequential,
+                &clean,
+                conformance_config(wire, search, MATRIX_RANKS),
+            )
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.forest.canonical_edges(), b.forest.canonical_edges(), "{label}");
+        assert_eq!(a.sent.total(), b.sent.total(), "{label}");
+        assert_eq!(a.supersteps, b.supersteps, "{label}");
+        assert_eq!(a.sim.total_time, b.sim.total_time, "{label}");
+    });
+}

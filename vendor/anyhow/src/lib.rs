@@ -1,0 +1,224 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The workspace builds fully offline (no crates.io), so this crate vendors
+//! exactly the subset of the anyhow 1.x API that `ghs_mst` uses:
+//!
+//! * [`Error`] — an erased error with a display message and optional source
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/early-return macros
+//!
+//! Semantics match anyhow where it matters for this workspace: `?` converts
+//! any `E: std::error::Error + Send + Sync + 'static`, `Display` shows the
+//! outermost message, and `Debug` (what `fn main() -> Result<()>` prints)
+//! additionally shows the captured source. Swapping in the real crate is a
+//! one-line change in `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An erased error: owned message plus an optional captured source error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Create an error from a standard error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with higher-level context. The context becomes the
+    /// leading part of the display message; the original source is kept.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The captured source error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion coherent
+// next to core's reflexive `From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with a defaulted error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening widget").unwrap_err();
+        assert!(e.to_string().starts_with("opening widget"));
+        assert!(e.to_string().contains("missing thing"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no value for {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "no value for 7");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("inline {n}");
+        assert_eq!(e.to_string(), "inline 3");
+        let e = anyhow!("positional {} and {}", 1, 2);
+        assert_eq!(e.to_string(), "positional 1 and 2");
+
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            ensure!(1 + 1 == 2);
+            ensure!(!flag, "ensure with {} args", 1);
+            Ok(9)
+        }
+        assert_eq!(f(false).unwrap(), 9);
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+    }
+}
