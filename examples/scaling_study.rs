@@ -16,7 +16,8 @@ fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
     let scale: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(14);
     let max_nodes: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(32);
-    let opts = ExpOptions { scale, max_nodes, verify: true, quiet: false };
+    // Partition strategy comes from GHS_PARTITION (default: paper block).
+    let opts = ExpOptions { scale, max_nodes, verify: true, quiet: false, ..Default::default() };
 
     println!("== ghs-mst end-to-end scaling study ==");
     println!("workloads: RMAT/SSCA2/Random scale {scale}, 8 ranks/node, up to {max_nodes} nodes");

@@ -1,0 +1,283 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check for graph/partition strategies.
+
+Line-by-line port of ghs_mst's SplitMix64/xoshiro256**, R-MAT generator,
+preprocess, and the partition strategies (block / degree-balanced /
+serpentine hub-scatter), kept in lock-step with rust/src so the
+partition-quality table in results/partition_baseline.md can be
+re-derived in environments without cargo. The canonical implementation is
+the Rust one — when `ghs-mst partition` is available, prefer it, and fix
+THIS file if the two ever disagree.
+
+Usage: python3 python/tools/partition_check.py
+"""
+
+M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Xoshiro256:
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_weight(self):
+        while True:
+            w = self.next_f64()
+            if w > 0.0:
+                return w
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        l = m & M64
+        if l < bound:
+            t = ((1 << 64) - bound) % bound  # bound.wrapping_neg() % bound
+            while l < t:
+                x = self.next_u64()
+                m = x * bound
+                l = m & M64
+        return m >> 64
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+A, B, C = 0.57, 0.19, 0.19
+
+
+def rmat_edge(scale, rng):
+    u = v = 0
+    a, b, c = A, B, C
+    for level in range(scale):
+        bit = 1 << (scale - 1 - level)
+        r = rng.next_f64()
+        if r < a:
+            pass
+        elif r < a + b:
+            v |= bit
+        elif r < a + b + c:
+            u |= bit
+        else:
+            u |= bit
+            v |= bit
+        a = a * (0.9 + 0.2 * rng.next_f64())
+        b = b * (0.9 + 0.2 * rng.next_f64())
+        c = c * (0.9 + 0.2 * rng.next_f64())
+        d = (1.0 - (A + B + C)) * (0.9 + 0.2 * rng.next_f64())
+        total = a + b + c + d
+        a /= total
+        b /= total
+        c /= total
+    return u, v
+
+
+def rmat(scale, edge_factor, rng):
+    n = 1 << scale
+    m = edge_factor * n
+    perm = list(range(n))
+    rng.shuffle(perm)
+    edges = []
+    for _ in range(m):
+        u, v = rmat_edge(scale, rng)
+        w = rng.next_weight()
+        edges.append((perm[u], perm[v], w))
+    return n, edges
+
+
+def preprocess(n, edges):
+    """Self-loop removal + parallel-edge dedup. Kept endpoints only (the
+    min-weight choice does not change canonical endpoint pairs)."""
+    kept = set()
+    for u, v, _w in edges:
+        if u == v:
+            continue
+        kept.add((min(u, v), max(u, v)))
+    return sorted(kept)
+
+
+def degrees(n, edges):
+    deg = [0] * n
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    return deg
+
+
+def block_bounds(n, p):
+    base, extra = divmod(n, p)
+    bounds = [0]
+    for r in range(p):
+        bounds.append(bounds[-1] + base + (1 if r < extra else 0))
+    return bounds
+
+
+def owner_from_bounds(bounds, n):
+    owner = [0] * n
+    for r in range(len(bounds) - 1):
+        for v in range(bounds[r], bounds[r + 1]):
+            owner[v] = r
+    return owner
+
+
+def degree_balanced_owner(n, p, edges):
+    deg = degrees(n, edges)
+    total = sum(deg)
+    bounds = [0]
+    if total == 0:
+        bounds = block_bounds(n, p)
+    else:
+        cum, v = 0, 0
+        for r in range(1, p):
+            target = total * r // p
+            while v < n and cum < target:
+                cum += deg[v]
+                v += 1
+            bounds.append(v)
+        bounds.append(n)
+    return owner_from_bounds(bounds, n)
+
+
+def hub_scatter_owner(n, p, edges, top_k=0):
+    deg = degrees(n, edges)
+    k = min(4 * p, n) if top_k == 0 else min(top_k, n)
+    by_deg = sorted(range(n), key=lambda v: (-deg[v], v))
+    owner = [None] * n
+    hub_counts = [0] * p
+    for i, h in enumerate(by_deg[:k]):
+        # Serpentine (snake-draft) round-robin, matching strategies.rs.
+        rnd, pos = divmod(i, p)
+        r = pos if rnd % 2 == 0 else p - 1 - pos
+        owner[h] = r
+        hub_counts[r] += 1
+    base, extra = divmod(n, p)
+    quota = [base + (1 if r < extra else 0) for r in range(p)]
+    excess = 0
+    for r in range(p):
+        if hub_counts[r] > quota[r]:
+            excess += hub_counts[r] - quota[r]
+            quota[r] = 0
+        else:
+            quota[r] -= hub_counts[r]
+    r = 0
+    while excess > 0:
+        if quota[r] > 0:
+            quota[r] -= 1
+            excess -= 1
+        r = (r + 1) % p
+    cursor = 0
+    for v in range(n):
+        if owner[v] is not None:
+            continue
+        while quota[cursor] == 0:
+            cursor += 1
+        owner[v] = cursor
+        quota[cursor] -= 1
+    return owner
+
+
+def stats(n, p, edges, owner):
+    vload = [0] * p
+    for v in range(n):
+        vload[owner[v]] += 1
+    eload = [0] * p
+    cut = 0
+    deg = degrees(n, edges)
+    for u, v in edges:
+        ru, rv = owner[u], owner[v]
+        eload[ru] += 1
+        eload[rv] += 1
+        if ru != rv:
+            cut += 1
+    m = len(edges)
+    return {
+        "max_vtx": max(vload),
+        "min_vtx": min(vload),
+        "vtx_imb": max(vload) / (n / p),
+        "max_edge": max(eload),
+        "edge_imb": max(eload) / (2 * m / p),
+        "cut": cut,
+        "remote": cut / m,
+        "max_deg": max(deg),
+    }
+
+
+def workload_rmat(scale):
+    seed = 0xC0FFEE ^ scale
+    rng = Xoshiro256(seed)
+    n, edges = rmat(scale, 16, rng)
+    return n, preprocess(n, edges)
+
+
+def report(tag, n, p, edges):
+    print(f"== {tag}: n={n} m={len(edges)} p={p}")
+    rows = {}
+    for name, ownfn in [
+        ("block", lambda: owner_from_bounds(block_bounds(n, p), n)),
+        ("degree", lambda: degree_balanced_owner(n, p, edges)),
+        ("hub", lambda: hub_scatter_owner(n, p, edges)),
+    ]:
+        s = stats(n, p, edges, ownfn())
+        rows[name] = s
+        print(
+            f"  {name:7s} max_vtx={s['max_vtx']:5d} vtx_imb={s['vtx_imb']:.2f} "
+            f"max_edge={s['max_edge']:7d} edge_imb={s['edge_imb']:.2f} "
+            f"cut={s['cut']:7d} remote={100*s['remote']:.1f}% max_deg={s['max_deg']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    # Cross-check the PRNG against Rust's reference test values.
+    sm = SplitMix64(0)
+    assert sm.next_u64() == 0xE220A8397B1DCDAF
+    assert sm.next_u64() == 0x6E789E6AA1B965F4
+
+    # Test fixtures used by unit tests in the Rust tree.
+    for scale, seed, p in [(9, 7, 8), (9, 31, 16)]:
+        rng = Xoshiro256(seed)
+        n, edges = rmat(scale, 16, rng)
+        kept = preprocess(n, edges)
+        report(f"generate(Rmat,{scale},{seed}) factor16 p={p}", n, p, kept)
+
+    # rmat sizes sanity (mirrors rust test sizes_match_parameters).
+    rng = Xoshiro256(1)
+    n, edges = rmat(10, 16, rng)
+    assert n == 1024 and len(edges) == 16 * 1024
+
+    # The baseline snapshot workload: Workload::new(Rmat, 10), 16 ranks.
+    n, kept = workload_rmat(10)
+    report("Workload RMAT-10 (seed 0xC0FFEE^10), 16 ranks", n, 16, kept)

@@ -7,6 +7,14 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+/// Is `s` the start of another `--flag` (as opposed to this flag's value)?
+/// Only a double-dash prefix marks a flag: tokens like `-1.5` or `-42`
+/// (negative numeric values, e.g. `--weight-min -1.5`) must lex as values,
+/// so a single leading `-` is NOT treated as a flag marker.
+fn is_flag_token(s: &str) -> bool {
+    s.starts_with("--") && s.len() > 2
+}
+
 /// Parsed command line: subcommand + flag map + positional args.
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -26,7 +34,7 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().map_or(false, |n| !is_flag_token(n)) {
                     flags.insert(stripped.to_string(), it.next().expect("peeked"));
                 } else {
                     flags.insert(stripped.to_string(), "true".to_string());
@@ -118,5 +126,24 @@ mod tests {
     fn invalid_numbers_error() {
         let a = parse("run --scale abc");
         assert!(a.get_num::<u32>("scale", 1).is_err());
+    }
+
+    #[test]
+    fn negative_number_values_lex_as_values() {
+        // Regression: a flag followed by a negative number must consume it
+        // as the flag's value, not degrade into a boolean flag with the
+        // number left as a positional.
+        let a = parse("generate --weight-min -1.5 --offset -42 out.txt");
+        assert_eq!(a.get_num::<f64>("weight-min", 0.0).unwrap(), -1.5);
+        assert_eq!(a.get_num::<i64>("offset", 0).unwrap(), -42);
+        assert_eq!(a.positional, vec!["out.txt"], "negative values must not leak into positionals");
+        assert!(!a.get_bool("weight-min"), "not a boolean flag");
+        // The `=` form carries negatives too.
+        let b = parse("generate --weight-min=-2.25");
+        assert_eq!(b.get_num::<f64>("weight-min", 0.0).unwrap(), -2.25);
+        // And a following `--flag` still terminates a boolean flag.
+        let c = parse("run --verify --scale -3");
+        assert!(c.get_bool("verify"));
+        assert_eq!(c.get_num::<i32>("scale", 0).unwrap(), -3);
     }
 }

@@ -12,12 +12,13 @@ use crate::coordinator::{run_once, run_verified, Workload};
 use crate::ghs::config::GhsConfig;
 use crate::ghs::edge_lookup::SearchStrategy;
 use crate::graph::generators::GraphFamily;
+use crate::graph::partition::PartitionSpec;
 use crate::sim::profile::{Breakdown, Category};
 use crate::sim::timeline::interval_series;
 use crate::sim::SimConfig;
 
 /// Common experiment options.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ExpOptions {
     /// Graph scale (2^scale vertices). Paper: 23–24 (29 for weak scaling).
     pub scale: u32,
@@ -27,6 +28,9 @@ pub struct ExpOptions {
     pub verify: bool,
     /// Suppress progress logging on stderr.
     pub quiet: bool,
+    /// Partitioning strategy applied to every engine run (CLI
+    /// `--partition` / env `GHS_PARTITION`; default block).
+    pub partition: PartitionSpec,
 }
 
 impl Default for ExpOptions {
@@ -39,6 +43,20 @@ impl Default for ExpOptions {
             max_nodes: env_u32("GHS_MAX_NODES", 64),
             verify: true,
             quiet: false,
+            partition: match std::env::var("GHS_PARTITION") {
+                Ok(s) => PartitionSpec::parse(&s).unwrap_or_else(|| {
+                    // Loud fallback: silently running Block while the user
+                    // believes another strategy is active would mislabel
+                    // every experiment result. (file:<path> maps are
+                    // CLI-only — use `--partition file:<path>`.)
+                    eprintln!(
+                        "warning: GHS_PARTITION=`{s}` not recognized \
+                         (block|degree|hub); falling back to block"
+                    );
+                    PartitionSpec::Block
+                }),
+                Err(_) => PartitionSpec::Block,
+            },
         }
     }
 }
@@ -58,9 +76,10 @@ impl ExpOptions {
 fn run_config(
     opts: &ExpOptions,
     clean: &crate::graph::EdgeList,
-    cfg: GhsConfig,
+    mut cfg: GhsConfig,
     verify: bool,
 ) -> Result<crate::ghs::result::GhsRun> {
+    cfg.partition = opts.partition.clone();
     if verify && opts.verify {
         run_verified(clean, cfg, SimConfig::default())
     } else {
@@ -372,7 +391,13 @@ mod tests {
     use super::*;
 
     fn tiny_opts() -> ExpOptions {
-        ExpOptions { scale: 8, max_nodes: 4, verify: true, quiet: true }
+        ExpOptions {
+            scale: 8,
+            max_nodes: 4,
+            verify: true,
+            quiet: true,
+            partition: PartitionSpec::Block,
+        }
     }
 
     #[test]
@@ -415,6 +440,16 @@ mod tests {
         let e0: u64 = t.rows.first().unwrap()[2].parse().unwrap();
         let e1: u64 = t.rows.last().unwrap()[2].parse().unwrap();
         assert!(e1 > e0);
+    }
+
+    #[test]
+    fn experiments_honour_partition_spec() {
+        // Non-block partitions run (and verify against Kruskal) through
+        // the experiment drivers too.
+        let opts =
+            ExpOptions { partition: PartitionSpec::HubScatter { top_k: 0 }, ..tiny_opts() };
+        let t = sweep_search(&opts).unwrap();
+        assert_eq!(t.rows.len(), 3);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::ghs::edge_lookup::SearchStrategy;
 use crate::ghs::wire::WireFormat;
+use crate::graph::partition::PartitionSpec;
 
 /// Hash table sizing. Paper default: `local_actual_m * 5 * 11 / 13` slots,
 /// "several times larger than the number of local edges".
@@ -35,6 +36,9 @@ pub struct GhsConfig {
     /// Ranks per cluster node (paper: 8). Only affects the interconnect
     /// cost model (intra-node messages are cheaper) and node-count labels.
     pub ranks_per_node: u32,
+    /// Vertex-to-rank partitioning strategy (paper §3: block; see
+    /// `graph::partition` for the skew-aware alternatives).
+    pub partition: PartitionSpec,
 
     // ---- §3.6 parameters (paper defaults) ----
     /// Maximum size of an aggregated message in bytes (default 10000).
@@ -74,6 +78,7 @@ impl Default for GhsConfig {
         Self {
             n_ranks: 8,
             ranks_per_node: 8,
+            partition: PartitionSpec::Block,
             max_msg_size: 10_000,
             sending_frequency: 5,
             check_frequency: 5,
@@ -122,6 +127,7 @@ mod tests {
     #[test]
     fn paper_defaults() {
         let c = GhsConfig::default();
+        assert_eq!(c.partition, PartitionSpec::Block, "paper §3 block layout is the default");
         assert_eq!(c.max_msg_size, 10_000);
         assert_eq!(c.sending_frequency, 5);
         assert_eq!(c.check_frequency, 5);

@@ -75,7 +75,7 @@ impl EdgeLookup {
                 let size = sizing.table_size(csr.nnz());
                 let mut table = vec![(0u64, 0u64); size as usize];
                 for row in 0..csr.rows() {
-                    let v = csr.first_vertex() + row;
+                    let v = csr.vertex_of(row);
                     for (i, u, _) in csr.neighbours(v) {
                         // Keyed by (sender u, receiver v): the direction a
                         // message travels.

@@ -29,7 +29,7 @@ use crate::ghs::rank::RankState;
 use crate::ghs::result::{GhsRun, ProfileCounters};
 use crate::ghs::vertex::Outcome;
 use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
-use crate::graph::partition::BlockPartition;
+use crate::graph::partition::{Partition, PartitionStats};
 use crate::graph::preprocess::is_simple;
 use crate::graph::EdgeList;
 use crate::sim::{SimConfig, SimState, TimingMode};
@@ -48,6 +48,8 @@ pub struct Engine {
     pub sim: SimState,
     /// Effective wire format after the proc-id feasibility check.
     pub effective_wire: WireFormat,
+    /// Quality report of the partition the run executes under.
+    partition_stats: PartitionStats,
 }
 
 impl Engine {
@@ -66,10 +68,12 @@ impl Engine {
         if config.n_ranks == 0 {
             bail!("need at least one rank");
         }
-        let part = BlockPartition::new(g.n_vertices.max(1), config.n_ranks);
+        let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
+        let partition_stats = PartitionStats::compute(g, &part);
         // Proc-id wire compression requires per-process weight uniqueness
         // and ranks to fit the 8-bit field (paper §3.5); otherwise fall
-        // back to the 64-bit special_id form.
+        // back to the 64-bit special_id form. The uniqueness check runs
+        // against the actual partition, not the block assumption.
         if config.wire_format == WireFormat::CompactProcId {
             let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
             if !feasible {
@@ -81,7 +85,7 @@ impl Engine {
             _ => IdentityCodec::SpecialId,
         };
         let ranks: Vec<RankState> = (0..config.n_ranks)
-            .map(|r| RankState::new(r, g, part, &config, codec))
+            .map(|r| RankState::new(r, g, part.clone(), &config, codec))
             .collect();
         let sim = SimState::new(sim_config, config.n_ranks, config.ranks_per_node);
         Ok(Self {
@@ -92,6 +96,7 @@ impl Engine {
             sim,
             effective_wire: config.wire_format,
             config,
+            partition_stats,
         })
     }
 
@@ -284,6 +289,7 @@ impl Engine {
             per_rank,
             timeline,
             sim: self.sim.summary(),
+            partition: self.partition_stats,
         })
     }
 
@@ -398,6 +404,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn partition_strategies_match_kruskal() {
+        use crate::graph::partition::PartitionSpec;
+        let g = generate(GraphFamily::Rmat, 6, 21);
+        for spec in [
+            PartitionSpec::Block,
+            PartitionSpec::DegreeBalanced,
+            PartitionSpec::HubScatter { top_k: 0 },
+            PartitionSpec::HubScatter { top_k: 3 },
+        ] {
+            let mut c = cfg(4);
+            c.partition = spec;
+            assert_matches_kruskal(&g, c);
+        }
+    }
+
+    #[test]
+    fn run_reports_partition_stats() {
+        let g = generate(GraphFamily::Rmat, 6, 5);
+        let (clean, _) = preprocess(&g);
+        let run = Engine::new(&clean, cfg(4)).unwrap().run().unwrap();
+        assert_eq!(run.partition.n_ranks, 4);
+        assert_eq!(run.partition.n_edges, clean.n_edges() as u64);
+        assert!(run.partition.max_rank_edges > 0);
+        assert!(run.partition.remote_edge_fraction > 0.0, "4 ranks must cut something");
     }
 
     #[test]

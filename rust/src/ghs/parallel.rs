@@ -24,7 +24,7 @@ use crate::ghs::rank::RankState;
 use crate::ghs::result::{GhsRun, ProfileCounters};
 use crate::ghs::vertex::Outcome;
 use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
-use crate::graph::partition::BlockPartition;
+use crate::graph::partition::{Partition, PartitionStats};
 use crate::graph::preprocess::is_simple;
 use crate::graph::EdgeList;
 
@@ -38,7 +38,8 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     if config.n_ranks == 0 {
         bail!("need at least one rank");
     }
-    let part = BlockPartition::new(g.n_vertices.max(1), config.n_ranks);
+    let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
+    let partition_stats = PartitionStats::compute(g, &part);
     if config.wire_format == WireFormat::CompactProcId {
         let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
         if !feasible {
@@ -64,7 +65,7 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
 
     let mut handles = Vec::with_capacity(p);
     for (rank_id, rx) in receivers.into_iter().enumerate() {
-        let mut rank = RankState::new(rank_id as u32, g, part, &config, codec);
+        let mut rank = RankState::new(rank_id as u32, g, part.clone(), &config, codec);
         let senders = senders.clone();
         let pending = Arc::clone(&pending);
         let max_iters = config.max_supersteps;
@@ -83,7 +84,7 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
             Err(e) => std::panic::resume_unwind(e),
         }
     }
-    collect(ranks, g.n_vertices, t0.elapsed().as_secs_f64())
+    collect(ranks, g.n_vertices, t0.elapsed().as_secs_f64(), partition_stats)
 }
 
 fn run_rank(
@@ -172,7 +173,12 @@ fn run_rank(
     }
 }
 
-fn collect(mut ranks: Vec<RankState>, n_vertices: u32, wall: f64) -> Result<GhsRun> {
+fn collect(
+    mut ranks: Vec<RankState>,
+    n_vertices: u32,
+    wall: f64,
+    partition_stats: PartitionStats,
+) -> Result<GhsRun> {
     for r in &mut ranks {
         r.prof.lookups = r.lookup_stats.lookups;
         r.prof.lookup_probes = r.lookup_stats.probes;
@@ -209,6 +215,7 @@ fn collect(mut ranks: Vec<RankState>, n_vertices: u32, wall: f64) -> Result<GhsR
         timeline,
         // Threaded mode: real wall clock, no virtual network.
         sim: crate::sim::SimSummary { total_time: wall, ..Default::default() },
+        partition: partition_stats,
     })
 }
 
@@ -256,6 +263,21 @@ mod tests {
         let b = structured::connected_random(11, 6, &mut rng);
         let g = structured::disjoint_union(&a, &b);
         check(&g, 3);
+    }
+
+    #[test]
+    fn threaded_partition_strategies() {
+        use crate::graph::partition::PartitionSpec;
+        let g = generate(GraphFamily::Rmat, 6, 9);
+        let (clean, _) = preprocess(&g);
+        let oracle = kruskal(&clean).canonical_edges();
+        for spec in [PartitionSpec::DegreeBalanced, PartitionSpec::HubScatter { top_k: 0 }] {
+            let mut c = cfg(4);
+            c.partition = spec.clone();
+            let run = run_threaded(&clean, c).unwrap();
+            assert_eq!(run.forest.canonical_edges(), oracle, "{}", spec.label());
+            assert_eq!(run.partition.n_ranks, 4);
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::ghs::types::{EdgeState, Level, VertexState};
 use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::ghs::wire::{self, IdentityCodec, WireFormat};
 use crate::graph::csr::Csr;
-use crate::graph::partition::BlockPartition;
+use crate::graph::partition::Partition;
 use crate::graph::{EdgeList, VertexId};
 
 /// Sentinel for "nil" adjacency-index variables (best_edge, test_edge,
@@ -67,8 +67,9 @@ impl VertexVars {
 pub struct RankState {
     /// This rank's id.
     pub rank: u32,
-    /// Vertex block partition (shared layout).
-    pub part: BlockPartition,
+    /// Vertex partition (shared layout; cheap clone, `Arc`-backed when
+    /// non-contiguous).
+    pub part: Partition,
     /// Local CRS block.
     pub csr: Csr,
     /// Per-vertex GHS variables (indexed by local row).
@@ -119,13 +120,12 @@ impl RankState {
     pub fn new(
         rank: u32,
         g: &EdgeList,
-        part: BlockPartition,
+        part: Partition,
         config: &GhsConfig,
         codec: IdentityCodec,
     ) -> Self {
-        let first = part.first_vertex(rank);
-        let rows = part.block_size(rank);
-        let mut csr = Csr::from_edges(g, first, rows);
+        let rows = part.n_local(rank);
+        let mut csr = Csr::from_partition(g, &part, rank);
         if config.search == SearchStrategy::Binary {
             csr.sort_rows_by_neighbour();
         }
@@ -136,14 +136,14 @@ impl RankState {
         // order (initialization time, like the paper's hash table build).
         let mut adj_weight = Vec::with_capacity(nnz);
         for row in 0..rows {
-            let v = first + row;
-            for i in csr.row_range(v) {
+            let v = csr.vertex_of(row);
+            for i in csr.row_range_at(row as usize) {
                 adj_weight.push(codec.weight_of(csr.weight(i), v, csr.col(i), &part));
             }
         }
         let mut sorted_adj: Vec<u32> = (0..nnz as u32).collect();
         for row in 0..rows {
-            let range = csr.row_range(first + row);
+            let range = csr.row_range_at(row as usize);
             sorted_adj[range.clone()].sort_unstable_by_key(|&i| adj_weight[i as usize]);
         }
         Self {
@@ -282,9 +282,8 @@ impl RankState {
     /// dedups cross-rank duplicates via canonical form anyway).
     pub fn branch_edges(&self) -> Vec<crate::graph::WeightedEdge> {
         let mut out = Vec::new();
-        let first = self.csr.first_vertex();
         for row in 0..self.csr.rows() {
-            let v = first + row;
+            let v = self.csr.vertex_of(row);
             for (i, nbr, w) in self.csr.neighbours(v) {
                 if self.edge_state[i] == EdgeState::Branch && v < nbr {
                     out.push(crate::graph::WeightedEdge::new(v, nbr, w));
@@ -303,7 +302,7 @@ mod tests {
 
     fn mk_rank(n_ranks: u32, rank: u32) -> (EdgeList, RankState) {
         let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
-        let part = BlockPartition::new(g.n_vertices, n_ranks);
+        let part = Partition::block(g.n_vertices, n_ranks);
         let cfg = GhsConfig { n_ranks, ..GhsConfig::default() };
         let r = RankState::new(rank, &g, part, &cfg, IdentityCodec::SpecialId);
         (g, r)
@@ -326,10 +325,10 @@ mod tests {
     #[test]
     fn remote_send_aggregates_and_flushes_at_cap() {
         let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
-        let part = BlockPartition::new(g.n_vertices, 2);
+        let part = Partition::block(g.n_vertices, 2);
         let mut cfg = GhsConfig { n_ranks: 2, ..GhsConfig::default() };
         cfg.max_msg_size = 25; // tiny: 3 short messages (10 B) exceed it
-        let mut r = RankState::new(0, &g, part, &cfg, IdentityCodec::SpecialId);
+        let mut r = RankState::new(0, &g, part.clone(), &cfg, IdentityCodec::SpecialId);
         // Find a cross-rank edge from rank 0.
         let mut cross = None;
         'outer: for row in 0..r.csr.rows() {

@@ -3,6 +3,7 @@
 
 use crate::baseline::Forest;
 use crate::ghs::message::MessageCounts;
+use crate::graph::partition::PartitionStats;
 use crate::graph::WeightedEdge;
 
 /// Per-category profile counters (Fig 3); values are abstract op counts
@@ -86,6 +87,9 @@ pub struct GhsRun {
     pub timeline: Vec<FlushEvent>,
     /// Virtual-time simulation summary (clocks, comm waits, flush log).
     pub sim: crate::sim::SimSummary,
+    /// Quality report of the partition this run executed under (vertex /
+    /// edge balance, edge cut — correlate with `sim` comm costs).
+    pub partition: PartitionStats,
 }
 
 impl GhsRun {

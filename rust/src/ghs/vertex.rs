@@ -34,10 +34,10 @@ impl RankState {
     /// rank's first iteration; the original GHS also allows wakeup on first
     /// message receipt, which cannot occur under this schedule).
     pub fn wakeup_all(&mut self) {
-        let first = self.csr.first_vertex();
         for row in 0..self.csr.rows() {
             if self.vars[row as usize].sn == VertexState::Sleeping {
-                self.wakeup(first + row);
+                let v = self.csr.vertex_of(row);
+                self.wakeup(v);
             }
         }
     }
@@ -339,11 +339,11 @@ mod tests {
     use super::*;
     use crate::ghs::config::GhsConfig;
     use crate::ghs::wire::IdentityCodec;
-    use crate::graph::partition::BlockPartition;
+    use crate::graph::partition::Partition;
     use crate::graph::EdgeList;
 
     fn one_rank(g: &EdgeList) -> RankState {
-        let part = BlockPartition::new(g.n_vertices, 1);
+        let part = Partition::block(g.n_vertices, 1);
         let cfg = GhsConfig { n_ranks: 1, ..GhsConfig::default() };
         RankState::new(0, g, part, &cfg, IdentityCodec::SpecialId)
     }

@@ -18,7 +18,7 @@
 use crate::ghs::message::{Message, Payload};
 use crate::ghs::types::{Level, VertexState};
 use crate::ghs::weight::{f64_to_ordered_bits, EdgeWeight, FragmentId};
-use crate::graph::partition::BlockPartition;
+use crate::graph::partition::Partition;
 use crate::graph::{EdgeList, VertexId};
 #[cfg(test)]
 use crate::util::bitpack::BitWriter;
@@ -70,7 +70,9 @@ pub enum IdentityCodec {
 
 impl IdentityCodec {
     /// Identity / extended weight of edge `(u, v)` with raw weight `w`.
-    pub fn weight_of(&self, w: f64, u: VertexId, v: VertexId, part: &BlockPartition) -> EdgeWeight {
+    /// The tiebreak is computed against the run's *actual* partition, so
+    /// non-block strategies stay consistent across ranks.
+    pub fn weight_of(&self, w: f64, u: VertexId, v: VertexId, part: &Partition) -> EdgeWeight {
         match self {
             IdentityCodec::SpecialId => EdgeWeight::new(w, u, v),
             IdentityCodec::ProcId => {
@@ -82,8 +84,11 @@ impl IdentityCodec {
 }
 
 /// Verify the paper's precondition for the proc-id codec: within every
-/// rank's local edge set, all raw weights are pairwise distinct.
-pub fn per_process_weights_unique(g: &EdgeList, part: &BlockPartition) -> bool {
+/// rank's local edge set, all raw weights are pairwise distinct. The check
+/// runs against the *actual* partition of the run — a hub-scatter or
+/// explicit layout groups different edges onto a rank than block does, so
+/// feasibility must be re-established per strategy.
+pub fn per_process_weights_unique(g: &EdgeList, part: &Partition) -> bool {
     use std::collections::HashSet;
     let mut per_rank: Vec<HashSet<u64>> = (0..part.n_ranks()).map(|_| HashSet::new()).collect();
     for e in &g.edges {
@@ -478,7 +483,7 @@ mod tests {
         props("identity codec symmetric", 200, |g| {
             let n = 1 + g.u64_below(1000) as u32;
             let ranks = 1 + g.u64_below(64) as u32;
-            let part = BlockPartition::new(n.max(2), ranks.min(n.max(2)));
+            let part = Partition::block(n.max(2), ranks.min(n.max(2)));
             let u = g.u64_below(part.n_vertices() as u64) as u32;
             let v = g.u64_below(part.n_vertices() as u64) as u32;
             let w = g.f64();
@@ -492,7 +497,7 @@ mod tests {
 
     #[test]
     fn per_process_uniqueness_check() {
-        let part = BlockPartition::new(4, 2); // ranks own {0,1} and {2,3}
+        let part = Partition::block(4, 2); // ranks own {0,1} and {2,3}
         let mut g = EdgeList::with_vertices(4);
         g.push(0, 1, 0.5); // rank 0 only
         g.push(2, 3, 0.5); // rank 1 only -> same weight, different ranks: OK
@@ -503,10 +508,27 @@ mod tests {
 
     #[test]
     fn cross_rank_edge_checked_on_both_ranks() {
-        let part = BlockPartition::new(4, 2);
+        let part = Partition::block(4, 2);
         let mut g = EdgeList::with_vertices(4);
         g.push(0, 2, 0.25); // ranks 0 and 1
         g.push(2, 3, 0.25); // rank 1: collides with the cross edge on rank 1
+        assert!(!per_process_weights_unique(&g, &part));
+    }
+
+    #[test]
+    fn uniqueness_depends_on_actual_partition() {
+        // The same weights are distinct per rank under one layout but
+        // collide under another — the feasibility check must run against
+        // the run's actual partition, not the block assumption.
+        use crate::graph::partition::PartitionSpec;
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 1, 0.5);
+        g.push(2, 3, 0.5);
+        assert!(per_process_weights_unique(&g, &Partition::block(4, 2)));
+        // Scatter {0,2} | {1,3}: both edges become cross-rank and are
+        // stored on both ranks, where their raw weights collide.
+        let spec = PartitionSpec::Explicit(std::sync::Arc::new(vec![0, 1, 0, 1]));
+        let part = Partition::build(&spec, &g, 4, 2).unwrap();
         assert!(!per_process_weights_unique(&g, &part));
     }
 }

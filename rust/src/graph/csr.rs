@@ -5,14 +5,32 @@
 //! Rows are the rank-local vertices; each row stores the neighbours of one
 //! vertex together with edge weights. The same physical structure is also
 //! used (with all vertices local) by the sequential baselines.
+//!
+//! The global-id ↔ row mapping is pluggable: contiguous blocks (the
+//! paper's layout, a single offset) or an arbitrary vertex set from a
+//! mapped [`Partition`] (hub-scatter / explicit owner maps), whose
+//! owner/local tables are shared behind an `Arc`.
 
+use std::sync::Arc;
+
+use crate::graph::partition::{MappedData, Partition};
 use crate::graph::{EdgeList, VertexId, WeightedEdge};
 
-/// CRS adjacency over a contiguous block of vertices `[first .. first+rows)`.
+/// How rows map to global vertex ids.
+#[derive(Debug, Clone)]
+enum RowIndex {
+    /// Rows are the contiguous block `[first, first + rows)`.
+    Contiguous { first: VertexId },
+    /// Rows are `data.rank_vertices[rank]` (ascending global ids); the
+    /// tables are shared with the run's [`Partition`].
+    Mapped { rank: u32, data: Arc<MappedData> },
+}
+
+/// CRS adjacency over one rank's local vertex set.
 #[derive(Debug, Clone)]
 pub struct Csr {
-    /// First (global) vertex id stored in this structure.
-    first: VertexId,
+    /// Row → global-id mapping.
+    index: RowIndex,
     /// Row offsets, length `rows + 1`.
     offsets: Vec<usize>,
     /// Column indices: the global id of the neighbour on the far end.
@@ -36,14 +54,7 @@ impl Csr {
                 degree[(e.v - first) as usize] += 1;
             }
         }
-        let mut offsets = Vec::with_capacity(rows as usize + 1);
-        offsets.push(0usize);
-        for d in &degree {
-            offsets.push(offsets.last().unwrap() + d);
-        }
-        let nnz = *offsets.last().unwrap();
-        let mut cols = vec![0 as VertexId; nnz];
-        let mut weights = vec![0.0f64; nnz];
+        let (offsets, mut cols, mut weights) = Self::alloc(&degree);
         let mut cursor = offsets[..rows as usize].to_vec();
         let mut place = |row: VertexId, other: VertexId, w: f64, cursor: &mut [usize]| {
             let r = (row - first) as usize;
@@ -60,7 +71,59 @@ impl Csr {
                 place(e.v, e.u, e.w, &mut cursor);
             }
         }
-        Self { first, offsets, cols, weights }
+        Self { index: RowIndex::Contiguous { first }, offsets, cols, weights }
+    }
+
+    /// Build `rank`'s CRS block under an arbitrary [`Partition`].
+    /// Contiguous partitions use the block layout (identical structure to
+    /// [`Self::from_edges`]); mapped ones index rows through the
+    /// partition's shared owner/local tables.
+    pub fn from_partition(edges: &EdgeList, part: &Partition, rank: u32) -> Self {
+        let Some(data) = part.mapped_data() else {
+            return Self::from_edges(edges, part.first_vertex(rank), part.n_local(rank));
+        };
+        let data = Arc::clone(data);
+        let rows = data.rank_vertices[rank as usize].len();
+        let owned = |x: VertexId| data.owner[x as usize] == rank;
+        let mut degree = vec![0usize; rows];
+        for e in &edges.edges {
+            if owned(e.u) {
+                degree[data.local[e.u as usize] as usize] += 1;
+            }
+            if owned(e.v) {
+                degree[data.local[e.v as usize] as usize] += 1;
+            }
+        }
+        let (offsets, mut cols, mut weights) = Self::alloc(&degree);
+        let mut cursor = offsets[..rows].to_vec();
+        {
+            let mut place = |row: usize, other: VertexId, w: f64| {
+                let at = cursor[row];
+                cols[at] = other;
+                weights[at] = w;
+                cursor[row] += 1;
+            };
+            for e in &edges.edges {
+                if owned(e.u) {
+                    place(data.local[e.u as usize] as usize, e.v, e.w);
+                }
+                if owned(e.v) {
+                    place(data.local[e.v as usize] as usize, e.u, e.w);
+                }
+            }
+        }
+        Self { index: RowIndex::Mapped { rank, data }, offsets, cols, weights }
+    }
+
+    /// Offsets from per-row degrees plus zeroed column/weight arrays.
+    fn alloc(degree: &[usize]) -> (Vec<usize>, Vec<VertexId>, Vec<f64>) {
+        let mut offsets = Vec::with_capacity(degree.len() + 1);
+        offsets.push(0usize);
+        for d in degree {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let nnz = *offsets.last().unwrap();
+        (offsets, vec![0 as VertexId; nnz], vec![0.0f64; nnz])
     }
 
     /// Whole-graph CRS (all vertices in one block).
@@ -68,9 +131,15 @@ impl Csr {
         Self::from_edges(edges, 0, edges.n_vertices)
     }
 
-    /// First global vertex id in this block.
+    /// Lowest global vertex id stored in this structure (for contiguous
+    /// blocks, the block start). Only meaningful when `rows() > 0`.
     pub fn first_vertex(&self) -> VertexId {
-        self.first
+        match &self.index {
+            RowIndex::Contiguous { first } => *first,
+            RowIndex::Mapped { rank, data } => {
+                data.rank_vertices[*rank as usize].first().copied().unwrap_or(0)
+            }
+        }
     }
 
     /// Number of rows (local vertices).
@@ -80,7 +149,12 @@ impl Csr {
 
     /// Does this block own global vertex `v`?
     pub fn owns(&self, v: VertexId) -> bool {
-        v >= self.first && v - self.first < self.rows()
+        match &self.index {
+            RowIndex::Contiguous { first } => v >= *first && v - *first < self.rows(),
+            RowIndex::Mapped { rank, data } => {
+                (v as usize) < data.owner.len() && data.owner[v as usize] == *rank
+            }
+        }
     }
 
     /// Total local (directed) adjacency entries.
@@ -92,14 +166,32 @@ impl Csr {
     #[inline]
     pub fn row_of(&self, v: VertexId) -> usize {
         debug_assert!(self.owns(v));
-        (v - self.first) as usize
+        match &self.index {
+            RowIndex::Contiguous { first } => (v - *first) as usize,
+            RowIndex::Mapped { data, .. } => data.local[v as usize] as usize,
+        }
+    }
+
+    /// Global vertex id of row `row` (inverse of [`Self::row_of`]).
+    #[inline]
+    pub fn vertex_of(&self, row: u32) -> VertexId {
+        debug_assert!(row < self.rows());
+        match &self.index {
+            RowIndex::Contiguous { first } => *first + row,
+            RowIndex::Mapped { rank, data } => data.rank_vertices[*rank as usize][row as usize],
+        }
+    }
+
+    /// Half-open range of adjacency indices for local row `row`.
+    #[inline]
+    pub fn row_range_at(&self, row: usize) -> std::ops::Range<usize> {
+        self.offsets[row]..self.offsets[row + 1]
     }
 
     /// Half-open range of adjacency indices for global vertex `v`.
     #[inline]
     pub fn row_range(&self, v: VertexId) -> std::ops::Range<usize> {
-        let r = self.row_of(v);
-        self.offsets[r]..self.offsets[r + 1]
+        self.row_range_at(self.row_of(v))
     }
 
     /// Degree of global vertex `v`.
@@ -214,6 +306,61 @@ mod tests {
                 assert!(cols.windows(2).all(|w| w[0] <= w[1]));
             }
         });
+    }
+
+    #[test]
+    fn mapped_partition_rows_cover_full_graph() {
+        use crate::graph::partition::{Partition, PartitionSpec};
+        let mut rng = Xoshiro256::seed_from_u64(101);
+        let n = 40u32;
+        let mut el = EdgeList::with_vertices(n);
+        for _ in 0..150 {
+            let u = rng.next_below(n as u64) as u32;
+            let v = rng.next_below(n as u64) as u32;
+            if u != v {
+                el.push(u, v, rng.next_weight());
+            }
+        }
+        let full = Csr::full(&el);
+        // Interleaved owner map: 0,1,2,0,1,2,... (maximally non-contiguous).
+        let map: Vec<u32> = (0..n).map(|v| v % 3).collect();
+        let part =
+            Partition::build(&PartitionSpec::Explicit(std::sync::Arc::new(map)), &el, n, 3)
+                .unwrap();
+        let blocks: Vec<Csr> = (0..3).map(|r| Csr::from_partition(&el, &part, r)).collect();
+        assert_eq!(full.nnz(), blocks.iter().map(|b| b.nnz()).sum::<usize>());
+        for v in 0..n {
+            let b = &blocks[(v % 3) as usize];
+            assert!(b.owns(v));
+            assert_eq!(b.degree(v), full.degree(v), "vertex {v}");
+            assert_eq!(b.vertex_of(b.row_of(v) as u32), v, "row round-trip for {v}");
+            // Same neighbour multiset as the full CSR row.
+            let mut got: Vec<VertexId> = b.neighbours(v).map(|(_, c, _)| c).collect();
+            let mut want: Vec<VertexId> = full.neighbours(v).map(|(_, c, _)| c).collect();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want);
+            // Other ranks must not own it.
+            for r in 0..3u32 {
+                if r != v % 3 {
+                    assert!(!blocks[r as usize].owns(v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_partition_contiguous_matches_from_edges() {
+        use crate::graph::partition::Partition;
+        let el = triangle();
+        let part = Partition::block(3, 2);
+        for r in 0..2 {
+            let a = Csr::from_partition(&el, &part, r);
+            let b = Csr::from_edges(&el, part.first_vertex(r), part.n_local(r));
+            assert_eq!(a.nnz(), b.nnz());
+            assert_eq!(a.rows(), b.rows());
+            assert_eq!(a.first_vertex(), b.first_vertex());
+        }
     }
 
     #[test]

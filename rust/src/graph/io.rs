@@ -1,6 +1,7 @@
-//! Edge-list I/O: a simple text format (one `u v w` per line, `#`-comments)
-//! and a compact little-endian binary format, for saving generated
-//! workloads and replaying them across runs.
+//! Edge-list I/O: a simple text format (one `u v w` per line, `#`-comments),
+//! a compact little-endian binary format, a DIMACS-style `.gr` /
+//! whitespace edge-list reader for real-world graphs, and owner-map files
+//! for replayable explicit partitions.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -61,6 +62,156 @@ pub fn read_text(path: &Path) -> Result<EdgeList> {
         bail!("edge count mismatch: header {m}, found {}", g.n_edges());
     }
     Ok(g)
+}
+
+/// Read a DIMACS-style `.gr` file or a bare whitespace edge list — the
+/// door for real-world graphs (road networks, web crawls) next to the
+/// synthetic generators.
+///
+/// Two dialects, auto-detected per line:
+///
+/// * **DIMACS** (9th DIMACS Implementation Challenge): `c` comment lines,
+///   a `p sp <n> <m>` problem line, and `a <u> <v> [w]` (or `e ...`) arc
+///   lines with **1-indexed** vertices. Arcs listed in both directions
+///   collapse to a single undirected edge in
+///   [`crate::graph::preprocess::preprocess`].
+/// * **Bare edge list**: `<u> <v> [w]` per line with **0-indexed**
+///   vertices, `#`/`c` comments; the vertex count is inferred as
+///   `max id + 1`.
+///
+/// Missing weights default to 1.0 — GHS tie-breaks equal weights through
+/// the unique `special_id`, so integer/unit-weight graphs are fine.
+pub fn read_gr(path: &Path) -> Result<EdgeList> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut header: Option<(u64, usize)> = None; // (n, m) from a `p` line
+    let mut edges: Vec<(u64, u64, f64)> = Vec::new();
+    let mut max_id = 0u64;
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let lineno = i + 1;
+        let mut it = t.split_whitespace();
+        let first = it.next().expect("non-empty line");
+        let parse_edge = |it: &mut std::str::SplitWhitespace<'_>,
+                          one_indexed: bool|
+         -> Result<(u64, u64, f64)> {
+            let u: u64 = it
+                .next()
+                .with_context(|| format!("line {lineno}: missing source vertex"))?
+                .parse()
+                .with_context(|| format!("line {lineno}: bad source vertex"))?;
+            let v: u64 = it
+                .next()
+                .with_context(|| format!("line {lineno}: missing target vertex"))?
+                .parse()
+                .with_context(|| format!("line {lineno}: bad target vertex"))?;
+            let w: f64 = match it.next() {
+                Some(s) => {
+                    s.parse().with_context(|| format!("line {lineno}: bad weight `{s}`"))?
+                }
+                None => 1.0,
+            };
+            if one_indexed {
+                if u == 0 || v == 0 {
+                    bail!("line {lineno}: DIMACS vertex ids are 1-indexed, found 0");
+                }
+                Ok((u - 1, v - 1, w))
+            } else {
+                Ok((u, v, w))
+            }
+        };
+        match first {
+            "c" => continue,
+            "p" => {
+                // `p sp <n> <m>` / `p edge <n> <m>` / `p <n> <m>`.
+                let nums: Vec<u64> = it.filter_map(|s| s.parse().ok()).collect();
+                if nums.len() < 2 {
+                    bail!("line {lineno}: malformed problem line `{t}`");
+                }
+                header = Some((nums[0], nums[1] as usize));
+            }
+            "a" | "e" => {
+                let e = parse_edge(&mut it, true)?;
+                max_id = max_id.max(e.0).max(e.1);
+                edges.push(e);
+            }
+            _ => {
+                // Bare dialect: `first` is the (0-indexed) source vertex.
+                let mut full = t.split_whitespace();
+                let e = parse_edge(&mut full, false)?;
+                max_id = max_id.max(e.0).max(e.1);
+                edges.push(e);
+            }
+        }
+    }
+    let n = match header {
+        Some((n, m)) => {
+            if edges.len() != m {
+                bail!("edge count mismatch: problem line declares {m}, found {}", edges.len());
+            }
+            n
+        }
+        None => {
+            if edges.is_empty() {
+                bail!("empty edge-list file (no problem line, no edges)");
+            }
+            max_id + 1
+        }
+    };
+    if n > u32::MAX as u64 || (!edges.is_empty() && max_id >= n) {
+        bail!("vertex id {max_id} out of range for {n} declared vertices");
+    }
+    let mut g = EdgeList::with_vertices(n as u32);
+    g.edges.reserve(edges.len());
+    for (u, v, w) in edges {
+        g.push(u as u32, v as u32, w);
+    }
+    Ok(g)
+}
+
+/// Read any supported on-disk graph format, dispatching on the file
+/// extension: `.gr` / `.dimacs` → [`read_gr`], `.bin` → [`read_binary`],
+/// anything else → [`read_text`].
+pub fn read_auto(path: &Path) -> Result<EdgeList> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("gr") | Some("dimacs") => read_gr(path),
+        Some("bin") => read_binary(path),
+        _ => read_text(path),
+    }
+}
+
+/// Write an owner map for `PartitionSpec::Explicit`: one rank id per
+/// line, in vertex-id order.
+pub fn write_owner_map(owners: &[u32], path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    writeln!(w, "# ghs-mst owner map: line i = owning rank of vertex i")?;
+    for r in owners {
+        writeln!(w, "{r}")?;
+    }
+    Ok(())
+}
+
+/// Read an owner map (one rank id per line, `#` comments and blank lines
+/// ignored). Validation against the graph's vertex count and rank count
+/// happens when the partition is built.
+pub fn read_owner_map(path: &Path) -> Result<Vec<u32>> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut owners = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        owners.push(
+            t.parse::<u32>()
+                .with_context(|| format!("line {}: bad rank id `{t}` in owner map", i + 1))?,
+        );
+    }
+    Ok(owners)
 }
 
 /// Write the binary format (magic, n, m, then (u32, u32, f64) triples LE).
@@ -147,6 +298,92 @@ mod tests {
         let p = tmp("garbage.bin");
         std::fs::write(&p, b"not a graph").unwrap();
         assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn gr_dimacs_dialect() {
+        let p = tmp("sample.gr");
+        std::fs::write(
+            &p,
+            "c 4-vertex road-network-style sample\n\
+             p sp 4 5\n\
+             a 1 2 0.5\n\
+             a 2 1 0.5\n\
+             a 2 3 1.25\n\
+             a 3 4 2\n\
+             a 1 4 7\n",
+        )
+        .unwrap();
+        let g = read_gr(&p).unwrap();
+        assert_eq!(g.n_vertices, 4);
+        assert_eq!(g.n_edges(), 5, "raw arcs kept; preprocess dedups");
+        // 1-indexed ids shifted down.
+        assert_eq!((g.edges[0].u, g.edges[0].v, g.edges[0].w), (0, 1, 0.5));
+        let (clean, stats) = crate::graph::preprocess::preprocess(&g);
+        assert_eq!(stats.multi_edges_removed, 1, "the a 1 2 / a 2 1 pair collapses");
+        assert_eq!(clean.n_edges(), 4);
+        // Feeds the engine end-to-end.
+        let run = crate::ghs::engine::run_ghs(
+            &clean,
+            crate::ghs::config::GhsConfig::final_version(2),
+        )
+        .unwrap();
+        assert_eq!(run.forest.n_components, 1);
+        assert_eq!(run.forest.edges.len(), 3);
+    }
+
+    #[test]
+    fn gr_bare_dialect_zero_indexed_and_default_weight() {
+        let p = tmp("bare.gr");
+        std::fs::write(&p, "# bare whitespace edge list\n0 1 0.25\n1 2\nc trailing comment\n")
+            .unwrap();
+        let g = read_gr(&p).unwrap();
+        assert_eq!(g.n_vertices, 3, "inferred as max id + 1");
+        assert_eq!(g.n_edges(), 2);
+        assert_eq!(g.edges[1].w, 1.0, "missing weight defaults to 1.0");
+    }
+
+    #[test]
+    fn gr_rejects_malformed_inputs() {
+        let zero = tmp("zero.gr");
+        std::fs::write(&zero, "p sp 3 1\na 0 1 0.5\n").unwrap();
+        assert!(read_gr(&zero).is_err(), "DIMACS ids are 1-indexed");
+        let count = tmp("count.gr");
+        std::fs::write(&count, "p sp 3 2\na 1 2 0.5\n").unwrap();
+        assert!(read_gr(&count).is_err(), "declared m must match");
+        let range = tmp("range.gr");
+        std::fs::write(&range, "p sp 2 1\na 1 3 0.5\n").unwrap();
+        assert!(read_gr(&range).is_err(), "id beyond declared n");
+        let junk = tmp("junk.gr");
+        std::fs::write(&junk, "0 one 0.5\n").unwrap();
+        assert!(read_gr(&junk).is_err());
+    }
+
+    #[test]
+    fn read_auto_dispatches_on_extension() {
+        let g = generate(GraphFamily::Random, 5, 8);
+        let pt = tmp("auto.txt");
+        write_text(&g, &pt).unwrap();
+        assert_eq!(read_auto(&pt).unwrap().n_edges(), g.n_edges());
+        let pb = tmp("auto.bin");
+        write_binary(&g, &pb).unwrap();
+        assert_eq!(read_auto(&pb).unwrap().n_edges(), g.n_edges());
+        let pg = tmp("auto.gr");
+        std::fs::write(&pg, "p sp 2 1\na 1 2 0.5\n").unwrap();
+        assert_eq!(read_auto(&pg).unwrap().n_vertices, 2);
+    }
+
+    #[test]
+    fn owner_map_roundtrip() {
+        let owners: Vec<u32> = vec![3, 0, 1, 1, 2, 0];
+        let p = tmp("owners.txt");
+        write_owner_map(&owners, &p).unwrap();
+        assert_eq!(read_owner_map(&p).unwrap(), owners);
+        // Comments and blanks are tolerated; garbage is not.
+        std::fs::write(&p, "# map\n\n0\n1\n").unwrap();
+        assert_eq!(read_owner_map(&p).unwrap(), vec![0, 1]);
+        std::fs::write(&p, "0\nnope\n").unwrap();
+        assert!(read_owner_map(&p).is_err());
     }
 
     #[test]

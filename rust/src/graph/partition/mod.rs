@@ -1,0 +1,552 @@
+//! Vertex-to-rank partitioning subsystem.
+//!
+//! The paper distributes vertices "sequentially in blocks among the
+//! processes" (§3); that is [`BlockPartition`], still the default. Block
+//! partitioning is the known weak point on skewed (R-MAT-like) inputs,
+//! where a handful of hub-owning ranks absorb most Test/Connect traffic,
+//! so the subsystem is pluggable: a [`PartitionSpec`] in the engine config
+//! selects the strategy, [`Partition::build`] materializes it over the
+//! concrete graph, and [`PartitionStats`] reports its quality
+//! (vertex/edge balance, edge cut) so comm costs can be correlated with
+//! cut quality.
+//!
+//! Strategies:
+//! * **Block** — the paper's contiguous equal-vertex-count blocks
+//!   (bit-for-bit the historical behavior).
+//! * **DegreeBalanced** — contiguous chunks whose boundaries are chosen so
+//!   per-rank *edge* counts (adjacency entries), not vertex counts, are
+//!   balanced.
+//! * **HubScatter** — skew-aware: the top-k highest-degree vertices are
+//!   spread round-robin across ranks, the rest block-filled. Breaks
+//!   contiguity, which is why `local_index` is part of the abstraction.
+//! * **Explicit** — an arbitrary owner map (loadable from a file via
+//!   [`crate::graph::io::read_owner_map`]) for replayable experiments.
+//!
+//! A [`Partition`] is cheap to clone: contiguous variants are a couple of
+//! words, mapped variants share their tables behind an `Arc`.
+
+pub mod stats;
+mod strategies;
+
+pub use stats::PartitionStats;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::graph::{EdgeList, VertexId};
+
+/// Block distribution of `n_vertices` over `n_ranks`: the first
+/// `n % p` ranks get `ceil(n/p)` vertices, the rest `floor(n/p)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockPartition {
+    n_vertices: u32,
+    n_ranks: u32,
+}
+
+impl BlockPartition {
+    /// Create a partition; `n_ranks >= 1`.
+    pub fn new(n_vertices: u32, n_ranks: u32) -> Self {
+        assert!(n_ranks >= 1, "need at least one rank");
+        Self { n_vertices, n_ranks }
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> u32 {
+        self.n_ranks
+    }
+
+    /// Total vertices.
+    pub fn n_vertices(&self) -> u32 {
+        self.n_vertices
+    }
+
+    /// First vertex owned by `rank`.
+    pub fn first_vertex(&self, rank: u32) -> VertexId {
+        debug_assert!(rank < self.n_ranks);
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let r = rank as u64;
+        let base = n / p;
+        let extra = n % p;
+        (r * base + r.min(extra)) as u32
+    }
+
+    /// Number of vertices owned by `rank`.
+    pub fn block_size(&self, rank: u32) -> u32 {
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let base = (n / p) as u32;
+        if (rank as u64) < n % p {
+            base + 1
+        } else {
+            base
+        }
+    }
+
+    /// Which rank owns vertex `v`?
+    pub fn owner(&self, v: VertexId) -> u32 {
+        debug_assert!(v < self.n_vertices);
+        let n = self.n_vertices as u64;
+        let p = self.n_ranks as u64;
+        let base = n / p;
+        let extra = n % p;
+        let v = v as u64;
+        let boundary = extra * (base + 1);
+        if v < boundary {
+            (v / (base + 1)) as u32
+        } else {
+            (extra + (v - boundary) / base.max(1)) as u32
+        }
+    }
+}
+
+/// Partitioning strategy selector — lives in
+/// [`GhsConfig`](crate::ghs::config::GhsConfig) and is materialized into a
+/// [`Partition`] by the engines via [`Partition::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionSpec {
+    /// The paper's contiguous blocks (default; reproduces historical
+    /// results exactly).
+    Block,
+    /// Contiguous chunks balancing per-rank adjacency-entry counts.
+    DegreeBalanced,
+    /// Top-k hubs round-robin across ranks, the rest block-filled.
+    /// `top_k == 0` picks `4 * n_ranks` hubs automatically.
+    HubScatter { top_k: u32 },
+    /// An explicit owner map (`map[v]` = owning rank of vertex `v`).
+    Explicit(Arc<Vec<u32>>),
+}
+
+impl Default for PartitionSpec {
+    fn default() -> Self {
+        PartitionSpec::Block
+    }
+}
+
+impl PartitionSpec {
+    /// Parse a strategy name (`block` / `degree` / `hub`). File-backed
+    /// explicit maps are handled by the CLI (`file:<path>`), which loads
+    /// the map and wraps it in [`PartitionSpec::Explicit`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Some(Self::Block),
+            "degree" | "degree-balanced" => Some(Self::DegreeBalanced),
+            "hub" | "hub-scatter" => Some(Self::HubScatter { top_k: 0 }),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Block => "block",
+            Self::DegreeBalanced => "degree",
+            Self::HubScatter { .. } => "hub",
+            Self::Explicit(_) => "explicit",
+        }
+    }
+}
+
+/// A contiguous partition with arbitrary boundaries: rank `r` owns
+/// `[bounds[r], bounds[r+1])`. Used by the degree-balanced strategy.
+#[derive(Debug, Clone)]
+pub struct ContiguousPartition {
+    /// Monotone boundaries, length `n_ranks + 1`, `bounds[0] == 0` and
+    /// `bounds[n_ranks] == n_vertices`.
+    bounds: Arc<Vec<u32>>,
+}
+
+impl ContiguousPartition {
+    /// Wrap a boundary vector (must be monotone, first 0, last n).
+    pub fn new(bounds: Vec<u32>) -> Self {
+        debug_assert!(bounds.len() >= 2);
+        debug_assert_eq!(bounds[0], 0);
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds not monotone");
+        Self { bounds: Arc::new(bounds) }
+    }
+
+    fn n_ranks(&self) -> u32 {
+        (self.bounds.len() - 1) as u32
+    }
+
+    fn n_vertices(&self) -> u32 {
+        *self.bounds.last().unwrap()
+    }
+
+    #[inline]
+    fn owner(&self, v: VertexId) -> u32 {
+        debug_assert!(v < self.n_vertices());
+        // Number of boundaries <= v, minus one; empty ranks (repeated
+        // boundaries) resolve to the last rank starting at that boundary,
+        // which is the one owning the non-empty half-open range.
+        (self.bounds.partition_point(|&b| b <= v) - 1) as u32
+    }
+}
+
+/// Shared tables of a non-contiguous (mapped) partition. One instance per
+/// run, shared by the partition handle and every rank's CSR via `Arc`.
+#[derive(Debug)]
+pub struct MappedData {
+    /// Owner rank of each vertex (length `n_vertices`).
+    pub owner: Vec<u32>,
+    /// Local row index of each vertex on its owning rank (length
+    /// `n_vertices`).
+    pub local: Vec<u32>,
+    /// Vertices owned by each rank in ascending id order (the inverse of
+    /// `local`: `rank_vertices[r][local[v]] == v` when `owner[v] == r`).
+    pub rank_vertices: Vec<Vec<VertexId>>,
+}
+
+impl MappedData {
+    /// Build the local/rank_vertices tables from an owner map. Owners must
+    /// already be `< n_ranks`.
+    pub fn from_owner_map(owner: Vec<u32>, n_ranks: u32) -> Self {
+        let mut rank_vertices: Vec<Vec<VertexId>> = vec![Vec::new(); n_ranks as usize];
+        for (v, &r) in owner.iter().enumerate() {
+            debug_assert!(r < n_ranks);
+            rank_vertices[r as usize].push(v as u32);
+        }
+        let mut local = vec![0u32; owner.len()];
+        for vs in &rank_vertices {
+            for (i, &v) in vs.iter().enumerate() {
+                local[v as usize] = i as u32;
+            }
+        }
+        Self { owner, local, rank_vertices }
+    }
+}
+
+/// A non-contiguous partition backed by shared [`MappedData`] tables.
+#[derive(Debug, Clone)]
+pub struct MappedPartition {
+    data: Arc<MappedData>,
+}
+
+impl MappedPartition {
+    /// Wrap built tables.
+    pub fn new(data: MappedData) -> Self {
+        Self { data: Arc::new(data) }
+    }
+}
+
+/// The vertex-to-rank assignment of one run. Enum dispatch keeps the hot
+/// `owner()` call (every remote send) free of virtual calls; all variants
+/// are cheap to clone (`Copy`-sized or `Arc`-shared).
+#[derive(Debug, Clone)]
+pub enum Partition {
+    /// The paper's arithmetic block layout.
+    Block(BlockPartition),
+    /// Contiguous with explicit boundaries (degree-balanced).
+    Contiguous(ContiguousPartition),
+    /// Non-contiguous owner map (hub-scatter, explicit).
+    Mapped(MappedPartition),
+}
+
+impl Partition {
+    /// The default block partition (paper §3).
+    pub fn block(n_vertices: u32, n_ranks: u32) -> Self {
+        Partition::Block(BlockPartition::new(n_vertices, n_ranks))
+    }
+
+    /// Materialize `spec` over a concrete graph. `n_vertices` is passed
+    /// explicitly because the engines partition `g.n_vertices.max(1)`
+    /// (a rank-0 placeholder row for empty graphs).
+    pub fn build(
+        spec: &PartitionSpec,
+        g: &EdgeList,
+        n_vertices: u32,
+        n_ranks: u32,
+    ) -> Result<Self> {
+        if n_ranks == 0 {
+            bail!("need at least one rank");
+        }
+        Ok(match spec {
+            PartitionSpec::Block => Self::block(n_vertices, n_ranks),
+            PartitionSpec::DegreeBalanced => {
+                Partition::Contiguous(strategies::degree_balanced(g, n_vertices, n_ranks))
+            }
+            PartitionSpec::HubScatter { top_k } => {
+                Partition::Mapped(strategies::hub_scatter(g, n_vertices, n_ranks, *top_k))
+            }
+            PartitionSpec::Explicit(map) => {
+                Partition::Mapped(strategies::explicit(map, n_vertices, n_ranks)?)
+            }
+        })
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> u32 {
+        match self {
+            Partition::Block(b) => b.n_ranks(),
+            Partition::Contiguous(c) => c.n_ranks(),
+            Partition::Mapped(m) => m.data.rank_vertices.len() as u32,
+        }
+    }
+
+    /// Total vertices.
+    pub fn n_vertices(&self) -> u32 {
+        match self {
+            Partition::Block(b) => b.n_vertices(),
+            Partition::Contiguous(c) => c.n_vertices(),
+            Partition::Mapped(m) => m.data.owner.len() as u32,
+        }
+    }
+
+    /// Which rank owns vertex `v`? (Hot: called for every sent message.)
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> u32 {
+        match self {
+            Partition::Block(b) => b.owner(v),
+            Partition::Contiguous(c) => c.owner(v),
+            Partition::Mapped(m) => m.data.owner[v as usize],
+        }
+    }
+
+    /// Local row index of `v` on its owning rank. Together with
+    /// [`Self::owner`] this forms a bijection `v <-> (rank, row)` tiling
+    /// `[0, n_vertices)`.
+    #[inline]
+    pub fn local_index(&self, v: VertexId) -> u32 {
+        match self {
+            Partition::Block(b) => v - b.first_vertex(b.owner(v)),
+            Partition::Contiguous(c) => v - c.bounds[c.owner(v) as usize],
+            Partition::Mapped(m) => m.data.local[v as usize],
+        }
+    }
+
+    /// Number of vertices owned by `rank`.
+    pub fn n_local(&self, rank: u32) -> u32 {
+        match self {
+            Partition::Block(b) => b.block_size(rank),
+            Partition::Contiguous(c) => c.bounds[rank as usize + 1] - c.bounds[rank as usize],
+            Partition::Mapped(m) => m.data.rank_vertices[rank as usize].len() as u32,
+        }
+    }
+
+    /// Global id of `rank`'s `row`-th local vertex (inverse of
+    /// [`Self::local_index`] on that rank).
+    #[inline]
+    pub fn vertex_of(&self, rank: u32, row: u32) -> VertexId {
+        debug_assert!(row < self.n_local(rank));
+        match self {
+            Partition::Block(b) => b.first_vertex(rank) + row,
+            Partition::Contiguous(c) => c.bounds[rank as usize] + row,
+            Partition::Mapped(m) => m.data.rank_vertices[rank as usize][row as usize],
+        }
+    }
+
+    /// First vertex owned by `rank` (lowest id; contiguous variants: the
+    /// block start). Meaningful only when `n_local(rank) > 0`.
+    pub fn first_vertex(&self, rank: u32) -> VertexId {
+        match self {
+            Partition::Block(b) => b.first_vertex(rank),
+            Partition::Contiguous(c) => c.bounds[rank as usize],
+            Partition::Mapped(m) => {
+                m.data.rank_vertices[rank as usize].first().copied().unwrap_or(0)
+            }
+        }
+    }
+
+    /// All vertices owned by `rank`, ascending (row order).
+    pub fn vertices_of(&self, rank: u32) -> Vec<VertexId> {
+        (0..self.n_local(rank)).map(|row| self.vertex_of(rank, row)).collect()
+    }
+
+    /// The shared mapped tables, when this partition is non-contiguous
+    /// (used by [`crate::graph::csr::Csr`] to share the owner/local maps).
+    pub fn mapped_data(&self) -> Option<&Arc<MappedData>> {
+        match self {
+            Partition::Mapped(m) => Some(&m.data),
+            _ => None,
+        }
+    }
+
+    /// Representation kind (diagnostics).
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            Partition::Block(_) => "block",
+            Partition::Contiguous(_) => "contiguous",
+            Partition::Mapped(_) => "mapped",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::props;
+
+    #[test]
+    fn even_split() {
+        let p = BlockPartition::new(100, 4);
+        for r in 0..4 {
+            assert_eq!(p.block_size(r), 25);
+            assert_eq!(p.first_vertex(r), r * 25);
+        }
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(24), 0);
+        assert_eq!(p.owner(25), 1);
+        assert_eq!(p.owner(99), 3);
+    }
+
+    #[test]
+    fn uneven_split() {
+        let p = BlockPartition::new(10, 3); // sizes 4, 3, 3
+        assert_eq!(p.block_size(0), 4);
+        assert_eq!(p.block_size(1), 3);
+        assert_eq!(p.block_size(2), 3);
+        assert_eq!(p.first_vertex(0), 0);
+        assert_eq!(p.first_vertex(1), 4);
+        assert_eq!(p.first_vertex(2), 7);
+    }
+
+    #[test]
+    fn more_ranks_than_vertices() {
+        let p = BlockPartition::new(3, 8);
+        let total: u32 = (0..8).map(|r| p.block_size(r)).sum();
+        assert_eq!(total, 3);
+        for v in 0..3 {
+            let r = p.owner(v);
+            assert!(v >= p.first_vertex(r));
+            assert!(v < p.first_vertex(r) + p.block_size(r));
+        }
+    }
+
+    #[test]
+    fn owner_and_blocks_agree() {
+        props("partition owner/block agreement", 200, |g| {
+            let n = g.usize_in(1, 10_000) as u32;
+            let p_ranks = g.usize_in(1, 64) as u32;
+            let p = BlockPartition::new(n, p_ranks);
+            // Blocks tile [0, n).
+            let mut covered = 0u32;
+            for r in 0..p_ranks {
+                assert_eq!(p.first_vertex(r), covered);
+                covered += p.block_size(r);
+            }
+            assert_eq!(covered, n);
+            // Spot-check owner() consistency on random vertices.
+            for _ in 0..20 {
+                if n == 0 {
+                    break;
+                }
+                let v = g.u64_below(n as u64) as u32;
+                let r = p.owner(v);
+                assert!(v >= p.first_vertex(r) && v < p.first_vertex(r) + p.block_size(r));
+            }
+        });
+    }
+
+    #[test]
+    fn block_variant_matches_legacy_arithmetic() {
+        // `Partition::Block` must be bit-for-bit the historical layout.
+        props("Partition::Block == BlockPartition", 100, |g| {
+            let n = g.usize_in(1, 5_000) as u32;
+            let p_ranks = g.usize_in(1, 64) as u32;
+            let legacy = BlockPartition::new(n, p_ranks);
+            let part = Partition::block(n, p_ranks);
+            for r in 0..p_ranks {
+                assert_eq!(part.n_local(r), legacy.block_size(r));
+                assert_eq!(part.first_vertex(r), legacy.first_vertex(r));
+            }
+            for _ in 0..30 {
+                let v = g.u64_below(n as u64) as u32;
+                assert_eq!(part.owner(v), legacy.owner(v));
+                assert_eq!(part.local_index(v), v - legacy.first_vertex(legacy.owner(v)));
+            }
+        });
+    }
+
+    /// Random simple-ish graph for the bijection sweep (self-loops are
+    /// irrelevant to partitioning; strategies only read degrees).
+    fn random_graph(g: &mut crate::util::minitest::Gen, n: u32) -> EdgeList {
+        let mut el = EdgeList::with_vertices(n);
+        if n >= 2 {
+            for _ in 0..g.usize_in(0, 4 * n as usize) {
+                let u = g.u64_below(n as u64) as u32;
+                let v = g.u64_below(n as u64) as u32;
+                if u != v {
+                    el.push(u, v, g.f64().max(1e-12));
+                }
+            }
+        }
+        el
+    }
+
+    fn all_specs(g: &mut crate::util::minitest::Gen, n: u32, p: u32) -> Vec<PartitionSpec> {
+        let map: Vec<u32> = (0..n).map(|_| g.u64_below(p as u64) as u32).collect();
+        vec![
+            PartitionSpec::Block,
+            PartitionSpec::DegreeBalanced,
+            PartitionSpec::HubScatter { top_k: 0 },
+            PartitionSpec::HubScatter { top_k: 1 + g.u64_below(16) as u32 },
+            PartitionSpec::Explicit(Arc::new(map)),
+        ]
+    }
+
+    /// `owner` / `local_index` must form a bijection tiling `[0, n)` for
+    /// every strategy, including n < p and the n = 0 degenerate.
+    #[test]
+    fn owner_local_index_bijection_all_strategies() {
+        props("partition bijection", 120, |g| {
+            // Mix of dense, sparse, n < p, and empty cases.
+            let n = *g.choose(&[0u32, 1, 2, 3, 7, 40, 257]) + g.u64_below(40) as u32;
+            let p = g.usize_in(1, 48) as u32;
+            let el = random_graph(g, n);
+            for spec in all_specs(g, n, p) {
+                let part = Partition::build(&spec, &el, n, p).unwrap();
+                assert_eq!(part.n_ranks(), p, "{}", spec.label());
+                assert_eq!(part.n_vertices(), n, "{}", spec.label());
+                // Per-rank sizes tile n.
+                let total: u64 = (0..p).map(|r| part.n_local(r) as u64).sum();
+                assert_eq!(total, n as u64, "{}: sizes must sum to n", spec.label());
+                // owner/local_index and vertex_of are mutually inverse.
+                let mut seen = vec![false; n as usize];
+                for r in 0..p {
+                    let vs = part.vertices_of(r);
+                    assert_eq!(vs.len() as u32, part.n_local(r));
+                    assert!(
+                        vs.windows(2).all(|w| w[0] < w[1]),
+                        "{}: rank rows must be ascending",
+                        spec.label()
+                    );
+                    for (row, &v) in vs.iter().enumerate() {
+                        assert!(v < n, "{}: vertex_of out of range", spec.label());
+                        assert!(!seen[v as usize], "{}: vertex {v} owned twice", spec.label());
+                        seen[v as usize] = true;
+                        assert_eq!(part.owner(v), r, "{}", spec.label());
+                        assert_eq!(part.local_index(v), row as u32, "{}", spec.label());
+                        assert_eq!(part.vertex_of(r, row as u32), v, "{}", spec.label());
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{}: not all vertices covered", spec.label());
+            }
+        });
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(PartitionSpec::parse("block"), Some(PartitionSpec::Block));
+        assert_eq!(PartitionSpec::parse("DEGREE"), Some(PartitionSpec::DegreeBalanced));
+        assert_eq!(PartitionSpec::parse("hub"), Some(PartitionSpec::HubScatter { top_k: 0 }));
+        assert_eq!(PartitionSpec::parse("metis"), None);
+    }
+
+    #[test]
+    fn explicit_rejects_bad_maps() {
+        let el = EdgeList::with_vertices(4);
+        // Wrong length.
+        let spec = PartitionSpec::Explicit(Arc::new(vec![0, 1]));
+        assert!(Partition::build(&spec, &el, 4, 2).is_err());
+        // Owner out of range.
+        let spec = PartitionSpec::Explicit(Arc::new(vec![0, 1, 2, 0]));
+        assert!(Partition::build(&spec, &el, 4, 2).is_err());
+        // Valid scatter map.
+        let spec = PartitionSpec::Explicit(Arc::new(vec![1, 0, 1, 0]));
+        let part = Partition::build(&spec, &el, 4, 2).unwrap();
+        assert_eq!(part.owner(0), 1);
+        assert_eq!(part.local_index(2), 1, "vertex 2 is rank 1's second vertex");
+        assert_eq!(part.vertices_of(0), vec![1, 3]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Partition construction strategies (see the module docs of
+//! [`super`] for the catalogue).
+//!
+//! All strategies are deterministic in the input graph: re-running a
+//! workload reproduces the identical assignment, which the conformance
+//! matrix and the `results/` snapshots rely on.
+
+use std::cmp::Reverse;
+
+use anyhow::{bail, Result};
+
+use super::{BlockPartition, ContiguousPartition, MappedData, MappedPartition};
+use crate::graph::{EdgeList, VertexId};
+
+/// Per-vertex degrees over the first `n_vertices` ids (endpoints of every
+/// stored undirected edge; a local edge contributes 2 to its rank's
+/// adjacency load, exactly like the CSR stores it).
+pub(super) fn degrees(g: &EdgeList, n_vertices: u32) -> Vec<u32> {
+    let mut deg = vec![0u32; n_vertices as usize];
+    for e in &g.edges {
+        deg[e.u as usize] += 1;
+        deg[e.v as usize] += 1;
+    }
+    deg
+}
+
+/// Contiguous chunking with boundaries chosen so per-rank adjacency-entry
+/// counts are balanced: boundary `r` is placed where the cumulative degree
+/// first reaches `r/p` of the total. Falls back to block boundaries on
+/// edgeless graphs.
+pub(super) fn degree_balanced(g: &EdgeList, n: u32, p: u32) -> ContiguousPartition {
+    let deg = degrees(g, n);
+    let total: u64 = deg.iter().map(|&d| d as u64).sum();
+    let mut bounds = Vec::with_capacity(p as usize + 1);
+    bounds.push(0u32);
+    if total == 0 {
+        let bp = BlockPartition::new(n, p);
+        for r in 1..p {
+            bounds.push(bp.first_vertex(r));
+        }
+    } else {
+        let mut cum = 0u64;
+        let mut v = 0u32;
+        for r in 1..p {
+            let target = (total as u128 * r as u128 / p as u128) as u64;
+            while v < n && cum < target {
+                cum += deg[v as usize] as u64;
+                v += 1;
+            }
+            bounds.push(v);
+        }
+    }
+    bounds.push(n);
+    ContiguousPartition::new(bounds)
+}
+
+/// Skew-aware assignment: the `k` highest-degree vertices ("hubs") are
+/// spread round-robin across ranks in serpentine (snake-draft) order, the
+/// remaining vertices are block-filled in ascending id order. Per-rank
+/// totals match the block partition's sizes, so vertex balance is
+/// preserved while hub adjacency load is scattered. The serpentine
+/// reversal on odd passes matters: a strict `i % p` in descending-degree
+/// order would hand rank 0 the heaviest hub of *every* pass, recreating
+/// the hotspot the strategy exists to break.
+pub(super) fn hub_scatter(g: &EdgeList, n: u32, p: u32, top_k: u32) -> MappedPartition {
+    let deg = degrees(g, n);
+    let k = if top_k == 0 { 4u32.saturating_mul(p).min(n) } else { top_k.min(n) };
+    // Hubs in descending degree, ties broken by ascending id (determinism).
+    let mut by_deg: Vec<VertexId> = (0..n).collect();
+    by_deg.sort_by_key(|&v| (Reverse(deg[v as usize]), v));
+    let mut owner = vec![u32::MAX; n as usize];
+    let mut hub_counts = vec![0u32; p as usize];
+    for (i, &h) in by_deg[..k as usize].iter().enumerate() {
+        let (pass, pos) = (i as u32 / p, i as u32 % p);
+        let r = if pass % 2 == 0 { pos } else { p - 1 - pos };
+        owner[h as usize] = r;
+        hub_counts[r as usize] += 1;
+    }
+    // Remaining per-rank quotas mirror the block sizes. A rank may already
+    // hold more hubs than its block size (k close to n); trim the excess
+    // from the other ranks round-robin so quotas still sum to n - k.
+    let bp = BlockPartition::new(n, p);
+    let mut quota: Vec<u32> = (0..p).map(|r| bp.block_size(r)).collect();
+    let mut excess = 0u64;
+    for r in 0..p as usize {
+        if hub_counts[r] > quota[r] {
+            excess += (hub_counts[r] - quota[r]) as u64;
+            quota[r] = 0;
+        } else {
+            quota[r] -= hub_counts[r];
+        }
+    }
+    let mut r = 0usize;
+    while excess > 0 {
+        // Terminates: sum(quota) = (n - k) + excess >= excess > 0.
+        if quota[r] > 0 {
+            quota[r] -= 1;
+            excess -= 1;
+        }
+        r = (r + 1) % p as usize;
+    }
+    // Block-fill the non-hub vertices into the quotas in ascending order.
+    let mut cursor = 0usize;
+    for v in 0..n {
+        if owner[v as usize] != u32::MAX {
+            continue;
+        }
+        while quota[cursor] == 0 {
+            cursor += 1;
+        }
+        owner[v as usize] = cursor as u32;
+        quota[cursor] -= 1;
+    }
+    MappedPartition::new(MappedData::from_owner_map(owner, p))
+}
+
+/// An explicit owner map (replayable experiments; see
+/// [`crate::graph::io::read_owner_map`]).
+pub(super) fn explicit(map: &[u32], n: u32, p: u32) -> Result<MappedPartition> {
+    if map.len() != n as usize {
+        bail!("owner map has {} entries but the graph has {n} vertices", map.len());
+    }
+    if let Some((v, &r)) = map.iter().enumerate().find(|&(_, &r)| r >= p) {
+        bail!("owner map assigns vertex {v} to rank {r}, but only {p} ranks exist");
+    }
+    Ok(MappedPartition::new(MappedData::from_owner_map(map.to_vec(), p)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Partition, PartitionSpec};
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    /// Max per-rank adjacency entries under a partition.
+    fn max_edge_load(g: &EdgeList, part: &Partition) -> u64 {
+        let mut load = vec![0u64; part.n_ranks() as usize];
+        for e in &g.edges {
+            load[part.owner(e.u) as usize] += 1;
+            load[part.owner(e.v) as usize] += 1;
+        }
+        load.into_iter().max().unwrap_or(0)
+    }
+
+    #[test]
+    fn degree_balanced_is_contiguous_and_balances_edges() {
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 9, 7));
+        let p = 8u32;
+        let part = Partition::build(&PartitionSpec::DegreeBalanced, &g, g.n_vertices, p).unwrap();
+        // Contiguous: each rank's vertices are an id interval.
+        for r in 0..p {
+            let vs = part.vertices_of(r);
+            if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
+                assert_eq!(last - first + 1, vs.len() as u32, "rank {r} not contiguous");
+            }
+        }
+        // Edge load no worse than block (RMAT skew makes block lopsided).
+        let block = Partition::block(g.n_vertices, p);
+        assert!(
+            max_edge_load(&g, &part) <= max_edge_load(&g, &block),
+            "degree-balanced must not exceed block's max edge load on RMAT"
+        );
+    }
+
+    #[test]
+    fn hub_scatter_separates_top_hubs() {
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 9, 7));
+        let p = 8u32;
+        let part = Partition::build(
+            &PartitionSpec::HubScatter { top_k: p },
+            &g,
+            g.n_vertices,
+            p,
+        )
+        .unwrap();
+        // The p highest-degree vertices land on p distinct ranks.
+        let deg = degrees(&g, g.n_vertices);
+        let mut by_deg: Vec<u32> = (0..g.n_vertices).collect();
+        by_deg.sort_by_key(|&v| (std::cmp::Reverse(deg[v as usize]), v));
+        let owners: std::collections::HashSet<u32> =
+            by_deg[..p as usize].iter().map(|&v| part.owner(v)).collect();
+        assert_eq!(owners.len(), p as usize, "top-{p} hubs must hit {p} distinct ranks");
+        // Vertex balance matches the block layout.
+        let bp = BlockPartition::new(g.n_vertices, p);
+        for r in 0..p {
+            assert_eq!(part.n_local(r), bp.block_size(r), "rank {r} vertex count");
+        }
+    }
+
+    #[test]
+    fn hub_scatter_handles_k_near_n() {
+        // k > n/p forces the quota-trimming path.
+        let mut g = EdgeList::with_vertices(10);
+        for v in 1..10 {
+            g.push(0, v, v as f64 / 16.0);
+        }
+        let part = Partition::build(
+            &PartitionSpec::HubScatter { top_k: 10 },
+            &g,
+            10,
+            3,
+        )
+        .unwrap();
+        let total: u32 = (0..3).map(|r| part.n_local(r)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn degree_balanced_edgeless_falls_back_to_block() {
+        let g = EdgeList::with_vertices(10);
+        let part = Partition::build(&PartitionSpec::DegreeBalanced, &g, 10, 3).unwrap();
+        let block = Partition::block(10, 3);
+        for r in 0..3 {
+            assert_eq!(part.n_local(r), block.n_local(r));
+            assert_eq!(part.first_vertex(r), block.first_vertex(r));
+        }
+    }
+}

@@ -13,6 +13,7 @@ use ghs_mst::ghs::edge_lookup::SearchStrategy;
 use ghs_mst::ghs::parallel::run_threaded;
 use ghs_mst::ghs::wire::WireFormat;
 use ghs_mst::graph::generators::GraphFamily;
+use ghs_mst::graph::partition::{Partition, PartitionSpec, PartitionStats};
 use ghs_mst::graph::{io, preprocess::preprocess, EdgeList};
 #[cfg(feature = "accelerate")]
 use ghs_mst::runtime::minedge::{accelerated_boruvka, MinEdgeExecutable};
@@ -30,9 +31,14 @@ COMMANDS
   run           Run the GHS engine on a generated or loaded graph
                   --family rmat|ssca2|random  --scale N  --ranks N
                   --search linear|binary|hash  --wire naive|compact|procid
+                  --partition block|degree|hub|file:<path>
                   --no-test-queue  --input FILE  --threaded  --verify
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
+  partition     Print partition quality metrics (vertex/edge balance, edge
+                  cut) per strategy: --family --scale --ranks [--top-k N]
+                  [--partition file:<path>] [--write]
   verify        Run GHS + all baselines, compare forests: --family --scale --ranks
+                  [--partition block|degree|hub|file:<path>]
   accel         XLA-accelerated Boruvka via PJRT: --family --scale [--block 4096x32]
                   (needs a build with `--features accelerate`)
   baseline      Run kruskal|prim|boruvka: --algo NAME --family --scale
@@ -49,8 +55,13 @@ COMMANDS
 COMMON FLAGS
   --scale N       log2 of vertex count        [default 14, paper 23-24]
   --max-nodes N   largest node count swept    [default 64]
+  --partition S   vertex partitioning: block (paper default), degree
+                  (edge-balanced contiguous), hub (scatter top-k hubs),
+                  file:<path> (explicit owner map, one rank id per line)
   --no-verify     skip Kruskal verification
   --quiet         suppress progress logs
+Graph --input formats by extension: .gr/.dimacs (DIMACS-style), .bin
+(ghs-mst binary), anything else the ghs-mst text edge list.
 Experiment output lands in results/*.{md,csv} (override: GHS_MST_RESULTS).";
 
 fn main() -> Result<()> {
@@ -58,6 +69,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "generate" => cmd_generate(&args),
+        "partition" => cmd_partition(&args),
         "verify" => cmd_verify(&args),
         "accel" => cmd_accel(&args),
         "baseline" => cmd_baseline(&args),
@@ -77,9 +89,28 @@ fn parse_family(args: &Args) -> Result<GraphFamily> {
         .ok_or_else(|| anyhow::anyhow!("unknown family `{name}` (rmat|ssca2|random)"))
 }
 
+/// Parse a `--partition` value: a strategy name or `file:<path>` loading
+/// an explicit owner map.
+fn parse_partition_value(s: &str) -> Result<PartitionSpec> {
+    if let Some(path) = s.strip_prefix("file:") {
+        let map = io::read_owner_map(std::path::Path::new(path))?;
+        return Ok(PartitionSpec::Explicit(std::sync::Arc::new(map)));
+    }
+    PartitionSpec::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --partition `{s}` (block|degree|hub|file:<path>)"))
+}
+
+/// The `--partition` flag, defaulting to block.
+fn parse_partition_flag(args: &Args) -> Result<PartitionSpec> {
+    match args.get_opt("partition") {
+        None => Ok(PartitionSpec::default()),
+        Some(s) => parse_partition_value(s),
+    }
+}
+
 fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
     if let Some(path) = args.get_opt("input") {
-        let g = io::read_text(std::path::Path::new(path))?;
+        let g = io::read_auto(std::path::Path::new(path))?;
         let (clean, stats) = preprocess(&g);
         eprintln!(
             "loaded {path}: {} vertices, {} edges ({} loops, {} multi removed)",
@@ -100,8 +131,8 @@ fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
-        "family", "scale", "ranks", "search", "wire", "no-test-queue", "input", "threaded",
-        "verify", "quiet",
+        "family", "scale", "ranks", "search", "wire", "partition", "no-test-queue", "input",
+        "threaded", "verify", "quiet",
     ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
@@ -116,6 +147,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "procid" => cfg.wire_format = WireFormat::CompactProcId,
         w => bail!("bad --wire {w}"),
     }
+    cfg.partition = parse_partition_flag(args)?;
+    let part_label = cfg.partition.label();
     if args.get_bool("no-test-queue") {
         cfg.separate_test_queue = false;
     }
@@ -134,6 +167,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         clean.n_edges()
     );
     println!("ranks           : {ranks} ({} nodes)", ranks.div_ceil(8));
+    println!("partition       : {part_label} ({})", run.partition.summary());
     println!(
         "forest          : {} edges, {} components, weight {:.6}",
         run.forest.edges.len(),
@@ -174,10 +208,69 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Print a quality-metric table for the built-in strategies (plus an
+/// optional explicit map) over one graph — the tool behind
+/// `results/partition_baseline.md`.
+fn cmd_partition(args: &Args) -> Result<()> {
+    args.expect_flags(&["family", "scale", "ranks", "input", "top-k", "partition", "write"])?;
+    let (label, clean) = load_or_generate(args)?;
+    let ranks = args.get_num("ranks", 16u32)?;
+    let top_k = args.get_num("top-k", 0u32)?;
+    let mut specs = vec![
+        PartitionSpec::Block,
+        PartitionSpec::DegreeBalanced,
+        PartitionSpec::HubScatter { top_k },
+    ];
+    if let Some(s) = args.get_opt("partition") {
+        specs.push(parse_partition_value(s)?);
+    }
+    let mut t = ghs_mst::coordinator::report::Table::new(
+        format!("Partition quality — {label}, {ranks} ranks"),
+        &[
+            "Strategy",
+            "Max vtx",
+            "Vtx balance",
+            "Max edge load",
+            "Edge balance",
+            "Cut edges",
+            "Remote %",
+        ],
+    );
+    let mut max_deg = 0;
+    for spec in &specs {
+        let part = Partition::build(spec, &clean, clean.n_vertices.max(1), ranks)?;
+        let s = PartitionStats::compute(&clean, &part);
+        max_deg = s.max_vertex_degree;
+        t.push_row(vec![
+            spec.label().to_string(),
+            s.max_rank_vertices.to_string(),
+            format!("{:.2}", s.vertex_imbalance),
+            s.max_rank_edges.to_string(),
+            format!("{:.2}", s.edge_imbalance),
+            s.cut_edges.to_string(),
+            format!("{:.1}", 100.0 * s.remote_edge_fraction),
+        ]);
+    }
+    t.note(format!(
+        "n = {}, m = {}, max vertex degree = {max_deg}. Edge load is counted in CSR \
+         adjacency entries; balance ratios are max-rank / ideal (1.00 = perfect). \
+         Metric definitions: README \"Choosing a partition\".",
+        clean.n_vertices,
+        clean.n_edges()
+    ));
+    println!("{}", t.to_markdown());
+    if args.get_bool("write") {
+        let path = t.write("partition_quality")?;
+        eprintln!("  [exp] wrote {path:?}");
+    }
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
-    args.expect_flags(&["family", "scale", "ranks", "input"])?;
+    args.expect_flags(&["family", "scale", "ranks", "input", "partition"])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
+    let partition = parse_partition_flag(args)?;
     let oracle = kruskal::kruskal(&clean);
     println!(
         "{label}: oracle weight {:.6}, {} components",
@@ -195,20 +288,15 @@ fn cmd_verify(args: &Args) -> Result<()> {
     };
     report("prim", prim::prim(&clean).canonical_edges())?;
     report("boruvka", boruvka::boruvka(&clean).canonical_edges())?;
+    let mut cfg = GhsConfig::final_version(ranks);
+    cfg.partition = partition;
     report(
         "ghs (sequential)",
-        ghs_mst::coordinator::run_once(
-            &clean,
-            GhsConfig::final_version(ranks),
-            SimConfig::default(),
-        )?
-        .forest
-        .canonical_edges(),
+        ghs_mst::coordinator::run_once(&clean, cfg.clone(), SimConfig::default())?
+            .forest
+            .canonical_edges(),
     )?;
-    report(
-        "ghs (threaded)",
-        run_threaded(&clean, GhsConfig::final_version(ranks))?.forest.canonical_edges(),
-    )?;
+    report("ghs (threaded)", run_threaded(&clean, cfg)?.forest.canonical_edges())?;
     Ok(())
 }
 
@@ -277,12 +365,17 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiments(args: &Args) -> Result<()> {
-    args.expect_flags(&["scale", "max-nodes", "no-verify", "quiet"])?;
+    args.expect_flags(&["scale", "max-nodes", "no-verify", "quiet", "partition"])?;
+    let defaults = ExpOptions::default();
     let opts = ExpOptions {
-        scale: args.get_num("scale", ExpOptions::default().scale)?,
-        max_nodes: args.get_num("max-nodes", ExpOptions::default().max_nodes)?,
+        scale: args.get_num("scale", defaults.scale)?,
+        max_nodes: args.get_num("max-nodes", defaults.max_nodes)?,
         verify: !args.get_bool("no-verify"),
         quiet: args.get_bool("quiet"),
+        partition: match args.get_opt("partition") {
+            Some(s) => parse_partition_value(s)?,
+            None => defaults.partition,
+        },
     };
     let run_one = |which: &str| -> Result<()> {
         match which {

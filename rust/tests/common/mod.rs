@@ -18,6 +18,7 @@ use ghs_mst::ghs::parallel::run_threaded;
 use ghs_mst::ghs::result::GhsRun;
 use ghs_mst::ghs::wire::WireFormat;
 use ghs_mst::graph::generators::{generate_with_factor, structured, GraphFamily};
+use ghs_mst::graph::partition::PartitionSpec;
 use ghs_mst::graph::preprocess::preprocess;
 use ghs_mst::graph::EdgeList;
 use ghs_mst::util::prng::Xoshiro256;
@@ -46,6 +47,16 @@ pub const WIRE_FORMATS: [WireFormat; 3] =
 /// All three §3.3 local-edge lookup strategies.
 pub const SEARCH_STRATEGIES: [SearchStrategy; 3] =
     [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash];
+
+/// The built-in partitioning strategies (the conformance partition axis;
+/// `Explicit` is covered separately with generated owner maps).
+pub fn partition_specs() -> [PartitionSpec; 3] {
+    [
+        PartitionSpec::Block,
+        PartitionSpec::DegreeBalanced,
+        PartitionSpec::HubScatter { top_k: 0 },
+    ]
+}
 
 /// Number of cases on the conformance graph axis (3 generated + 4
 /// structured).

@@ -10,28 +10,38 @@
 //!   × {RMAT, SSCA2, Random, path, star, grid, complete}       (§4 + structured)
 //! ```
 //!
-//! (≥ 126 engine/config combinations, plus forest / rank-sweep /
+//! (≥ 126 engine/config combinations, plus a partition axis
+//! {Block, DegreeBalanced, HubScatter, Explicit}, forest / rank-sweep /
 //! duplicate-weight sweeps) against the sequential Kruskal oracle, asserting
 //! for every cell: canonical-edge equality, MSF-weight equality, component
 //! counts, and the paper's GHS message-complexity bound. All cases are
 //! deterministically seeded through `util::minitest` (override with
 //! `MINITEST_SEED` to explore, replay failures by the printed case seed).
+//! The nightly soak lane reruns this matrix at `GHS_SCALE=12` with a
+//! rotating `MINITEST_SEED` (see `.github/workflows/nightly-soak.yml`).
 
 mod common;
 
 use common::{
-    conformance_config, duplicate_weight_case, forest_case, graph_case, graph_cases, run_engine,
-    verify_against_oracle, EngineKind, ENGINE_KINDS, N_GRAPH_CASES, SEARCH_STRATEGIES,
-    WIRE_FORMATS,
+    conformance_config, duplicate_weight_case, forest_case, graph_case, graph_cases,
+    partition_specs, run_engine, verify_against_oracle, EngineKind, ENGINE_KINDS, N_GRAPH_CASES,
+    SEARCH_STRATEGIES, WIRE_FORMATS,
 };
 use ghs_mst::ghs::edge_lookup::SearchStrategy;
 use ghs_mst::ghs::wire::WireFormat;
+use ghs_mst::graph::partition::PartitionSpec;
 use ghs_mst::util::minitest::props;
 
 /// Graph scale for the matrix: 2^6 vertices keeps the 126-cell sweep fast
 /// while still crossing every rank boundary at 4 ranks.
 const MATRIX_SCALE: u32 = 6;
 const MATRIX_RANKS: u32 = 4;
+
+/// In-PR runs use [`MATRIX_SCALE`]; the nightly soak lane raises it via
+/// `GHS_SCALE` (the same knob the experiment drivers use).
+fn matrix_scale() -> u32 {
+    std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(MATRIX_SCALE)
+}
 
 fn full_matrix() -> Vec<(EngineKind, WireFormat, SearchStrategy)> {
     let mut combos = Vec::new();
@@ -56,7 +66,7 @@ fn full_matrix_conforms_to_kruskal_oracle() {
         let (kind, wire, search) = combos[g.case];
         // Fresh deterministic graphs per combo: coverage diversity without
         // losing replayability (the case seed fixes the graphs).
-        for (label, clean) in &graph_cases(MATRIX_SCALE, g.u64()) {
+        for (label, clean) in &graph_cases(matrix_scale(), g.u64()) {
             let cfg = conformance_config(wire, search, MATRIX_RANKS);
             let run = run_engine(kind, clean, cfg);
             verify_against_oracle(&format!("{kind:?}/{wire:?}/{search:?}/{label}"), clean, &run);
@@ -64,6 +74,77 @@ fn full_matrix_conforms_to_kruskal_oracle() {
         }
     });
     assert!(cells >= 100, "conformance matrix covered only {cells} cells (need >= 100)");
+}
+
+/// Partition axis of the matrix: {Block, DegreeBalanced, HubScatter} ×
+/// engines × graph families, each cell Kruskal-checked. Non-contiguous
+/// strategies reroute every cross-rank edge, so this exercises the full
+/// owner/local_index abstraction under both engines.
+#[test]
+fn partition_matrix_conforms_to_kruskal_oracle() {
+    let mut combos = Vec::new();
+    for &kind in &ENGINE_KINDS {
+        for spec in partition_specs() {
+            combos.push((kind, spec));
+        }
+    }
+    assert_eq!(combos.len(), 6, "2 engines x 3 partition strategies");
+    let mut cells = 0usize;
+    props("conformance partition matrix", combos.len(), |g| {
+        let (kind, spec) = combos[g.case].clone();
+        for (label, clean) in &graph_cases(matrix_scale(), g.u64()) {
+            let mut cfg =
+                conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, MATRIX_RANKS);
+            cfg.partition = spec.clone();
+            let run = run_engine(kind, clean, cfg);
+            verify_against_oracle(&format!("{kind:?}/{}/{label}", spec.label()), clean, &run);
+            cells += 1;
+        }
+    });
+    assert!(cells >= 42, "partition matrix covered only {cells} cells (need >= 42)");
+}
+
+/// Explicit (owner-map) partitions: a random map per case must still yield
+/// the oracle forest on both engines.
+#[test]
+fn explicit_partition_conforms() {
+    props("conformance explicit partition", 8, |g| {
+        let kind = ENGINE_KINDS[g.case % ENGINE_KINDS.len()];
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(5, g.u64(), idx);
+        let ranks = 1 + g.u64_below(5) as u32;
+        let map: Vec<u32> =
+            (0..clean.n_vertices.max(1)).map(|_| g.u64_below(ranks as u64) as u32).collect();
+        let mut cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, ranks);
+        cfg.partition = PartitionSpec::Explicit(std::sync::Arc::new(map));
+        let run = run_engine(kind, &clean, cfg);
+        verify_against_oracle(&format!("{kind:?}/explicit/ranks={ranks}/{label}"), &clean, &run);
+    });
+}
+
+/// `PartitionSpec::Block` must reproduce the default configuration's
+/// results exactly: same forest, same message counts, same supersteps,
+/// same virtual time (it IS the same arithmetic, threaded through the
+/// `Partition` abstraction).
+#[test]
+fn block_spec_reproduces_default_results_exactly() {
+    props("conformance block identity", 6, |g| {
+        let wire = WIRE_FORMATS[g.case % WIRE_FORMATS.len()];
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(5, g.u64(), idx);
+        let base = run_engine(
+            EngineKind::Sequential,
+            &clean,
+            conformance_config(wire, SearchStrategy::Hash, MATRIX_RANKS),
+        );
+        let mut cfg = conformance_config(wire, SearchStrategy::Hash, MATRIX_RANKS);
+        cfg.partition = PartitionSpec::Block;
+        let run = run_engine(EngineKind::Sequential, &clean, cfg);
+        assert_eq!(run.forest.canonical_edges(), base.forest.canonical_edges(), "{label}");
+        assert_eq!(run.sent.total(), base.sent.total(), "{label}: message counts");
+        assert_eq!(run.supersteps, base.supersteps, "{label}");
+        assert_eq!(run.sim.total_time, base.sim.total_time, "{label}: virtual time");
+    });
 }
 
 /// Rank-count sweep: both engines agree with the oracle from 1 rank up to
