@@ -1,0 +1,1319 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check for the GHS message pipeline.
+
+Line-by-line port of ghs_mst's *sequential* engine — PRNG, R-MAT,
+preprocess, partitions, CSR, the index-linked stash queues (postponement
+semantics of `ghs/queues.rs`), §3.3 edge lookup, the GHS vertex automaton,
+per-rank aggregation with the recycled buffer pool, the superstep engine,
+and the LogGOPS/cost-model virtual clock — kept in lock-step with rust/src
+so the pipeline can be *executed* and its results cross-checked in
+environments without cargo. The canonical implementation is the Rust one:
+when `cargo test` / `ghs-mst perf-baseline` are available, prefer them,
+and fix THIS file if the two ever disagree.
+
+What it validates when run:
+  1. Conformance: forest == Kruskal (and termination — no stash livelock)
+     over a wire × lookup × test-queue × ranks × partition matrix.
+  2. The perf-baseline counter orderings asserted by
+     rust/tests/perf_regression.rs, at the same scales/seeds.
+  3. The engine-counter rows of results/partition_baseline.md and the
+     counter table of results/perf_baseline.md.
+
+Usage: python3 python/tools/pipeline_check.py [--quick]
+"""
+
+import math
+import sys
+from collections import deque
+
+M64 = (1 << 64) - 1
+INF = float("inf")
+INF_W = (INF, M64)  # EdgeWeight::infinity(): (+inf bits, u64::MAX tie)
+
+# ---------------------------------------------------------------- PRNG --
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Xoshiro256:
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_weight(self):
+        while True:
+            w = self.next_f64()
+            if w > 0.0:
+                return w
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        l = m & M64
+        if l < bound:
+            t = ((1 << 64) - bound) % bound
+            while l < t:
+                x = self.next_u64()
+                m = x * bound
+                l = m & M64
+        return m >> 64
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# ---------------------------------------------------- graph generation --
+
+A, B, C = 0.57, 0.19, 0.19
+
+
+def rmat_edge(scale, rng):
+    u = v = 0
+    a, b, c = A, B, C
+    for level in range(scale):
+        bit = 1 << (scale - 1 - level)
+        r = rng.next_f64()
+        if r < a:
+            pass
+        elif r < a + b:
+            v |= bit
+        elif r < a + b + c:
+            u |= bit
+        else:
+            u |= bit
+            v |= bit
+        a = a * (0.9 + 0.2 * rng.next_f64())
+        b = b * (0.9 + 0.2 * rng.next_f64())
+        c = c * (0.9 + 0.2 * rng.next_f64())
+        d = (1.0 - (A + B + C)) * (0.9 + 0.2 * rng.next_f64())
+        total = a + b + c + d
+        a /= total
+        b /= total
+        c /= total
+    return u, v
+
+
+def rmat(scale, edge_factor, rng):
+    n = 1 << scale
+    m = edge_factor * n
+    perm = list(range(n))
+    rng.shuffle(perm)
+    edges = []
+    for _ in range(m):
+        u, v = rmat_edge(scale, rng)
+        w = rng.next_weight()
+        edges.append((perm[u], perm[v], w))
+    return n, edges
+
+
+def path_graph(n, seed):
+    rng = Xoshiro256(seed)
+    return n, [(i, i + 1, rng.next_weight()) for i in range(n - 1)]
+
+
+def sid_of(u, v):
+    lo, hi = (u, v) if u < v else (v, u)
+    return (lo << 32) | hi
+
+
+def preprocess(n, edges):
+    """graph/preprocess.rs: drop self-loops, keep the lightest parallel
+    copy (parallel copies share the canonical pair, hence the sid — so the
+    unique-extended-weight tiebreak reduces to strict raw-weight <, first
+    copy kept on exact ties), output sorted by canonical pair."""
+    best = {}
+    for (u, v, w) in edges:
+        if u == v:
+            continue
+        key = (min(u, v), max(u, v))
+        prev = best.get(key)
+        if prev is None or w < prev[2]:
+            best[key] = (u, v, w)
+    out = [best[k] for k in sorted(best)]
+    return n, out
+
+
+def workload(scale):
+    rng = Xoshiro256(0xC0FFEE ^ scale)
+    n, edges = rmat(scale, 16, rng)
+    return preprocess(n, edges)
+
+
+# --------------------------------------------------------- partitions --
+
+
+class BlockPartition:
+    kind = "block"
+
+    def __init__(self, n, p):
+        self.n, self.p = n, p
+
+    def owner(self, v):
+        n, p = self.n, self.p
+        base, extra = divmod(n, p)
+        boundary = extra * (base + 1)
+        if v < boundary:
+            return v // (base + 1)
+        return extra + (v - boundary) // max(base, 1)
+
+    def first_vertex(self, r):
+        base, extra = divmod(self.n, self.p)
+        return r * base + min(r, extra)
+
+    def n_local(self, r):
+        base, extra = divmod(self.n, self.p)
+        return base + (1 if r < extra else 0)
+
+    def vertex_of(self, r, row):
+        return self.first_vertex(r) + row
+
+    def row_of(self, v):
+        return v - self.first_vertex(self.owner(v))
+
+    mapped = None
+
+
+class ContiguousPartition:
+    kind = "degree"
+
+    def __init__(self, bounds):
+        self.bounds = bounds
+        self.p = len(bounds) - 1
+        self.n = bounds[-1]
+
+    def owner(self, v):
+        import bisect
+
+        return bisect.bisect_right(self.bounds, v) - 1
+
+    def first_vertex(self, r):
+        return self.bounds[r]
+
+    def n_local(self, r):
+        return self.bounds[r + 1] - self.bounds[r]
+
+    def vertex_of(self, r, row):
+        return self.bounds[r] + row
+
+    def row_of(self, v):
+        return v - self.bounds[self.owner(v)]
+
+    mapped = None
+
+
+class MappedPartition:
+    kind = "hub"
+
+    def __init__(self, owner_map, p):
+        self.owner_map = owner_map
+        self.p = p
+        self.n = len(owner_map)
+        self.rank_vertices = [[] for _ in range(p)]
+        for v, r in enumerate(owner_map):
+            self.rank_vertices[r].append(v)
+        self.local = [0] * self.n
+        for vs in self.rank_vertices:
+            for i, v in enumerate(vs):
+                self.local[v] = i
+        self.mapped = self
+
+    def owner(self, v):
+        return self.owner_map[v]
+
+    def n_local(self, r):
+        return len(self.rank_vertices[r])
+
+    def vertex_of(self, r, row):
+        return self.rank_vertices[r][row]
+
+    def row_of(self, v):
+        return self.local[v]
+
+
+def degrees(n, edges):
+    deg = [0] * n
+    for (u, v, _w) in edges:
+        deg[u] += 1
+        deg[v] += 1
+    return deg
+
+
+def degree_balanced(n, p, edges):
+    deg = degrees(n, edges)
+    total = sum(deg)
+    if total == 0:
+        base, extra = divmod(n, p)
+        bounds = [0]
+        for r in range(p):
+            bounds.append(bounds[-1] + base + (1 if r < extra else 0))
+        return ContiguousPartition(bounds)
+    bounds = [0]
+    cum, v = 0, 0
+    for r in range(1, p):
+        target = total * r // p
+        while v < n and cum < target:
+            cum += deg[v]
+            v += 1
+        bounds.append(v)
+    bounds.append(n)
+    return ContiguousPartition(bounds)
+
+
+def hub_scatter(n, p, edges, top_k=0):
+    deg = degrees(n, edges)
+    k = min(4 * p, n) if top_k == 0 else min(top_k, n)
+    by_deg = sorted(range(n), key=lambda v: (-deg[v], v))
+    owner = [None] * n
+    hub_counts = [0] * p
+    for i, h in enumerate(by_deg[:k]):
+        rnd, pos = divmod(i, p)
+        r = pos if rnd % 2 == 0 else p - 1 - pos
+        owner[h] = r
+        hub_counts[r] += 1
+    base, extra = divmod(n, p)
+    quota = [base + (1 if r < extra else 0) for r in range(p)]
+    excess = 0
+    for r in range(p):
+        if hub_counts[r] > quota[r]:
+            excess += hub_counts[r] - quota[r]
+            quota[r] = 0
+        else:
+            quota[r] -= hub_counts[r]
+    r = 0
+    while excess > 0:
+        if quota[r] > 0:
+            quota[r] -= 1
+            excess -= 1
+        r = (r + 1) % p
+    cursor = 0
+    for v in range(n):
+        if owner[v] is not None:
+            continue
+        while quota[cursor] == 0:
+            cursor += 1
+        owner[v] = cursor
+        quota[cursor] -= 1
+    return MappedPartition(owner, p)
+
+
+def build_partition(spec, n, p, edges):
+    if spec == "block":
+        return BlockPartition(n, p)
+    if spec == "degree":
+        return degree_balanced(n, p, edges)
+    if spec == "hub":
+        return hub_scatter(n, p, edges)
+    raise ValueError(spec)
+
+
+# ----------------------------------------------------------------- CSR --
+
+
+class Csr:
+    """One rank's CRS block (graph/csr.rs): adjacency entries appended in
+    edge-list order, both directions when owned."""
+
+    def __init__(self, n, edges, part, rank):
+        rows = part.n_local(rank)
+        owned = lambda x: part.owner(x) == rank
+        degree = [0] * rows
+        for (u, v, _w) in edges:
+            if owned(u):
+                degree[part.row_of(u)] += 1
+            if owned(v):
+                degree[part.row_of(v)] += 1
+        offsets = [0]
+        for d in degree:
+            offsets.append(offsets[-1] + d)
+        nnz = offsets[-1]
+        cols = [0] * nnz
+        weights = [0.0] * nnz
+        cursor = offsets[:rows]
+        cursor = list(cursor)
+        for (u, v, w) in edges:
+            if owned(u):
+                r = part.row_of(u)
+                cols[cursor[r]] = v
+                weights[cursor[r]] = w
+                cursor[r] += 1
+            if owned(v):
+                r = part.row_of(v)
+                cols[cursor[r]] = u
+                weights[cursor[r]] = w
+                cursor[r] += 1
+        self.part, self.rank = part, rank
+        self.offsets, self.cols, self.weights = offsets, cols, weights
+        self.rows = rows
+
+    def nnz(self):
+        return len(self.cols)
+
+    def row_range(self, v):
+        r = self.part.row_of(v)
+        return self.offsets[r], self.offsets[r + 1]
+
+    def owns(self, v):
+        return self.part.owner(v) == self.rank
+
+    def vertex_of(self, row):
+        return self.part.vertex_of(self.rank, row)
+
+    def sort_rows_by_neighbour(self):
+        for r in range(self.rows):
+            lo, hi = self.offsets[r], self.offsets[r + 1]
+            pairs = sorted(zip(self.cols[lo:hi], self.weights[lo:hi]), key=lambda t: t[0])
+            for k, (c, w) in enumerate(pairs):
+                self.cols[lo + k] = c
+                self.weights[lo + k] = w
+
+
+# ---------------------------------------------------------- wire sizes --
+
+# Payload tuples: ('C', lvl) ('I', lvl, frag, find) ('T', lvl, frag)
+# ('A',) ('R',) ('P', best) ('X',)
+LONG_TAGS = ("I", "T", "P")
+
+
+def size_of(fmt, payload):
+    if fmt == "naive":
+        return 32
+    if payload[0] in LONG_TAGS:
+        return 26 if fmt == "compact" else 19
+    return 10
+
+
+def per_process_weights_unique(edges, part):
+    per_rank = [set() for _ in range(part.p)]
+    for (u, v, w) in edges:
+        ru, rv = part.owner(u), part.owner(v)
+        if w in per_rank[ru]:
+            return False
+        per_rank[ru].add(w)
+        if rv != ru:
+            if w in per_rank[rv]:
+                return False
+            per_rank[rv].add(w)
+    return True
+
+
+# -------------------------------------------------------------- queues --
+
+
+class Queues:
+    """ghs/queues.rs semantics: two active FIFOs + postponed stashes,
+    stashes re-merged (spliced to the back) on new traffic or note_done."""
+
+    def __init__(self, separate_test):
+        self.main, self.test = deque(), deque()
+        self.main_stash, self.test_stash = deque(), deque()
+        self.separate = separate_test
+        self.postponed = 0
+        self.stash_merges = 0
+
+    def _merge(self):
+        for q, s in ((self.main, self.main_stash), (self.test, self.test_stash)):
+            if s:
+                self.stash_merges += 1
+                q.extend(s)
+                s.clear()
+
+    def note_done(self):
+        if self.main_stash or self.test_stash:
+            self._merge()
+
+    def _route_is_test(self, msg):
+        return self.separate and msg[2][0] == "T"
+
+    def push(self, msg):
+        (self.test if self._route_is_test(msg) else self.main).append(msg)
+        self.note_done()
+
+    def postpone(self, msg):
+        self.postponed += 1
+        (self.test_stash if self._route_is_test(msg) else self.main_stash).append(msg)
+
+    def pop_main(self):
+        return self.main.popleft() if self.main else None
+
+    def pop_test(self):
+        return self.test.popleft() if self.test else None
+
+    def main_len(self):
+        return len(self.main)
+
+    def test_len(self):
+        return len(self.test)
+
+    def active_len(self):
+        return len(self.main) + len(self.test)
+
+    def total_len(self):
+        return self.active_len() + len(self.main_stash) + len(self.test_stash)
+
+
+# -------------------------------------------------------------- lookup --
+
+
+def table_size(sizing, local_m):
+    if sizing == "pow2":
+        x = 2 * local_m
+        npo2 = 1 if x <= 1 else 1 << (x - 1).bit_length()
+        return max(npo2, 8)
+    # paper modulo: local_m * 55 / 13, floored at max(m+1, 8)
+    raw = local_m * 55 // 13
+    return max(raw, local_m + 1, 8)
+
+
+class Lookup:
+    def __init__(self, strategy, csr, sizing="paper"):
+        self.strategy = strategy
+        self.csr = csr
+        self.lookups = 0
+        self.probes = 0
+        if strategy == "hash":
+            size = table_size(sizing, csr.nnz())
+            self.size = size
+            self.mask = size - 1 if (size & (size - 1)) == 0 else 0
+            self.table = [(0, 0)] * size
+            for row in range(csr.rows):
+                v = csr.vertex_of(row)
+                for i in range(csr.offsets[row], csr.offsets[row + 1]):
+                    u = csr.cols[i]
+                    key = (u << 32) | v
+                    slot = self._index(key)
+                    while self.table[slot][1] != 0:
+                        slot = self._index(slot + 1)
+                    self.table[slot] = (key, i + 1)
+
+    def _index(self, key):
+        return key & self.mask if self.mask else key % self.size
+
+    def find(self, src, dst):
+        self.lookups += 1
+        csr = self.csr
+        if self.strategy == "linear":
+            lo, hi = csr.row_range(dst)
+            for i in range(lo, hi):
+                self.probes += 1
+                if csr.cols[i] == src:
+                    return i
+            return None
+        if self.strategy == "binary":
+            lo, hi = csr.row_range(dst)
+            while lo < hi:
+                self.probes += 1
+                mid = lo + (hi - lo) // 2
+                if csr.cols[mid] == src:
+                    return mid
+                if csr.cols[mid] < src:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            return None
+        key = (src << 32) | dst
+        slot = self._index(key)
+        while True:
+            self.probes += 1
+            k, idx = self.table[slot]
+            if idx == 0:
+                return None
+            if k == key:
+                return idx - 1
+            slot = self._index(slot + 1)
+
+
+# ---------------------------------------------------------- rank state --
+
+SLEEPING, FIND, FOUND = 0, 1, 2
+BASIC, BRANCH, REJECTED = 0, 1, 2
+NILV = -1
+
+
+class Prof:
+    FIELDS = (
+        "msgs_decoded bytes_decoded decode_batches msgs_processed_main "
+        "msgs_processed_test msgs_postponed lookups lookup_probes flushes "
+        "bytes_sent msgs_sent finish_checks iterations buf_reuse buf_alloc "
+        "stash_merges"
+    ).split()
+
+    def __init__(self):
+        for f in self.FIELDS:
+            setattr(self, f, 0)
+
+    def copy(self):
+        p = Prof()
+        for f in self.FIELDS:
+            setattr(p, f, getattr(self, f))
+        return p
+
+
+class VertexVars:
+    __slots__ = (
+        "sn",
+        "ln",
+        "fragment",
+        "find_count",
+        "best_edge",
+        "best_wt",
+        "test_edge",
+        "in_branch",
+        "halted",
+        "cursor",
+    )
+
+    def __init__(self):
+        self.sn = SLEEPING
+        self.ln = 0
+        self.fragment = INF_W
+        self.find_count = 0
+        self.best_edge = NILV
+        self.best_wt = INF_W
+        self.test_edge = NILV
+        self.in_branch = NILV
+        self.halted = False
+        self.cursor = 0
+
+
+class Rank:
+    def __init__(self, rank, n, edges, part, cfg, codec, pool):
+        self.rank = rank
+        self.part = part
+        self.cfg = cfg
+        self.codec = codec  # 'special' | 'proc'
+        self.wire = cfg["wire"]
+        self.pool = pool
+        self.csr = Csr(n, edges, part, rank)
+        if cfg["search"] == "binary":
+            self.csr.sort_rows_by_neighbour()
+        self.lookup = Lookup(cfg["search"], self.csr, cfg.get("hash_sizing", "paper"))
+        csr = self.csr
+        self.adj_weight = []
+        for row in range(csr.rows):
+            v = csr.vertex_of(row)
+            for i in range(csr.offsets[row], csr.offsets[row + 1]):
+                if codec == "proc":
+                    tie = min(part.owner(v), part.owner(csr.cols[i]))
+                    self.adj_weight.append((csr.weights[i], tie))
+                else:
+                    self.adj_weight.append((csr.weights[i], sid_of(v, csr.cols[i])))
+        self.sorted_adj = list(range(csr.nnz()))
+        for row in range(csr.rows):
+            lo, hi = csr.offsets[row], csr.offsets[row + 1]
+            self.sorted_adj[lo:hi] = sorted(self.sorted_adj[lo:hi], key=lambda i: self.adj_weight[i])
+        self.vars = [VertexVars() for _ in range(csr.rows)]
+        self.edge_state = [BASIC] * csr.nnz()
+        self.branch_list = [[] for _ in range(csr.rows)]
+        self.queues = Queues(cfg["separate_test"])
+        self.outbox = [[0, 0] for _ in range(part.p)]  # [bytes, msgs]
+        self._pending_msgs = [[] for _ in range(part.p)]
+        self.dirty = []
+        self.flushed = []  # (dst, bytes, n_msgs)
+        self.prof = Prof()
+        self.sent_counts = {}
+        self.halts = 0
+        self.superstep = 0
+
+    # -- messaging ---------------------------------------------------
+
+    def send(self, v, adj, payload):
+        dst = self.csr.cols[adj]
+        msg = (v, dst, payload)
+        self.sent_counts[payload[0]] = self.sent_counts.get(payload[0], 0) + 1
+        self.prof.msgs_sent += 1
+        owner = self.part.owner(dst)
+        if owner == self.rank:
+            self.queues.push(msg)
+        else:
+            box = self.outbox[owner]
+            if box[0] == 0:
+                self.dirty.append(owner)
+            size = size_of(self.wire, payload)
+            box[0] += size
+            box[1] += 1
+            self.prof.bytes_sent += size
+            self._pending_msgs[owner].append(msg)
+            if box[0] >= self.cfg["max_msg_size"]:
+                self.flush_one(owner)
+
+    def flush_one(self, dst):
+        box = self.outbox[dst]
+        if box[0] == 0:
+            return
+        if self.pool[0] > 0:
+            self.pool[0] -= 1
+            self.prof.buf_reuse += 1
+        else:
+            self.prof.buf_alloc += 1
+        self.prof.flushes += 1
+        self.flushed.append((dst, box[0], box[1], self._pending_msgs[dst]))
+        self._pending_msgs[dst] = []
+        box[0] = 0
+        box[1] = 0
+
+    def flush_all(self):
+        dirty, self.dirty = self.dirty, []
+        for dst in dirty:
+            self.flush_one(dst)
+
+    def has_dirty_outbox(self):
+        return bool(self.dirty)
+
+    def read_buffer(self, nbytes, msgs):
+        self.prof.bytes_decoded += nbytes
+        self.prof.decode_batches += 1
+        self.prof.msgs_decoded += len(msgs)
+        for m in msgs:
+            self.queues.push(m)
+
+    def pending_local(self):
+        return self.queues.total_len() + sum(b[1] for b in self.outbox)
+
+    # -- GHS automaton (vertex.rs) -----------------------------------
+
+    def wakeup_all(self):
+        for row in range(self.csr.rows):
+            if self.vars[row].sn == SLEEPING:
+                self.wakeup(self.csr.vertex_of(row))
+
+    def wakeup(self, v):
+        row = self.part.row_of(v)
+        lo, hi = self.csr.offsets[row], self.csr.offsets[row + 1]
+        best = self.sorted_adj[lo] if hi > lo else None
+        vars = self.vars[row]
+        vars.ln = 0
+        vars.sn = FOUND
+        vars.find_count = 0
+        if best is None:
+            vars.halted = True
+        else:
+            self.mark_branch(v, best)
+            self.send(v, best, ("C", 0))
+
+    def mark_branch(self, v, adj):
+        assert self.edge_state[adj] != BRANCH
+        self.edge_state[adj] = BRANCH
+        self.branch_list[self.part.row_of(v)].append(adj)
+
+    def handle(self, msg):
+        src, v, payload = msg
+        j = self.lookup.find(src, v)
+        assert j is not None, f"message over non-existent edge {src}->{v}"
+        tag = payload[0]
+        if tag == "C":
+            return self.on_connect(v, j, payload[1])
+        if tag == "I":
+            self.on_initiate(v, j, payload[1], payload[2], payload[3])
+            return True
+        if tag == "T":
+            return self.on_test(v, j, payload[1], payload[2])
+        if tag == "A":
+            self.on_accept(v, j)
+            return True
+        if tag == "R":
+            self.on_reject(v, j)
+            return True
+        if tag == "P":
+            return self.on_report(v, j, payload[1])
+        self.change_core(v)
+        return True
+
+    def on_connect(self, v, j, l):
+        vars = self.vars[self.part.row_of(v)]
+        if l < vars.ln:
+            self.mark_branch(v, j)
+            self.send(v, j, ("I", vars.ln, vars.fragment, vars.sn == FIND))
+            if vars.sn == FIND:
+                vars.find_count += 1
+            return True
+        if self.edge_state[j] == BASIC:
+            return False  # postponed
+        fid = self.adj_weight[j]
+        self.send(v, j, ("I", vars.ln + 1, fid, True))
+        return True
+
+    def on_initiate(self, v, j, l, f, find):
+        row = self.part.row_of(v)
+        vars = self.vars[row]
+        vars.ln = l
+        vars.fragment = f
+        vars.sn = FIND if find else FOUND
+        vars.in_branch = j
+        vars.best_edge = NILV
+        vars.best_wt = INF_W
+        n_children = 0
+        for i in self.branch_list[row]:
+            if i != j:
+                self.send(v, i, ("I", l, f, find))
+                n_children += 1
+        if find:
+            self.vars[row].find_count += n_children
+            self.test(v)
+
+    def test(self, v):
+        row = self.part.row_of(v)
+        lo, hi = self.csr.offsets[row], self.csr.offsets[row + 1]
+        cur = self.vars[row].cursor
+        best = None
+        while lo + cur < hi:
+            i = self.sorted_adj[lo + cur]
+            if self.edge_state[i] == BASIC:
+                best = i
+                break
+            cur += 1
+        self.vars[row].cursor = cur
+        if best is not None:
+            vars = self.vars[row]
+            vars.test_edge = best
+            self.send(v, best, ("T", vars.ln, vars.fragment))
+        else:
+            self.vars[row].test_edge = NILV
+            self.report(v)
+
+    def on_test(self, v, j, l, f):
+        vars = self.vars[self.part.row_of(v)]
+        if l > vars.ln:
+            return False  # postponed
+        if f != vars.fragment:
+            self.send(v, j, ("A",))
+            return True
+        if self.edge_state[j] == BASIC:
+            self.edge_state[j] = REJECTED
+        if vars.test_edge != j:
+            self.send(v, j, ("R",))
+        else:
+            self.test(v)
+        return True
+
+    def on_accept(self, v, j):
+        w = self.adj_weight[j]
+        vars = self.vars[self.part.row_of(v)]
+        vars.test_edge = NILV
+        if w < vars.best_wt:
+            vars.best_edge = j
+            vars.best_wt = w
+        self.report(v)
+
+    def on_reject(self, v, j):
+        if self.edge_state[j] == BASIC:
+            self.edge_state[j] = REJECTED
+        self.test(v)
+
+    def report(self, v):
+        vars = self.vars[self.part.row_of(v)]
+        if vars.find_count == 0 and vars.test_edge == NILV:
+            vars.sn = FOUND
+            self.send(v, vars.in_branch, ("P", vars.best_wt))
+
+    def on_report(self, v, j, w):
+        vars = self.vars[self.part.row_of(v)]
+        if j != vars.in_branch:
+            vars.find_count -= 1
+            if w < vars.best_wt:
+                vars.best_wt = w
+                vars.best_edge = j
+            self.report(v)
+            return True
+        if vars.sn == FIND:
+            return False  # postponed
+        if w > vars.best_wt:
+            self.change_core(v)
+        elif w == vars.best_wt and w == INF_W:
+            vars.halted = True
+            self.halts += 1
+        return True
+
+    def change_core(self, v):
+        vars = self.vars[self.part.row_of(v)]
+        be = vars.best_edge
+        if self.edge_state[be] == BRANCH:
+            self.send(v, be, ("X",))
+        else:
+            self.send(v, be, ("C", vars.ln))
+            self.mark_branch(v, be)
+
+    def branch_edges(self):
+        out = []
+        csr = self.csr
+        for row in range(csr.rows):
+            v = csr.vertex_of(row)
+            for i in range(csr.offsets[row], csr.offsets[row + 1]):
+                if self.edge_state[i] == BRANCH and v < csr.cols[i]:
+                    out.append((v, csr.cols[i], csr.weights[i]))
+        return out
+
+
+# ----------------------------------------------------------------- sim --
+
+MVS10P = dict(
+    l=1.3e-6,
+    o=0.6e-6,
+    g=0.3e-6,
+    big_g=1.0 / 6.8e9,
+    l_intra=0.35e-6,
+    o_intra=0.25e-6,
+    g_intra=0.1e-6,
+    big_g_intra=1.0 / 12.0e9,
+)
+
+COSTS = dict(
+    process_msg=350e-9,
+    decode_msg=40e-9,
+    encode_msg=40e-9,
+    byte_tx=10e-9,
+    byte_rx=10e-9,
+    probe=5e-9,
+    postpone_retry=120e-9,
+    iteration=100e-9,
+    finish_check=300e-9,
+)
+
+PROBE_COST = {"linear": 0.75e-9, "binary": 18e-9, "hash": 5e-9}
+
+
+def step_time(costs, prev, now):
+    d = lambda f: float(getattr(now, f) - getattr(prev, f))
+    return (
+        d("msgs_processed_main") * costs["process_msg"]
+        + d("msgs_processed_test") * costs["process_msg"]
+        + d("msgs_postponed") * costs["postpone_retry"]
+        + d("msgs_decoded") * costs["decode_msg"]
+        + d("bytes_decoded") * costs["byte_rx"]
+        + d("lookup_probes") * costs["probe"]
+        + d("bytes_sent") * costs["byte_tx"]
+        + d("msgs_sent") * costs["encode_msg"]
+        + d("iterations") * costs["iteration"]
+        + d("finish_checks") * costs["finish_check"]
+    )
+
+
+class Sim:
+    def __init__(self, n_ranks, ranks_per_node, costs):
+        self.net = MVS10P
+        self.costs = costs
+        self.rpn = max(1, ranks_per_node)
+        self.clock = [0.0] * n_ranks
+        self.comm_wait = [0.0] * n_ranks
+        self.compute = [0.0] * n_ranks
+        self.prev = [Prof() for _ in range(n_ranks)]
+        self.allreduces = 0
+
+    def same_node(self, a, b):
+        return a // self.rpn == b // self.rpn
+
+    def send_overhead(self, nbytes, same):
+        net = self.net
+        if same:
+            o, g, big_g = net["o_intra"], net["g_intra"], net["big_g_intra"]
+        else:
+            o, g, big_g = net["o"], net["g"], net["big_g"]
+        return max(o, g) + float(nbytes) * big_g
+
+    def transit(self, same):
+        return self.net["l_intra"] if same else self.net["l"]
+
+    def recv_overhead(self, same):
+        return self.net["o_intra"] if same else self.net["o"]
+
+    def on_buffer_read(self, dst, arrival, same):
+        if arrival > self.clock[dst]:
+            self.comm_wait[dst] += arrival - self.clock[dst]
+            self.clock[dst] = arrival
+        self.clock[dst] += self.recv_overhead(same)
+
+    def after_step(self, r, now, progressed):
+        work = step_time(self.costs, self.prev[r], now)
+        self.prev[r] = now.copy()
+        charged = work if progressed else self.costs["iteration"]
+        self.clock[r] += charged
+        self.compute[r] += charged
+
+    def idle_step(self, r):
+        self.prev[r].iterations += 1
+        self.clock[r] += self.costs["iteration"]
+        self.compute[r] += self.costs["iteration"]
+
+    def on_flush(self, src, dst, nbytes):
+        same = self.same_node(src, dst)
+        self.clock[src] += self.send_overhead(nbytes, same)
+        return self.clock[src] + self.transit(same)
+
+    def allreduce_cost(self, n_ranks):
+        if n_ranks <= 1:
+            return 0.0
+        net = self.net
+        hops = 2.0 * math.ceil(math.log2(n_ranks))
+        node_levels = math.ceil(math.log2(self.rpn))
+        total_levels = math.ceil(math.log2(n_ranks))
+        inter_frac = min(1.0, max(0.0, (total_levels - node_levels) / total_levels))
+        per_hop = inter_frac * (net["l"] + net["o"]) + (1.0 - inter_frac) * (
+            net["l_intra"] + net["o_intra"]
+        )
+        return hops * per_hop
+
+    def on_allreduce(self, sync):
+        self.allreduces += 1
+        cost = self.allreduce_cost(len(self.clock))
+        if sync:
+            t = max(self.clock) + cost if self.clock else cost
+            for i in range(len(self.clock)):
+                self.clock[i] = t
+        else:
+            for i in range(len(self.clock)):
+                self.clock[i] += cost
+
+    def total_time(self):
+        return max(self.clock) if self.clock else 0.0
+
+
+# -------------------------------------------------------------- engine --
+
+DEFAULT_CFG = dict(
+    max_msg_size=10_000,
+    sending_frequency=5,
+    check_frequency=5,
+    empty_iter_cnt_to_break=2048,
+    burst_size=32,
+    ranks_per_node=8,
+    search="hash",
+    separate_test=True,
+    wire="procid",
+    hash_sizing="paper",
+    max_supersteps=5_000_000,
+)
+
+
+def base_version(ranks, **over):
+    cfg = dict(DEFAULT_CFG, n_ranks=ranks, search="linear", separate_test=False, wire="naive")
+    cfg.update(over)
+    return cfg
+
+
+def final_version(ranks, **over):
+    cfg = dict(DEFAULT_CFG, n_ranks=ranks)
+    cfg.update(over)
+    return cfg
+
+
+class Engine:
+    def __init__(self, n, edges, cfg, partition="block"):
+        p = cfg["n_ranks"]
+        part = build_partition(partition, max(n, 1), p, edges)
+        wire = cfg["wire"]
+        if wire == "procid":
+            if not (p <= 256 and per_process_weights_unique(edges, part)):
+                wire = "compact"
+        cfg = dict(cfg, wire=wire)
+        codec = "proc" if wire == "procid" else "special"
+        self.cfg = cfg
+        self.pool = [0]  # idle pooled buffers (shared free list)
+        self.ranks = [Rank(r, n, edges, part, cfg, codec, self.pool) for r in range(p)]
+        costs = dict(COSTS, probe=PROBE_COST[cfg["search"]])
+        self.sim = Sim(p, cfg["ranks_per_node"], costs)
+        self.inboxes = [deque() for _ in range(p)]
+        self.inbox_msgs = 0
+        self.n = n
+        self.edges = edges
+
+    def global_pending(self):
+        return self.inbox_msgs + sum(r.pending_local() for r in self.ranks)
+
+    def run(self):
+        cfg = self.cfg
+        for r in self.ranks:
+            r.wakeup_all()
+        superstep = 0
+        while True:
+            superstep += 1
+            if superstep > cfg["max_supersteps"]:
+                raise RuntimeError(
+                    f"exceeded max_supersteps with {self.global_pending()} pending"
+                )
+            staged = []
+            for rank in self.ranks:
+                r_i = rank.rank
+                rank.superstep = superstep
+                rank.prof.iterations += 1
+                if (
+                    not self.inboxes[r_i]
+                    and rank.queues.active_len() == 0
+                    and not rank.has_dirty_outbox()
+                ):
+                    self.sim.idle_step(r_i)
+                    continue
+                consumed_any = False
+                if self.inboxes[r_i]:
+                    clock = self.sim.clock[r_i]
+                    scratch = self.inboxes[r_i]
+                    self.inboxes[r_i] = deque()
+                    for (src, nbytes, n_msgs, msgs, arrival) in scratch:
+                        if arrival <= clock:
+                            same = self.sim.same_node(src, r_i)
+                            self.sim.on_buffer_read(r_i, arrival, same)
+                            rank.read_buffer(nbytes, msgs)
+                            self.pool[0] = min(self.pool[0] + 1, 1024)
+                            self.inbox_msgs -= n_msgs
+                            consumed_any = True
+                        else:
+                            self.inboxes[r_i].append((src, nbytes, n_msgs, msgs, arrival))
+                progressed = consumed_any
+                burst = min(rank.queues.main_len(), cfg["burst_size"])
+                for _ in range(burst):
+                    msg = rank.queues.pop_main()
+                    if not rank.handle(msg):
+                        rank.prof.msgs_postponed += 1
+                        rank.queues.postpone(msg)
+                    else:
+                        rank.prof.msgs_processed_main += 1
+                        progressed = True
+                        rank.queues.note_done()
+                if rank.queues.separate and superstep % cfg["check_frequency"] == 0:
+                    burst = min(rank.queues.test_len(), cfg["burst_size"])
+                    for _ in range(burst):
+                        msg = rank.queues.pop_test()
+                        if not rank.handle(msg):
+                            rank.prof.msgs_postponed += 1
+                            rank.queues.postpone(msg)
+                        else:
+                            rank.prof.msgs_processed_test += 1
+                            progressed = True
+                            rank.queues.note_done()
+                if not progressed and self.inboxes[r_i]:
+                    min_arrival = min(e[4] for e in self.inboxes[r_i])
+                    if min_arrival > self.sim.clock[r_i]:
+                        self.sim.comm_wait[r_i] += min_arrival - self.sim.clock[r_i]
+                        self.sim.clock[r_i] = min_arrival
+                if superstep % cfg["sending_frequency"] == 0:
+                    rank.flush_all()
+                rank.prof.lookups = rank.lookup.lookups
+                rank.prof.lookup_probes = rank.lookup.probes
+                rank.prof.stash_merges = rank.queues.stash_merges
+                self.sim.after_step(r_i, rank.prof, progressed)
+                for (dst, nbytes, n_msgs, msgs) in rank.flushed:
+                    arrival = self.sim.on_flush(r_i, dst, nbytes)
+                    staged.append((r_i, dst, nbytes, n_msgs, msgs, arrival))
+                rank.flushed = []
+            for (src, dst, nbytes, n_msgs, msgs, arrival) in staged:
+                self.inbox_msgs += n_msgs
+                self.inboxes[dst].append((src, nbytes, n_msgs, msgs, arrival))
+            if superstep % cfg["empty_iter_cnt_to_break"] == 0:
+                for rank in self.ranks:
+                    rank.prof.finish_checks += 1
+                done = self.global_pending() == 0
+                self.sim.on_allreduce(done)
+                if done:
+                    break
+        return self.collect(superstep)
+
+    def collect(self, supersteps):
+        prof = Prof()
+        sent = {}
+        postponed_q = 0
+        for r in self.ranks:
+            r.prof.lookups = r.lookup.lookups
+            r.prof.lookup_probes = r.lookup.probes
+            r.prof.stash_merges = r.queues.stash_merges
+            for f in Prof.FIELDS:
+                setattr(prof, f, getattr(prof, f) + getattr(r.prof, f))
+            for k, v in r.sent_counts.items():
+                sent[k] = sent.get(k, 0) + v
+            postponed_q += r.queues.postponed
+        edges = []
+        for r in self.ranks:
+            edges.extend(r.branch_edges())
+        # Forest must be acyclic.
+        uf = UnionFind(self.n)
+        for (u, v, _w) in edges:
+            assert uf.union(u, v), f"cycle at ({u},{v})"
+        return dict(
+            edges=sorted((min(u, v), max(u, v)) for (u, v, _w) in edges),
+            weight=sum(w for (_u, _v, w) in edges),
+            n_components=uf.n_sets(self.n),
+            sent_total=sum(sent.values()),
+            sent=sent,
+            prof=prof,
+            supersteps=supersteps,
+            sim_time=self.sim.total_time(),
+        )
+
+
+class UnionFind:
+    def __init__(self, n):
+        self.parent = list(range(n))
+
+    def find(self, x):
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        self.parent[ra] = rb
+        return True
+
+    def n_sets(self, n):
+        return len({self.find(x) for x in range(n)})
+
+
+def kruskal(n, edges):
+    order = sorted(edges, key=lambda e: (e[2], sid_of(e[0], e[1])))
+    uf = UnionFind(n)
+    out = []
+    for (u, v, w) in order:
+        if uf.union(u, v):
+            out.append((min(u, v), max(u, v)))
+    return sorted(out), uf.n_sets(n)
+
+
+# ------------------------------------------------------------ harness --
+
+
+def check(label, n, edges, cfg, partition="block"):
+    run = Engine(n, edges, cfg, partition)
+    out = run.run()
+    want_edges, want_comp = kruskal(n, edges)
+    assert out["edges"] == want_edges, f"{label}: forest != Kruskal"
+    assert out["n_components"] == want_comp, f"{label}: components"
+    bound = 5 * n * math.ceil(math.log2(max(n, 2))) + 2 * len(edges)
+    assert out["sent_total"] <= bound, f"{label}: message bound"
+    print(
+        f"  ok {label:55s} msgs={out['sent_total']:7d} postponed={out['prof'].msgs_postponed:6d} "
+        f"ss={out['supersteps']:6d} reuse={out['prof'].buf_reuse}/{out['prof'].buf_reuse + out['prof'].buf_alloc}"
+    )
+    return out
+
+
+def conformance(quick=False):
+    print("== conformance: forest == Kruskal, termination (stash queues)")
+    n7, e7 = workload(7)
+    wires = ["naive", "compact", "procid"]
+    searches = ["linear", "hash"] if quick else ["linear", "binary", "hash"]
+    for wire in wires:
+        for search in searches:
+            for sep in (False, True):
+                for ranks in (1, 4):
+                    cfg = final_version(ranks, wire=wire, search=search, separate_test=sep)
+                    check(f"rmat7/{wire}/{search}/sep={sep}/p={ranks}", n7, e7, cfg)
+    # pow2 hash sizing yields the same forest.
+    check("rmat7/pow2-hash/p=4", n7, e7, final_version(4, hash_sizing="pow2"))
+    # Path graph: deep chains across 2 ranks.
+    np_, ep = path_graph(257, 1)
+    check("path257/final/p=2", np_, ep, final_version(2))
+    # Partition strategies.
+    for spec in ("block", "degree", "hub"):
+        check(f"rmat7/final/p=4/{spec}", n7, e7, final_version(4), partition=spec)
+
+
+def perf_snapshot(scale):
+    """Mirror of coordinator::experiments::perf_snapshot (16 ranks)."""
+    print(f"== perf snapshot, RMAT-{scale}, 16 ranks")
+    n, edges = workload(scale)
+    want_edges, _ = kruskal(n, edges)
+    snap = {}
+    for wire in ("naive", "compact", "procid"):
+        out = Engine(n, edges, base_version(16, wire=wire)).run()
+        assert out["edges"] == want_edges, f"wire {wire}: forest mismatch"
+        snap[f"bytes_{wire}"] = out["prof"].bytes_sent
+        snap[f"msgs_{wire}"] = out["sent_total"]
+    for search in ("linear", "binary", "hash"):
+        out = Engine(n, edges, base_version(16, search=search)).run()
+        assert out["edges"] == want_edges, f"search {search}: forest mismatch"
+        snap[f"probes_{search}"] = out["prof"].lookup_probes
+        if search == "linear":
+            snap["lookups"] = out["prof"].lookups
+    for sep in (False, True):
+        out = Engine(n, edges, final_version(16, separate_test=sep)).run()
+        assert out["edges"] == want_edges, f"sep {sep}: forest mismatch"
+        if sep:
+            snap["postponed_separate"] = out["prof"].msgs_postponed
+            p = out["prof"]
+            snap.update(
+                decode_batches=p.decode_batches,
+                msgs_decoded=p.msgs_decoded,
+                buf_reuse=p.buf_reuse,
+                buf_alloc=p.buf_alloc,
+                stash_merges=p.stash_merges,
+                supersteps=out["supersteps"],
+            )
+        else:
+            snap["postponed_unified"] = out["prof"].msgs_postponed
+    for k in sorted(snap):
+        print(f"  {k:22s} = {snap[k]}")
+    # The orderings tests/perf_regression.rs pins:
+    assert snap["bytes_naive"] > snap["bytes_compact"], snap
+    assert snap["bytes_compact"] >= snap["bytes_procid"], snap
+    assert 2 * snap["probes_hash"] < snap["probes_linear"], snap
+    assert snap["probes_binary"] < snap["probes_linear"], snap
+    assert snap["postponed_separate"] <= snap["postponed_unified"], snap
+    assert snap["decode_batches"] > 0 and snap["msgs_decoded"] > snap["decode_batches"], snap
+    assert snap["buf_reuse"] > 0, snap
+    print("  orderings OK (Naive>Compact bytes; Linear>Hash/Binary probes; sep<=unified)")
+    return snap
+
+
+def partition_counters():
+    print("== partition baseline engine counters, RMAT-10, 16 ranks, final version")
+    n, edges = workload(10)
+    want_edges, _ = kruskal(n, edges)
+    rows = {}
+    for spec in ("block", "degree", "hub"):
+        out = Engine(n, edges, final_version(16), partition=spec).run()
+        assert out["edges"] == want_edges, f"{spec}: forest mismatch"
+        rows[spec] = out
+        s = out["sent"]
+        print(
+            f"  {spec:7s} msgs={out['sent_total']} (T={s.get('T',0)}, P={s.get('P',0)}, "
+            f"C={s.get('C',0)}) postponed={out['prof'].msgs_postponed} "
+            f"ss={out['supersteps']} sim={out['sim_time']*1e3:.3f}ms "
+            f"reuse={out['prof'].buf_reuse}/{out['prof'].buf_reuse+out['prof'].buf_alloc} "
+            f"batches={out['prof'].decode_batches} decoded={out['prof'].msgs_decoded}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    sm = SplitMix64(0)
+    assert sm.next_u64() == 0xE220A8397B1DCDAF
+    assert sm.next_u64() == 0x6E789E6AA1B965F4
+    conformance(quick)
+    snap8 = perf_snapshot(8)
+    if not quick:
+        snap9 = perf_snapshot(9)
+        partition_counters()
+    print("ALL CHECKS PASSED")

@@ -351,6 +351,152 @@ pub fn ablation_test_queue(opts: &ExpOptions) -> Result<Table> {
     Ok(t)
 }
 
+/// Deterministic counter snapshot behind the bench-baseline harness
+/// (ROADMAP "Bench harness for Fig 2–5"): the paper's optimization
+/// ordering expressed on *message/probe counters* instead of wall-clock,
+/// so it can gate CI without timing flakiness. One RMAT workload at
+/// `opts.scale` (fixed seed via [`Workload::new`]), 16 ranks (2 nodes).
+///
+/// Shared by `ghs-mst perf-baseline` (the `results/perf_baseline.md`
+/// snapshot) and `tests/perf_regression.rs` (the orderings gate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PerfSnapshot {
+    /// Encoded bytes sent per wire format (base version otherwise).
+    pub bytes_naive: u64,
+    pub bytes_compact: u64,
+    pub bytes_procid: u64,
+    /// Messages sent per wire format (to read the bytes in context).
+    pub msgs_naive: u64,
+    pub msgs_compact: u64,
+    pub msgs_procid: u64,
+    /// Lookup probes per search strategy (base version otherwise).
+    pub probes_linear: u64,
+    pub probes_binary: u64,
+    pub probes_hash: u64,
+    pub lookups: u64,
+    /// Postponement churn with the §3.4 Test queue off / on (final
+    /// version otherwise).
+    pub postponed_unified: u64,
+    pub postponed_separate: u64,
+    /// Pipeline counters of the final-version run.
+    pub decode_batches: u64,
+    pub msgs_decoded: u64,
+    pub buf_reuse: u64,
+    pub buf_alloc: u64,
+    pub stash_merges: u64,
+    pub supersteps: u64,
+}
+
+/// Number of ranks the perf baseline runs on.
+pub const PERF_BASELINE_RANKS: u32 = 16;
+
+/// Collect the [`PerfSnapshot`] counter matrix (3 wire formats + 3 search
+/// strategies + Test queue on/off = 8 sequential-engine runs, all
+/// deterministic at the workload's fixed seed).
+pub fn perf_snapshot(opts: &ExpOptions) -> Result<PerfSnapshot> {
+    let w = Workload::new(GraphFamily::Rmat, opts.scale);
+    opts.progress(&format!("perf baseline: generating {}", w.label()));
+    let clean = w.build();
+    let r = PERF_BASELINE_RANKS;
+    let mut snap = PerfSnapshot::default();
+
+    // Wire-format sweep on the base version (§3.5 ablation).
+    use crate::ghs::wire::WireFormat;
+    for (i, wire) in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId]
+        .into_iter()
+        .enumerate()
+    {
+        opts.progress(&format!("perf baseline: wire {wire:?}"));
+        let mut cfg = GhsConfig::base_version(r);
+        cfg.wire_format = wire;
+        let run = run_config(opts, &clean, cfg, i == 0)?;
+        let (bytes, msgs) = (run.profile.bytes_sent, run.sent.total());
+        match wire {
+            WireFormat::Naive => (snap.bytes_naive, snap.msgs_naive) = (bytes, msgs),
+            WireFormat::CompactSpecialId => {
+                (snap.bytes_compact, snap.msgs_compact) = (bytes, msgs)
+            }
+            WireFormat::CompactProcId => (snap.bytes_procid, snap.msgs_procid) = (bytes, msgs),
+        }
+    }
+
+    // Search-strategy sweep on the base version (§3.3/§4.1 ablation).
+    for search in [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash] {
+        opts.progress(&format!("perf baseline: search {search:?}"));
+        let mut cfg = GhsConfig::base_version(r);
+        cfg.search = search;
+        let run = run_config(opts, &clean, cfg, false)?;
+        match search {
+            SearchStrategy::Linear => {
+                snap.probes_linear = run.profile.lookup_probes;
+                snap.lookups = run.profile.lookups;
+            }
+            SearchStrategy::Binary => snap.probes_binary = run.profile.lookup_probes,
+            SearchStrategy::Hash => snap.probes_hash = run.profile.lookup_probes,
+        }
+    }
+
+    // Test-queue ablation on the final version (§3.4).
+    for separate in [false, true] {
+        opts.progress(&format!("perf baseline: test queue {separate}"));
+        let mut cfg = GhsConfig::final_version(r);
+        cfg.separate_test_queue = separate;
+        let run = run_config(opts, &clean, cfg, false)?;
+        if separate {
+            snap.postponed_separate = run.profile.msgs_postponed;
+            // Pipeline counters come from the full final version.
+            snap.decode_batches = run.profile.decode_batches;
+            snap.msgs_decoded = run.profile.msgs_decoded;
+            snap.buf_reuse = run.profile.buf_reuse;
+            snap.buf_alloc = run.profile.buf_alloc;
+            snap.stash_merges = run.profile.stash_merges;
+            snap.supersteps = run.supersteps;
+        } else {
+            snap.postponed_unified = run.profile.msgs_postponed;
+        }
+    }
+    Ok(snap)
+}
+
+/// Render the [`PerfSnapshot`] as the `results/perf_baseline.md` table.
+pub fn perf_baseline(opts: &ExpOptions) -> Result<Table> {
+    let snap = perf_snapshot(opts)?;
+    let mut t = Table::new(
+        format!(
+            "Perf baseline — deterministic message/probe counters, RMAT-{} on {} ranks",
+            opts.scale, PERF_BASELINE_RANKS
+        ),
+        &["Axis", "Config", "Counter", "Value"],
+    );
+    let row = |t: &mut Table, axis: &str, cfg: &str, counter: &str, v: u64| {
+        t.push_row(vec![axis.into(), cfg.into(), counter.into(), v.to_string()]);
+    };
+    row(&mut t, "wire (§3.5)", "Naive", "bytes sent", snap.bytes_naive);
+    row(&mut t, "wire (§3.5)", "CompactSpecialId", "bytes sent", snap.bytes_compact);
+    row(&mut t, "wire (§3.5)", "CompactProcId", "bytes sent", snap.bytes_procid);
+    row(&mut t, "wire (§3.5)", "Naive", "messages", snap.msgs_naive);
+    row(&mut t, "wire (§3.5)", "CompactSpecialId", "messages", snap.msgs_compact);
+    row(&mut t, "wire (§3.5)", "CompactProcId", "messages", snap.msgs_procid);
+    row(&mut t, "lookup (§3.3)", "Linear", "probes", snap.probes_linear);
+    row(&mut t, "lookup (§3.3)", "Binary", "probes", snap.probes_binary);
+    row(&mut t, "lookup (§3.3)", "Hash", "probes", snap.probes_hash);
+    row(&mut t, "test queue (§3.4)", "unified", "postponed", snap.postponed_unified);
+    row(&mut t, "test queue (§3.4)", "separate", "postponed", snap.postponed_separate);
+    row(&mut t, "pipeline", "final", "decode batches", snap.decode_batches);
+    row(&mut t, "pipeline", "final", "msgs decoded", snap.msgs_decoded);
+    row(&mut t, "pipeline", "final", "buffers reused", snap.buf_reuse);
+    row(&mut t, "pipeline", "final", "buffers allocated", snap.buf_alloc);
+    row(&mut t, "pipeline", "final", "stash merges", snap.stash_merges);
+    row(&mut t, "pipeline", "final", "supersteps", snap.supersteps);
+    t.note(
+        "Pinned orderings (tests/perf_regression.rs): Naive > CompactSpecialId >= \
+         CompactProcId encoded bytes; Linear > Binary and Linear > Hash lookup probes; \
+         separate-Test-queue postponement <= unified. All counters are deterministic in \
+         the fixed workload seed — no wall-clock flakiness.",
+    );
+    Ok(t)
+}
+
 /// **§4.1**: local-edge search strategy sweep (linear vs binary vs hash)
 /// on one node — the paper reports −2 % (binary) and −18 % (hash).
 pub fn sweep_search(opts: &ExpOptions) -> Result<Table> {
@@ -440,6 +586,24 @@ mod tests {
         let e0: u64 = t.rows.first().unwrap()[2].parse().unwrap();
         let e1: u64 = t.rows.last().unwrap()[2].parse().unwrap();
         assert!(e1 > e0);
+    }
+
+    #[test]
+    fn perf_snapshot_orderings_hold_at_tiny_scale() {
+        // The full-size gate lives in tests/perf_regression.rs; this pins
+        // the same orderings at the unit-test scale.
+        let snap = perf_snapshot(&tiny_opts()).unwrap();
+        assert!(snap.bytes_naive > snap.bytes_compact, "{snap:?}");
+        assert!(snap.probes_hash < snap.probes_linear, "{snap:?}");
+        assert!(snap.postponed_separate <= snap.postponed_unified, "{snap:?}");
+        assert!(snap.decode_batches > 0 && snap.buf_reuse > 0, "{snap:?}");
+    }
+
+    #[test]
+    fn perf_baseline_table_shape() {
+        let t = perf_baseline(&tiny_opts()).unwrap();
+        assert_eq!(t.rows.len(), 17, "6 wire + 3 lookup + 2 queue + 6 pipeline rows");
+        assert_eq!(t.header.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! Recycled aggregation-buffer pool.
+//!
+//! Every flush used to move a `Vec<u8>` out of the outbox and leave a
+//! fresh, capacity-less vector behind — one heap allocation (plus growth
+//! re-allocations) per flushed packet, on both engines' hot paths. The
+//! pool closes that loop: consumers return spent packet buffers after
+//! decoding, and [`RankState::flush_one`](crate::ghs::rank::RankState)
+//! takes its outbox replacement from the pool, so in steady state buffers
+//! round-trip sender → interconnect → receiver → pool → sender with zero
+//! per-packet heap allocation (capacity is retained across trips).
+//!
+//! One pool is shared by all ranks of a run (`Arc`): in the threaded
+//! engine the receiving thread returns buffers that any sender may reuse.
+//! The `Mutex` is uncontended in practice — it is taken once per
+//! aggregated packet (thousands of messages), not per message.
+
+use std::sync::Mutex;
+
+/// Keep at most this many idle buffers (bounds worst-case retained memory
+/// to `MAX_POOLED × max_msg_size`; beyond it, buffers just drop).
+const MAX_POOLED: usize = 1024;
+
+/// A shared free list of spent aggregation buffers.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a cleared buffer; the flag is `true` when it was recycled from
+    /// the pool (capacity retained) rather than freshly created.
+    pub fn get(&self) -> (Vec<u8>, bool) {
+        // A poisoned lock (a panicking peer thread) degrades to fresh
+        // allocations rather than propagating the panic.
+        match self.free.lock().ok().and_then(|mut f| f.pop()) {
+            Some(buf) => (buf, true),
+            None => (Vec::new(), false),
+        }
+    }
+
+    /// Return a spent buffer to the pool (cleared, capacity kept).
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        if let Ok(mut f) = self.free.lock() {
+            if f.len() < MAX_POOLED {
+                f.push(buf);
+            }
+        }
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.free.lock().map(|f| f.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_retains_capacity() {
+        let pool = BufferPool::new();
+        let (mut a, hit) = pool.get();
+        assert!(!hit, "empty pool allocates");
+        a.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let (b, hit) = pool.get();
+        assert!(hit, "second get recycles");
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert!(b.capacity() >= cap.min(4));
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn capacityless_buffers_are_not_pooled() {
+        let pool = BufferPool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new());
+        let p2 = Arc::clone(&pool);
+        let h = std::thread::spawn(move || {
+            let mut b = Vec::with_capacity(64);
+            b.push(7u8);
+            p2.put(b);
+        });
+        h.join().unwrap();
+        let (b, hit) = pool.get();
+        assert!(hit && b.is_empty() && b.capacity() >= 64);
+    }
+}

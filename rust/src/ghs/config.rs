@@ -5,26 +5,53 @@ use crate::ghs::edge_lookup::SearchStrategy;
 use crate::ghs::wire::WireFormat;
 use crate::graph::partition::PartitionSpec;
 
-/// Hash table sizing. Paper default: `local_actual_m * 5 * 11 / 13` slots,
-/// "several times larger than the number of local edges".
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct HashTableSizing {
-    pub numerator: u64,
-    pub denominator: u64,
+/// Hash table sizing for the §3.3 edge-lookup table.
+///
+/// The paper's formula (`Modulo`, the default for fidelity) produces
+/// arbitrary sizes indexed with `key % size` — an integer division on
+/// every probe. `PowerOfTwo` rounds the size up to the next power of two
+/// so [`EdgeLookup`](crate::ghs::edge_lookup::EdgeLookup) can index with
+/// `key & (size - 1)` instead (identical arithmetic on power-of-two sizes,
+/// one cheap AND per probe) at a ≤ 0.5 load factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashTableSizing {
+    /// Paper default: `local_actual_m * numerator / denominator` slots
+    /// ("several times larger than the number of local edges"; the paper's
+    /// factor is `5 * 11 / 13` ≈ 4.23×), `% size` probing.
+    Modulo { numerator: u64, denominator: u64 },
+    /// Next power of two ≥ `2 * local_m` (load factor ≤ 0.5), mask probing.
+    PowerOfTwo,
 }
 
 impl Default for HashTableSizing {
     fn default() -> Self {
-        Self { numerator: 5 * 11, denominator: 13 }
+        Self::Modulo { numerator: 5 * 11, denominator: 13 }
     }
 }
 
 impl HashTableSizing {
-    /// Table size for `local_m` local edges (≥ local_m + 1 so probing
-    /// always terminates; the default factor ≈ 4.23× guarantees this).
+    /// Table size for `local_m` local edges (always ≥ local_m + 1 so
+    /// open-addressing probes terminate; the default factor ≈ 4.23× and
+    /// the 2× power-of-two floor both guarantee this).
     pub fn table_size(&self, local_m: usize) -> u64 {
-        let raw = (local_m as u64).saturating_mul(self.numerator) / self.denominator;
-        raw.max(local_m as u64 + 1).max(8)
+        match *self {
+            HashTableSizing::Modulo { numerator, denominator } => {
+                let raw = (local_m as u64).saturating_mul(numerator) / denominator;
+                raw.max(local_m as u64 + 1).max(8)
+            }
+            HashTableSizing::PowerOfTwo => {
+                (local_m as u64).saturating_mul(2).next_power_of_two().max(8)
+            }
+        }
+    }
+
+    /// Parse a sizing mode name (`paper`/`modulo` or `pow2`/`power-of-two`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "paper" | "modulo" | "mod" => Some(Self::default()),
+            "pow2" | "power-of-two" | "poweroftwo" => Some(Self::PowerOfTwo),
+            _ => None,
+        }
     }
 }
 
@@ -145,6 +172,26 @@ mod tests {
         // Never smaller than m+1.
         assert!(s.table_size(1) >= 2);
         assert!(s.table_size(0) >= 8);
+    }
+
+    #[test]
+    fn hash_sizing_power_of_two() {
+        let s = HashTableSizing::PowerOfTwo;
+        for m in [0usize, 1, 7, 8, 1000, 13_000] {
+            let size = s.table_size(m);
+            assert!(size.is_power_of_two(), "m={m}: size {size}");
+            assert!(size > m as u64, "probing must terminate (m={m})");
+            assert!(size >= 8);
+        }
+        assert_eq!(s.table_size(1000), 2048, "next pow2 above 2*m");
+    }
+
+    #[test]
+    fn hash_sizing_parses() {
+        assert_eq!(HashTableSizing::parse("paper"), Some(HashTableSizing::default()));
+        assert_eq!(HashTableSizing::parse("POW2"), Some(HashTableSizing::PowerOfTwo));
+        assert_eq!(HashTableSizing::parse("power-of-two"), Some(HashTableSizing::PowerOfTwo));
+        assert_eq!(HashTableSizing::parse("huge"), None);
     }
 
     #[test]

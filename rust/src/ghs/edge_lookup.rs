@@ -58,8 +58,23 @@ pub enum EdgeLookup {
     /// `key = (src << 32) | dst` — matching on the stored key avoids
     /// dereferencing the CSR on every probe. `idx = 0` marks empty; `key`
     /// can never collide with a live 0 because self-loops are removed, so
-    /// `(0, 0)` is not an edge.
-    Hash { table: Vec<(u64, u64)>, size: u64 },
+    /// `(0, 0)` is not an edge. When the table size is a power of two
+    /// (always under [`HashTableSizing::PowerOfTwo`]) `mask = size - 1`
+    /// and probing indexes with `key & mask` — the same value `key % size`
+    /// yields on power-of-two sizes, without the per-probe division.
+    /// Otherwise `mask = 0` and the paper's `% size` formula is used.
+    Hash { table: Vec<(u64, u64)>, size: u64, mask: u64 },
+}
+
+/// Table index of `key` — mask when the size is a power of two, the
+/// paper's modulo otherwise. Bit-identical on power-of-two sizes.
+#[inline]
+fn table_index(key: u64, size: u64, mask: u64) -> u64 {
+    if mask != 0 {
+        key & mask
+    } else {
+        key % size
+    }
 }
 
 impl EdgeLookup {
@@ -73,6 +88,7 @@ impl EdgeLookup {
             SearchStrategy::Binary => EdgeLookup::Binary,
             SearchStrategy::Hash => {
                 let size = sizing.table_size(csr.nnz());
+                let mask = if size.is_power_of_two() { size - 1 } else { 0 };
                 let mut table = vec![(0u64, 0u64); size as usize];
                 for row in 0..csr.rows() {
                     let v = csr.vertex_of(row);
@@ -80,17 +96,17 @@ impl EdgeLookup {
                         // Keyed by (sender u, receiver v): the direction a
                         // message travels.
                         let key = ((u as u64) << 32) | v as u64;
-                        let mut slot = key % size;
+                        let mut slot = table_index(key, size, mask);
                         loop {
                             if table[slot as usize].1 == 0 {
                                 table[slot as usize] = (key, i as u64 + 1);
                                 break;
                             }
-                            slot = (slot + 1) % size;
+                            slot = table_index(slot + 1, size, mask);
                         }
                     }
                 }
-                EdgeLookup::Hash { table, size }
+                EdgeLookup::Hash { table, size, mask }
             }
         }
     }
@@ -130,9 +146,9 @@ impl EdgeLookup {
                 }
                 None
             }
-            EdgeLookup::Hash { table, size } => {
+            EdgeLookup::Hash { table, size, mask } => {
                 let key = ((src as u64) << 32) | dst as u64;
-                let mut slot = key % size;
+                let mut slot = table_index(key, *size, *mask);
                 loop {
                     stats.probes += 1;
                     let (k, idx) = table[slot as usize];
@@ -142,7 +158,7 @@ impl EdgeLookup {
                     if k == key {
                         return Some((idx - 1) as usize);
                     }
-                    slot = (slot + 1) % size;
+                    slot = table_index(slot + 1, *size, *mask);
                 }
             }
         }
@@ -162,6 +178,7 @@ mod tests {
             EdgeLookup::build(SearchStrategy::Linear, csr, HashTableSizing::default()),
             EdgeLookup::build(SearchStrategy::Binary, csr, HashTableSizing::default()),
             EdgeLookup::build(SearchStrategy::Hash, csr, HashTableSizing::default()),
+            EdgeLookup::build(SearchStrategy::Hash, csr, HashTableSizing::PowerOfTwo),
         ]
     }
 
@@ -224,6 +241,45 @@ mod tests {
             sh.probes,
             sl.probes
         );
+    }
+
+    #[test]
+    fn pow2_sizing_uses_mask_and_finds_everything() {
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 9, 11));
+        let csr = Csr::full(&g);
+        let lookup = EdgeLookup::build(SearchStrategy::Hash, &csr, HashTableSizing::PowerOfTwo);
+        match &lookup {
+            EdgeLookup::Hash { size, mask, .. } => {
+                assert!(size.is_power_of_two());
+                assert_eq!(*mask, size - 1, "pow2 tables index by mask");
+                assert!(*size > csr.nnz() as u64);
+            }
+            _ => panic!("expected hash lookup"),
+        }
+        let mut stats = LookupStats::default();
+        for e in &g.edges {
+            assert!(lookup.find(&csr, e.u, e.v, &mut stats).is_some());
+            assert!(lookup.find(&csr, e.v, e.u, &mut stats).is_some());
+        }
+        // Load factor <= 0.5: short probe chains.
+        assert!(
+            stats.probes < 2 * stats.lookups,
+            "pow2 table at <=0.5 load: {} probes / {} lookups",
+            stats.probes,
+            stats.lookups
+        );
+    }
+
+    #[test]
+    fn mask_and_modulo_agree_on_pow2_sizes() {
+        // The mask fast path must be arithmetic-identical to the paper's
+        // `% size` on power-of-two sizes (the correctness argument for
+        // keeping one probe sequence).
+        for key in [0u64, 1, 7, 63, 64, 65, u64::MAX, 0xDEAD_BEEF_0000_0001] {
+            for size in [8u64, 64, 1 << 20] {
+                assert_eq!(super::table_index(key, size, size - 1), key % size);
+            }
+        }
     }
 
     #[test]

@@ -5,8 +5,31 @@
 //! number of the receiving vertex, as well as the message type." (§3.2)
 
 use crate::ghs::types::{Level, VertexState};
-use crate::ghs::weight::FragmentId;
+use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::graph::VertexId;
+
+/// Pack a message header into the §3.5 16-bit layout: 3 b type tag at bits
+/// 0..3, 5 b level at 3..8, 1 b state at bit 8, 7 b reserved (zero). This
+/// is both the compact wire header and the flattened form the queue slots
+/// store (see [`crate::ghs::queues::RankQueues`]).
+#[inline]
+pub fn pack_meta(tag: u8, level: Level, state: u8) -> u16 {
+    tag as u16 | (level as u16) << 3 | (state as u16) << 8
+}
+
+/// Type tag of a packed header.
+#[inline]
+pub fn meta_tag(meta: u16) -> u8 {
+    (meta & 0b111) as u8
+}
+
+/// Mask selecting the meaningful bits of a packed header (tag + level +
+/// state; the 7 reserved bits are zero).
+pub const META_MASK: u16 = 0x01FF;
+
+/// The wire type tag of `Test` messages (used for queue routing without
+/// materializing a [`Payload`]).
+pub const TAG_TEST: u8 = 2;
 
 /// Message payload (the GHS argument list per type).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,6 +71,45 @@ impl Payload {
             self,
             Payload::Initiate { .. } | Payload::Test { .. } | Payload::Report { .. }
         )
+    }
+
+    /// Flatten into the SoA slot form: packed 16-bit header plus the weight
+    /// field. Short payloads (no weight on the wire) carry the infinity
+    /// sentinel, which [`Payload::from_meta`] ignores — so
+    /// `from_meta(to_meta(p)) == p` for every payload.
+    pub fn to_meta(&self) -> (u16, FragmentId) {
+        match *self {
+            Payload::Connect { level } => (pack_meta(0, level, 0), EdgeWeight::infinity()),
+            Payload::Initiate { level, fragment, state } => {
+                (pack_meta(1, level, (state == VertexState::Find) as u8), fragment)
+            }
+            Payload::Test { level, fragment } => (pack_meta(2, level, 0), fragment),
+            Payload::Accept => (pack_meta(3, 0, 0), EdgeWeight::infinity()),
+            Payload::Reject => (pack_meta(4, 0, 0), EdgeWeight::infinity()),
+            Payload::Report { best } => (pack_meta(5, 0, 0), best),
+            Payload::ChangeCore => (pack_meta(6, 0, 0), EdgeWeight::infinity()),
+        }
+    }
+
+    /// Rebuild a payload from the flattened slot form (inverse of
+    /// [`Payload::to_meta`]; also the shared wire-decode assembler).
+    pub fn from_meta(meta: u16, weight: FragmentId) -> Payload {
+        let level = ((meta >> 3) & 0b1_1111) as Level;
+        let state = ((meta >> 8) & 1) as u8;
+        match meta_tag(meta) {
+            0 => Payload::Connect { level },
+            1 => Payload::Initiate {
+                level,
+                fragment: weight,
+                state: if state == 1 { VertexState::Find } else { VertexState::Found },
+            },
+            2 => Payload::Test { level, fragment: weight },
+            3 => Payload::Accept,
+            4 => Payload::Reject,
+            5 => Payload::Report { best: weight },
+            6 => Payload::ChangeCore,
+            t => panic!("invalid message tag {t}"),
+        }
     }
 
     /// Human-readable type name.
@@ -162,6 +224,29 @@ mod tests {
         assert!(Payload::Initiate { level: 0, fragment: f, state: VertexState::Found }.is_long());
         assert!(Payload::Test { level: 0, fragment: f }.is_long());
         assert!(Payload::Report { best: f }.is_long());
+    }
+
+    #[test]
+    fn meta_roundtrip_all_payloads() {
+        let w = EdgeWeight::new(0.5, 3, 9);
+        let payloads = [
+            Payload::Connect { level: 0 },
+            Payload::Connect { level: 31 },
+            Payload::Initiate { level: 7, fragment: w, state: VertexState::Find },
+            Payload::Initiate { level: 7, fragment: w, state: VertexState::Found },
+            Payload::Test { level: 4, fragment: w },
+            Payload::Accept,
+            Payload::Reject,
+            Payload::Report { best: w },
+            Payload::Report { best: EdgeWeight::infinity() },
+            Payload::ChangeCore,
+        ];
+        for p in payloads {
+            let (meta, weight) = p.to_meta();
+            assert_eq!(meta & !META_MASK, 0, "reserved bits are zero");
+            assert_eq!(meta_tag(meta), p.type_tag());
+            assert_eq!(Payload::from_meta(meta, weight), p, "{p:?}");
+        }
     }
 
     #[test]

@@ -4,15 +4,20 @@
 //! * [`types`] — vertex/edge state enums and levels
 //! * [`weight`] — unique extended weights / fragment identities
 //! * [`message`] — the seven GHS message types
-//! * [`wire`] — compact (80/152-bit) and naive wire encodings (§3.5)
+//! * [`wire`] — compact (80/152-bit) and naive wire encodings (§3.5),
+//!   including batch decode straight into queue slots
 //! * [`edge_lookup`] — linear / binary / hash local-edge search (§3.3)
-//! * [`queues`] — main + separate Test queue with postponement (§3.4)
+//! * [`queues`] — index-linked SoA queues: main + separate Test queue with
+//!   postponed stashes (§3.4)
+//! * [`bufpool`] — recycled aggregation-buffer free list (zero per-packet
+//!   allocation in steady state)
 //! * [`vertex`] — the per-vertex GHS automaton (GHS83 rules + forest halt)
 //! * [`rank`] — per-rank (simulated MPI process) state incl. aggregation
 //! * [`engine`] — the superstep engine with silence termination
 //! * [`parallel`] — threaded engine (one OS thread per rank)
 //! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
 
+pub mod bufpool;
 pub mod config;
 pub mod edge_lookup;
 pub mod engine;

@@ -9,15 +9,24 @@
 //! completes without postponement. When the counter is zero the network is
 //! silent and every thread exits (the distributed analogue is the paper's
 //! `MPI_Allreduce` check every `EMPTY_ITER_CNT_TO_BREAK` iterations).
+//!
+//! A drained rank (nothing readable, poppable, or flushable) does not
+//! busy-spin `try_recv`: after a short yield window it parks on its
+//! channel via `recv_timeout` with exponential backoff
+//! ([`PARK_MIN_US`]..[`PARK_MAX_US`]), waking instantly on traffic and
+//! checking the silence counter before every park. Park events are
+//! recorded in `ProfileCounters::parked`.
 
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::baseline::union_find::UnionFind;
 use crate::baseline::Forest;
+use crate::ghs::bufpool::BufferPool;
 use crate::ghs::config::GhsConfig;
 use crate::ghs::message::MessageCounts;
 use crate::ghs::rank::RankState;
@@ -29,6 +38,16 @@ use crate::graph::preprocess::is_simple;
 use crate::graph::EdgeList;
 
 type Packet = (u32, Vec<u8>, u32); // (src, bytes, n_msgs)
+
+/// Idle iterations spent merely yielding before the rank starts parking on
+/// its channel (cheap spin window for sub-µs turnarounds).
+const SPIN_YIELDS: u32 = 4;
+/// First park timeout; doubles per consecutive timeout (exponential
+/// backoff) up to [`PARK_MAX_US`].
+const PARK_MIN_US: u64 = 50;
+/// Park timeout ceiling — bounds how stale a parked rank's view of the
+/// global-silence counter can get.
+const PARK_MAX_US: u64 = 2_000;
 
 /// Run GHS with one thread per rank. The graph must be preprocessed.
 pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
@@ -63,9 +82,13 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     // counter cannot hit zero before any work is injected.
     let pending = Arc::new(AtomicI64::new(p as i64));
 
+    // One shared buffer pool: receivers return spent packet buffers, any
+    // sender's next flush reuses them.
+    let pool = Arc::new(BufferPool::new());
     let mut handles = Vec::with_capacity(p);
     for (rank_id, rx) in receivers.into_iter().enumerate() {
         let mut rank = RankState::new(rank_id as u32, g, part.clone(), &config, codec);
+        rank.pool = Arc::clone(&pool);
         let senders = senders.clone();
         let pending = Arc::clone(&pending);
         let max_iters = config.max_supersteps;
@@ -107,6 +130,8 @@ fn run_rank(
     pending.fetch_sub(1, Ordering::AcqRel); // release the startup token
 
     let mut iter: u64 = 0;
+    let mut idle_streak: u32 = 0;
+    let mut park_us: u64 = PARK_MIN_US;
     loop {
         iter += 1;
         rank.prof.iterations += 1;
@@ -114,9 +139,14 @@ fn run_rank(
             bail!("rank {}: exceeded max iterations {max_iters}", rank.rank);
         }
         // read_msgs
+        let mut received = false;
         loop {
             match rx.try_recv() {
-                Ok((_src, buf, _n)) => rank.read_buffer(&buf),
+                Ok((_src, buf, _n)) => {
+                    rank.read_buffer(&buf);
+                    rank.pool.put(buf);
+                    received = true;
+                }
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
@@ -133,6 +163,7 @@ fn run_rank(
                 rank.queues.postpone(msg);
             } else {
                 pending.fetch_sub(1, Ordering::AcqRel);
+                rank.queues.note_done();
             }
         }
         // Test queue (§3.4)
@@ -149,6 +180,7 @@ fn run_rank(
                     rank.queues.postpone(msg);
                 } else {
                     pending.fetch_sub(1, Ordering::AcqRel);
+                    rank.queues.note_done();
                 }
             }
         }
@@ -157,6 +189,7 @@ fn run_rank(
             rank.superstep = iter;
             rank.flush_all();
         }
+        let flushed_any = !rank.flushed.is_empty();
         for (dst, buf, n) in rank.flushed.drain(..) {
             // Channel send failure means the peer exited after global
             // silence; that cannot happen while messages are pending.
@@ -168,7 +201,48 @@ fn run_rank(
             if pending.load(Ordering::Acquire) == 0 {
                 return Ok(());
             }
+        }
+        // Idle backoff: a rank with nothing to read, pop, or flush used to
+        // busy-spin `try_recv`, pegging one core per drained rank. Spin a
+        // few yields for sub-µs turnarounds, then park on the channel with
+        // an exponentially growing timeout. Stash-only queues count as
+        // idle: postponed messages can only be unblocked by new traffic,
+        // which is exactly what the park wakes on.
+        let idle = !received
+            && burst == 0
+            && rank.queues.active_len() == 0
+            && !rank.has_dirty_outbox()
+            && !flushed_any;
+        if !idle {
+            idle_streak = 0;
+            park_us = PARK_MIN_US;
+            continue;
+        }
+        idle_streak += 1;
+        if idle_streak <= SPIN_YIELDS {
             std::thread::yield_now();
+            continue;
+        }
+        // About to block: notice global silence promptly (the cadence
+        // check above is far too coarse once iterations become parks).
+        rank.prof.finish_checks += 1;
+        if pending.load(Ordering::Acquire) == 0 {
+            return Ok(());
+        }
+        rank.prof.parked += 1;
+        match rx.recv_timeout(Duration::from_micros(park_us)) {
+            Ok((_src, buf, _n)) => {
+                rank.read_buffer(&buf);
+                rank.pool.put(buf);
+                idle_streak = 0;
+                park_us = PARK_MIN_US;
+            }
+            // Disconnected is unreachable here — every rank holds a clone
+            // of all senders (including its own) for the whole loop — so
+            // it gets the same backoff treatment as a timeout.
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                park_us = (park_us * 2).min(PARK_MAX_US);
+            }
         }
     }
 }
@@ -182,6 +256,7 @@ fn collect(
     for r in &mut ranks {
         r.prof.lookups = r.lookup_stats.lookups;
         r.prof.lookup_probes = r.lookup_stats.probes;
+        r.prof.stash_merges = r.queues.stash_merges;
     }
     let mut edges = Vec::new();
     for r in &ranks {
@@ -278,6 +353,36 @@ mod tests {
             assert_eq!(run.forest.canonical_edges(), oracle, "{}", spec.label());
             assert_eq!(run.partition.n_ranks, 4);
         }
+    }
+
+    #[test]
+    fn idle_ranks_park_instead_of_spinning() {
+        // Regression for the idle-burn bug: a drained rank used to
+        // busy-spin `try_recv` between finish checks, pegging one core per
+        // rank. On a long 2-rank path graph the merge cascade leaves each
+        // rank repeatedly waiting on its peer, so parks must be recorded.
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(23);
+        let g = structured::path(4096, &mut rng);
+        let (clean, _) = preprocess(&g);
+        let run = run_threaded(&clean, cfg(2)).unwrap();
+        let oracle = kruskal(&clean);
+        assert_eq!(run.forest.canonical_edges(), oracle.canonical_edges());
+        assert!(
+            run.profile.parked > 0,
+            "drained ranks must park on their channel, not busy-spin"
+        );
+    }
+
+    #[test]
+    fn packet_buffers_are_recycled_across_threads() {
+        let g = generate(GraphFamily::Rmat, 8, 5);
+        let (clean, _) = preprocess(&g);
+        let run = run_threaded(&clean, cfg(4)).unwrap();
+        let p = &run.profile;
+        assert!(p.decode_batches > 0 && p.msgs_decoded >= p.decode_batches);
+        assert_eq!(p.buf_reuse + p.buf_alloc, p.flushes);
+        assert!(p.buf_reuse > 0, "packets must round-trip through the shared pool");
+        assert!(p.buffer_reuse_rate() > 0.0);
     }
 
     #[test]

@@ -1,72 +1,302 @@
-//! Message queues with postponement (paper §3.2/§3.4).
+//! Message queues with postponement (paper §3.2/§3.4), stored as one
+//! index-linked SoA slot arena.
 //!
 //! Every rank has a main FIFO queue; when `separate_test_queue` is enabled
 //! (§3.4) incoming `Test` messages are diverted to a second queue that is
 //! processed only every `CHECK_FREQUENCY` iterations — the paper's
-//! message-order relaxation ("it was found that it is beneficial to organize
-//! a separate queue for Test messages, and to process it much less
-//! frequently than the main queue"). Messages that cannot be processed yet
-//! are postponed by re-appending to the back of their queue, exactly as in
-//! the original GHS ("place the received message on the end of the queue").
+//! message-order relaxation. Messages that cannot be processed yet are
+//! postponed, as in the original GHS ("place the received message on the
+//! end of the queue").
+//!
+//! # Layout
+//!
+//! Messages live in parallel slot arrays (`src` / `dst` / packed `meta`
+//! header / `weight`) instead of a `VecDeque<Message>` of ~40-byte enums.
+//! Each of the four FIFOs (main, Test, and one postponed *stash* per queue)
+//! is a singly index-linked list threaded through the shared `next` array,
+//! and freed slots are recycled through an intrusive free list — so in
+//! steady state no queue operation allocates.
+//!
+//! # Postponement without re-scanning
+//!
+//! * `pop_*` copies the message out for the vertex automaton but keeps its
+//!   slot reserved (`pending`); a following [`RankQueues::postpone`]
+//!   *relinks that slot index* onto the queue's stash — no field copies.
+//! * A stash is re-merged onto the back of its queue (an O(1) list splice)
+//!   only when retrying can help: when new traffic arrives
+//!   ([`RankQueues::push_incoming`] / [`RankQueues::push_raw`]) or after a
+//!   message completes processing ([`RankQueues::note_done`], i.e. local
+//!   vertex state changed). A queue holding only postponed messages is
+//!   therefore *never* re-scanned burst after burst — the churn the paper
+//!   observes ("Some messages are processed repeatedly") is paid only when
+//!   a retry can actually make progress. Both triggers together are also
+//!   what makes this safe: a postponed message becomes processable only
+//!   after a local state change, and local state changes only by processing
+//!   a message — which was either just pushed or just completed.
+//!
+//! The flattened `meta`/`weight` slot form is shared with the §3.5 wire
+//! codecs, which lets [`crate::ghs::wire::decode_into`] write an incoming
+//! packet straight into slots without materializing a
+//! [`Payload`](crate::ghs::message::Payload) per message; the enum is only
+//! assembled on `pop`.
 
-use std::collections::VecDeque;
+use crate::ghs::message::{meta_tag, Message, Payload, TAG_TEST};
+use crate::ghs::weight::FragmentId;
+use crate::graph::VertexId;
 
-use crate::ghs::message::{Message, Payload};
+/// Nil slot index (list terminator / empty list).
+const NIL: u32 = u32::MAX;
 
-/// The two queues of one rank.
-#[derive(Debug, Default)]
+/// List ids: the two active queues and, at `+ STASH_OF`, their stashes.
+const MAIN: usize = 0;
+const TEST: usize = 1;
+/// Offset from an active queue's list id to its stash's list id.
+const STASH_OF: usize = 2;
+
+/// The queues of one rank: main + Test FIFOs plus their postponed stashes,
+/// all threaded through one recycled SoA slot arena.
+#[derive(Debug)]
 pub struct RankQueues {
-    main: VecDeque<Message>,
-    test: VecDeque<Message>,
+    // SoA slot arrays (parallel; one entry per slot ever allocated).
+    src: Vec<VertexId>,
+    dst: Vec<VertexId>,
+    meta: Vec<u16>,
+    weight: Vec<FragmentId>,
+    /// Intrusive link: next slot in whichever list the slot is on.
+    next: Vec<u32>,
+    /// Head of the free-slot list.
+    free_head: u32,
+    /// Per-list head/tail/length: `[MAIN, TEST, MAIN+STASH_OF, TEST+STASH_OF]`.
+    head: [u32; 4],
+    tail: [u32; 4],
+    len: [usize; 4],
+    /// Slot of the most recently popped message, kept reserved so a
+    /// `postpone` can relink it instead of copying. Freed on the next pop.
+    pending: Option<(usize, u32)>,
     separate_test: bool,
     /// Total messages ever postponed (re-queued), for profiling.
     pub postponed: u64,
+    /// Stash→queue splice events (retry rounds actually attempted).
+    pub stash_merges: u64,
 }
 
 impl RankQueues {
     /// Create queues; `separate_test` enables the §3.4 relaxation.
     pub fn new(separate_test: bool) -> Self {
-        Self { separate_test, ..Self::default() }
+        Self {
+            src: Vec::new(),
+            dst: Vec::new(),
+            meta: Vec::new(),
+            weight: Vec::new(),
+            next: Vec::new(),
+            free_head: NIL,
+            head: [NIL; 4],
+            tail: [NIL; 4],
+            len: [0; 4],
+            pending: None,
+            separate_test,
+            postponed: 0,
+            stash_merges: 0,
+        }
+    }
+
+    /// Which active queue a message with the given type tag belongs to.
+    #[inline]
+    fn route(&self, tag: u8) -> usize {
+        if self.separate_test && tag == TAG_TEST {
+            TEST
+        } else {
+            MAIN
+        }
+    }
+
+    /// Take a slot from the free list (or grow the arena) and fill it.
+    fn alloc(&mut self, src: VertexId, dst: VertexId, meta: u16, weight: FragmentId) -> u32 {
+        if self.free_head != NIL {
+            let s = self.free_head;
+            let i = s as usize;
+            self.free_head = self.next[i];
+            self.src[i] = src;
+            self.dst[i] = dst;
+            self.meta[i] = meta;
+            self.weight[i] = weight;
+            self.next[i] = NIL;
+            s
+        } else {
+            let s = self.src.len() as u32;
+            self.src.push(src);
+            self.dst.push(dst);
+            self.meta.push(meta);
+            self.weight.push(weight);
+            self.next.push(NIL);
+            s
+        }
+    }
+
+    /// Link `slot` at the back of list `q`.
+    fn push_list(&mut self, q: usize, slot: u32) {
+        self.next[slot as usize] = NIL;
+        if self.len[q] == 0 {
+            self.head[q] = slot;
+        } else {
+            self.next[self.tail[q] as usize] = slot;
+        }
+        self.tail[q] = slot;
+        self.len[q] += 1;
+    }
+
+    /// Unlink and return the front of list `q`.
+    fn pop_list(&mut self, q: usize) -> Option<u32> {
+        if self.len[q] == 0 {
+            return None;
+        }
+        let s = self.head[q];
+        self.head[q] = self.next[s as usize];
+        self.len[q] -= 1;
+        if self.len[q] == 0 {
+            self.tail[q] = NIL;
+        }
+        Some(s)
+    }
+
+    /// Return the reserved pending slot (if any) to the free list.
+    fn release_pending(&mut self) {
+        if let Some((_, s)) = self.pending.take() {
+            self.next[s as usize] = self.free_head;
+            self.free_head = s;
+        }
+    }
+
+    /// Splice each non-empty stash onto the back of its queue (O(1) per
+    /// stash — pure index relinking).
+    fn merge_stashes(&mut self) {
+        for q in [MAIN, TEST] {
+            let s = q + STASH_OF;
+            if self.len[s] == 0 {
+                continue;
+            }
+            self.stash_merges += 1;
+            if self.len[q] == 0 {
+                self.head[q] = self.head[s];
+            } else {
+                self.next[self.tail[q] as usize] = self.head[s];
+            }
+            self.tail[q] = self.tail[s];
+            self.len[q] += self.len[s];
+            self.head[s] = NIL;
+            self.tail[s] = NIL;
+            self.len[s] = 0;
+        }
+    }
+
+    /// Notify the queues that a message completed processing (local vertex
+    /// state may have changed): postponed messages become retryable.
+    #[inline]
+    pub fn note_done(&mut self) {
+        if self.len[MAIN + STASH_OF] + self.len[TEST + STASH_OF] > 0 {
+            self.merge_stashes();
+        }
+    }
+
+    /// Route an incoming message given in flattened slot form (the batch
+    /// decoder's entry point — no `Payload` is materialized). New traffic
+    /// also re-arms the postponed stashes.
+    pub fn push_raw(&mut self, src: VertexId, dst: VertexId, meta: u16, weight: FragmentId) {
+        let slot = self.alloc(src, dst, meta, weight);
+        let q = self.route(meta_tag(meta));
+        self.push_list(q, slot);
+        self.note_done(); // new traffic: retry the stash behind it
     }
 
     /// Route an incoming (or locally delivered) message to its queue.
     pub fn push_incoming(&mut self, msg: Message) {
-        if self.separate_test && matches!(msg.payload, Payload::Test { .. }) {
-            self.test.push_back(msg);
-        } else {
-            self.main.push_back(msg);
+        let (meta, weight) = msg.payload.to_meta();
+        self.push_raw(msg.src, msg.dst, meta, weight);
+    }
+
+    /// Does `slot` hold exactly `msg`?
+    fn slot_matches(&self, slot: u32, msg: &Message) -> bool {
+        let i = slot as usize;
+        let (meta, weight) = msg.payload.to_meta();
+        self.src[i] == msg.src
+            && self.dst[i] == msg.dst
+            && self.meta[i] == meta
+            && self.weight[i] == weight
+    }
+
+    /// Stash a message that could not be processed yet. When `msg` is the
+    /// most recently popped message (the engine's pop→handle→postpone
+    /// path), its reserved slot is relinked — zero copies. It is retried
+    /// after the next [`Self::push_raw`] / [`Self::note_done`].
+    pub fn postpone(&mut self, msg: Message) {
+        self.postponed += 1;
+        match self.pending.take() {
+            Some((q, slot)) if self.slot_matches(slot, &msg) => {
+                self.push_list(q + STASH_OF, slot);
+            }
+            other => {
+                // Direct postpone without a matching pop: allocate afresh.
+                if let Some((_, s)) = other {
+                    self.next[s as usize] = self.free_head;
+                    self.free_head = s;
+                }
+                let (meta, weight) = msg.payload.to_meta();
+                let slot = self.alloc(msg.src, msg.dst, meta, weight);
+                let q = self.route(meta_tag(meta));
+                self.push_list(q + STASH_OF, slot);
+            }
         }
     }
 
-    /// Re-queue a message that could not be processed yet.
-    pub fn postpone(&mut self, msg: Message) {
-        self.postponed += 1;
-        self.push_incoming(msg);
+    /// Pop the front of list `q`, assembling the `Payload` only now.
+    fn pop_queue(&mut self, q: usize) -> Option<Message> {
+        self.release_pending();
+        let slot = self.pop_list(q)?;
+        self.pending = Some((q, slot));
+        let i = slot as usize;
+        Some(Message::new(self.src[i], self.dst[i], Payload::from_meta(self.meta[i], self.weight[i])))
     }
 
     /// Pop from the main queue.
     pub fn pop_main(&mut self) -> Option<Message> {
-        self.main.pop_front()
+        self.pop_queue(MAIN)
     }
 
     /// Pop from the Test queue.
     pub fn pop_test(&mut self) -> Option<Message> {
-        self.test.pop_front()
+        self.pop_queue(TEST)
     }
 
-    /// Messages currently waiting in the main queue.
+    /// Messages currently poppable from the main queue (stash excluded —
+    /// bursts must not re-scan postponed messages).
     pub fn main_len(&self) -> usize {
-        self.main.len()
+        self.len[MAIN]
     }
 
-    /// Messages currently waiting in the Test queue.
+    /// Messages currently poppable from the Test queue (stash excluded).
     pub fn test_len(&self) -> usize {
-        self.test.len()
+        self.len[TEST]
     }
 
-    /// Total queued messages.
+    /// Postponed messages parked in the stashes.
+    pub fn stash_len(&self) -> usize {
+        self.len[MAIN + STASH_OF] + self.len[TEST + STASH_OF]
+    }
+
+    /// Immediately poppable messages (both active queues).
+    pub fn active_len(&self) -> usize {
+        self.len[MAIN] + self.len[TEST]
+    }
+
+    /// Total queued messages, including postponed ones (the quantity the
+    /// silence-termination check needs).
     pub fn total_len(&self) -> usize {
-        self.main.len() + self.test.len()
+        self.active_len() + self.stash_len()
+    }
+
+    /// Slot-arena capacity (allocated slots, free or not) — for tests.
+    pub fn arena_slots(&self) -> usize {
+        self.src.len()
     }
 
     /// Is the Test queue separate (relaxed ordering enabled)?
@@ -79,6 +309,7 @@ impl RankQueues {
 mod tests {
     use super::*;
     use crate::ghs::weight::EdgeWeight;
+    use crate::util::minitest::props;
 
     fn test_msg() -> Message {
         Message::new(0, 1, Payload::Test { level: 0, fragment: EdgeWeight::new(0.5, 0, 1) })
@@ -96,6 +327,7 @@ mod tests {
         assert_eq!(q.test_len(), 0, "no separate test queue");
         assert!(matches!(q.pop_main().unwrap().payload, Payload::Test { .. }));
         assert!(matches!(q.pop_main().unwrap().payload, Payload::Accept));
+        assert!(q.pop_main().is_none());
     }
 
     #[test]
@@ -110,26 +342,176 @@ mod tests {
     }
 
     #[test]
-    fn postpone_goes_to_back_of_same_queue() {
+    fn postpone_parks_in_stash_until_new_traffic() {
         let mut q = RankQueues::new(true);
         q.push_incoming(test_msg());
         let first = q.pop_test().unwrap();
-        q.push_incoming(test_msg());
         q.postpone(first);
         assert_eq!(q.postponed, 1);
+        // The postponed message is parked, not immediately re-poppable.
+        assert_eq!(q.test_len(), 0);
+        assert_eq!(q.stash_len(), 1);
+        assert!(q.pop_test().is_none());
+        // New traffic re-arms it, behind the newer message.
+        q.push_incoming(test_msg());
         assert_eq!(q.test_len(), 2);
-        // The postponed message is now behind the newer one.
+        assert_eq!(q.stash_len(), 0);
         let _newer = q.pop_test().unwrap();
         let back = q.pop_test().unwrap();
         assert_eq!(back, first);
+        assert!(q.stash_merges >= 1);
     }
 
     #[test]
-    fn totals() {
+    fn note_done_rearms_the_stash() {
+        let mut q = RankQueues::new(false);
+        q.push_incoming(accept_msg());
+        let m = q.pop_main().unwrap();
+        q.postpone(m);
+        assert_eq!(q.main_len(), 0);
+        q.note_done();
+        assert_eq!(q.main_len(), 1, "processing progress retries the stash");
+        assert_eq!(q.pop_main().unwrap(), m);
+    }
+
+    #[test]
+    fn totals_include_stash() {
         let mut q = RankQueues::new(true);
         q.push_incoming(test_msg());
         q.push_incoming(accept_msg());
         q.push_incoming(accept_msg());
         assert_eq!(q.total_len(), 3);
+        let m = q.pop_main().unwrap();
+        q.postpone(m);
+        assert_eq!(q.active_len(), 2);
+        assert_eq!(q.total_len(), 3, "stash still counts as pending work");
+    }
+
+    #[test]
+    fn slots_are_recycled_not_leaked() {
+        let mut q = RankQueues::new(false);
+        for round in 0..10 {
+            for _ in 0..8 {
+                q.push_incoming(accept_msg());
+            }
+            for _ in 0..8 {
+                let m = q.pop_main().unwrap();
+                if round % 2 == 0 {
+                    q.postpone(m);
+                }
+            }
+            q.note_done();
+            while let Some(_m) = q.pop_main() {}
+            assert_eq!(q.total_len(), 0);
+        }
+        // Pending slot + at most one round in flight: the arena stays tiny
+        // because the free list recycles slots across rounds.
+        assert!(q.arena_slots() <= 16, "arena grew to {}", q.arena_slots());
+    }
+
+    /// FIFO order is preserved under random interleavings of push /
+    /// postpone / pop: messages that are never postponed come out in push
+    /// order, and postponed messages re-enter behind the traffic that
+    /// re-armed them (the §3.4 "end of the queue" rule).
+    #[test]
+    fn property_fifo_preserved_under_interleaving() {
+        props("soa queue fifo", 200, |g| {
+            let mut q = RankQueues::new(false);
+            let mut next_id: u32 = 0;
+            let mut expect: std::collections::VecDeque<u32> = Default::default();
+            let mut stashed: Vec<u32> = Vec::new();
+            let mut out: Vec<u32> = Vec::new();
+            for _ in 0..g.usize_in(1, 120) {
+                match g.u64_below(3) {
+                    0 => {
+                        // push: uniquely-numbered Accept (id in src field).
+                        q.push_incoming(Message::new(next_id, 0, Payload::Accept));
+                        expect.push_back(next_id);
+                        // Push re-arms the stash behind the new message.
+                        expect.extend(stashed.drain(..));
+                        next_id += 1;
+                    }
+                    1 => {
+                        if let Some(m) = q.pop_main() {
+                            let id = expect.pop_front().unwrap();
+                            assert_eq!(m.src, id, "FIFO violated");
+                            if g.bool(0.5) {
+                                q.postpone(m);
+                                stashed.push(id);
+                            } else {
+                                out.push(id);
+                            }
+                        } else {
+                            assert!(expect.is_empty());
+                        }
+                    }
+                    _ => {
+                        q.note_done();
+                        expect.extend(stashed.drain(..));
+                    }
+                }
+                assert_eq!(q.total_len(), expect.len() + stashed.len());
+            }
+            // Drain: one final re-arm releases any stashed stragglers.
+            q.note_done();
+            expect.extend(stashed.drain(..));
+            while let Some(m) = q.pop_main() {
+                assert_eq!(m.src, expect.pop_front().unwrap());
+            }
+            assert!(expect.is_empty());
+        });
+    }
+
+    /// Stash re-merge fairness: messages postponed in different rounds are
+    /// retried in their original postponement order.
+    #[test]
+    fn stash_remerge_is_fair_fifo() {
+        let mut q = RankQueues::new(false);
+        for id in 0..4u32 {
+            q.push_incoming(Message::new(id, 0, Payload::Accept));
+        }
+        // Postpone 0 and 1 (popped in order).
+        for _ in 0..2 {
+            let m = q.pop_main().unwrap();
+            q.postpone(m);
+        }
+        // Process 2 successfully: stash [0, 1] re-merges behind 3.
+        let m2 = q.pop_main().unwrap();
+        assert_eq!(m2.src, 2);
+        q.note_done();
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop_main()).map(|m| m.src).collect();
+        assert_eq!(order, vec![3, 0, 1], "postponed retried in postponement order");
+    }
+
+    /// Mixed payloads survive the flattened slot round-trip bit-for-bit.
+    #[test]
+    fn property_slot_roundtrip_mixed_payloads() {
+        use crate::ghs::types::VertexState;
+        props("soa queue slot roundtrip", 200, |g| {
+            let mut q = RankQueues::new(false);
+            let mut msgs = Vec::new();
+            for _ in 0..g.usize_in(1, 40) {
+                let w = EdgeWeight::with_tie(g.f64(), g.u64());
+                let payload = match g.u64_below(7) {
+                    0 => Payload::Connect { level: g.u64_below(32) as u8 },
+                    1 => Payload::Initiate {
+                        level: g.u64_below(32) as u8,
+                        fragment: w,
+                        state: if g.bool(0.5) { VertexState::Find } else { VertexState::Found },
+                    },
+                    2 => Payload::Test { level: g.u64_below(32) as u8, fragment: w },
+                    3 => Payload::Accept,
+                    4 => Payload::Reject,
+                    5 => Payload::Report { best: w },
+                    _ => Payload::ChangeCore,
+                };
+                let m = Message::new(g.u64() as u32, g.u64() as u32, payload);
+                msgs.push(m);
+                q.push_incoming(m);
+            }
+            for want in &msgs {
+                assert_eq!(&q.pop_main().unwrap(), want);
+            }
+        });
     }
 }

@@ -14,6 +14,9 @@ pub struct ProfileCounters {
     pub msgs_decoded: u64,
     /// Bytes decoded from incoming aggregated buffers.
     pub bytes_decoded: u64,
+    /// Aggregated buffers batch-decoded (`msgs_decoded / decode_batches`
+    /// is the mean decode batch size).
+    pub decode_batches: u64,
     /// Messages processed from the main queue.
     pub msgs_processed_main: u64,
     /// Messages processed from the Test queue.
@@ -35,13 +38,43 @@ pub struct ProfileCounters {
     pub finish_checks: u64,
     /// While-loop iterations executed.
     pub iterations: u64,
+    /// Outbox buffers recycled from the shared pool at flush time.
+    pub buf_reuse: u64,
+    /// Outbox buffers freshly created (pool was empty).
+    pub buf_alloc: u64,
+    /// Times an idle rank parked on its channel instead of spinning
+    /// (threaded engine only).
+    pub parked: u64,
+    /// Postponed-stash retry rounds (stash→queue splices).
+    pub stash_merges: u64,
 }
 
 impl ProfileCounters {
+    /// Fraction of flushed buffers served from the recycle pool (0 when
+    /// nothing was flushed). 1.0 means zero per-packet heap allocation.
+    pub fn buffer_reuse_rate(&self) -> f64 {
+        let total = self.buf_reuse + self.buf_alloc;
+        if total == 0 {
+            0.0
+        } else {
+            self.buf_reuse as f64 / total as f64
+        }
+    }
+
+    /// Mean messages per batch-decoded buffer (0 when nothing arrived).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_batches == 0 {
+            0.0
+        } else {
+            self.msgs_decoded as f64 / self.decode_batches as f64
+        }
+    }
+
     /// Merge another rank's counters.
     pub fn merge(&mut self, o: &ProfileCounters) {
         self.msgs_decoded += o.msgs_decoded;
         self.bytes_decoded += o.bytes_decoded;
+        self.decode_batches += o.decode_batches;
         self.msgs_processed_main += o.msgs_processed_main;
         self.msgs_processed_test += o.msgs_processed_test;
         self.msgs_postponed += o.msgs_postponed;
@@ -52,6 +85,10 @@ impl ProfileCounters {
         self.msgs_sent += o.msgs_sent;
         self.finish_checks += o.finish_checks;
         self.iterations += o.iterations;
+        self.buf_reuse += o.buf_reuse;
+        self.buf_alloc += o.buf_alloc;
+        self.parked += o.parked;
+        self.stash_merges += o.stash_merges;
     }
 }
 
@@ -111,10 +148,39 @@ mod tests {
     #[test]
     fn counters_merge() {
         let mut a = ProfileCounters { msgs_decoded: 1, lookups: 5, ..Default::default() };
-        let b = ProfileCounters { msgs_decoded: 2, bytes_sent: 7, ..Default::default() };
+        let b = ProfileCounters {
+            msgs_decoded: 2,
+            bytes_sent: 7,
+            decode_batches: 3,
+            buf_reuse: 4,
+            buf_alloc: 1,
+            parked: 2,
+            stash_merges: 9,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.msgs_decoded, 3);
         assert_eq!(a.lookups, 5);
         assert_eq!(a.bytes_sent, 7);
+        assert_eq!(a.decode_batches, 3);
+        assert_eq!(a.buf_reuse, 4);
+        assert_eq!(a.parked, 2);
+        assert_eq!(a.stash_merges, 9);
+    }
+
+    #[test]
+    fn derived_pipeline_rates() {
+        let zero = ProfileCounters::default();
+        assert_eq!(zero.buffer_reuse_rate(), 0.0);
+        assert_eq!(zero.mean_decode_batch(), 0.0);
+        let c = ProfileCounters {
+            buf_reuse: 3,
+            buf_alloc: 1,
+            msgs_decoded: 40,
+            decode_batches: 8,
+            ..Default::default()
+        };
+        assert_eq!(c.buffer_reuse_rate(), 0.75);
+        assert_eq!(c.mean_decode_batch(), 5.0);
     }
 }

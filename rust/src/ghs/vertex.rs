@@ -389,12 +389,19 @@ mod tests {
         g.push(0, 1, 0.5);
         let mut r = one_rank(&g);
         r.wakeup_all();
-        // Drain queues until silent.
+        // Drain queues until silent, driving the stash like the engines:
+        // postponed messages re-arm after any completed message.
         let mut guard = 0;
         while r.queues.total_len() > 0 {
-            let msg = r.queues.pop_main().or_else(|| r.queues.pop_test()).unwrap();
+            let msg = r
+                .queues
+                .pop_main()
+                .or_else(|| r.queues.pop_test())
+                .expect("active queues empty but stash stranded (deadlock)");
             if r.handle(msg) == Outcome::Postponed {
                 r.queues.postpone(msg);
+            } else {
+                r.queues.note_done();
             }
             guard += 1;
             assert!(guard < 100, "no convergence");

@@ -15,7 +15,8 @@
 //! All three formats are byte-aligned per message (10 / 19 / 26 / 32 bytes),
 //! so aggregated buffers decode as a simple sequential stream.
 
-use crate::ghs::message::{Message, Payload};
+use crate::ghs::message::{pack_meta, Message, Payload, META_MASK};
+use crate::ghs::queues::RankQueues;
 use crate::ghs::types::{Level, VertexState};
 use crate::ghs::weight::{f64_to_ordered_bits, EdgeWeight, FragmentId};
 use crate::graph::partition::Partition;
@@ -159,7 +160,7 @@ fn encode_naive(msg: &Message, buf: &mut Vec<u8>) {
 // `direct_codec_matches_bitpacked_reference` test asserts.
 fn encode_compact(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
     let (tag, level, state, wf) = payload_fields(&msg.payload);
-    let header: u16 = tag as u16 | (level as u16) << 3 | (state as u16) << 8;
+    let header: u16 = pack_meta(tag, level, state);
     buf.extend_from_slice(&header.to_le_bytes());
     buf.extend_from_slice(&msg.src.to_le_bytes());
     buf.extend_from_slice(&msg.dst.to_le_bytes());
@@ -203,7 +204,80 @@ fn encode_compact_bitpacked(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
     buf.extend_from_slice(&w.into_bytes());
 }
 
-/// Streaming decoder over an aggregated buffer.
+/// Reconstruct a weight field from its wire parts (the proc-id codec
+/// reserves tie `0xFF` + infinite bits for the infinity sentinel).
+fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
+    if fmt == WireFormat::CompactProcId
+        && tie == INF_TIE8
+        && wbits == f64_to_ordered_bits(f64::INFINITY)
+    {
+        return EdgeWeight::infinity();
+    }
+    EdgeWeight::from_parts(wbits, tie)
+}
+
+/// Batch-decode a whole aggregated buffer straight into queue slots: one
+/// length-prefixed frame walk per packet, pushing the flattened
+/// (src, dst, packed header, weight) fields via [`RankQueues::push_raw`].
+/// No [`Payload`] enum is materialized — that dispatch is deferred to
+/// `pop` (see the queues module docs). Returns the number of messages
+/// decoded. Produces queue contents identical to pushing each message of
+/// [`Decoder`] (asserted by the round-trip fuzz tests).
+pub fn decode_into(buf: &[u8], fmt: WireFormat, queues: &mut RankQueues) -> u64 {
+    let mut at = 0usize;
+    let mut n = 0u64;
+    match fmt {
+        WireFormat::Naive => {
+            while at < buf.len() {
+                assert!(buf.len() - at >= 32, "truncated naive message");
+                let b = &buf[at..at + 32];
+                at += 32;
+                let meta = pack_meta(b[0], b[1], b[2]);
+                let src = u32::from_le_bytes(b[4..8].try_into().unwrap());
+                let dst = u32::from_le_bytes(b[8..12].try_into().unwrap());
+                let weight = if matches!(b[0], 1 | 2 | 5) {
+                    let wbits = u64::from_le_bytes(b[12..20].try_into().unwrap());
+                    let tie = u64::from_le_bytes(b[20..28].try_into().unwrap());
+                    EdgeWeight::from_parts(wbits, tie)
+                } else {
+                    EdgeWeight::infinity()
+                };
+                queues.push_raw(src, dst, meta, weight);
+                n += 1;
+            }
+        }
+        WireFormat::CompactSpecialId | WireFormat::CompactProcId => {
+            while at < buf.len() {
+                let b = &buf[at..];
+                assert!(b.len() >= 10, "truncated compact message");
+                let header = u16::from_le_bytes(b[0..2].try_into().unwrap()) & META_MASK;
+                let tag = (header & 0b111) as u8;
+                let src = u32::from_le_bytes(b[2..6].try_into().unwrap());
+                let dst = u32::from_le_bytes(b[6..10].try_into().unwrap());
+                let weight = if matches!(tag, 1 | 2 | 5) {
+                    let wbits = u64::from_le_bytes(b[10..18].try_into().unwrap());
+                    let tie = if fmt == WireFormat::CompactProcId {
+                        at += 19;
+                        b[18] as u64
+                    } else {
+                        at += 26;
+                        u64::from_le_bytes(b[18..26].try_into().unwrap())
+                    };
+                    decode_weight(wbits, tie, fmt)
+                } else {
+                    at += 10;
+                    EdgeWeight::infinity()
+                };
+                queues.push_raw(src, dst, header, weight);
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Streaming per-message decoder over an aggregated buffer (reference
+/// implementation; the hot path is [`decode_into`]).
 pub struct Decoder<'a> {
     buf: &'a [u8],
     at: usize, // byte offset
@@ -219,16 +293,6 @@ impl<'a> Decoder<'a> {
     /// Bytes remaining.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.at
-    }
-
-    fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
-        if fmt == WireFormat::CompactProcId
-            && tie == INF_TIE8
-            && wbits == f64_to_ordered_bits(f64::INFINITY)
-        {
-            return EdgeWeight::infinity();
-        }
-        EdgeWeight::from_parts(wbits, tie)
     }
 }
 
@@ -273,7 +337,7 @@ impl Iterator for Decoder<'_> {
                         self.at += 26;
                         u64::from_le_bytes(b[18..26].try_into().unwrap())
                     };
-                    Self::decode_weight(wbits, tie, self.fmt)
+                    decode_weight(wbits, tie, self.fmt)
                 } else {
                     self.at += 10;
                     EdgeWeight::infinity() // unused by short payloads
@@ -284,21 +348,10 @@ impl Iterator for Decoder<'_> {
     }
 }
 
+/// Assemble a payload from decoded header fields (shared with the queue
+/// slots' flattened form via [`Payload::from_meta`]).
 fn assemble(tag: u8, level: Level, state: u8, weight: FragmentId) -> Payload {
-    match tag {
-        0 => Payload::Connect { level },
-        1 => Payload::Initiate {
-            level,
-            fragment: weight,
-            state: if state == 1 { VertexState::Find } else { VertexState::Found },
-        },
-        2 => Payload::Test { level, fragment: weight },
-        3 => Payload::Accept,
-        4 => Payload::Reject,
-        5 => Payload::Report { best: weight },
-        6 => Payload::ChangeCore,
-        t => panic!("invalid message tag {t}"),
-    }
+    Payload::from_meta(pack_meta(tag, level, state), weight)
 }
 
 #[cfg(test)]
@@ -463,6 +516,43 @@ mod tests {
             }
             let out: Vec<Message> = Decoder::new(&buf, fmt).collect();
             assert_eq!(out, msgs, "{fmt:?}");
+        }
+    }
+
+    /// Batch decode must land *identical queue contents* to the
+    /// per-message reference path (encode → [`Decoder`] → `push_incoming`),
+    /// across all three wire formats × random payload sequences. Run
+    /// counts × messages exceed 1k messages per format.
+    #[test]
+    fn batch_decode_matches_per_message_reference() {
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            for separate_test in [false, true] {
+                props(&format!("batch decode {fmt:?} sep={separate_test}"), 100, |g| {
+                    let msgs = sample_messages(g, fmt == WireFormat::CompactProcId);
+                    let mut buf = Vec::new();
+                    for m in &msgs {
+                        encode(m, fmt, &mut buf);
+                    }
+                    // Reference: per-message decode + route.
+                    let mut want = RankQueues::new(separate_test);
+                    for m in Decoder::new(&buf, fmt) {
+                        want.push_incoming(m);
+                    }
+                    // Batch: one frame walk straight into slots.
+                    let mut got = RankQueues::new(separate_test);
+                    let n = decode_into(&buf, fmt, &mut got);
+                    assert_eq!(n as usize, msgs.len());
+                    assert_eq!(got.main_len(), want.main_len());
+                    assert_eq!(got.test_len(), want.test_len());
+                    while let Some(a) = got.pop_main() {
+                        assert_eq!(a, want.pop_main().unwrap(), "{fmt:?} main");
+                    }
+                    while let Some(a) = got.pop_test() {
+                        assert_eq!(a, want.pop_test().unwrap(), "{fmt:?} test");
+                    }
+                    assert!(want.pop_main().is_none() && want.pop_test().is_none());
+                });
+            }
         }
     }
 

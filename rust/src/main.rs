@@ -32,6 +32,7 @@ COMMANDS
                   --family rmat|ssca2|random  --scale N  --ranks N
                   --search linear|binary|hash  --wire naive|compact|procid
                   --partition block|degree|hub|file:<path>
+                  --hash-sizing paper|pow2 (mask-indexed hash table)
                   --no-test-queue  --input FILE  --threaded  --verify
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
   partition     Print partition quality metrics (vertex/edge balance, edge
@@ -47,6 +48,8 @@ COMMANDS
   fig3          Paper Fig 3 (profile breakdown, hash-only vs final)
   fig4          Paper Fig 4 (aggregated message size per time interval)
   fig5          Paper Fig 5 (weak scaling on 32 nodes)
+  perf-baseline Deterministic counter snapshot (bytes/probes/postponement
+                  orderings pinned by tests/perf_regression.rs)
   sweep-search  Paper §4.1 (linear vs binary vs hash lookup)
   ablation-test-queue  Paper §3.4 (Test-queue relaxation on/off, RMAT+SSCA2)
   experiments   Run ALL of the above and write results/
@@ -73,8 +76,8 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&args),
         "accel" => cmd_accel(&args),
         "baseline" => cmd_baseline(&args),
-        "table2" | "fig2" | "fig3" | "fig4" | "fig5" | "sweep-search" | "ablation-test-queue"
-        | "experiments" => cmd_experiments(&args),
+        "table2" | "fig2" | "fig3" | "fig4" | "fig5" | "perf-baseline" | "sweep-search"
+        | "ablation-test-queue" | "experiments" => cmd_experiments(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -131,8 +134,8 @@ fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
-        "family", "scale", "ranks", "search", "wire", "partition", "no-test-queue", "input",
-        "threaded", "verify", "quiet",
+        "family", "scale", "ranks", "search", "wire", "partition", "hash-sizing",
+        "no-test-queue", "input", "threaded", "verify", "quiet",
     ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
@@ -149,6 +152,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     cfg.partition = parse_partition_flag(args)?;
     let part_label = cfg.partition.label();
+    if let Some(s) = args.get_opt("hash-sizing") {
+        cfg.hash_sizing = ghs_mst::ghs::config::HashTableSizing::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --hash-sizing {s} (paper|pow2)"))?;
+    }
     if args.get_bool("no-test-queue") {
         cfg.separate_test_queue = false;
     }
@@ -182,6 +189,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         run.sent.connect
     );
     println!("postponed       : {}", run.profile.msgs_postponed);
+    println!(
+        "pipeline        : {} decode batches ({:.1} msgs/batch), buffer reuse {:.0}% \
+         ({} reused / {} fresh), {} stash merges, {} parks",
+        run.profile.decode_batches,
+        run.profile.mean_decode_batch(),
+        100.0 * run.profile.buffer_reuse_rate(),
+        run.profile.buf_reuse,
+        run.profile.buf_alloc,
+        run.profile.stash_merges,
+        run.profile.parked
+    );
     println!("supersteps      : {}", run.supersteps);
     println!("sim time        : {}", fmt_seconds(run.sim.total_time));
     println!("wall time       : {}", fmt_seconds(wall.as_secs_f64()));
@@ -388,6 +406,9 @@ fn cmd_experiments(args: &Args) -> Result<()> {
             "fig3" => print_and_write(experiments::fig3(&opts)?, "fig3"),
             "fig4" => print_and_write(experiments::fig4(&opts)?, "fig4"),
             "fig5" => print_and_write(experiments::fig5(&opts)?, "fig5"),
+            "perf-baseline" => {
+                print_and_write(experiments::perf_baseline(&opts)?, "perf_baseline")
+            }
             "sweep-search" => print_and_write(experiments::sweep_search(&opts)?, "sweep_search"),
             "ablation-test-queue" => {
                 print_and_write(experiments::ablation_test_queue(&opts)?, "ablation_test_queue")
@@ -396,9 +417,16 @@ fn cmd_experiments(args: &Args) -> Result<()> {
         }
     };
     if args.command == "experiments" {
-        for which in
-            ["sweep-search", "fig2", "fig3", "fig4", "fig5", "ablation-test-queue", "table2"]
-        {
+        for which in [
+            "sweep-search",
+            "fig2",
+            "fig3",
+            "fig4",
+            "fig5",
+            "perf-baseline",
+            "ablation-test-queue",
+            "table2",
+        ] {
             run_one(which)?;
         }
         Ok(())

@@ -192,6 +192,27 @@ fn duplicate_weights_force_conformant_codec_fallback() {
     });
 }
 
+/// PR-path smoke for the zero-copy message pipeline: on a multi-rank cell
+/// of the matrix, both engines must report live pipeline counters — batch
+/// decodes, aggregated flushes, and recycled packet buffers — while still
+/// conforming to the oracle.
+#[test]
+fn pipeline_counters_live_on_both_engines() {
+    for &kind in &ENGINE_KINDS {
+        let (label, clean) = graph_case(7, 0xC0FFEE, 0); // RMAT-7
+        let cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, 4);
+        let run = run_engine(kind, &clean, cfg);
+        verify_against_oracle(&format!("{kind:?}/pipeline/{label}"), &clean, &run);
+        let p = &run.profile;
+        assert!(p.decode_batches > 0, "{kind:?}: no batch decodes");
+        assert!(p.msgs_decoded >= p.decode_batches, "{kind:?}");
+        assert!(p.flushes > 0, "{kind:?}: no aggregated flushes");
+        assert_eq!(p.buf_reuse + p.buf_alloc, p.flushes, "{kind:?}: flush buffer accounting");
+        assert!(p.buf_reuse > 0, "{kind:?}: packet buffers never recycled");
+        assert!(p.bytes_sent == p.bytes_decoded, "{kind:?}: all buffers delivered");
+    }
+}
+
 /// The sequential engine is bit-deterministic per cell of the matrix: same
 /// graph + config => identical forest, traffic, and virtual time.
 #[test]

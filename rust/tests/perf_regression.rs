@@ -1,0 +1,97 @@
+//! Bench-baseline counter regression (ROADMAP "Bench harness for
+//! Fig 2–5"): the paper's optimization ordering asserted on deterministic
+//! *message/probe counters* — no wall-clock, no flakiness. The same
+//! snapshot backs `ghs-mst perf-baseline` and `results/perf_baseline.md`.
+//!
+//! Scale defaults to 9 in the PR path and is raised by the nightly soak
+//! lane via `GHS_SCALE=12` (see `.github/workflows/nightly-soak.yml`).
+//! The workload seed is fixed by `Workload::new`, so every assertion here
+//! is replayable bit-for-bit.
+
+use std::sync::OnceLock;
+
+use ghs_mst::coordinator::experiments::{perf_snapshot, ExpOptions, PerfSnapshot, PERF_BASELINE_RANKS};
+use ghs_mst::graph::partition::PartitionSpec;
+
+fn scale() -> u32 {
+    std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(9)
+}
+
+fn opts() -> ExpOptions {
+    ExpOptions {
+        scale: scale(),
+        max_nodes: PERF_BASELINE_RANKS / 8,
+        verify: true,
+        quiet: true,
+        partition: PartitionSpec::Block,
+    }
+}
+
+/// The 8-run sweep is deterministic and not cheap at soak scale — compute
+/// it once per test binary, share across tests.
+fn snapshot() -> &'static PerfSnapshot {
+    static SNAP: OnceLock<PerfSnapshot> = OnceLock::new();
+    SNAP.get_or_init(|| perf_snapshot(&opts()).unwrap())
+}
+
+#[test]
+fn counter_orderings_match_paper_optimization_stack() {
+    let snap = snapshot();
+
+    // §3.5 compression: the 32-byte base struct must cost strictly more
+    // encoded bytes than the 80/208-bit packed form, which must cost at
+    // least as much as the 80/152-bit proc-id form.
+    assert!(
+        snap.bytes_naive > snap.bytes_compact,
+        "Naive ({}) must out-weigh CompactSpecialId ({}) — msgs {} vs {}",
+        snap.bytes_naive,
+        snap.bytes_compact,
+        snap.msgs_naive,
+        snap.msgs_compact
+    );
+    assert!(
+        snap.bytes_compact >= snap.bytes_procid,
+        "CompactSpecialId ({}) must be >= CompactProcId ({}) — msgs {} vs {}",
+        snap.bytes_compact,
+        snap.bytes_procid,
+        snap.msgs_compact,
+        snap.msgs_procid
+    );
+
+    // §3.3 lookup: the hash table (and binary search) must probe far less
+    // than the linear row scan on a skewed RMAT workload.
+    assert!(
+        2 * snap.probes_hash < snap.probes_linear,
+        "hash probes {} should be far below linear {} ({} lookups)",
+        snap.probes_hash,
+        snap.probes_linear,
+        snap.lookups
+    );
+    assert!(
+        snap.probes_binary < snap.probes_linear,
+        "binary probes {} should be below linear {}",
+        snap.probes_binary,
+        snap.probes_linear
+    );
+
+    // §3.4 Test-queue relaxation: deferring Test processing must not
+    // increase postponement churn.
+    assert!(
+        snap.postponed_separate <= snap.postponed_unified,
+        "separate Test queue postponed {} > unified {}",
+        snap.postponed_separate,
+        snap.postponed_unified
+    );
+}
+
+#[test]
+fn pipeline_counters_are_live_in_the_snapshot() {
+    let snap = snapshot();
+    assert!(snap.decode_batches > 0, "batch decode must run: {snap:?}");
+    assert!(
+        snap.msgs_decoded > snap.decode_batches,
+        "aggregation must put >1 message per buffer on average: {snap:?}"
+    );
+    assert!(snap.buf_reuse > 0, "buffer pool must recycle in steady state: {snap:?}");
+    assert!(snap.supersteps > 0);
+}

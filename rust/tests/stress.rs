@@ -94,7 +94,11 @@ fn extreme_parameter_corners() {
     // Degenerate hash table sizing (forced to the m+1 floor -> long probe
     // chains but still correct).
     let mut c = GhsConfig::final_version(8);
-    c.hash_sizing = HashTableSizing { numerator: 1, denominator: 1000 };
+    c.hash_sizing = HashTableSizing::Modulo { numerator: 1, denominator: 1000 };
+    assert_oracle(&g, c);
+    // Power-of-two sizing with mask-based probing.
+    let mut c = GhsConfig::final_version(8);
+    c.hash_sizing = HashTableSizing::PowerOfTwo;
     assert_oracle(&g, c);
 }
 
