@@ -56,6 +56,24 @@ impl BufferPool {
         }
     }
 
+    /// Return a batch of spent buffers under one lock acquisition. The
+    /// async engine's workers drain a whole task mailbox per quantum; with
+    /// many workers sharing one pool, taking the mutex once per drain
+    /// (instead of once per packet) keeps the pool off the contention path.
+    pub fn put_all<I: IntoIterator<Item = Vec<u8>>>(&self, bufs: I) {
+        if let Ok(mut f) = self.free.lock() {
+            for mut buf in bufs {
+                if buf.capacity() == 0 {
+                    continue;
+                }
+                buf.clear();
+                if f.len() < MAX_POOLED {
+                    f.push(buf);
+                }
+            }
+        }
+    }
+
     /// Idle buffers currently pooled.
     pub fn idle(&self) -> usize {
         self.free.lock().map(|f| f.len()).unwrap_or(0)
@@ -87,6 +105,16 @@ mod tests {
         let pool = BufferPool::new();
         pool.put(Vec::new());
         assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn batch_put_recycles_under_one_lock() {
+        let pool = BufferPool::new();
+        let bufs: Vec<Vec<u8>> = (0..3).map(|i| vec![i as u8; 8]).collect();
+        pool.put_all(bufs.into_iter().chain(std::iter::once(Vec::new())));
+        assert_eq!(pool.idle(), 3, "capacityless buffers skipped, rest pooled");
+        let (b, hit) = pool.get();
+        assert!(hit && b.is_empty() && b.capacity() >= 8);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct GhsConfig {
     /// Ranks per cluster node (paper: 8). Only affects the interconnect
     /// cost model (intra-node messages are cheaper) and node-count labels.
     pub ranks_per_node: u32,
+    /// Worker threads for the async engine's task pool (`--workers`).
+    /// `0` (the default) means auto: one worker per available CPU, capped
+    /// at the rank count. Ignored by the sequential and threaded engines.
+    pub workers: u32,
     /// Vertex-to-rank partitioning strategy (paper §3: block; see
     /// `graph::partition` for the skew-aware alternatives).
     pub partition: PartitionSpec,
@@ -105,6 +109,7 @@ impl Default for GhsConfig {
         Self {
             n_ranks: 8,
             ranks_per_node: 8,
+            workers: 0,
             partition: PartitionSpec::Block,
             max_msg_size: 10_000,
             sending_frequency: 5,
@@ -143,7 +148,20 @@ impl GhsConfig {
 
     /// Number of cluster nodes this configuration models.
     pub fn n_nodes(&self) -> u32 {
-        self.n_ranks.div_ceil(self.ranks_per_node)
+        // Manual ceiling division: `u32::div_ceil` needs Rust 1.73, above
+        // the crate's 1.70 MSRV.
+        (self.n_ranks + self.ranks_per_node - 1) / self.ranks_per_node
+    }
+
+    /// Worker-pool size the async engine actually uses: `workers` when set,
+    /// otherwise one per available CPU — never more than one per rank and
+    /// never zero.
+    pub fn effective_workers(&self) -> u32 {
+        let auto = || {
+            std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(4)
+        };
+        let w = if self.workers == 0 { auto() } else { self.workers };
+        w.min(self.n_ranks).max(1)
     }
 }
 
@@ -212,5 +230,22 @@ mod tests {
         assert_eq!(c.n_nodes(), 2);
         c.n_ranks = 8;
         assert_eq!(c.n_nodes(), 1);
+    }
+
+    #[test]
+    fn effective_workers_clamps_to_ranks() {
+        let mut c = GhsConfig::default();
+        c.n_ranks = 4096;
+        c.workers = 8;
+        assert_eq!(c.effective_workers(), 8, "explicit worker count is honoured");
+        c.workers = 0;
+        let auto = c.effective_workers();
+        assert!(auto >= 1 && auto <= 4096, "auto sizing stays within [1, ranks]");
+        c.n_ranks = 2;
+        c.workers = 64;
+        assert_eq!(c.effective_workers(), 2, "never more workers than ranks");
+        c.n_ranks = 1;
+        c.workers = 0;
+        assert_eq!(c.effective_workers(), 1);
     }
 }

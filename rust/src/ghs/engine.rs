@@ -36,6 +36,89 @@ use crate::graph::preprocess::is_simple;
 use crate::graph::EdgeList;
 use crate::sim::{SimConfig, SimState, TimingMode};
 
+/// The engine implementations a run can be dispatched to (`--engine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Deterministic sequential superstep engine with the LogGOPS virtual
+    /// clock ([`Engine`]). The fidelity baseline: every paper experiment
+    /// and counter snapshot runs here.
+    Sequential,
+    /// One OS thread per rank, mpsc channels as the interconnect
+    /// ([`crate::ghs::parallel::run_threaded`]). Real wall-clock
+    /// concurrency, but rank counts are capped by OS thread limits.
+    Threaded,
+    /// Cooperative scheduler: a fixed worker pool multiplexes rank
+    /// automata as resumable tasks ([`crate::ghs::sched::run_async`]).
+    /// Thousands of simulated ranks fit one host (`--workers`).
+    Async,
+}
+
+impl EngineKind {
+    /// Every engine, in conformance-matrix order.
+    pub const ALL: [EngineKind; 3] =
+        [EngineKind::Sequential, EngineKind::Threaded, EngineKind::Async];
+
+    /// Parse an `--engine` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" | "superstep" => Some(Self::Sequential),
+            "threaded" | "threads" | "thread" => Some(Self::Threaded),
+            "async" | "sched" | "scheduler" => Some(Self::Async),
+            _ => None,
+        }
+    }
+
+    /// CLI-facing name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::Threaded => "threaded",
+            Self::Async => "async",
+        }
+    }
+}
+
+/// Run a preprocessed graph on the chosen engine. The sequential engine
+/// uses the default simulated cluster; the concurrent engines run in
+/// wall-clock mode.
+pub fn run_kind(kind: EngineKind, clean: &EdgeList, config: GhsConfig) -> Result<GhsRun> {
+    match kind {
+        EngineKind::Sequential => Engine::new(clean, config)?.run(),
+        EngineKind::Threaded => crate::ghs::parallel::run_threaded(clean, config),
+        EngineKind::Async => crate::ghs::sched::run_async(clean, config),
+    }
+}
+
+/// Shared run-setup for all three engines: validate the graph, build the
+/// partition (+ its quality stats), apply the §3.5 proc-id feasibility
+/// check against the *actual* partition (falling back to
+/// `CompactSpecialId` when per-process weights collide or ranks overflow
+/// the 8-bit field), and pick the identity codec every rank must share.
+pub(crate) fn prepare_run(
+    g: &EdgeList,
+    config: &mut GhsConfig,
+) -> Result<(Partition, PartitionStats, IdentityCodec)> {
+    if !is_simple(g) {
+        bail!("graph must be preprocessed (self-loops / multi-edges present)");
+    }
+    if config.n_ranks == 0 {
+        bail!("need at least one rank");
+    }
+    let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
+    let partition_stats = PartitionStats::compute(g, &part);
+    if config.wire_format == WireFormat::CompactProcId {
+        let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
+        if !feasible {
+            config.wire_format = WireFormat::CompactSpecialId;
+        }
+    }
+    let codec = match config.wire_format {
+        WireFormat::CompactProcId => IdentityCodec::ProcId,
+        _ => IdentityCodec::SpecialId,
+    };
+    Ok((part, partition_stats, codec))
+}
+
 /// The sequential multi-rank GHS engine.
 pub struct Engine {
     ranks: Vec<RankState>,
@@ -64,28 +147,7 @@ impl Engine {
 
     /// Build with an explicit cluster simulation configuration.
     pub fn with_sim(g: &EdgeList, mut config: GhsConfig, sim_config: SimConfig) -> Result<Self> {
-        if !is_simple(g) {
-            bail!("graph must be preprocessed (self-loops / multi-edges present)");
-        }
-        if config.n_ranks == 0 {
-            bail!("need at least one rank");
-        }
-        let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
-        let partition_stats = PartitionStats::compute(g, &part);
-        // Proc-id wire compression requires per-process weight uniqueness
-        // and ranks to fit the 8-bit field (paper §3.5); otherwise fall
-        // back to the 64-bit special_id form. The uniqueness check runs
-        // against the actual partition, not the block assumption.
-        if config.wire_format == WireFormat::CompactProcId {
-            let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
-            if !feasible {
-                config.wire_format = WireFormat::CompactSpecialId;
-            }
-        }
-        let codec = match config.wire_format {
-            WireFormat::CompactProcId => IdentityCodec::ProcId,
-            _ => IdentityCodec::SpecialId,
-        };
+        let (part, partition_stats, codec) = prepare_run(g, &mut config)?;
         // One shared buffer pool per run: consumed inbox buffers return to
         // it and the next flush (from any rank) reuses them.
         let pool = Arc::new(BufferPool::new());

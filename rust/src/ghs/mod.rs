@@ -13,8 +13,11 @@
 //!   allocation in steady state)
 //! * [`vertex`] — the per-vertex GHS automaton (GHS83 rules + forest halt)
 //! * [`rank`] — per-rank (simulated MPI process) state incl. aggregation
-//! * [`engine`] — the superstep engine with silence termination
+//! * [`engine`] — the superstep engine with silence termination, plus
+//!   [`engine::EngineKind`] dispatch across all three engines
 //! * [`parallel`] — threaded engine (one OS thread per rank)
+//! * [`sched`] — async engine: cooperative scheduler multiplexing
+//!   thousands of rank tasks onto a fixed worker pool
 //! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
 
 pub mod bufpool;
@@ -26,6 +29,7 @@ pub mod parallel;
 pub mod queues;
 pub mod rank;
 pub mod result;
+pub mod sched;
 pub mod types;
 pub mod vertex;
 pub mod weight;

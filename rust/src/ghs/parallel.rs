@@ -28,16 +28,16 @@ use crate::baseline::union_find::UnionFind;
 use crate::baseline::Forest;
 use crate::ghs::bufpool::BufferPool;
 use crate::ghs::config::GhsConfig;
+use crate::ghs::engine::prepare_run;
 use crate::ghs::message::MessageCounts;
-use crate::ghs::rank::RankState;
+use crate::ghs::rank::{RankState, StepStatus};
 use crate::ghs::result::{GhsRun, ProfileCounters};
-use crate::ghs::vertex::Outcome;
-use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
-use crate::graph::partition::{Partition, PartitionStats};
-use crate::graph::preprocess::is_simple;
+use crate::graph::partition::PartitionStats;
 use crate::graph::EdgeList;
 
-type Packet = (u32, Vec<u8>, u32); // (src, bytes, n_msgs)
+/// One aggregated buffer on the interconnect: `(src, bytes, n_msgs)`.
+/// Shared with the async scheduler's mailboxes.
+pub(crate) type Packet = (u32, Vec<u8>, u32);
 
 /// Idle iterations spent merely yielding before the rank starts parking on
 /// its channel (cheap spin window for sub-µs turnarounds).
@@ -51,24 +51,7 @@ const PARK_MAX_US: u64 = 2_000;
 
 /// Run GHS with one thread per rank. The graph must be preprocessed.
 pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
-    if !is_simple(g) {
-        bail!("graph must be preprocessed (self-loops / multi-edges present)");
-    }
-    if config.n_ranks == 0 {
-        bail!("need at least one rank");
-    }
-    let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
-    let partition_stats = PartitionStats::compute(g, &part);
-    if config.wire_format == WireFormat::CompactProcId {
-        let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
-        if !feasible {
-            config.wire_format = WireFormat::CompactSpecialId;
-        }
-    }
-    let codec = match config.wire_format {
-        WireFormat::CompactProcId => IdentityCodec::ProcId,
-        _ => IdentityCodec::SpecialId,
-    };
+    let (part, partition_stats, codec) = prepare_run(g, &mut config)?;
 
     let p = config.n_ranks as usize;
     let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(p);
@@ -91,9 +74,8 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
         rank.pool = Arc::clone(&pool);
         let senders = senders.clone();
         let pending = Arc::clone(&pending);
-        let max_iters = config.max_supersteps;
         handles.push(std::thread::spawn(move || -> Result<RankState> {
-            run_rank(&mut rank, rx, &senders, &pending, max_iters)?;
+            run_rank(&mut rank, rx, &senders, &pending)?;
             Ok(rank)
         }));
     }
@@ -115,29 +97,15 @@ fn run_rank(
     rx: Receiver<Packet>,
     senders: &[Sender<Packet>],
     pending: &AtomicI64,
-    max_iters: u64,
 ) -> Result<()> {
-    // Each enqueued message adds 1; processing-without-postpone removes 1.
-    // RankState::send enqueues locally or into an outbox; count both.
-    let count_sends = |rank: &RankState, before: u64, pending: &AtomicI64| {
-        let delta = rank.prof.msgs_sent - before;
-        if delta > 0 {
-            pending.fetch_add(delta as i64, Ordering::AcqRel);
-        }
-    };
-    rank.wakeup_all();
-    count_sends(rank, 0, pending);
-    pending.fetch_sub(1, Ordering::AcqRel); // release the startup token
+    // Wake every local vertex, credit the injected sends, release the
+    // startup token (shared silence-accounting protocol: see
+    // `RankState::start`).
+    rank.start(pending);
 
-    let mut iter: u64 = 0;
     let mut idle_streak: u32 = 0;
     let mut park_us: u64 = PARK_MIN_US;
     loop {
-        iter += 1;
-        rank.prof.iterations += 1;
-        if iter > max_iters {
-            bail!("rank {}: exceeded max iterations {max_iters}", rank.rank);
-        }
         // read_msgs
         let mut received = false;
         loop {
@@ -150,53 +118,16 @@ fn run_rank(
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
-        // process_queue
-        let burst = rank.queues.main_len().min(rank.config.burst_size);
-        for _ in 0..burst {
-            let msg = rank.queues.pop_main().expect("len checked");
-            rank.prof.msgs_processed_main += 1;
-            let sent_before = rank.prof.msgs_sent;
-            let outcome = rank.handle(msg);
-            count_sends(rank, sent_before, pending);
-            if outcome == Outcome::Postponed {
-                rank.prof.msgs_postponed += 1;
-                rank.queues.postpone(msg);
-            } else {
-                pending.fetch_sub(1, Ordering::AcqRel);
-                rank.queues.note_done();
-            }
-        }
-        // Test queue (§3.4)
-        if rank.queues.has_separate_test() && iter % rank.config.check_frequency as u64 == 0 {
-            let burst = rank.queues.test_len().min(rank.config.burst_size);
-            for _ in 0..burst {
-                let msg = rank.queues.pop_test().expect("len checked");
-                rank.prof.msgs_processed_test += 1;
-                let sent_before = rank.prof.msgs_sent;
-                let outcome = rank.handle(msg);
-                count_sends(rank, sent_before, pending);
-                if outcome == Outcome::Postponed {
-                    rank.prof.msgs_postponed += 1;
-                    rank.queues.postpone(msg);
-                } else {
-                    pending.fetch_sub(1, Ordering::AcqRel);
-                    rank.queues.note_done();
-                }
-            }
-        }
-        // send_all_bufs
-        if iter % rank.config.sending_frequency as u64 == 0 {
-            rank.superstep = iter;
-            rank.flush_all();
-        }
-        let flushed_any = !rank.flushed.is_empty();
+        // One iteration of the shared per-process loop: process_queue,
+        // Test queue at cadence, send_all_bufs at cadence.
+        let status = rank.step(pending)?;
         for (dst, buf, n) in rank.flushed.drain(..) {
             // Channel send failure means the peer exited after global
             // silence; that cannot happen while messages are pending.
             let _ = senders[dst as usize].send((rank.rank, buf, n));
         }
         // check_finish
-        if iter % rank.config.empty_iter_cnt_to_break as u64 == 0 {
+        if rank.prof.iterations % rank.config.empty_iter_cnt_to_break as u64 == 0 {
             rank.prof.finish_checks += 1;
             if pending.load(Ordering::Acquire) == 0 {
                 return Ok(());
@@ -207,12 +138,9 @@ fn run_rank(
         // few yields for sub-µs turnarounds, then park on the channel with
         // an exponentially growing timeout. Stash-only queues count as
         // idle: postponed messages can only be unblocked by new traffic,
-        // which is exactly what the park wakes on.
-        let idle = !received
-            && burst == 0
-            && rank.queues.active_len() == 0
-            && !rank.has_dirty_outbox()
-            && !flushed_any;
+        // which is exactly what the park wakes on (`StepStatus::Blocked`
+        // encodes exactly this silence point).
+        let idle = !received && status == StepStatus::Blocked;
         if !idle {
             idle_streak = 0;
             park_us = PARK_MIN_US;
@@ -247,7 +175,10 @@ fn run_rank(
     }
 }
 
-fn collect(
+/// Assemble a [`GhsRun`] from finished rank states (shared by the threaded
+/// engine and the async scheduler — both run in wall-clock mode with no
+/// virtual network).
+pub(crate) fn collect(
     mut ranks: Vec<RankState>,
     n_vertices: u32,
     wall: f64,

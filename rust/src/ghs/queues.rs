@@ -205,7 +205,7 @@ impl RankQueues {
         let slot = self.alloc(src, dst, meta, weight);
         let q = self.route(meta_tag(meta));
         self.push_list(q, slot);
-        self.note_done(); // new traffic: retry the stash behind it
+        self.note_done(); // new traffic: the queue-level wake (re-arms stashes)
     }
 
     /// Route an incoming (or locally delivered) message to its queue.

@@ -1,9 +1,14 @@
 //! Per-rank (simulated MPI process) state: local CRS block, per-vertex GHS
 //! variables, the edge-lookup structure, queues and per-destination
 //! aggregation buffers (paper §3.2: "a separate buffer is created in every
-//! process for every possible receiving process").
+//! process for every possible receiving process" — materialized only for
+//! the ranks actually reachable over this rank's cut edges, so outbox
+//! memory scales with the edge cut, not with P² at thousands of ranks).
 
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::ghs::bufpool::BufferPool;
 use crate::ghs::config::GhsConfig;
@@ -12,6 +17,7 @@ use crate::ghs::message::{Message, MessageCounts, Payload};
 use crate::ghs::queues::RankQueues;
 use crate::ghs::result::{FlushEvent, ProfileCounters};
 use crate::ghs::types::{EdgeState, Level, VertexState};
+use crate::ghs::vertex::Outcome;
 use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::ghs::wire::{self, IdentityCodec, WireFormat};
 use crate::graph::csr::Csr;
@@ -21,6 +27,26 @@ use crate::graph::{EdgeList, VertexId};
 /// Sentinel for "nil" adjacency-index variables (best_edge, test_edge,
 /// in_branch).
 pub const NIL: u32 = u32::MAX;
+
+/// `adj_peer` sentinel: the adjacency entry's destination is rank-local
+/// (delivered straight into this rank's queues, no aggregation buffer).
+const PEER_LOCAL: u32 = u32::MAX;
+
+/// Outcome of one [`RankState::step`] — the poll-style contract between a
+/// rank automaton and whichever engine drives it (threaded loop or the
+/// async scheduler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepStatus {
+    /// The rank did (or still has) immediately runnable work: step again.
+    Ready,
+    /// A silence point: nothing poppable, no unflushed outbox, nothing
+    /// handed to the interconnect this iteration. Only new traffic can
+    /// create work here, so the driver may park the rank (threaded) or
+    /// deschedule its task until a wakeup (async). Messages parked in the
+    /// postponed stashes do NOT make a rank Ready — they only become
+    /// processable after new traffic, which is exactly the wake signal.
+    Blocked,
+}
 
 /// GHS variables of one local vertex (GHS83 notation in comments).
 #[derive(Debug, Clone)]
@@ -92,10 +118,23 @@ pub struct RankState {
     pub lookup_stats: LookupStats,
     /// Message queues (§3.2/§3.4).
     pub queues: RankQueues,
-    /// Per-destination aggregation buffers (encoded bytes + message count).
+    /// Per-**peer** aggregation buffers (encoded bytes + message count),
+    /// indexed by peer slot (see [`Self::peers`]). The paper creates "a
+    /// separate buffer ... for every possible receiving process"; we
+    /// allocate them only for ranks this rank's cut edges can actually
+    /// reach, so engine-wide outbox memory is O(edge cut) instead of
+    /// O(P²) — the difference between 4096 ranks fitting one host and
+    /// half a gigabyte of empty vectors.
     pub outbox: Vec<(Vec<u8>, u32)>,
-    /// Destinations with a non-empty aggregation buffer (so `flush_all`
-    /// does not scan all P buffers every SENDING_FREQUENCY iterations).
+    /// Peer slot → destination rank id (every distinct remote owner among
+    /// this rank's neighbours, in CSR discovery order; fixed at build).
+    pub peers: Vec<u32>,
+    /// Adjacency entry → peer slot, [`PEER_LOCAL`] for rank-local
+    /// destinations. Precomputed at build so the send hot path never
+    /// recomputes the partition owner per message.
+    adj_peer: Vec<u32>,
+    /// Peer slots with a non-empty aggregation buffer (so `flush_all`
+    /// does not scan every buffer each SENDING_FREQUENCY iterations).
     dirty_dsts: Vec<u32>,
     /// Buffers flushed this superstep, to hand to the interconnect.
     pub flushed: Vec<(u32, Vec<u8>, u32)>, // (dst, bytes, n_msgs)
@@ -139,15 +178,34 @@ impl RankState {
         let lookup = EdgeLookup::build(config.search, &csr, config.hash_sizing);
         let nnz = csr.nnz();
         let n_local = rows as usize;
-        // Precompute codec weights and per-row weight-sorted adjacency
-        // order (initialization time, like the paper's hash table build).
+        // Precompute codec weights, per-row weight-sorted adjacency order,
+        // and the owner (peer slot) of every adjacency entry
+        // (initialization time, like the paper's hash table build). The
+        // `slot_of` scratch is the only P-sized allocation and dies here.
         let mut adj_weight = Vec::with_capacity(nnz);
+        let mut adj_peer = Vec::with_capacity(nnz);
+        let mut peers: Vec<u32> = Vec::new();
+        let mut slot_of: Vec<u32> = vec![PEER_LOCAL; part.n_ranks() as usize];
         for row in 0..rows {
             let v = csr.vertex_of(row);
             for i in csr.row_range_at(row as usize) {
-                adj_weight.push(codec.weight_of(csr.weight(i), v, csr.col(i), &part));
+                let dst = csr.col(i);
+                adj_weight.push(codec.weight_of(csr.weight(i), v, dst, &part));
+                let owner = part.owner(dst);
+                if owner == rank {
+                    adj_peer.push(PEER_LOCAL);
+                } else {
+                    let mut slot = slot_of[owner as usize];
+                    if slot == PEER_LOCAL {
+                        slot = peers.len() as u32;
+                        peers.push(owner);
+                        slot_of[owner as usize] = slot;
+                    }
+                    adj_peer.push(slot);
+                }
             }
         }
+        drop(slot_of);
         let mut sorted_adj: Vec<u32> = (0..nnz as u32).collect();
         for row in 0..rows {
             let range = csr.row_range_at(row as usize);
@@ -165,7 +223,9 @@ impl RankState {
             lookup,
             lookup_stats: LookupStats::default(),
             queues: RankQueues::new(config.separate_test_queue),
-            outbox: (0..part.n_ranks()).map(|_| (Vec::new(), 0)).collect(),
+            outbox: peers.iter().map(|_| (Vec::new(), 0)).collect(),
+            peers,
+            adj_peer,
             dirty_dsts: Vec::new(),
             flushed: Vec::new(),
             pool: Arc::new(BufferPool::new()),
@@ -218,38 +278,55 @@ impl RankState {
         let msg = Message::new(v, dst, payload);
         self.sent_counts.bump(&payload);
         self.prof.msgs_sent += 1;
-        let owner = self.part.owner(dst);
-        if owner == self.rank {
+        let slot = self.adj_peer[adj];
+        if slot == PEER_LOCAL {
+            debug_assert_eq!(self.part.owner(dst), self.rank);
             self.queues.push_incoming(msg);
         } else {
-            let (buf, n) = &mut self.outbox[owner as usize];
+            debug_assert_eq!(self.part.owner(dst), self.peers[slot as usize]);
+            let (buf, n) = &mut self.outbox[slot as usize];
             if buf.is_empty() {
-                self.dirty_dsts.push(owner);
+                self.dirty_dsts.push(slot);
             }
             wire::encode(&msg, self.wire, buf);
             *n += 1;
             self.prof.bytes_sent += self.wire.size_of(&payload) as u64;
             if buf.len() >= self.config.max_msg_size {
-                self.flush_one(owner);
+                self.flush_peer(slot as usize);
             }
         }
     }
 
-    /// Flush one destination's aggregation buffer to the interconnect.
-    /// The outbox replacement comes from the shared recycle pool rather
+    /// Peer slot holding the aggregation buffer for rank `dst`, if this
+    /// rank has any edge towards it.
+    pub fn peer_slot_of(&self, dst: u32) -> Option<usize> {
+        self.peers.iter().position(|&p| p == dst)
+    }
+
+    /// Flush the aggregation buffer headed to rank `dst` (no-op when `dst`
+    /// is not a peer of this rank).
+    pub fn flush_one(&mut self, dst: u32) {
+        if let Some(slot) = self.peer_slot_of(dst) {
+            self.flush_peer(slot);
+        }
+    }
+
+    /// Flush one peer's aggregation buffer to the interconnect. The
+    /// outbox replacement comes from the shared recycle pool rather
     /// than a fresh allocation; [`ProfileCounters::buf_reuse`] /
     /// [`ProfileCounters::buf_alloc`] record the hit rate.
-    pub fn flush_one(&mut self, dst: u32) {
-        if self.outbox[dst as usize].0.is_empty() {
+    fn flush_peer(&mut self, slot: usize) {
+        if self.outbox[slot].0.is_empty() {
             return;
         }
+        let dst = self.peers[slot];
         let (replacement, reused) = self.pool.get();
         if reused {
             self.prof.buf_reuse += 1;
         } else {
             self.prof.buf_alloc += 1;
         }
-        let (buf, n) = &mut self.outbox[dst as usize];
+        let (buf, n) = &mut self.outbox[slot];
         let bytes = std::mem::replace(buf, replacement);
         let n_msgs = std::mem::replace(n, 0);
         self.prof.flushes += 1;
@@ -267,10 +344,12 @@ impl RankState {
 
     /// Flush all non-empty buffers ("send_all_bufs" in the paper's scheme).
     pub fn flush_all(&mut self) {
-        let dirty = std::mem::take(&mut self.dirty_dsts);
-        for dst in dirty {
-            self.flush_one(dst);
+        let mut dirty = std::mem::take(&mut self.dirty_dsts);
+        for slot in dirty.drain(..) {
+            self.flush_peer(slot as usize);
         }
+        // Keep the drained allocation (flush cadence reuses it forever).
+        self.dirty_dsts = dirty;
     }
 
     /// Any unflushed aggregated bytes?
@@ -285,6 +364,94 @@ impl RankState {
         self.prof.bytes_decoded += buf.len() as u64;
         self.prof.decode_batches += 1;
         self.prof.msgs_decoded += wire::decode_into(buf, self.wire, &mut self.queues);
+    }
+
+    /// Inject this rank's spontaneous start into the pending-message
+    /// accounting shared by the concurrent engines: wake every vertex,
+    /// credit the messages that sends, then release this rank's startup
+    /// token (the token keeps `pending` from reaching zero before any
+    /// work exists). Must be called exactly once, before the first
+    /// [`Self::step`].
+    pub fn start(&mut self, pending: &AtomicI64) {
+        debug_assert_eq!(self.prof.iterations, 0, "start() after stepping");
+        let before = self.prof.msgs_sent;
+        self.wakeup_all();
+        let delta = self.prof.msgs_sent - before;
+        if delta > 0 {
+            pending.fetch_add(delta as i64, Ordering::AcqRel);
+        }
+        pending.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// One iteration of the paper's per-process while loop (§3.2), shared
+    /// by the threaded engine and the async scheduler: process a bounded
+    /// burst from the main queue, the Test queue at `CHECK_FREQUENCY`
+    /// cadence, and flush aggregation buffers at `SENDING_FREQUENCY`
+    /// cadence. The driver is responsible for delivering anything left in
+    /// [`Self::flushed`] and for feeding arrived packets via
+    /// [`Self::read_buffer`] *before* the call.
+    ///
+    /// `pending` is the engines' shared silence counter: every send adds
+    /// one, every completed (non-postponed) processing removes one; the
+    /// network is silent exactly when it reads zero.
+    pub fn step(&mut self, pending: &AtomicI64) -> Result<StepStatus> {
+        self.prof.iterations += 1;
+        let iter = self.prof.iterations;
+        if iter > self.config.max_supersteps {
+            bail!("rank {}: exceeded max iterations {}", self.rank, self.config.max_supersteps);
+        }
+        // process_queue
+        let main_burst = self.queues.main_len().min(self.config.burst_size);
+        for _ in 0..main_burst {
+            let msg = self.queues.pop_main().expect("len checked");
+            let sent_before = self.prof.msgs_sent;
+            let outcome = self.handle(msg);
+            let delta = self.prof.msgs_sent - sent_before;
+            if delta > 0 {
+                pending.fetch_add(delta as i64, Ordering::AcqRel);
+            }
+            if outcome == Outcome::Postponed {
+                self.prof.msgs_postponed += 1;
+                self.queues.postpone(msg);
+            } else {
+                self.prof.msgs_processed_main += 1;
+                pending.fetch_sub(1, Ordering::AcqRel);
+                self.queues.note_done();
+            }
+        }
+        // Test queue (§3.4), every CHECK_FREQUENCY iterations.
+        let mut test_burst = 0;
+        if self.queues.has_separate_test() && iter % self.config.check_frequency as u64 == 0 {
+            test_burst = self.queues.test_len().min(self.config.burst_size);
+            for _ in 0..test_burst {
+                let msg = self.queues.pop_test().expect("len checked");
+                let sent_before = self.prof.msgs_sent;
+                let outcome = self.handle(msg);
+                let delta = self.prof.msgs_sent - sent_before;
+                if delta > 0 {
+                    pending.fetch_add(delta as i64, Ordering::AcqRel);
+                }
+                if outcome == Outcome::Postponed {
+                    self.prof.msgs_postponed += 1;
+                    self.queues.postpone(msg);
+                } else {
+                    self.prof.msgs_processed_test += 1;
+                    pending.fetch_sub(1, Ordering::AcqRel);
+                    self.queues.note_done();
+                }
+            }
+        }
+        // send_all_bufs, every SENDING_FREQUENCY iterations.
+        if iter % self.config.sending_frequency as u64 == 0 {
+            self.superstep = iter;
+            self.flush_all();
+        }
+        let blocked = main_burst == 0
+            && test_burst == 0
+            && self.queues.active_len() == 0
+            && !self.has_dirty_outbox()
+            && self.flushed.is_empty();
+        Ok(if blocked { StepStatus::Blocked } else { StepStatus::Ready })
     }
 
     /// Total work pending at this rank (queues + unflushed + flushed-not-
@@ -415,7 +582,64 @@ mod tests {
         r.flush_one(1);
         assert_eq!(r.prof.buf_reuse, 1, "second flush recycles");
         // The recycled buffer (capacity intact) is now the outbox buffer.
-        assert!(r.outbox[1].0.is_empty() && r.outbox[1].0.capacity() >= cap);
+        let slot = r.peer_slot_of(1).expect("rank 1 is a peer");
+        assert!(r.outbox[slot].0.is_empty() && r.outbox[slot].0.capacity() >= cap);
+    }
+
+    #[test]
+    fn outbox_is_sized_by_reachable_peers_not_rank_count() {
+        // A 6-vertex path split across 6 ranks: each rank owns one vertex
+        // with at most two cross-rank neighbours, so its outbox must hold
+        // at most 2 buffers — not 6. (At 4096 ranks the dense form is half
+        // a gigabyte of empty vectors; this is what the async engine's
+        // rank scale rests on.)
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(3);
+        let (g, _) = preprocess(&crate::graph::generators::structured::path(6, &mut rng));
+        let part = Partition::block(g.n_vertices, 6);
+        let cfg = GhsConfig { n_ranks: 6, ..GhsConfig::default() };
+        for rank in 0..6 {
+            let r = RankState::new(rank, &g, part.clone(), &cfg, IdentityCodec::SpecialId);
+            let expect = usize::from(rank > 0) + usize::from(rank < 5);
+            assert_eq!(r.peers.len(), expect, "rank {rank}: path interior has 2 peers");
+            assert_eq!(r.outbox.len(), r.peers.len(), "one buffer per reachable peer");
+            assert_eq!(r.peer_slot_of(rank), None, "self is never a peer");
+        }
+    }
+
+    #[test]
+    fn step_drives_a_single_rank_to_silence() {
+        let (_, mut r) = mk_rank(1, 0);
+        let pending = AtomicI64::new(1); // this rank's startup token
+        r.start(&pending);
+        assert!(pending.load(Ordering::SeqCst) > 0, "wakeup injected local work");
+        let mut guard = 0;
+        loop {
+            let st = r.step(&pending).unwrap();
+            assert!(r.flushed.is_empty(), "single rank has no remote destinations");
+            if st == StepStatus::Blocked {
+                break;
+            }
+            guard += 1;
+            assert!(guard < 100_000, "no convergence");
+        }
+        assert_eq!(pending.load(Ordering::SeqCst), 0, "blocked only at global silence");
+        assert_eq!(r.queues.total_len(), 0, "no stash stranded");
+        assert_eq!(
+            r.prof.msgs_processed_main + r.prof.msgs_processed_test,
+            r.prof.msgs_sent,
+            "every sent message processed exactly once"
+        );
+    }
+
+    #[test]
+    fn step_exceeding_max_supersteps_errors() {
+        let (_, mut r) = mk_rank(1, 0);
+        r.config.max_supersteps = 2;
+        let pending = AtomicI64::new(1);
+        r.start(&pending);
+        assert!(r.step(&pending).is_ok());
+        assert!(r.step(&pending).is_ok());
+        assert!(r.step(&pending).is_err(), "third iteration exceeds the bound");
     }
 
     #[test]

@@ -47,6 +47,16 @@ pub struct ProfileCounters {
     pub parked: u64,
     /// Postponed-stash retry rounds (stash→queue splices).
     pub stash_merges: u64,
+    /// Times this rank's blocked task was woken by message arrival and
+    /// re-queued onto the scheduler's ready list (async engine only).
+    pub wakeups: u64,
+    /// Scheduler activations: times a worker picked this rank's task off
+    /// the ready list and ran a quantum of [`crate::ghs::rank::RankState::step`]
+    /// calls (async engine only; one activation covers several iterations).
+    pub steps: u64,
+    /// High-water mark of the scheduler's ready list (async engine only;
+    /// a whole-run property, so [`Self::merge`] takes the max, not a sum).
+    pub ready_max: u64,
 }
 
 impl ProfileCounters {
@@ -89,6 +99,30 @@ impl ProfileCounters {
         self.buf_alloc += o.buf_alloc;
         self.parked += o.parked;
         self.stash_merges += o.stash_merges;
+        self.wakeups += o.wakeups;
+        self.steps += o.steps;
+        self.ready_max = self.ready_max.max(o.ready_max);
+    }
+
+    /// The park/wake counter discipline each engine must honour (used by
+    /// the conformance and perf-regression suites so the assertions stay
+    /// engine-conditional instead of assuming the threaded engine):
+    ///
+    /// * `Sequential` — never parks, never wakes, never schedules: all of
+    ///   `parked` / `wakeups` / `steps` / `ready_max` are zero.
+    /// * `Threaded` — may park on its channel, but has no scheduler, so
+    ///   `wakeups` / `steps` / `ready_max` are zero.
+    /// * `Async` — never parks a rank on a channel (blocked tasks are
+    ///   descheduled instead); `steps` and `ready_max` are live.
+    pub fn park_wake_invariants(&self, kind: crate::ghs::engine::EngineKind) -> bool {
+        use crate::ghs::engine::EngineKind;
+        match kind {
+            EngineKind::Sequential => {
+                self.parked == 0 && self.wakeups == 0 && self.steps == 0 && self.ready_max == 0
+            }
+            EngineKind::Threaded => self.wakeups == 0 && self.steps == 0 && self.ready_max == 0,
+            EngineKind::Async => self.parked == 0 && self.steps > 0 && self.ready_max > 0,
+        }
     }
 }
 
@@ -156,6 +190,9 @@ mod tests {
             buf_alloc: 1,
             parked: 2,
             stash_merges: 9,
+            wakeups: 6,
+            steps: 11,
+            ready_max: 3,
             ..Default::default()
         };
         a.merge(&b);
@@ -166,6 +203,30 @@ mod tests {
         assert_eq!(a.buf_reuse, 4);
         assert_eq!(a.parked, 2);
         assert_eq!(a.stash_merges, 9);
+        assert_eq!(a.wakeups, 6);
+        assert_eq!(a.steps, 11);
+        assert_eq!(a.ready_max, 3, "high-water mark merges by max");
+        a.merge(&ProfileCounters { ready_max: 2, ..Default::default() });
+        assert_eq!(a.ready_max, 3, "smaller high-water marks do not lower the max");
+    }
+
+    #[test]
+    fn park_wake_invariants_per_engine() {
+        use crate::ghs::engine::EngineKind;
+        let seq = ProfileCounters::default();
+        assert!(seq.park_wake_invariants(EngineKind::Sequential));
+        assert!(seq.park_wake_invariants(EngineKind::Threaded), "threaded may park zero times");
+        assert!(!seq.park_wake_invariants(EngineKind::Async), "async must record steps");
+
+        let thr = ProfileCounters { parked: 5, ..Default::default() };
+        assert!(!thr.park_wake_invariants(EngineKind::Sequential));
+        assert!(thr.park_wake_invariants(EngineKind::Threaded));
+
+        let asy = ProfileCounters { steps: 4, ready_max: 2, wakeups: 1, ..Default::default() };
+        assert!(asy.park_wake_invariants(EngineKind::Async));
+        assert!(!asy.park_wake_invariants(EngineKind::Threaded));
+        let asy_parked = ProfileCounters { parked: 1, ..asy };
+        assert!(!asy_parked.park_wake_invariants(EngineKind::Async), "async never parks");
     }
 
     #[test]

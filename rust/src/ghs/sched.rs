@@ -1,0 +1,491 @@
+//! Async rank scheduler: multiplex thousands of simulated ranks onto a
+//! fixed worker pool.
+//!
+//! The threaded engine ([`crate::ghs::parallel`]) spawns one OS thread per
+//! rank, which caps single-host experiments far below the rank counts
+//! where the paper's §4 scaling curves become visible. This engine keeps
+//! the exact same per-rank automaton and silence-termination protocol but
+//! runs every rank as a *resumable task* on `--workers` pool threads
+//! (default: one per CPU):
+//!
+//! * **Mailboxes** — each task owns its PR 3 slot-arena queues
+//!   ([`crate::ghs::queues::RankQueues`]); cross-rank traffic travels as
+//!   encoded packet buffers through a small per-task inbox and is
+//!   batch-decoded straight into queue slots on the next activation.
+//! * **Run queue** — a central ready list of task ids. A worker pops a
+//!   task, runs a bounded quantum of [`RankState::step`] calls, delivers
+//!   whatever the task flushed, and either re-queues it (still `Ready`)
+//!   or deschedules it (`Blocked` at a silence point).
+//! * **Wake protocol** — delivering a packet wakes the destination task:
+//!   `Idle → Ready` (push onto the run queue), `Running → Woken` (the
+//!   running worker re-queues it instead of idling it, closing the race
+//!   where traffic lands between a task's last inbox drain and its
+//!   block). Inside a rank, `RankQueues::note_done` remains the
+//!   queue-level wake: new traffic re-arms the postponed stashes.
+//! * **Termination** — the shared pending-message counter of the threaded
+//!   engine (enqueue +1, processing-without-postponement −1, one startup
+//!   token per rank). The worker that observes zero declares global
+//!   silence. A state where messages are pending but no task is runnable
+//!   and no worker is active is reported as a deadlock instead of
+//!   hanging.
+//!
+//! Scheduling is nondeterministic (like the threaded engine) but the
+//! result is the unique MSF — the conformance matrix gates this engine
+//! against the Kruskal oracle cell-for-cell.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::ghs::config::GhsConfig;
+use crate::ghs::engine::prepare_run;
+use crate::ghs::parallel::{collect, Packet};
+use crate::ghs::rank::{RankState, StepStatus};
+use crate::ghs::result::GhsRun;
+use crate::graph::EdgeList;
+
+/// Steps one activation may run before the task is rotated to the back of
+/// the run queue (fairness) — enough to cover several flush cadences
+/// without letting one hot rank starve thousands of peers.
+const SCHED_QUANTUM: u32 = 16;
+
+/// Fallback poll interval for workers parked on an empty run queue. Every
+/// state change notifies the condvar, so this only bounds the cost of a
+/// hypothetical lost wakeup.
+const IDLE_WAIT: Duration = Duration::from_millis(5);
+
+// Task scheduling states (one `AtomicU8` per task).
+/// Descheduled at a silence point; a wake makes it `READY`.
+const IDLE: u8 = 0;
+/// On the run queue (or just popped, about to run).
+const READY: u8 = 1;
+/// A worker is inside the task's quantum.
+const RUNNING: u8 = 2;
+/// Woken while `RUNNING`: the runner must re-queue instead of idling.
+const WOKEN: u8 = 3;
+
+/// Per-task shared state touched by *other* workers (the owned
+/// [`RankState`] lives in [`Sched::slots`] and is only accessed by the
+/// worker currently running the task).
+struct TaskShared {
+    /// Encoded packets awaiting decode: `(src, bytes, n_msgs)`.
+    inbox: Mutex<Vec<Packet>>,
+    /// IDLE / READY / RUNNING / WOKEN.
+    state: AtomicU8,
+    /// Arrival-triggered wakeups of this task (IDLE→READY and
+    /// RUNNING→WOKEN transitions), later copied into
+    /// [`ProfileCounters::wakeups`](crate::ghs::result::ProfileCounters).
+    wakeups: AtomicU64,
+}
+
+/// Run-queue interior: the deque plus the count of workers currently
+/// inside a task quantum (for deadlock detection — see [`Sched::retire`]).
+struct ReadyList {
+    queue: VecDeque<u32>,
+    active_workers: usize,
+}
+
+/// Scheduler shared state (one per run, `Arc`-shared across workers).
+struct Sched {
+    tasks: Vec<TaskShared>,
+    /// The rank automata; `None` only transiently (never observed, since a
+    /// task is on the run queue at most once and only its runner locks the
+    /// slot) and after final collection.
+    slots: Vec<Mutex<Option<RankState>>>,
+    ready: Mutex<ReadyList>,
+    cv: Condvar,
+    /// Shared silence counter (see module docs).
+    pending: AtomicI64,
+    /// Set on global silence, error, or deadlock: workers exit.
+    done: AtomicBool,
+    /// First error raised by any worker (task step failure or deadlock).
+    failed: Mutex<Option<anyhow::Error>>,
+    /// High-water mark of the run-queue length.
+    ready_max: AtomicU64,
+}
+
+impl Sched {
+    /// Push a task onto the run queue (its state must already be `READY`)
+    /// and wake one parked worker.
+    fn enqueue(&self, task: u32) {
+        let mut r = self.ready.lock().unwrap();
+        r.queue.push_back(task);
+        let len = r.queue.len() as u64;
+        drop(r);
+        self.ready_max.fetch_max(len, Ordering::Relaxed);
+        self.cv.notify_one();
+    }
+
+    /// Wake `task` because traffic arrived in its inbox.
+    fn wake(&self, task: u32) {
+        let t = &self.tasks[task as usize];
+        loop {
+            match t.state.load(Ordering::SeqCst) {
+                IDLE => {
+                    if t.state
+                        .compare_exchange(IDLE, READY, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        t.wakeups.fetch_add(1, Ordering::Relaxed);
+                        self.enqueue(task);
+                        return;
+                    }
+                }
+                RUNNING => {
+                    if t.state
+                        .compare_exchange(RUNNING, WOKEN, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        t.wakeups.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                // READY: already queued (or about to run and will drain the
+                // inbox after its RUNNING store). WOKEN: re-queue already
+                // guaranteed.
+                _ => return,
+            }
+        }
+    }
+
+    /// Flag global completion and release every parked worker.
+    fn finish(&self) {
+        self.done.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Record the first failure and stop the scheduler.
+    fn fail(&self, e: anyhow::Error) {
+        let mut f = self.failed.lock().unwrap();
+        f.get_or_insert(e);
+        drop(f);
+        self.finish();
+    }
+
+    /// Block until a task is runnable; `None` means the run is over.
+    /// Increments the active-worker count under the run-queue lock, so
+    /// "queue empty and nobody active" is an atomic observation.
+    fn next_ready(&self) -> Option<u32> {
+        let mut r = self.ready.lock().unwrap();
+        loop {
+            if self.done.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(task) = r.queue.pop_front() {
+                r.active_workers += 1;
+                return Some(task);
+            }
+            if self.pending.load(Ordering::SeqCst) == 0 {
+                drop(r);
+                self.finish();
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(r, IDLE_WAIT).unwrap();
+            r = guard;
+        }
+    }
+
+    /// A worker finished one activation. With the run-queue lock held:
+    /// leave the active set, and if nothing is runnable, nobody else is
+    /// active, and messages are still pending, no future event can create
+    /// work — report the deadlock instead of letting the pool hang.
+    fn retire(&self) {
+        let mut r = self.ready.lock().unwrap();
+        r.active_workers -= 1;
+        let stuck = r.active_workers == 0 && r.queue.is_empty();
+        drop(r);
+        if !stuck || self.done.load(Ordering::SeqCst) {
+            return;
+        }
+        let pending = self.pending.load(Ordering::SeqCst);
+        if pending == 0 {
+            self.finish();
+        } else {
+            self.fail(anyhow!(
+                "scheduler deadlock: {pending} messages pending but every task is blocked \
+                 (postponed messages that no future traffic can unblock)"
+            ));
+        }
+    }
+}
+
+/// Releases the pool when a worker unwinds: a panic inside a task quantum
+/// (an invariant `expect`, an index panic in the automaton) would
+/// otherwise leave `done` unset and `active_workers` inflated — the other
+/// workers would poll forever and `run_async` would hang in `join`
+/// instead of re-raising the panic.
+struct PanicReleaseGuard<'a>(&'a Sched);
+
+impl Drop for PanicReleaseGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.finish();
+        }
+    }
+}
+
+/// One pool worker: pop tasks off the run queue and drive their automata
+/// until global silence (or failure).
+fn worker(s: &Sched) {
+    let _release_on_panic = PanicReleaseGuard(s);
+    // Reused scratch: drained inbox packets and their spent buffers.
+    let mut drained: Vec<Packet> = Vec::new();
+    let mut spent: Vec<Vec<u8>> = Vec::new();
+    while let Some(task) = s.next_ready() {
+        let t = &s.tasks[task as usize];
+        t.state.store(RUNNING, Ordering::SeqCst);
+        let mut slot = s.slots[task as usize].lock().unwrap();
+        let rank = slot.as_mut().expect("task state owned by the run queue");
+        // Spontaneous start on the task's first activation (every task is
+        // seeded onto the initial run queue exactly once).
+        if rank.prof.iterations == 0 {
+            rank.start(&s.pending);
+        }
+        rank.prof.steps += 1;
+        let mut status = StepStatus::Ready;
+        'quantum: for _ in 0..SCHED_QUANTUM {
+            // read_msgs: batch-decode everything in the mailbox straight
+            // into the task's slot-arena queues, then recycle the packet
+            // buffers through the shared pool under a single lock.
+            {
+                let mut inbox = t.inbox.lock().unwrap();
+                std::mem::swap(&mut *inbox, &mut drained);
+            }
+            for (_src, buf, _n) in drained.drain(..) {
+                rank.read_buffer(&buf);
+                spent.push(buf);
+            }
+            if !spent.is_empty() {
+                rank.pool.put_all(spent.drain(..));
+            }
+            status = match rank.step(&s.pending) {
+                Ok(st) => st,
+                Err(e) => {
+                    drop(slot);
+                    s.fail(e);
+                    s.retire();
+                    return;
+                }
+            };
+            // Deliver flushed packets and wake their destinations.
+            for (dst, buf, n) in rank.flushed.drain(..) {
+                let peer = &s.tasks[dst as usize];
+                peer.inbox.lock().unwrap().push((rank.rank, buf, n));
+                s.wake(dst);
+            }
+            if status == StepStatus::Blocked || s.done.load(Ordering::SeqCst) {
+                break 'quantum;
+            }
+        }
+        if status == StepStatus::Blocked {
+            // Mirror of the threaded engine's pre-park silence check.
+            rank.prof.finish_checks += 1;
+        }
+        drop(slot);
+        match status {
+            StepStatus::Ready => {
+                t.state.store(READY, Ordering::SeqCst);
+                s.enqueue(task);
+            }
+            StepStatus::Blocked => {
+                if t.state
+                    .compare_exchange(RUNNING, IDLE, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_err()
+                {
+                    // Woken mid-quantum (traffic after our last drain):
+                    // requeue rather than strand the arrival.
+                    t.state.store(READY, Ordering::SeqCst);
+                    s.enqueue(task);
+                }
+            }
+        }
+        if s.pending.load(Ordering::SeqCst) == 0 {
+            s.finish();
+        }
+        s.retire();
+    }
+}
+
+/// Run GHS on the cooperative scheduler. The graph must be preprocessed.
+pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
+    let (part, partition_stats, codec) = prepare_run(g, &mut config)?;
+    let p = config.n_ranks as usize;
+    let workers = config.effective_workers() as usize;
+
+    // One shared recycle pool per run, exactly like the other engines.
+    let pool = Arc::new(crate::ghs::bufpool::BufferPool::new());
+    let mut slots = Vec::with_capacity(p);
+    let mut tasks = Vec::with_capacity(p);
+    for rank_id in 0..p {
+        let mut rank = RankState::new(rank_id as u32, g, part.clone(), &config, codec);
+        rank.pool = Arc::clone(&pool);
+        slots.push(Mutex::new(Some(rank)));
+        tasks.push(TaskShared {
+            inbox: Mutex::new(Vec::new()),
+            state: AtomicU8::new(READY),
+            wakeups: AtomicU64::new(0),
+        });
+    }
+    let sched = Arc::new(Sched {
+        tasks,
+        slots,
+        ready: Mutex::new(ReadyList {
+            queue: (0..p as u32).collect(),
+            active_workers: 0,
+        }),
+        cv: Condvar::new(),
+        // One startup token per rank: the counter cannot reach zero before
+        // every task has injected its spontaneous wakeup.
+        pending: AtomicI64::new(p as i64),
+        done: AtomicBool::new(false),
+        failed: Mutex::new(None),
+        ready_max: AtomicU64::new(p as u64),
+    });
+
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let s = Arc::clone(&sched);
+            std::thread::spawn(move || worker(&s))
+        })
+        .collect();
+    for h in handles {
+        if let Err(e) = h.join() {
+            std::panic::resume_unwind(e);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = sched.failed.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    let mut ranks = Vec::with_capacity(p);
+    for (i, slot) in sched.slots.iter().enumerate() {
+        let mut rank = slot.lock().unwrap().take().expect("worker pool exited");
+        rank.prof.wakeups = sched.tasks[i].wakeups.load(Ordering::Relaxed);
+        ranks.push(rank);
+    }
+    let mut run = collect(ranks, g.n_vertices, wall, partition_stats)?;
+    // A whole-run property, not a per-rank sum (merge() takes the max).
+    run.profile.ready_max = sched.ready_max.load(Ordering::Relaxed);
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::structured;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    fn cfg(n_ranks: u32, workers: u32) -> GhsConfig {
+        GhsConfig { n_ranks, workers, max_supersteps: 50_000_000, ..GhsConfig::default() }
+    }
+
+    fn check(g: &EdgeList, ranks: u32, workers: u32) -> GhsRun {
+        let (clean, _) = preprocess(g);
+        let run = run_async(&clean, cfg(ranks, workers)).unwrap();
+        let oracle = kruskal(&clean);
+        assert_eq!(run.forest.canonical_edges(), oracle.canonical_edges());
+        assert_eq!(run.forest.n_components, oracle.n_components);
+        run
+    }
+
+    #[test]
+    fn async_matches_kruskal_small() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(17);
+        let g = structured::connected_random(40, 80, &mut rng);
+        for (p, w) in [(1u32, 1u32), (2, 2), (4, 2), (8, 4)] {
+            check(&g, p, w);
+        }
+    }
+
+    #[test]
+    fn async_generators() {
+        for family in [GraphFamily::Rmat, GraphFamily::Random] {
+            let g = generate(family, 7, 5);
+            check(&g, 4, 2);
+        }
+    }
+
+    #[test]
+    fn async_disconnected() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(18);
+        let a = structured::connected_random(15, 10, &mut rng);
+        let b = structured::connected_random(11, 6, &mut rng);
+        let g = structured::disjoint_union(&a, &b);
+        check(&g, 3, 2);
+    }
+
+    #[test]
+    fn scheduler_counters_are_live() {
+        // A long 2-rank path forces merge cascades where each rank
+        // repeatedly blocks waiting on its peer: tasks must be woken by
+        // arrivals (not parked — the async engine never parks a rank).
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(23);
+        let g = structured::path(2048, &mut rng);
+        let run = check(&g, 2, 2);
+        let p = &run.profile;
+        assert!(p.steps > 0, "activations recorded");
+        assert!(p.wakeups > 0, "blocked tasks woken by message arrival");
+        assert!(p.ready_max >= 2, "initial seeding fills the run queue");
+        assert_eq!(p.parked, 0, "async tasks deschedule, they never park");
+        assert!(p.iterations >= p.steps, "a quantum covers >= 1 iteration");
+        assert!(
+            p.park_wake_invariants(crate::ghs::engine::EngineKind::Async),
+            "async park/wake discipline"
+        );
+    }
+
+    #[test]
+    fn async_pipeline_counters_and_accounting() {
+        let g = generate(GraphFamily::Rmat, 8, 5);
+        let run = check(&g, 4, 4);
+        let p = &run.profile;
+        assert!(p.decode_batches > 0 && p.msgs_decoded >= p.decode_batches);
+        assert_eq!(p.buf_reuse + p.buf_alloc, p.flushes);
+        assert!(p.buf_reuse > 0, "packets recycle through the shared pool");
+        assert_eq!(p.bytes_sent, p.bytes_decoded, "all buffers delivered");
+        assert_eq!(
+            run.sent.total(),
+            p.msgs_processed_main + p.msgs_processed_test,
+            "every sent message processed exactly once"
+        );
+    }
+
+    #[test]
+    fn async_repeated_runs_stable() {
+        // Nondeterministic scheduling must not change the result.
+        let g = generate(GraphFamily::Rmat, 6, 9);
+        let (clean, _) = preprocess(&g);
+        let oracle = kruskal(&clean).canonical_edges();
+        for _ in 0..5 {
+            let run = run_async(&clean, cfg(4, 3)).unwrap();
+            assert_eq!(run.forest.canonical_edges(), oracle);
+        }
+    }
+
+    #[test]
+    fn more_ranks_than_vertices_includes_zero_vertex_tasks() {
+        // 64 ranks over 16 vertices: 48 tasks own no vertices at all. They
+        // must start, release their startup token, block, and not wedge
+        // termination.
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(6);
+        let g = structured::connected_random(16, 20, &mut rng);
+        check(&g, 64, 4);
+    }
+
+    #[test]
+    fn supersteps_guard_fails_cleanly_across_the_pool() {
+        let g = generate(GraphFamily::Random, 5, 3);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(4, 2);
+        c.max_supersteps = 1; // absurdly small
+        let err = run_async(&clean, c);
+        assert!(err.is_err(), "step error must propagate out of the pool");
+    }
+}

@@ -8,7 +8,9 @@
 //!
 //! ## Layers
 //! * [`ghs`] — the L3 coordinator: per-vertex GHS automaton, per-rank
-//!   state, wire formats, sequential and threaded engines.
+//!   state, wire formats, and three engines (deterministic sequential
+//!   supersteps, one-OS-thread-per-rank, and the async scheduler that
+//!   multiplexes thousands of rank tasks onto a worker pool).
 //! * [`sim`] — simulated cluster: LogGOPS interconnect model, cost-model
 //!   clocks, profiling and message-size timelines.
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas min-edge

@@ -10,7 +10,9 @@ use ghs_mst::coordinator::experiments::{self, ExpOptions};
 use ghs_mst::coordinator::{run_verified, Workload};
 use ghs_mst::ghs::config::GhsConfig;
 use ghs_mst::ghs::edge_lookup::SearchStrategy;
+use ghs_mst::ghs::engine::{run_kind, EngineKind};
 use ghs_mst::ghs::parallel::run_threaded;
+use ghs_mst::ghs::sched::run_async;
 use ghs_mst::ghs::wire::WireFormat;
 use ghs_mst::graph::generators::GraphFamily;
 use ghs_mst::graph::partition::{Partition, PartitionSpec, PartitionStats};
@@ -30,6 +32,7 @@ USAGE: ghs-mst <command> [flags]
 COMMANDS
   run           Run the GHS engine on a generated or loaded graph
                   --family rmat|ssca2|random  --scale N  --ranks N
+                  --engine sequential|threaded|async  --workers N (async pool)
                   --search linear|binary|hash  --wire naive|compact|procid
                   --partition block|degree|hub|file:<path>
                   --hash-sizing paper|pow2 (mask-indexed hash table)
@@ -58,6 +61,11 @@ COMMANDS
 COMMON FLAGS
   --scale N       log2 of vertex count        [default 14, paper 23-24]
   --max-nodes N   largest node count swept    [default 64]
+  --engine E      sequential (virtual-clock superstep engine, default),
+                  threaded (one OS thread per rank), or async (cooperative
+                  scheduler: --workers pool threads multiplex all ranks;
+                  the only engine that runs thousands of ranks on one host)
+  --workers N     async worker pool size      [default 0 = one per CPU]
   --partition S   vertex partitioning: block (paper default), degree
                   (edge-balanced contiguous), hub (scatter top-k hubs),
                   file:<path> (explicit owner map, one rank id per line)
@@ -132,14 +140,30 @@ fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
     }
 }
 
+/// Parse `--engine` (with the legacy `--threaded` boolean as an alias for
+/// `--engine threaded`).
+fn parse_engine_flag(args: &Args) -> Result<EngineKind> {
+    match args.get_opt("engine") {
+        Some(s) => {
+            EngineKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("bad --engine {s} (sequential|threaded|async)")
+            })
+        }
+        None if args.get_bool("threaded") => Ok(EngineKind::Threaded),
+        None => Ok(EngineKind::Sequential),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
-        "family", "scale", "ranks", "search", "wire", "partition", "hash-sizing",
-        "no-test-queue", "input", "threaded", "verify", "quiet",
+        "family", "scale", "ranks", "engine", "workers", "search", "wire", "partition",
+        "hash-sizing", "no-test-queue", "input", "threaded", "verify", "quiet",
     ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
+    let engine = parse_engine_flag(args)?;
     let mut cfg = GhsConfig::final_version(ranks);
+    cfg.workers = args.get_num("workers", 0u32)?;
     if let Some(s) = args.get_opt("search") {
         cfg.search =
             SearchStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("bad --search {s}"))?;
@@ -160,12 +184,23 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.separate_test_queue = false;
     }
     let t0 = std::time::Instant::now();
-    let run = if args.get_bool("threaded") {
-        run_threaded(&clean, cfg)?
-    } else if args.get_bool("verify") {
-        run_verified(&clean, cfg, SimConfig::default())?
-    } else {
-        ghs_mst::coordinator::run_once(&clean, cfg, SimConfig::default())?
+    let run = match engine {
+        EngineKind::Sequential if args.get_bool("verify") => {
+            run_verified(&clean, cfg, SimConfig::default())?
+        }
+        EngineKind::Sequential => {
+            ghs_mst::coordinator::run_once(&clean, cfg, SimConfig::default())?
+        }
+        kind => {
+            let run = run_kind(kind, &clean, cfg)?;
+            if args.get_bool("verify") {
+                let oracle = kruskal::kruskal(&clean);
+                if run.forest.canonical_edges() != oracle.canonical_edges() {
+                    bail!("{} forest mismatch vs Kruskal", kind.label());
+                }
+            }
+            run
+        }
     };
     let wall = t0.elapsed();
     println!(
@@ -173,7 +208,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         clean.n_vertices,
         clean.n_edges()
     );
-    println!("ranks           : {ranks} ({} nodes)", ranks.div_ceil(8));
+    // (a + 7) / 8: `div_ceil` needs Rust 1.73, above the 1.70 MSRV.
+    println!("ranks           : {ranks} ({} nodes)", (ranks + 7) / 8);
+    println!("engine          : {}", engine.label());
     println!("partition       : {part_label} ({})", run.partition.summary());
     println!(
         "forest          : {} edges, {} components, weight {:.6}",
@@ -200,6 +237,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         run.profile.stash_merges,
         run.profile.parked
     );
+    if engine == EngineKind::Async {
+        println!(
+            "scheduler       : {} steps ({:.1} iters/step), {} wakeups, ready-list peak {}",
+            run.profile.steps,
+            run.profile.iterations as f64 / run.profile.steps.max(1) as f64,
+            run.profile.wakeups,
+            run.profile.ready_max
+        );
+    }
     println!("supersteps      : {}", run.supersteps);
     println!("sim time        : {}", fmt_seconds(run.sim.total_time));
     println!("wall time       : {}", fmt_seconds(wall.as_secs_f64()));
@@ -314,7 +360,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
             .forest
             .canonical_edges(),
     )?;
-    report("ghs (threaded)", run_threaded(&clean, cfg)?.forest.canonical_edges())?;
+    report("ghs (threaded)", run_threaded(&clean, cfg.clone())?.forest.canonical_edges())?;
+    report("ghs (async)", run_async(&clean, cfg)?.forest.canonical_edges())?;
     Ok(())
 }
 

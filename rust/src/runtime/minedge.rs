@@ -94,7 +94,8 @@ impl PaddedRows {
         let mut slot_w = Vec::new();
         for v in 0..n {
             let adj = &incident[v];
-            let rows = adj.len().div_ceil(k).max(1);
+            // Manual ceiling division (`div_ceil` needs Rust 1.73 > MSRV).
+            let rows = ((adj.len() + k - 1) / k).max(1);
             for r in 0..rows {
                 row_vertex.push(v as VertexId);
                 for s in 0..k {

@@ -132,7 +132,7 @@ mod tests {
             let mut w = BitWriter::new();
             w.write(value, width);
             let bytes = w.into_bytes();
-            assert_eq!(bytes.len(), width.div_ceil(8));
+            assert_eq!(bytes.len(), (width + 7) / 8);
             let mut r = BitReader::new(&bytes);
             assert_eq!(r.read(width), value, "width {width}");
         }

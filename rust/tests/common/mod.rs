@@ -13,8 +13,6 @@
 use ghs_mst::baseline::kruskal::kruskal;
 use ghs_mst::ghs::config::GhsConfig;
 use ghs_mst::ghs::edge_lookup::SearchStrategy;
-use ghs_mst::ghs::engine::Engine;
-use ghs_mst::ghs::parallel::run_threaded;
 use ghs_mst::ghs::result::GhsRun;
 use ghs_mst::ghs::wire::WireFormat;
 use ghs_mst::graph::generators::{generate_with_factor, structured, GraphFamily};
@@ -28,17 +26,12 @@ pub fn paper_families() -> [GraphFamily; 3] {
     [GraphFamily::Rmat, GraphFamily::Ssca2, GraphFamily::Random]
 }
 
-/// Engine implementations under differential test.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Deterministic sequential superstep engine (`ghs::engine::Engine`).
-    Sequential,
-    /// One-OS-thread-per-rank engine (`ghs::parallel::run_threaded`).
-    Threaded,
-}
+/// Engine implementations under differential test — the library's own
+/// dispatch enum (sequential superstep / threaded / async scheduler).
+pub use ghs_mst::ghs::engine::EngineKind;
 
-/// Both engines.
-pub const ENGINE_KINDS: [EngineKind; 2] = [EngineKind::Sequential, EngineKind::Threaded];
+/// All three engines.
+pub const ENGINE_KINDS: [EngineKind; 3] = EngineKind::ALL;
 
 /// All three §3.5 wire formats.
 pub const WIRE_FORMATS: [WireFormat; 3] =
@@ -134,14 +127,24 @@ pub fn conformance_config(wire: WireFormat, search: SearchStrategy, n_ranks: u32
     }
 }
 
-/// Run one engine kind over a preprocessed graph.
-pub fn run_engine(kind: EngineKind, clean: &EdgeList, cfg: GhsConfig) -> GhsRun {
-    match kind {
-        EngineKind::Sequential => {
-            Engine::new(clean, cfg).expect("engine construction").run().expect("engine run")
-        }
-        EngineKind::Threaded => run_threaded(clean, cfg).expect("threaded run"),
+/// Run one engine kind over a preprocessed graph. Conformance cells run
+/// the async engine on a small fixed pool (2 workers) so the matrix also
+/// exercises many-tasks-per-worker multiplexing, not just 1:1.
+pub fn run_engine(kind: EngineKind, clean: &EdgeList, mut cfg: GhsConfig) -> GhsRun {
+    if kind == EngineKind::Async && cfg.workers == 0 {
+        cfg.workers = 2;
     }
+    let run = ghs_mst::ghs::engine::run_kind(kind, clean, cfg).expect("engine run");
+    assert!(
+        run.profile.park_wake_invariants(kind),
+        "{kind:?}: park/wake counter discipline violated \
+         (parked={}, wakeups={}, steps={}, ready_max={})",
+        run.profile.parked,
+        run.profile.wakeups,
+        run.profile.steps,
+        run.profile.ready_max
+    );
+    run
 }
 
 /// The GHS message-complexity bound: `5·N·⌈log2 N⌉ + 2·M` (GHS83 Thm;

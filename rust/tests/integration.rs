@@ -10,6 +10,7 @@ use ghs_mst::coordinator::Workload;
 use ghs_mst::ghs::config::GhsConfig;
 use ghs_mst::ghs::engine::Engine;
 use ghs_mst::ghs::parallel::run_threaded;
+use ghs_mst::ghs::sched::run_async;
 use ghs_mst::graph::generators::GraphFamily;
 use ghs_mst::graph::io;
 #[cfg(feature = "accelerate")]
@@ -29,6 +30,10 @@ fn every_engine_agrees_with_every_baseline() {
         assert_eq!(seq.forest.canonical_edges(), oracle, "{family:?} ghs sequential");
         let thr = run_threaded(&g, GhsConfig::final_version(4)).unwrap();
         assert_eq!(thr.forest.canonical_edges(), oracle, "{family:?} ghs threaded");
+        let mut async_cfg = GhsConfig::final_version(16);
+        async_cfg.workers = 4; // 4 tasks per worker: real multiplexing
+        let asy = run_async(&g, async_cfg).unwrap();
+        assert_eq!(asy.forest.canonical_edges(), oracle, "{family:?} ghs async");
     }
 }
 

@@ -11,7 +11,10 @@
 use std::sync::OnceLock;
 
 use ghs_mst::coordinator::experiments::{perf_snapshot, ExpOptions, PerfSnapshot, PERF_BASELINE_RANKS};
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::engine::{run_kind, EngineKind};
 use ghs_mst::graph::partition::PartitionSpec;
+use ghs_mst::graph::preprocess::preprocess;
 
 fn scale() -> u32 {
     std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(9)
@@ -82,6 +85,47 @@ fn counter_orderings_match_paper_optimization_stack() {
         snap.postponed_separate,
         snap.postponed_unified
     );
+}
+
+/// Park/wakeup counters are engine-conditional — the baseline assertions
+/// must hold under all three engines, not assume the threaded engine:
+///
+/// * sequential never parks and never schedules,
+/// * threaded parks (this workload provably does: the 2-rank path merge
+///   cascade leaves each rank waiting on its peer) but never schedules,
+/// * async schedules (steps / wakeups / ready-list) but never parks.
+#[test]
+fn park_wake_counters_are_engine_conditional() {
+    let mut rng = ghs_mst::util::prng::Xoshiro256::seed_from_u64(23);
+    let g = ghs_mst::graph::generators::structured::path(2048, &mut rng);
+    let (clean, _) = preprocess(&g);
+    for kind in EngineKind::ALL {
+        let cfg = GhsConfig {
+            n_ranks: 2,
+            workers: 2,
+            max_supersteps: 50_000_000,
+            ..GhsConfig::default()
+        };
+        let run = run_kind(kind, &clean, cfg).unwrap();
+        let p = &run.profile;
+        assert!(
+            p.park_wake_invariants(kind),
+            "{kind:?}: parked={} wakeups={} steps={} ready_max={}",
+            p.parked,
+            p.wakeups,
+            p.steps,
+            p.ready_max
+        );
+        match kind {
+            EngineKind::Sequential => assert_eq!(p.parked, 0),
+            EngineKind::Threaded => {
+                assert!(p.parked > 0, "drained threaded ranks must park, not spin")
+            }
+            EngineKind::Async => {
+                assert!(p.wakeups > 0, "blocked async tasks must be woken by arrivals")
+            }
+        }
+    }
 }
 
 #[test]
