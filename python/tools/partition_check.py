@@ -3,11 +3,12 @@
 
 Line-by-line port of ghs_mst's SplitMix64/xoshiro256**, R-MAT generator,
 preprocess, and the partition strategies (block / degree-balanced /
-serpentine hub-scatter), kept in lock-step with rust/src so the
-partition-quality table in results/partition_baseline.md can be
-re-derived in environments without cargo. The canonical implementation is
-the Rust one — when `ghs-mst partition` is available, prefer it, and fix
-THIS file if the two ever disagree.
+serpentine hub-scatter; the multilevel coarsen/partition/refine port is
+shared with the sibling pipeline_check.py), kept in lock-step with
+rust/src so the partition-quality table in results/partition_baseline.md
+can be re-derived in environments without cargo. The canonical
+implementation is the Rust one — when `ghs-mst partition` is available,
+prefer it, and fix THIS file if the two ever disagree.
 
 Usage: python3 python/tools/partition_check.py
 """
@@ -242,6 +243,15 @@ def workload_rmat(scale):
     return n, preprocess(n, edges)
 
 
+def multilevel_owner(n, p, edges):
+    """The multilevel strategy (partition/multilevel.rs), via the shared
+    port in pipeline_check.py — it only reads endpoint pairs, so the
+    weightless edge lists here feed it unchanged."""
+    from pipeline_check import multilevel
+
+    return list(multilevel(n, p, edges).owner_map)
+
+
 def report(tag, n, p, edges):
     print(f"== {tag}: n={n} m={len(edges)} p={p}")
     rows = {}
@@ -249,14 +259,18 @@ def report(tag, n, p, edges):
         ("block", lambda: owner_from_bounds(block_bounds(n, p), n)),
         ("degree", lambda: degree_balanced_owner(n, p, edges)),
         ("hub", lambda: hub_scatter_owner(n, p, edges)),
+        ("multilevel", lambda: multilevel_owner(n, p, edges)),
     ]:
         s = stats(n, p, edges, ownfn())
         rows[name] = s
         print(
-            f"  {name:7s} max_vtx={s['max_vtx']:5d} vtx_imb={s['vtx_imb']:.2f} "
+            f"  {name:10s} max_vtx={s['max_vtx']:5d} vtx_imb={s['vtx_imb']:.2f} "
             f"max_edge={s['max_edge']:7d} edge_imb={s['edge_imb']:.2f} "
             f"cut={s['cut']:7d} remote={100*s['remote']:.1f}% max_deg={s['max_deg']}"
         )
+    assert rows["multilevel"]["cut"] <= rows["block"]["cut"], (
+        "multilevel cut must never exceed block (builder fallback)"
+    )
     return rows
 
 
@@ -280,4 +294,6 @@ if __name__ == "__main__":
 
     # The baseline snapshot workload: Workload::new(Rmat, 10), 16 ranks.
     n, kept = workload_rmat(10)
-    report("Workload RMAT-10 (seed 0xC0FFEE^10), 16 ranks", n, 16, kept)
+    rows = report("Workload RMAT-10 (seed 0xC0FFEE^10), 16 ranks", n, 16, kept)
+    # The tentpole quality gate: multilevel strictly beats block on cut.
+    assert rows["multilevel"]["cut"] < rows["block"]["cut"], rows

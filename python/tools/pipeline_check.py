@@ -13,10 +13,17 @@ and fix THIS file if the two ever disagree.
 
 What it validates when run:
   1. Conformance: forest == Kruskal (and termination — no stash livelock)
-     over a wire × lookup × test-queue × ranks × partition matrix.
-  2. The perf-baseline counter orderings asserted by
+     over a wire × lookup × test-queue × ranks × partition matrix
+     (partitions include the multilevel coarsen/partition/refine port,
+     replayed bit-for-bit against partition/multilevel.rs).
+  2. The async scheduler protocol, including the GHS_FUZZ_SCHED
+     schedule-randomizing knob (perturbed ready-pop order and mailbox
+     drain batching must never change the forest).
+  3. The multilevel quality gate: strictly lower edge cut than block on
+     RMAT-10@16, within the eps balance cap (results/partition_baseline.md).
+  4. The perf-baseline counter orderings asserted by
      rust/tests/perf_regression.rs, at the same scales/seeds.
-  3. The engine-counter rows of results/partition_baseline.md and the
+  5. The engine-counter rows of results/partition_baseline.md and the
      counter table of results/perf_baseline.md.
 
 Usage: python3 python/tools/pipeline_check.py [--quick]
@@ -328,6 +335,191 @@ def hub_scatter(n, p, edges, top_k=0):
     return MappedPartition(owner, p)
 
 
+MULTILEVEL_SEED = 0x4D4C5456  # partition/multilevel.rs DEFAULT_SEED ("MLTV")
+MULTILEVEL_EPS = 1.05
+COARSEN_PER_RANK = 32
+MAX_REFINE_PASSES = 8
+
+
+def _merged_adjacency(n, edges):
+    """multilevel.rs fine_adjacency: one (neighbour, weight) entry per
+    neighbour, parallel edges summed, self-loops dropped."""
+    rows = [dict() for _ in range(n)]
+    for e in edges:
+        u, v = e[0], e[1]
+        if u == v:
+            continue
+        rows[u][v] = rows[u].get(v, 0) + 1
+        rows[v][u] = rows[v].get(u, 0) + 1
+    return [list(d.items()) for d in rows]
+
+
+def _cut_of(adj, owner):
+    cut = 0
+    for v in range(len(adj)):
+        for (u, w) in adj[v]:
+            if owner[u] != owner[v]:
+                cut += w
+    return cut // 2
+
+
+def _refine(adj, vwt, owner, loads, cap, conn):
+    """multilevel.rs refine: KL/FM-style positive-gain boundary moves
+    under the balance cap; returns the cut after each pass."""
+    cut = _cut_of(adj, owner)
+    pass_cuts = [cut]
+    for _ in range(MAX_REFINE_PASSES):
+        moves = 0
+        for v in range(len(adj)):
+            r = owner[v]
+            touched = []
+            for (u, w) in adj[v]:
+                o = owner[u]
+                if conn[o] == 0:
+                    touched.append(o)
+                conn[o] += w
+            best = None  # (gain, load, rank); max gain, then min load/rank
+            for s in touched:
+                if s == r or loads[s] + vwt[v] > cap:
+                    continue
+                gain = conn[s] - conn[r]
+                if gain <= 0:
+                    continue
+                if best is None or gain > best[0] or (
+                    gain == best[0] and (loads[s], s) < (best[1], best[2])
+                ):
+                    best = (gain, loads[s], s)
+            if best is not None:
+                gain, _, s = best
+                loads[r] -= vwt[v]
+                loads[s] += vwt[v]
+                owner[v] = s
+                cut -= gain
+                moves += 1
+            for o in touched:
+                conn[o] = 0
+        pass_cuts.append(cut)
+        if moves == 0:
+            break
+    return pass_cuts
+
+
+def multilevel(n, p, edges, eps=MULTILEVEL_EPS, seed=MULTILEVEL_SEED):
+    """Bit-for-bit port of partition/multilevel.rs: seeded heavy-edge
+    matching coarsening to <= 32*p vertices, greedy balanced k-way initial
+    assignment, KL/FM refinement during uncoarsening under the eps balance
+    cap, then the never-worse-than-block fallback."""
+    if n == 0:
+        return MappedPartition([], p)
+    if p == 1:
+        return MappedPartition([0] * n, p)
+    ideal = (n + p - 1) // p
+    # Slack clamps at n (mirrors multilevel.rs: keeps the f64->u64 cast
+    # in range for arbitrarily large eps; a cap beyond n is meaningless).
+    slack = int(min(math.floor(max(eps - 1.0, 0.0) * n / p), float(n)))
+    cap = ideal + slack
+    wmax = max(slack, 1)
+
+    rng = Xoshiro256(seed)
+    adj = _merged_adjacency(n, edges)
+    vwt = [1] * n
+    finer = []  # (adj, vwt, cid)
+    target = COARSEN_PER_RANK * p
+    while len(adj) > target:
+        n_cur = len(adj)
+        order = list(range(n_cur))
+        rng.shuffle(order)
+        matching = list(range(n_cur))
+        pairs = 0
+        for v in order:
+            if matching[v] != v:
+                continue
+            best = None  # (weight, neighbour); max weight, then min id
+            for (u, w) in adj[v]:
+                if u == v or matching[u] != u or vwt[v] + vwt[u] > wmax:
+                    continue
+                if best is None or w > best[0] or (w == best[0] and u < best[1]):
+                    best = (w, u)
+            if best is not None:
+                u = best[1]
+                matching[v] = u
+                matching[u] = v
+                pairs += 1
+        if pairs == 0:
+            break
+        cid = [-1] * n_cur
+        nxt = 0
+        for v in range(n_cur):
+            if cid[v] == -1:
+                cid[v] = nxt
+                if matching[v] != v:
+                    cid[matching[v]] = nxt
+                nxt += 1
+        c_vwt = [0] * nxt
+        for v in range(n_cur):
+            c_vwt[cid[v]] += vwt[v]
+        c_rows = [dict() for _ in range(nxt)]
+        for v in range(n_cur):
+            cv = cid[v]
+            for (u, w) in adj[v]:
+                cu = cid[u]
+                if cu != cv:
+                    c_rows[cv][cu] = c_rows[cv].get(cu, 0) + w
+        finer.append((adj, vwt, cid))
+        adj = [list(d.items()) for d in c_rows]
+        vwt = c_vwt
+
+    # Greedy balanced k-way assignment on the coarsest graph.
+    n_cur = len(adj)
+    loads = [0] * p
+    owner = [-1] * n_cur
+    conn = [0] * p
+    for v in sorted(range(n_cur), key=lambda x: (-vwt[x], x)):
+        touched = []
+        for (u, w) in adj[v]:
+            o = owner[u]
+            if o >= 0:
+                if conn[o] == 0:
+                    touched.append(o)
+                conn[o] += w
+        best = None  # (conn, load, rank); max conn, then min load/rank
+        for r in range(p):
+            if loads[r] + vwt[v] > cap:
+                continue
+            c = conn[r]
+            if best is None or c > best[0] or (c == best[0] and (loads[r], r) < (best[1], best[2])):
+                best = (c, loads[r], r)
+        r = best[2] if best is not None else min(range(p), key=lambda x: (loads[x], x))
+        owner[v] = r
+        loads[r] += vwt[v]
+        for o in touched:
+            conn[o] = 0
+
+    _refine(adj, vwt, owner, loads, cap, conn)
+    for (f_adj, f_vwt, cid) in reversed(finer):
+        f_owner = [owner[cid[v]] for v in range(len(f_vwt))]
+        loads = [0] * p
+        for v, o in enumerate(f_owner):
+            loads[o] += f_vwt[v]
+        _refine(f_adj, f_vwt, f_owner, loads, cap, conn)
+        owner = f_owner
+
+    block = BlockPartition(n, p)
+    block_cut = 0
+    final_cut = 0
+    for e in edges:
+        u, v = e[0], e[1]
+        if u == v:
+            continue
+        if block.owner(u) != block.owner(v):
+            block_cut += 1
+        if owner[u] != owner[v]:
+            final_cut += 1
+    if final_cut > block_cut:
+        owner = [block.owner(v) for v in range(n)]
+    return MappedPartition(owner, p)
+
+
 def build_partition(spec, n, p, edges):
     if spec == "block":
         return BlockPartition(n, p)
@@ -335,6 +527,8 @@ def build_partition(spec, n, p, edges):
         return degree_balanced(n, p, edges)
     if spec == "hub":
         return hub_scatter(n, p, edges)
+    if spec == "multilevel":
+        return multilevel(n, p, edges)
     raise ValueError(spec)
 
 
@@ -1221,7 +1415,7 @@ SCHED_QUANTUM = 16
 
 
 class AsyncSched:
-    def __init__(self, n, edges, cfg, partition="block"):
+    def __init__(self, n, edges, cfg, partition="block", fuzz_seed=None):
         p = cfg["n_ranks"]
         part = build_partition(partition, max(n, 1), p, edges)
         wire = cfg["wire"]
@@ -1242,6 +1436,9 @@ class AsyncSched:
         self.ready_max = p
         self.n = n
         self.edges = edges
+        # GHS_FUZZ_SCHED port: perturb ready-list pop order and mailbox
+        # drain batching (sched.rs pop_ready / drain_quota).
+        self.fuzz = Xoshiro256(fuzz_seed) if fuzz_seed is not None else None
 
     def _wake(self, t):
         if self.state[t] == S_IDLE:
@@ -1312,7 +1509,12 @@ class AsyncSched:
                     f"scheduler deadlock: {self.pending} messages pending "
                     "but every task is blocked"
                 )
-            t = self.ready.popleft()
+            if self.fuzz is not None and len(self.ready) > 1:
+                idx = self.fuzz.next_below(len(self.ready))
+                t = self.ready[idx]
+                del self.ready[idx]
+            else:
+                t = self.ready.popleft()
             self.state[t] = S_RUNNING
             rank = self.ranks[t]
             if rank.prof.iterations == 0:
@@ -1320,8 +1522,14 @@ class AsyncSched:
             self.steps[t] += 1
             blocked = False
             for _ in range(SCHED_QUANTUM):
-                # read_msgs: drain the mailbox into the slot queues.
+                # read_msgs: drain the mailbox into the slot queues (under
+                # fuzzing only a random non-empty prefix; the tail keeps
+                # its order ahead of later arrivals).
                 inbox, self.inboxes[t] = self.inboxes[t], []
+                if self.fuzz is not None and len(inbox) > 1:
+                    quota = 1 + self.fuzz.next_below(len(inbox))
+                    self.inboxes[t] = inbox[quota:]
+                    inbox = inbox[:quota]
                 for (_src, nbytes, msgs) in inbox:
                     rank.read_buffer(nbytes, msgs)
                     self.pool[0] = min(self.pool[0] + 1, 1024)
@@ -1334,7 +1542,15 @@ class AsyncSched:
                     break
             if blocked:
                 rank.prof.finish_checks += 1
-                self.state[t] = S_IDLE
+                if self.fuzz is not None and self.inboxes[t]:
+                    # A partial drain left packets whose delivery wake has
+                    # already fired — never idle on a non-empty mailbox
+                    # (sched.rs leftover requeue).
+                    self.state[t] = S_READY
+                    self.ready.append(t)
+                    self.ready_max = max(self.ready_max, len(self.ready))
+                else:
+                    self.state[t] = S_IDLE
             else:
                 self.state[t] = S_READY
                 self.ready.append(t)
@@ -1375,8 +1591,8 @@ class AsyncSched:
         )
 
 
-def check_async(label, n, edges, cfg, partition="block"):
-    out = AsyncSched(n, edges, cfg, partition).run()
+def check_async(label, n, edges, cfg, partition="block", fuzz_seed=None):
+    out = AsyncSched(n, edges, cfg, partition, fuzz_seed=fuzz_seed).run()
     want_edges, want_comp = kruskal(n, edges)
     assert out["edges"] == want_edges, f"{label}: async forest != Kruskal"
     assert out["n_components"] == want_comp, f"{label}: components"
@@ -1401,8 +1617,16 @@ def async_conformance(quick=False):
             for ranks in (1, 4, 16):
                 cfg = final_version(ranks, wire=wire, separate_test=sep)
                 check_async(f"rmat7/{wire}/sep={sep}/p={ranks}", n7, e7, cfg)
-    for spec in ("block", "degree", "hub"):
+    for spec in ("block", "degree", "hub", "multilevel"):
         check_async(f"rmat7/final/p=4/{spec}", n7, e7, final_version(4), partition=spec)
+    # Schedule fuzz (GHS_FUZZ_SCHED port): perturbed ready-pop order and
+    # mailbox drain batching must never change the forest.
+    for fz in (1, 2, 0xFACE, 0xF02200):
+        check_async(f"rmat7/final/p=16/fuzz={fz:#x}", n7, e7, final_version(16), fuzz_seed=fz)
+    check_async(
+        "rmat7/final/p=8/multilevel/fuzz=7", n7, e7, final_version(8),
+        partition="multilevel", fuzz_seed=7,
+    )
     # Zero-vertex ranks: more tasks than vertices.
     check_async("rmat7/final/p=200 (empty ranks)", n7, e7, final_version(200))
     # The rank-scale demonstration: one vertex per rank on a path graph —
@@ -1459,7 +1683,7 @@ def conformance(quick=False):
     np_, ep = path_graph(257, 1)
     check("path257/final/p=2", np_, ep, final_version(2))
     # Partition strategies.
-    for spec in ("block", "degree", "hub"):
+    for spec in ("block", "degree", "hub", "multilevel"):
         check(f"rmat7/final/p=4/{spec}", n7, e7, final_version(4), partition=spec)
 
 
@@ -1510,12 +1734,45 @@ def perf_snapshot(scale):
     return snap
 
 
+def multilevel_quality():
+    """The tentpole quality claim behind results/partition_baseline.md:
+    on the scrambled RMAT-10 workload at 16 ranks the multilevel strategy
+    must achieve a strictly lower edge cut than block, within the
+    eps = 1.05 balance cap. Prints the owner-map fingerprint so the Rust
+    build can be reconciled bit-for-bit."""
+    print("== multilevel quality, RMAT-10, 16 ranks")
+    n, edges = workload(10)
+    p = 16
+    ml = multilevel(n, p, edges)
+    block = BlockPartition(n, p)
+    ml_cut = block_cut = 0
+    loads = [0] * p
+    for v in range(n):
+        loads[ml.owner(v)] += 1
+    for (u, v, _w) in edges:
+        if ml.owner(u) != ml.owner(v):
+            ml_cut += 1
+        if block.owner(u) != block.owner(v):
+            block_cut += 1
+    cap = (n + p - 1) // p + int(math.floor((MULTILEVEL_EPS - 1.0) * n / p))
+    fp = 0
+    for v in range(n):
+        fp = (fp * 1099511628211 + (v ^ (ml.owner(v) << 32))) & M64
+    print(
+        f"  block cut={block_cut}  multilevel cut={ml_cut}  m={len(edges)}  "
+        f"max_vtx={max(loads)} cap={cap}  owner fnv-1a'={fp:#018x}"
+    )
+    assert ml_cut < block_cut, "multilevel must strictly beat block on RMAT-10@16"
+    assert max(loads) <= cap, "eps balance bound violated"
+    return ml_cut, block_cut
+
+
 def partition_counters():
     print("== partition baseline engine counters, RMAT-10, 16 ranks, final version")
     n, edges = workload(10)
     want_edges, _ = kruskal(n, edges)
     rows = {}
-    for spec in ("block", "degree", "hub"):
+    for spec in ("block", "degree", "hub", "multilevel"):
         out = Engine(n, edges, final_version(16), partition=spec).run()
         assert out["edges"] == want_edges, f"{spec}: forest mismatch"
         rows[spec] = out
@@ -1537,6 +1794,7 @@ if __name__ == "__main__":
     assert sm.next_u64() == 0x6E789E6AA1B965F4
     conformance(quick)
     async_conformance(quick)
+    multilevel_quality()
     snap8 = perf_snapshot(8)
     if not quick:
         snap9 = perf_snapshot(9)

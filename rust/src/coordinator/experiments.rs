@@ -51,7 +51,7 @@ impl Default for ExpOptions {
                     // CLI-only — use `--partition file:<path>`.)
                     eprintln!(
                         "warning: GHS_PARTITION=`{s}` not recognized \
-                         (block|degree|hub); falling back to block"
+                         (block|degree|hub|multilevel[:eps]); falling back to block"
                     );
                     PartitionSpec::Block
                 }),
@@ -612,6 +612,16 @@ mod tests {
         // the experiment drivers too.
         let opts =
             ExpOptions { partition: PartitionSpec::HubScatter { top_k: 0 }, ..tiny_opts() };
+        let t = sweep_search(&opts).unwrap();
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn experiments_run_under_multilevel_partition() {
+        // The multilevel owner map reroutes nearly every boundary, so a
+        // Kruskal-verified driver run is an end-to-end engine check of
+        // the new strategy, not just a stats check.
+        let opts = ExpOptions { partition: PartitionSpec::multilevel(), ..tiny_opts() };
         let t = sweep_search(&opts).unwrap();
         assert_eq!(t.rows.len(), 3);
     }

@@ -102,6 +102,12 @@ pub struct GhsConfig {
     pub max_supersteps: u64,
     /// Record per-interval message sizes for the Fig 4 timeline.
     pub record_timeline: bool,
+    /// Schedule-randomizing fuzz seed for the async engine (env
+    /// `GHS_FUZZ_SCHED=<seed>`): perturbs ready-list pop order and mailbox
+    /// drain batching so the conformance fuzz cells can prove the result
+    /// is schedule-independent. `None` (the default) keeps the plain FIFO
+    /// scheduler. Ignored by the sequential and threaded engines.
+    pub fuzz_sched: Option<u64>,
 }
 
 impl Default for GhsConfig {
@@ -122,6 +128,7 @@ impl Default for GhsConfig {
             wire_format: WireFormat::CompactProcId,
             max_supersteps: u64::MAX,
             record_timeline: false,
+            fuzz_sched: std::env::var("GHS_FUZZ_SCHED").ok().and_then(|v| v.parse().ok()),
         }
     }
 }

@@ -500,6 +500,7 @@ mod tests {
             PartitionSpec::DegreeBalanced,
             PartitionSpec::HubScatter { top_k: 0 },
             PartitionSpec::HubScatter { top_k: 3 },
+            PartitionSpec::multilevel(),
         ] {
             let mut c = cfg(4);
             c.partition = spec;

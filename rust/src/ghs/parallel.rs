@@ -277,7 +277,11 @@ mod tests {
         let g = generate(GraphFamily::Rmat, 6, 9);
         let (clean, _) = preprocess(&g);
         let oracle = kruskal(&clean).canonical_edges();
-        for spec in [PartitionSpec::DegreeBalanced, PartitionSpec::HubScatter { top_k: 0 }] {
+        for spec in [
+            PartitionSpec::DegreeBalanced,
+            PartitionSpec::HubScatter { top_k: 0 },
+            PartitionSpec::multilevel(),
+        ] {
             let mut c = cfg(4);
             c.partition = spec.clone();
             let run = run_threaded(&clean, c).unwrap();

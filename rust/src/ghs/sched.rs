@@ -31,7 +31,14 @@
 //!
 //! Scheduling is nondeterministic (like the threaded engine) but the
 //! result is the unique MSF — the conformance matrix gates this engine
-//! against the Kruskal oracle cell-for-cell.
+//! against the Kruskal oracle cell-for-cell. To widen the schedule space
+//! those cells explore, `GhsConfig::fuzz_sched` (env `GHS_FUZZ_SCHED`)
+//! seeds a perturbation of the two scheduling choices OS timing alone
+//! rarely varies: which ready task a worker pops (random ready-list
+//! index instead of FIFO) and how much of a mailbox one activation
+//! drains (a random prefix, the tail re-queued). The fuzz cells in
+//! `tests/scheduler.rs` / `tests/conformance.rs` run several seeds and
+//! assert the forest never changes.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
@@ -46,6 +53,7 @@ use crate::ghs::parallel::{collect, Packet};
 use crate::ghs::rank::{RankState, StepStatus};
 use crate::ghs::result::GhsRun;
 use crate::graph::EdgeList;
+use crate::util::prng::Xoshiro256;
 
 /// Steps one activation may run before the task is rotated to the back of
 /// the run queue (fairness) — enough to cover several flush cadences
@@ -105,6 +113,10 @@ struct Sched {
     failed: Mutex<Option<anyhow::Error>>,
     /// High-water mark of the run-queue length.
     ready_max: AtomicU64,
+    /// Seeded schedule perturbation (`GhsConfig::fuzz_sched`): randomizes
+    /// ready-list pop order and mailbox drain batching. `None` in normal
+    /// runs.
+    fuzz: Option<Mutex<Xoshiro256>>,
 }
 
 impl Sched {
@@ -165,6 +177,31 @@ impl Sched {
         self.finish();
     }
 
+    /// Pop the next runnable task id: FIFO normally, a seeded random
+    /// ready-list index under schedule fuzzing (the perturbation the fuzz
+    /// conformance cells rely on).
+    fn pop_ready(&self, queue: &mut VecDeque<u32>) -> Option<u32> {
+        if queue.len() > 1 {
+            if let Some(f) = &self.fuzz {
+                let idx = f.lock().unwrap().next_index(queue.len());
+                return queue.swap_remove_front(idx);
+            }
+        }
+        queue.pop_front()
+    }
+
+    /// How many of `len` pending mailbox packets one activation decodes:
+    /// all of them normally, a random non-empty prefix under fuzzing
+    /// (always at least one, so a re-queued task is guaranteed progress).
+    fn drain_quota(&self, len: usize) -> usize {
+        if len > 1 {
+            if let Some(f) = &self.fuzz {
+                return 1 + f.lock().unwrap().next_index(len);
+            }
+        }
+        len
+    }
+
     /// Block until a task is runnable; `None` means the run is over.
     /// Increments the active-worker count under the run-queue lock, so
     /// "queue empty and nobody active" is an atomic observation.
@@ -174,7 +211,7 @@ impl Sched {
             if self.done.load(Ordering::SeqCst) {
                 return None;
             }
-            if let Some(task) = r.queue.pop_front() {
+            if let Some(task) = self.pop_ready(&mut r.queue) {
                 r.active_workers += 1;
                 return Some(task);
             }
@@ -247,12 +284,17 @@ fn worker(s: &Sched) {
         rank.prof.steps += 1;
         let mut status = StepStatus::Ready;
         'quantum: for _ in 0..SCHED_QUANTUM {
-            // read_msgs: batch-decode everything in the mailbox straight
-            // into the task's slot-arena queues, then recycle the packet
-            // buffers through the shared pool under a single lock.
+            // read_msgs: batch-decode the mailbox straight into the
+            // task's slot-arena queues, then recycle the packet buffers
+            // through the shared pool under a single lock. Under schedule
+            // fuzzing only a random prefix is decoded; the tail goes back
+            // into the (still locked) mailbox, so later arrivals keep
+            // their per-peer FIFO order behind it.
             {
                 let mut inbox = t.inbox.lock().unwrap();
                 std::mem::swap(&mut *inbox, &mut drained);
+                let quota = s.drain_quota(drained.len());
+                inbox.extend(drained.drain(quota..));
             }
             for (_src, buf, _n) in drained.drain(..) {
                 rank.read_buffer(&buf);
@@ -291,7 +333,15 @@ fn worker(s: &Sched) {
                 s.enqueue(task);
             }
             StepStatus::Blocked => {
-                if t.state
+                // A fuzzed partial drain can leave packets we ourselves
+                // returned to the mailbox — their delivery wake already
+                // fired, so nobody else will requeue the task. Never idle
+                // on a non-empty mailbox.
+                let leftover = s.fuzz.is_some() && !t.inbox.lock().unwrap().is_empty();
+                if leftover {
+                    t.state.store(READY, Ordering::SeqCst);
+                    s.enqueue(task);
+                } else if t.state
                     .compare_exchange(RUNNING, IDLE, Ordering::SeqCst, Ordering::SeqCst)
                     .is_err()
                 {
@@ -343,6 +393,7 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
         done: AtomicBool::new(false),
         failed: Mutex::new(None),
         ready_max: AtomicU64::new(p as u64),
+        fuzz: config.fuzz_sched.map(|seed| Mutex::new(Xoshiro256::seed_from_u64(seed))),
     });
 
     let t0 = std::time::Instant::now();
@@ -477,6 +528,27 @@ mod tests {
         let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(6);
         let g = structured::connected_random(16, 20, &mut rng);
         check(&g, 64, 4);
+    }
+
+    #[test]
+    fn fuzzed_schedules_preserve_the_forest() {
+        // The GHS_FUZZ_SCHED perturbation (random ready-list pops +
+        // partial mailbox drains) must never change the result, and the
+        // silence accounting must stay exact under it.
+        let g = generate(GraphFamily::Rmat, 7, 13);
+        let (clean, _) = preprocess(&g);
+        let oracle = kruskal(&clean).canonical_edges();
+        for seed in [1u64, 2, 0xFACE] {
+            let mut c = cfg(8, 3);
+            c.fuzz_sched = Some(seed);
+            let run = run_async(&clean, c).unwrap();
+            assert_eq!(run.forest.canonical_edges(), oracle, "fuzz seed {seed}");
+            assert_eq!(
+                run.sent.total(),
+                run.profile.msgs_processed_main + run.profile.msgs_processed_test,
+                "fuzz seed {seed}: every message still processed exactly once"
+            );
+        }
     }
 
     #[test]

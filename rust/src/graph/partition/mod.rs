@@ -21,10 +21,18 @@
 //!   contiguity, which is why `local_index` is part of the abstraction.
 //! * **Explicit** — an arbitrary owner map (loadable from a file via
 //!   [`crate::graph::io::read_owner_map`]) for replayable experiments.
+//! * **Multilevel** — edge-cut-minimizing coarsen/partition/refine
+//!   ([`multilevel`]): seeded heavy-edge-matching coarsening, greedy
+//!   balanced k-way assignment on the coarsest graph, KL/FM-style
+//!   boundary refinement under a configurable balance factor ε, with a
+//!   never-worse-than-block fallback. The only strategy that reads
+//!   adjacency structure rather than ids/degrees — the traffic lever on
+//!   scrambled inputs.
 //!
 //! A [`Partition`] is cheap to clone: contiguous variants are a couple of
 //! words, mapped variants share their tables behind an `Arc`.
 
+pub mod multilevel;
 pub mod stats;
 mod strategies;
 
@@ -116,6 +124,10 @@ pub enum PartitionSpec {
     HubScatter { top_k: u32 },
     /// An explicit owner map (`map[v]` = owning rank of vertex `v`).
     Explicit(Arc<Vec<u32>>),
+    /// Edge-cut-minimizing multilevel coarsen/partition/refine with
+    /// balance factor `eps` (ranks may exceed the ideal vertex count by
+    /// `(eps - 1)`) and a matching-order `seed` (see [`multilevel`]).
+    Multilevel { eps: f64, seed: u64 },
 }
 
 impl Default for PartitionSpec {
@@ -125,11 +137,28 @@ impl Default for PartitionSpec {
 }
 
 impl PartitionSpec {
-    /// Parse a strategy name (`block` / `degree` / `hub`). File-backed
-    /// explicit maps are handled by the CLI (`file:<path>`), which loads
-    /// the map and wraps it in [`PartitionSpec::Explicit`].
+    /// The multilevel strategy at its defaults (ε = 1.05, fixed seed).
+    pub fn multilevel() -> Self {
+        Self::Multilevel { eps: multilevel::DEFAULT_EPS, seed: multilevel::DEFAULT_SEED }
+    }
+
+    /// Parse a strategy name (`block` / `degree` / `hub` /
+    /// `multilevel[:eps]` with `eps >= 1.0`). File-backed explicit maps
+    /// are handled by the CLI (`file:<path>`), which loads the map and
+    /// wraps it in [`PartitionSpec::Explicit`].
     pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
+        let lower = s.to_ascii_lowercase();
+        if let Some(rest) = lower.strip_prefix("multilevel") {
+            if rest.is_empty() {
+                return Some(Self::multilevel());
+            }
+            let eps: f64 = rest.strip_prefix(':')?.parse().ok()?;
+            if !eps.is_finite() || eps < 1.0 {
+                return None;
+            }
+            return Some(Self::Multilevel { eps, seed: multilevel::DEFAULT_SEED });
+        }
+        match lower.as_str() {
             "block" => Some(Self::Block),
             "degree" | "degree-balanced" => Some(Self::DegreeBalanced),
             "hub" | "hub-scatter" => Some(Self::HubScatter { top_k: 0 }),
@@ -144,6 +173,7 @@ impl PartitionSpec {
             Self::DegreeBalanced => "degree",
             Self::HubScatter { .. } => "hub",
             Self::Explicit(_) => "explicit",
+            Self::Multilevel { .. } => "multilevel",
         }
     }
 }
@@ -271,6 +301,9 @@ impl Partition {
             }
             PartitionSpec::Explicit(map) => {
                 Partition::Mapped(strategies::explicit(map, n_vertices, n_ranks)?)
+            }
+            PartitionSpec::Multilevel { eps, seed } => {
+                Partition::Mapped(multilevel::multilevel(g, n_vertices, n_ranks, *eps, *seed))
             }
         })
     }
@@ -482,6 +515,8 @@ mod tests {
             PartitionSpec::HubScatter { top_k: 0 },
             PartitionSpec::HubScatter { top_k: 1 + g.u64_below(16) as u32 },
             PartitionSpec::Explicit(Arc::new(map)),
+            PartitionSpec::multilevel(),
+            PartitionSpec::Multilevel { eps: 1.0 + g.f64() * 0.5, seed: g.u64() },
         ]
     }
 
@@ -531,6 +566,15 @@ mod tests {
         assert_eq!(PartitionSpec::parse("DEGREE"), Some(PartitionSpec::DegreeBalanced));
         assert_eq!(PartitionSpec::parse("hub"), Some(PartitionSpec::HubScatter { top_k: 0 }));
         assert_eq!(PartitionSpec::parse("metis"), None);
+        assert_eq!(PartitionSpec::parse("multilevel"), Some(PartitionSpec::multilevel()));
+        assert_eq!(
+            PartitionSpec::parse("Multilevel:1.25"),
+            Some(PartitionSpec::Multilevel { eps: 1.25, seed: multilevel::DEFAULT_SEED })
+        );
+        // ε below 1 would make the balance cap infeasible; reject it.
+        assert_eq!(PartitionSpec::parse("multilevel:0.9"), None);
+        assert_eq!(PartitionSpec::parse("multilevel:abc"), None);
+        assert_eq!(PartitionSpec::parse("multilevel:"), None);
     }
 
     #[test]

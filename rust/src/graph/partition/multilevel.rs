@@ -1,0 +1,565 @@
+//! Multilevel edge-cut-minimizing partitioning (coarsen / partition /
+//! refine), the classic KaHIP/METIS recipe at reproduction scale.
+//!
+//! The vertex-balanced strategies (Block / DegreeBalanced / HubScatter)
+//! all sit at the ~`1 − 1/p` random-cut floor on scrambled R-MAT inputs:
+//! they place by id or degree, never by adjacency, so nearly every edge
+//! crosses a rank boundary and becomes interconnect traffic. This module
+//! is the cut lever:
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching. Vertices are visited
+//!    in a seeded random order; each unmatched vertex pairs with the
+//!    unmatched neighbour behind the heaviest edge (ties: lowest id),
+//!    subject to a combined-weight cap so coarse vertices stay small
+//!    enough for the balance bound below. Matched pairs collapse, parallel
+//!    coarse edges merge by weight summation, until the graph has at most
+//!    [`COARSEN_PER_RANK`]`·p` vertices (or matching stalls).
+//! 2. **Initial partition** — greedy balanced k-way assignment on the
+//!    coarsest graph: vertices in descending-weight order each go to the
+//!    rank with the strongest existing connection that still fits under
+//!    the balance cap (ties: lightest load, then lowest rank id).
+//! 3. **Uncoarsening + refinement** — the assignment is projected back
+//!    level by level; at every level boundary KL/FM-style passes move a
+//!    vertex to the neighbouring rank with the highest positive cut gain,
+//!    never violating the cap, until a pass makes no move (or
+//!    [`MAX_REFINE_PASSES`] is hit). Gains are strictly positive, so the
+//!    cut is monotone non-increasing across passes — a property the
+//!    `partition_props` test tier asserts from the [`MultilevelTrace`].
+//!
+//! **Balance bound.** With `ideal = ⌈n/p⌉`, `slack = ⌊(ε−1)·n/p⌋`
+//! (clamped to `n` — a cap beyond every vertex is meaningless) and
+//! `cap = ideal + slack`, every produced partition satisfies
+//! `max_rank_vertices ≤ cap`: matching never builds a vertex heavier than
+//! `max(1, slack)`, and greedy placement of items that small always finds
+//! a rank under the cap (the least-loaded rank holds at most
+//! `⌊(n−w)/p⌋` weight).
+//!
+//! **Block fallback.** After refinement the builder compares its edge cut
+//! against the paper's block layout and keeps whichever is lower (block
+//! wins ties only when strictly better). On graphs where multilevel cannot
+//! help — complete graphs, `n ≤ p` confetti — the result is therefore
+//! never worse than the baseline, which is what lets the conformance
+//! matrix and the CI `partition-quality` gate assert
+//! `cut(multilevel) ≤ cut(block)` unconditionally. The fallback is
+//! recorded in [`MultilevelTrace::used_fallback`].
+//!
+//! **Determinism.** The only randomness is the matching visit order,
+//! drawn from a [`Xoshiro256`] stream seeded by the spec (default
+//! [`DEFAULT_SEED`]); everything else is integer arithmetic with
+//! value-based tie-breaks, so the owner map is a pure function of
+//! `(graph, p, ε, seed)` and `python/tools/pipeline_check.py` replays it
+//! bit-for-bit.
+
+use super::{BlockPartition, MappedData, MappedPartition};
+use crate::graph::EdgeList;
+use crate::util::prng::Xoshiro256;
+
+/// Default balance factor ε: ranks may exceed the ideal vertex count by 5 %.
+pub const DEFAULT_EPS: f64 = 1.05;
+
+/// Default matching-order seed ("MLTV"). Fixed so partitions are stable
+/// across runs; override through [`super::PartitionSpec::Multilevel`].
+pub const DEFAULT_SEED: u64 = 0x4D4C_5456;
+
+/// Coarsening stops once the graph has at most this many vertices per rank.
+pub const COARSEN_PER_RANK: u32 = 32;
+
+/// Refinement passes per level (each level also stops early on the first
+/// pass that makes no move).
+pub const MAX_REFINE_PASSES: usize = 8;
+
+/// Introspection record of one level of the multilevel pipeline, in
+/// refinement order (coarsest first, finest last).
+#[derive(Debug, Clone)]
+pub struct LevelTrace {
+    /// Vertices at this level.
+    pub n_vertices: u32,
+    /// Per-vertex weights (fine vertices represented); sums to `n`.
+    pub vertex_weights: Vec<u64>,
+    /// Matching used to coarsen *away from* this level: `matching[v]` is
+    /// the partner (or `v` itself when unmatched). Empty for the coarsest
+    /// level, which was never coarsened further.
+    pub matching: Vec<u32>,
+    /// Pairs collapsed by that matching (0 for the coarsest level).
+    pub matched_pairs: u32,
+    /// Edge cut (in fine-edge units — coarse edge weights are collapse
+    /// counts) before refinement at this level, then after each pass.
+    pub pass_cuts: Vec<u64>,
+}
+
+/// Full trace of one multilevel build (property-test introspection).
+#[derive(Debug, Clone)]
+pub struct MultilevelTrace {
+    /// Per-rank vertex-weight cap `⌈n/p⌉ + ⌊(ε−1)·n/p⌋`.
+    pub cap: u64,
+    /// Max combined weight a matching may build (`max(1, slack)`).
+    pub wmax: u64,
+    /// Levels in refinement order (coarsest first).
+    pub levels: Vec<LevelTrace>,
+    /// Cut of the refined multilevel assignment (before the fallback
+    /// comparison).
+    pub final_cut: u64,
+    /// Cut of the paper's block layout on the same graph.
+    pub block_cut: u64,
+    /// Whether the block layout won the comparison and was returned.
+    pub used_fallback: bool,
+}
+
+/// Merged adjacency: one `(neighbour, weight)` entry per neighbour,
+/// ascending id, parallel edges summed, self-loops dropped.
+type Adjacency = Vec<Vec<(u32, u64)>>;
+
+fn merge_rows(mut rows: Adjacency) -> Adjacency {
+    for row in &mut rows {
+        row.sort_unstable();
+        let mut out = Vec::with_capacity(row.len());
+        for &(u, w) in row.iter() {
+            match out.last_mut() {
+                Some(&mut (lu, ref mut lw)) if lu == u => *lw += w,
+                _ => out.push((u, w)),
+            }
+        }
+        *row = out;
+    }
+    rows
+}
+
+fn fine_adjacency(g: &EdgeList, n: u32) -> Adjacency {
+    let mut rows: Adjacency = vec![Vec::new(); n as usize];
+    for e in &g.edges {
+        if e.u == e.v {
+            continue;
+        }
+        rows[e.u as usize].push((e.v, 1));
+        rows[e.v as usize].push((e.u, 1));
+    }
+    merge_rows(rows)
+}
+
+/// Total cut weight of `owner` over `adj` (each undirected entry pair
+/// counted once).
+fn cut_of(adj: &Adjacency, owner: &[u32]) -> u64 {
+    let mut cut = 0u64;
+    for (v, row) in adj.iter().enumerate() {
+        for &(u, w) in row {
+            if owner[u as usize] != owner[v] {
+                cut += w;
+            }
+        }
+    }
+    cut / 2
+}
+
+/// One KL/FM-style boundary refinement phase at one level: repeated
+/// positive-gain single-vertex moves under the balance cap. Returns the
+/// cut after each pass (index 0 = before refinement).
+fn refine(
+    adj: &Adjacency,
+    vwt: &[u64],
+    owner: &mut [u32],
+    loads: &mut [u64],
+    cap: u64,
+) -> Vec<u64> {
+    let p = loads.len();
+    let mut conn = vec![0u64; p];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut cut = cut_of(adj, owner);
+    let mut pass_cuts = vec![cut];
+    for _ in 0..MAX_REFINE_PASSES {
+        let mut moves = 0u32;
+        for v in 0..adj.len() {
+            let r = owner[v];
+            for &(u, w) in &adj[v] {
+                let o = owner[u as usize];
+                if conn[o as usize] == 0 {
+                    touched.push(o);
+                }
+                conn[o as usize] += w;
+            }
+            // Best strictly-positive-gain destination under the cap;
+            // ties prefer the lighter then lower-id rank.
+            let mut best: Option<(u64, u64, u32)> = None; // (gain, load, rank)
+            for &s in &touched {
+                if s == r || loads[s as usize] + vwt[v] > cap {
+                    continue;
+                }
+                let (cs, cr) = (conn[s as usize], conn[r as usize]);
+                if cs <= cr {
+                    continue;
+                }
+                let cand = (cs - cr, loads[s as usize], s);
+                let better = match best {
+                    None => true,
+                    Some((bg, bl, bs)) => {
+                        cand.0 > bg || (cand.0 == bg && (cand.1, cand.2) < (bl, bs))
+                    }
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+            if let Some((gain, _, s)) = best {
+                loads[r as usize] -= vwt[v];
+                loads[s as usize] += vwt[v];
+                owner[v] = s;
+                cut -= gain;
+                moves += 1;
+            }
+            for &o in &touched {
+                conn[o as usize] = 0;
+            }
+            touched.clear();
+        }
+        pass_cuts.push(cut);
+        if moves == 0 {
+            break;
+        }
+    }
+    pass_cuts
+}
+
+/// Build the multilevel partition and its full trace.
+pub fn multilevel_with_trace(
+    g: &EdgeList,
+    n: u32,
+    p: u32,
+    eps: f64,
+    seed: u64,
+) -> (MappedPartition, MultilevelTrace) {
+    let mut trace = MultilevelTrace {
+        cap: n as u64,
+        wmax: 1,
+        levels: Vec::new(),
+        final_cut: 0,
+        block_cut: 0,
+        used_fallback: false,
+    };
+    if n == 0 {
+        return (MappedPartition::new(MappedData::from_owner_map(Vec::new(), p)), trace);
+    }
+    if p == 1 {
+        let owner = vec![0u32; n as usize];
+        return (MappedPartition::new(MappedData::from_owner_map(owner, p)), trace);
+    }
+
+    // Manual ceiling division (`div_ceil` needs Rust 1.73 > the 1.70 MSRV).
+    let ideal = ((n as u64) + (p as u64) - 1) / p as u64;
+    // Slack clamps at n: a cap beyond n is meaningless, and the clamp
+    // keeps the f64->u64 cast in range for arbitrarily large ε values
+    // (the CLI accepts any finite ε >= 1).
+    let slack = ((eps - 1.0).max(0.0) * n as f64 / p as f64).floor().min(n as f64) as u64;
+    let cap = ideal + slack;
+    let wmax = slack.max(1);
+    trace.cap = cap;
+    trace.wmax = wmax;
+
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut adj = fine_adjacency(g, n);
+    let mut vwt: Vec<u64> = vec![1; n as usize];
+    // Finer levels stacked during coarsening; `cid` maps each to the next
+    // coarser level's ids.
+    struct FinerLevel {
+        adj: Adjacency,
+        vwt: Vec<u64>,
+        cid: Vec<u32>,
+        matching: Vec<u32>,
+        matched_pairs: u32,
+    }
+    let mut finer: Vec<FinerLevel> = Vec::new();
+    let target = (COARSEN_PER_RANK as u64 * p as u64).min(u32::MAX as u64) as usize;
+
+    // ---- 1. coarsening: seeded heavy-edge matching ----
+    while adj.len() > target {
+        let n_cur = adj.len();
+        let mut order: Vec<u32> = (0..n_cur as u32).collect();
+        rng.shuffle(&mut order);
+        let mut matching: Vec<u32> = (0..n_cur as u32).collect();
+        let mut matched_pairs = 0u32;
+        for &v in &order {
+            let v = v as usize;
+            if matching[v] != v as u32 {
+                continue;
+            }
+            // Heaviest connecting edge to an unmatched neighbour under the
+            // weight cap; ties broken by lowest neighbour id.
+            let mut best: Option<(u64, u32)> = None;
+            for &(u, w) in &adj[v] {
+                if u as usize == v || matching[u as usize] != u {
+                    continue;
+                }
+                if vwt[v] + vwt[u as usize] > wmax {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bw, bu)) => w > bw || (w == bw && u < bu),
+                };
+                if better {
+                    best = Some((w, u));
+                }
+            }
+            if let Some((_, u)) = best {
+                matching[v] = u;
+                matching[u as usize] = v as u32;
+                matched_pairs += 1;
+            }
+        }
+        if matched_pairs == 0 {
+            break;
+        }
+        // Coarse ids in ascending finest-member order.
+        let mut cid = vec![u32::MAX; n_cur];
+        let mut next = 0u32;
+        for v in 0..n_cur {
+            if cid[v] == u32::MAX {
+                cid[v] = next;
+                let m = matching[v] as usize;
+                if m != v {
+                    cid[m] = next;
+                }
+                next += 1;
+            }
+        }
+        let mut c_vwt = vec![0u64; next as usize];
+        for v in 0..n_cur {
+            c_vwt[cid[v] as usize] += vwt[v];
+        }
+        let mut c_rows: Adjacency = vec![Vec::new(); next as usize];
+        for v in 0..n_cur {
+            let cv = cid[v];
+            for &(u, w) in &adj[v] {
+                let cu = cid[u as usize];
+                if cu != cv {
+                    c_rows[cv as usize].push((cu, w));
+                }
+            }
+        }
+        let c_adj = merge_rows(c_rows);
+        finer.push(FinerLevel {
+            adj: std::mem::replace(&mut adj, c_adj),
+            vwt: std::mem::replace(&mut vwt, c_vwt),
+            cid,
+            matching,
+            matched_pairs,
+        });
+    }
+
+    // ---- 2. greedy balanced k-way assignment on the coarsest graph ----
+    let n_cur = adj.len();
+    let mut loads = vec![0u64; p as usize];
+    let mut owner = vec![u32::MAX; n_cur];
+    let mut order: Vec<u32> = (0..n_cur as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(vwt[v as usize]), v));
+    let mut conn = vec![0u64; p as usize];
+    let mut touched: Vec<u32> = Vec::new();
+    for &v in &order {
+        let v = v as usize;
+        for &(u, w) in &adj[v] {
+            let o = owner[u as usize];
+            if o != u32::MAX {
+                if conn[o as usize] == 0 {
+                    touched.push(o);
+                }
+                conn[o as usize] += w;
+            }
+        }
+        // Strongest connection that fits under the cap; ties prefer the
+        // lighter then lower-id rank (ranks with no connection compete
+        // with conn = 0).
+        let mut best: Option<(u64, u64, u32)> = None; // (conn, load, rank)
+        for r in 0..p {
+            if loads[r as usize] + vwt[v] > cap {
+                continue;
+            }
+            let cand = (conn[r as usize], loads[r as usize], r);
+            let better = match best {
+                None => true,
+                Some((bc, bl, br)) => {
+                    cand.0 > bc || (cand.0 == bc && (cand.1, cand.2) < (bl, br))
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        // Unreachable by the cap/wmax construction (see module docs), kept
+        // as a safe fallback rather than a panic path.
+        let r = best.map(|(_, _, r)| r).unwrap_or_else(|| {
+            (0..p).min_by_key(|&r| (loads[r as usize], r)).expect("p >= 1")
+        });
+        owner[v] = r;
+        loads[r as usize] += vwt[v];
+        for &o in &touched {
+            conn[o as usize] = 0;
+        }
+        touched.clear();
+    }
+
+    // ---- 3. refine, then uncoarsen level by level and refine again ----
+    let pass_cuts = refine(&adj, &vwt, &mut owner, &mut loads, cap);
+    trace.levels.push(LevelTrace {
+        n_vertices: n_cur as u32,
+        vertex_weights: vwt.clone(),
+        matching: Vec::new(),
+        matched_pairs: 0,
+        pass_cuts,
+    });
+    for lvl in finer.into_iter().rev() {
+        let mut f_owner: Vec<u32> =
+            (0..lvl.vwt.len()).map(|v| owner[lvl.cid[v] as usize]).collect();
+        let mut f_loads = vec![0u64; p as usize];
+        for (v, &o) in f_owner.iter().enumerate() {
+            f_loads[o as usize] += lvl.vwt[v];
+        }
+        let pass_cuts = refine(&lvl.adj, &lvl.vwt, &mut f_owner, &mut f_loads, cap);
+        trace.levels.push(LevelTrace {
+            n_vertices: lvl.vwt.len() as u32,
+            vertex_weights: lvl.vwt,
+            matching: lvl.matching,
+            matched_pairs: lvl.matched_pairs,
+            pass_cuts,
+        });
+        owner = f_owner;
+    }
+    let final_cut = {
+        let finest = trace.levels.last().expect("at least one level");
+        *finest.pass_cuts.last().expect("refine records the initial cut")
+    };
+    trace.final_cut = final_cut;
+
+    // ---- 4. never-worse-than-block fallback ----
+    let block = BlockPartition::new(n, p);
+    let mut block_cut = 0u64;
+    for e in &g.edges {
+        if e.u != e.v && block.owner(e.u) != block.owner(e.v) {
+            block_cut += 1;
+        }
+    }
+    trace.block_cut = block_cut;
+    if trace.final_cut > block_cut {
+        trace.used_fallback = true;
+        let owner: Vec<u32> = (0..n).map(|v| block.owner(v)).collect();
+        return (MappedPartition::new(MappedData::from_owner_map(owner, p)), trace);
+    }
+    (MappedPartition::new(MappedData::from_owner_map(owner, p)), trace)
+}
+
+/// Build without the trace (the [`super::Partition::build`] entry point).
+pub(super) fn multilevel(g: &EdgeList, n: u32, p: u32, eps: f64, seed: u64) -> MappedPartition {
+    multilevel_with_trace(g, n, p, eps, seed).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::Partition;
+
+    fn cut_under(g: &EdgeList, part: &Partition) -> u64 {
+        g.edges.iter().filter(|e| part.owner(e.u) != part.owner(e.v)).count() as u64
+    }
+
+    fn build(g: &EdgeList, n: u32, p: u32) -> (Partition, MultilevelTrace) {
+        let (mapped, trace) = multilevel_with_trace(g, n, p, DEFAULT_EPS, DEFAULT_SEED);
+        (Partition::Mapped(mapped), trace)
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // n = 0: empty owner map over p ranks.
+        let (part, _) = build(&EdgeList::with_vertices(0), 0, 4);
+        assert_eq!(part.n_vertices(), 0);
+        assert_eq!((0..4).map(|r| part.n_local(r)).sum::<u32>(), 0);
+        // p = 1: everything on rank 0.
+        let mut g = EdgeList::with_vertices(5);
+        g.push(0, 1, 0.5);
+        let (part, _) = build(&g, 5, 1);
+        assert_eq!(part.n_local(0), 5);
+        // n < p: unit weights, each rank holds at most cap = 1 vertex.
+        let (part, trace) = build(&g, 5, 9);
+        assert_eq!((0..9).map(|r| part.n_local(r)).sum::<u32>(), 5);
+        assert!((0..9).all(|r| part.n_local(r) as u64 <= trace.cap));
+    }
+
+    /// The dramatic locality case: a path whose vertex ids are scrambled.
+    /// Block cuts ~3/4 of all edges; multilevel coarsening follows the
+    /// edges and recovers near-contiguous segments. (Python port pins the
+    /// exact values: multilevel 28 vs block 3056 cut edges.)
+    #[test]
+    fn scrambled_path_is_a_blowout() {
+        let n = 4096u32;
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
+        let mut perm: Vec<u32> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut g = EdgeList::with_vertices(n);
+        for i in 0..(n - 1) as usize {
+            g.push(perm[i], perm[i + 1], 0.5);
+        }
+        let (part, trace) = build(&g, n, 4);
+        let ml = cut_under(&g, &part);
+        let block = cut_under(&g, &Partition::block(n, 4));
+        assert!(!trace.used_fallback);
+        assert!(block > 2000, "scrambled ids leave block near the random floor: {block}");
+        assert!(ml < 100, "multilevel must recover path locality: cut {ml}");
+    }
+
+    /// Extreme ε values (the CLI accepts any finite ε >= 1) must clamp
+    /// instead of overflowing the slack cast, and still tile [0, n).
+    #[test]
+    fn huge_eps_clamps_instead_of_overflowing() {
+        let mut g = EdgeList::with_vertices(64);
+        for i in 0..63 {
+            g.push(i, i + 1, 0.5);
+        }
+        let (mapped, trace) = multilevel_with_trace(&g, 64, 4, 1e19, DEFAULT_SEED);
+        assert_eq!(trace.cap, 16 + 64, "slack clamps at n");
+        let part = Partition::Mapped(mapped);
+        assert_eq!((0..4).map(|r| part.n_local(r)).sum::<u32>(), 64);
+    }
+
+    /// On a contiguous path, block is already optimal (p - 1 cut edges);
+    /// the fallback guarantees multilevel never does worse.
+    #[test]
+    fn contiguous_path_never_worse_than_block() {
+        let n = 4096u32;
+        let mut g = EdgeList::with_vertices(n);
+        for i in 0..n - 1 {
+            g.push(i, i + 1, 0.5);
+        }
+        let (part, _) = build(&g, n, 4);
+        assert!(cut_under(&g, &part) <= 3, "block's optimal 3-edge cut is the ceiling");
+    }
+
+    /// Trace smoke on a generated fixture: weights conserved, matchings
+    /// are involutions under the weight cap, cuts monotone per level.
+    /// (The full sweep lives in tests/partition_props.rs.)
+    #[test]
+    fn trace_invariants_on_rmat() {
+        use crate::graph::generators::{generate, GraphFamily};
+        use crate::graph::preprocess::preprocess;
+        let (g, _) = preprocess(&generate(GraphFamily::Rmat, 9, 31));
+        let n = g.n_vertices;
+        // 8 ranks: the 32·p coarsening target (256) is below n = 512, so
+        // at least one heavy-edge-matching level must be built.
+        let (part, trace) = build(&g, n, 8);
+        assert!(trace.levels.len() >= 2, "scale-9 at 8 ranks must coarsen at least once");
+        for lvl in &trace.levels {
+            assert_eq!(lvl.vertex_weights.iter().sum::<u64>(), n as u64);
+            for w in lvl.pass_cuts.windows(2) {
+                assert!(w[1] <= w[0]);
+            }
+            for (v, &m) in lvl.matching.iter().enumerate() {
+                assert_eq!(lvl.matching[m as usize], v as u32, "matching is an involution");
+                if m as usize != v {
+                    assert!(
+                        lvl.vertex_weights[v] + lvl.vertex_weights[m as usize] <= trace.wmax
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            cut_under(&g, &part),
+            trace.final_cut.min(trace.block_cut),
+            "returned partition's cut must match the trace accounting"
+        );
+    }
+}

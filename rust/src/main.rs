@@ -34,15 +34,16 @@ COMMANDS
                   --family rmat|ssca2|random  --scale N  --ranks N
                   --engine sequential|threaded|async  --workers N (async pool)
                   --search linear|binary|hash  --wire naive|compact|procid
-                  --partition block|degree|hub|file:<path>
+                  --partition block|degree|hub|multilevel[:eps]|file:<path>
                   --hash-sizing paper|pow2 (mask-indexed hash table)
                   --no-test-queue  --input FILE  --threaded  --verify
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
   partition     Print partition quality metrics (vertex/edge balance, edge
                   cut) per strategy: --family --scale --ranks [--top-k N]
-                  [--partition file:<path>] [--write]
+                  [--partition file:<path>] [--write] [--gate] (--gate fails
+                  unless multilevel's cut is strictly below block's)
   verify        Run GHS + all baselines, compare forests: --family --scale --ranks
-                  [--partition block|degree|hub|file:<path>]
+                  [--partition block|degree|hub|multilevel[:eps]|file:<path>]
   accel         XLA-accelerated Boruvka via PJRT: --family --scale [--block 4096x32]
                   (needs a build with `--features accelerate`)
   baseline      Run kruskal|prim|boruvka: --algo NAME --family --scale
@@ -68,6 +69,8 @@ COMMON FLAGS
   --workers N     async worker pool size      [default 0 = one per CPU]
   --partition S   vertex partitioning: block (paper default), degree
                   (edge-balanced contiguous), hub (scatter top-k hubs),
+                  multilevel[:eps] (edge-cut-minimizing coarsen/refine,
+                  balance factor eps >= 1, default 1.05),
                   file:<path> (explicit owner map, one rank id per line)
   --no-verify     skip Kruskal verification
   --quiet         suppress progress logs
@@ -107,8 +110,11 @@ fn parse_partition_value(s: &str) -> Result<PartitionSpec> {
         let map = io::read_owner_map(std::path::Path::new(path))?;
         return Ok(PartitionSpec::Explicit(std::sync::Arc::new(map)));
     }
-    PartitionSpec::parse(s)
-        .ok_or_else(|| anyhow::anyhow!("unknown --partition `{s}` (block|degree|hub|file:<path>)"))
+    PartitionSpec::parse(s).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown --partition `{s}` (block|degree|hub|multilevel[:eps]|file:<path>)"
+        )
+    })
 }
 
 /// The `--partition` flag, defaulting to block.
@@ -276,7 +282,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// optional explicit map) over one graph — the tool behind
 /// `results/partition_baseline.md`.
 fn cmd_partition(args: &Args) -> Result<()> {
-    args.expect_flags(&["family", "scale", "ranks", "input", "top-k", "partition", "write"])?;
+    args.expect_flags(&[
+        "family", "scale", "ranks", "input", "top-k", "partition", "write", "gate",
+    ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 16u32)?;
     let top_k = args.get_num("top-k", 0u32)?;
@@ -284,6 +292,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
         PartitionSpec::Block,
         PartitionSpec::DegreeBalanced,
         PartitionSpec::HubScatter { top_k },
+        PartitionSpec::multilevel(),
     ];
     if let Some(s) = args.get_opt("partition") {
         specs.push(parse_partition_value(s)?);
@@ -301,10 +310,12 @@ fn cmd_partition(args: &Args) -> Result<()> {
         ],
     );
     let mut max_deg = 0;
+    let mut cuts: Vec<(&'static str, u64)> = Vec::new();
     for spec in &specs {
         let part = Partition::build(spec, &clean, clean.n_vertices.max(1), ranks)?;
         let s = PartitionStats::compute(&clean, &part);
         max_deg = s.max_vertex_degree;
+        cuts.push((spec.label(), s.edge_cut()));
         t.push_row(vec![
             spec.label().to_string(),
             s.max_rank_vertices.to_string(),
@@ -326,6 +337,28 @@ fn cmd_partition(args: &Args) -> Result<()> {
     if args.get_bool("write") {
         let path = t.write("partition_quality")?;
         eprintln!("  [exp] wrote {path:?}");
+    }
+    if args.get_bool("gate") {
+        // CI partition-quality gate: the multilevel strategy must
+        // strictly beat the paper's block layout on edge cut (the
+        // builder's block fallback makes >= impossible only via equality,
+        // so equality here means the cut lever regressed to a no-op).
+        // The LAST matching row wins, so a user-supplied
+        // `--partition multilevel:<eps>` is the spec being gated, not the
+        // built-in default-ε row that shares its label.
+        let cut_of = |name: &str| {
+            cuts.iter().rev().find(|(l, _)| *l == name).map(|&(_, c)| c).ok_or_else(|| {
+                anyhow::anyhow!("--gate needs a `{name}` row in the strategy table")
+            })
+        };
+        let (block, ml) = (cut_of("block")?, cut_of("multilevel")?);
+        if ml >= block {
+            bail!(
+                "partition-quality gate FAILED: multilevel cut {ml} is not strictly \
+                 below block cut {block}"
+            );
+        }
+        println!("partition-quality gate OK: multilevel cut {ml} < block cut {block}");
     }
     Ok(())
 }

@@ -43,11 +43,12 @@ pub const SEARCH_STRATEGIES: [SearchStrategy; 3] =
 
 /// The built-in partitioning strategies (the conformance partition axis;
 /// `Explicit` is covered separately with generated owner maps).
-pub fn partition_specs() -> [PartitionSpec; 3] {
+pub fn partition_specs() -> [PartitionSpec; 4] {
     [
         PartitionSpec::Block,
         PartitionSpec::DegreeBalanced,
         PartitionSpec::HubScatter { top_k: 0 },
+        PartitionSpec::multilevel(),
     ]
 }
 

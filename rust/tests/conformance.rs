@@ -13,8 +13,10 @@
 //! (≥ 189 engine/config combinations — every engine covers the full
 //! 63-cell wire × lookup × graph sub-matrix, so the async scheduler faces
 //! the same oracle wall the other two do — plus a partition axis
-//! {Block, DegreeBalanced, HubScatter, Explicit}, forest / rank-sweep /
-//! duplicate-weight sweeps) against the sequential Kruskal oracle, asserting
+//! {Block, DegreeBalanced, HubScatter, Multilevel, Explicit} with an
+//! edge-cut regression gate, a schedule-randomizing fuzz cell
+//! (`GHS_FUZZ_SCHED`), forest / rank-sweep / duplicate-weight sweeps)
+//! against the sequential Kruskal oracle, asserting
 //! for every cell: canonical-edge equality, MSF-weight equality, component
 //! counts, and the paper's GHS message-complexity bound. All cases are
 //! deterministically seeded through `util::minitest` (override with
@@ -78,10 +80,10 @@ fn full_matrix_conforms_to_kruskal_oracle() {
     assert!(cells >= 150, "conformance matrix covered only {cells} cells (need >= 150)");
 }
 
-/// Partition axis of the matrix: {Block, DegreeBalanced, HubScatter} ×
-/// engines × graph families, each cell Kruskal-checked. Non-contiguous
-/// strategies reroute every cross-rank edge, so this exercises the full
-/// owner/local_index abstraction under both engines.
+/// Partition axis of the matrix: {Block, DegreeBalanced, HubScatter,
+/// Multilevel} × engines × graph families, each cell Kruskal-checked.
+/// Non-contiguous strategies reroute every cross-rank edge, so this
+/// exercises the full owner/local_index abstraction under every engine.
 #[test]
 fn partition_matrix_conforms_to_kruskal_oracle() {
     let mut combos = Vec::new();
@@ -90,7 +92,7 @@ fn partition_matrix_conforms_to_kruskal_oracle() {
             combos.push((kind, spec));
         }
     }
-    assert_eq!(combos.len(), 9, "3 engines x 3 partition strategies");
+    assert_eq!(combos.len(), 12, "3 engines x 4 partition strategies");
     let mut cells = 0usize;
     props("conformance partition matrix", combos.len(), |g| {
         let (kind, spec) = combos[g.case].clone();
@@ -103,7 +105,39 @@ fn partition_matrix_conforms_to_kruskal_oracle() {
             cells += 1;
         }
     });
-    assert!(cells >= 60, "partition matrix covered only {cells} cells (need >= 60)");
+    assert!(cells >= 80, "partition matrix covered only {cells} cells (need >= 80)");
+}
+
+/// Quality regression gate on the partition axis: on the skewed generated
+/// families (RMAT, SSCA2) the multilevel strategy's edge cut must never
+/// exceed block's — at any minitest seed, including the nightly rotation.
+/// (`<=` is structural via the builder's block fallback; the *strict*
+/// quality claim is pinned at full scale in tests/partition_props.rs and
+/// the CI partition-quality gate.)
+#[test]
+fn multilevel_cut_never_worse_than_block() {
+    use ghs_mst::graph::partition::{Partition, PartitionStats};
+    props("conformance multilevel cut gate", 6, |g| {
+        for idx in [0usize, 1] {
+            let (label, clean) = graph_case(matrix_scale(), g.u64(), idx);
+            let n = clean.n_vertices.max(1);
+            let ranks = MATRIX_RANKS * (1 + g.u64_below(4) as u32);
+            let block = PartitionStats::compute(
+                &clean,
+                &Partition::build(&PartitionSpec::Block, &clean, n, ranks).unwrap(),
+            );
+            let ml = PartitionStats::compute(
+                &clean,
+                &Partition::build(&PartitionSpec::multilevel(), &clean, n, ranks).unwrap(),
+            );
+            assert!(
+                ml.edge_cut() <= block.edge_cut(),
+                "{label}@{ranks}: multilevel cut {} > block cut {}",
+                ml.edge_cut(),
+                block.edge_cut()
+            );
+        }
+    });
 }
 
 /// Explicit (owner-map) partitions: a random map per case must still yield
@@ -214,6 +248,24 @@ fn pipeline_counters_live_on_all_engines() {
         assert!(p.buf_reuse > 0, "{kind:?}: packet buffers never recycled");
         assert!(p.bytes_sent == p.bytes_decoded, "{kind:?}: all buffers delivered");
     }
+}
+
+/// Schedule-randomizing fuzz cell: under `GhsConfig::fuzz_sched`
+/// (`GHS_FUZZ_SCHED`) the async engine perturbs ready-list pop order and
+/// mailbox drain batching. Eight perturbed schedules across graph cases
+/// must all reproduce the Kruskal oracle — engine results are
+/// schedule-independent, not an artifact of FIFO scheduling.
+#[test]
+fn fuzzed_async_schedules_conform() {
+    props("conformance fuzzed schedules", 8, |g| {
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(matrix_scale(), g.u64(), idx);
+        let mut cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, 6);
+        cfg.workers = 3;
+        cfg.fuzz_sched = Some(g.u64());
+        let run = run_engine(EngineKind::Async, &clean, cfg);
+        verify_against_oracle(&format!("async/fuzzed/{label}"), &clean, &run);
+    });
 }
 
 /// The sequential engine is bit-deterministic per cell of the matrix: same

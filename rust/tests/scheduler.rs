@@ -133,6 +133,29 @@ fn async_forests_match_kruskal_under_three_seeds() {
     }
 }
 
+/// Schedule-randomizing fuzz cell (`GhsConfig::fuzz_sched`, env
+/// `GHS_FUZZ_SCHED`): eight perturbed schedules — random ready-list pops
+/// and partial mailbox drains — must all reproduce the Kruskal forest
+/// with exact silence accounting. Proves the async result is
+/// schedule-independent rather than an accident of FIFO order.
+#[test]
+fn eight_fuzzed_schedules_match_kruskal() {
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let (clean, _) = preprocess(&structured::connected_random(220, 900, &mut rng));
+    let oracle = kruskal(&clean).canonical_edges();
+    for seed in 0..8u64 {
+        let mut c = cfg(16, 4);
+        c.fuzz_sched = Some(0xF0_2200 + seed);
+        let run = run_async(&clean, c).unwrap();
+        assert_eq!(run.forest.canonical_edges(), oracle, "fuzz seed {seed}: forest diverged");
+        assert_eq!(
+            run.sent.total(),
+            run.profile.msgs_processed_main + run.profile.msgs_processed_test,
+            "fuzz seed {seed}: silence accounting broke under perturbation"
+        );
+    }
+}
+
 /// The full conformance assertion set (edges, weight, components, message
 /// bound) on an async cell with a non-trivial worker/rank ratio.
 #[test]
