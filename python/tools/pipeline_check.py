@@ -1211,6 +1211,7 @@ DEFAULT_CFG = dict(
     wire="procid",
     hash_sizing="paper",
     max_supersteps=5_000_000,
+    workers=1,  # async pool width (the port's workers take turns)
 )
 
 
@@ -1402,16 +1403,57 @@ def kruskal(n, edges):
 
 
 # ----------------------------------------------------- async scheduler --
-# Port of ghs/sched.rs + RankState::step / RankState::start: a cooperative
-# run-queue multiplexes every rank as a resumable task; packet delivery
-# wakes the destination; the explicit pending-message counter (startup
-# tokens + send/complete accounting) terminates the loop. Single-threaded
-# here, so it validates the protocol logic (step/Blocked contract,
-# wake-on-delivery sufficiency, silence termination, deadlock detection)
-# rather than memory-ordering races.
+# Port of ghs/sched.rs + deque.rs + ring.rs + RankState::step/start: every
+# rank is a resumable task on a worker pool where each worker owns a
+# work-stealing deque (LIFO owner pop, FIFO steal, rotation victim order)
+# and every task owns a bounded MPSC mailbox ring with a counted sticky
+# overflow spill. Packet delivery pushes into the ring and wakes the
+# destination; the in_flight task counter splits "finished" from
+# "deadlocked"; the explicit pending-message counter (startup tokens +
+# send/complete accounting) terminates the loop. Single-threaded here
+# (workers take turns), so it validates the protocol logic (step/Blocked
+# contract, wake-on-delivery sufficiency, seeding-forces-steals, spill
+# ordering, silence termination, deadlock reporting) rather than
+# memory-ordering races.
 
 S_IDLE, S_READY, S_RUNNING = 0, 1, 2
 SCHED_QUANTUM = 16
+RING_CAPACITY = 32  # ring.rs RING_CAPACITY
+GOLDEN = 0x9E3779B97F4A7C15  # per-worker fuzz-stream decorrelation stride
+
+
+class MailboxRing:
+    """ring.rs MpscRing: a bounded FIFO ring plus a *sticky* overflow
+    spill — once anything sits in the spill, every later push goes there
+    too (even if the ring has room again), so each producer's packets
+    stay FIFO across the overflow. Drain order is ring first, then
+    spill; the counted spills surface as `ring_full_spills`."""
+
+    def __init__(self, capacity=RING_CAPACITY):
+        self.capacity = capacity
+        self.ring = deque()
+        self.spill = []
+
+    def push(self, pkt):
+        """True when the packet fit in the ring, False when it spilled."""
+        if self.spill or len(self.ring) >= self.capacity:
+            self.spill.append(pkt)
+            return False
+        self.ring.append(pkt)
+        return True
+
+    def drain(self, quota):
+        out = []
+        while quota > 0 and (self.ring or self.spill):
+            out.append(self.ring.popleft() if self.ring else self.spill.pop(0))
+            quota -= 1
+        return out
+
+    def approx_len(self):
+        return len(self.ring) + len(self.spill)
+
+    def has_pending(self):
+        return bool(self.ring or self.spill)
 
 
 class AsyncSched:
@@ -1427,28 +1469,82 @@ class AsyncSched:
         self.cfg = cfg
         self.pool = [0]
         self.ranks = [Rank(r, n, edges, part, cfg, codec, self.pool) for r in range(p)]
-        self.inboxes = [[] for _ in range(p)]
+        self.inboxes = [MailboxRing() for _ in range(p)]
         self.state = [S_READY] * p
-        self.ready = deque(range(p))
+        # effective_workers clamp: never more workers than ranks, never 0.
+        self.n_workers = max(1, min(cfg.get("workers", 1), p))
+        # Startup seeding mirrors run_async: every task lands on worker
+        # 0's deque, so on any multi-worker run the other workers' first
+        # task is necessarily a steal (the `steals > 0` criterion).
+        self.deques = [[] for _ in range(self.n_workers)]
+        self.deques[0] = list(range(p))
         self.pending = p  # one startup token per rank (RankState::start)
+        self.in_flight = p  # non-IDLE tasks (quiescence detector)
         self.wakeups = [0] * p
         self.steps = [0] * p
         self.ready_max = p
+        self.steals = 0
+        self.steal_fails = 0
+        self.ring_spills = 0
         self.n = n
         self.edges = edges
-        # GHS_FUZZ_SCHED port: perturb ready-list pop order and mailbox
-        # drain batching (sched.rs pop_ready / drain_quota).
-        self.fuzz = Xoshiro256(fuzz_seed) if fuzz_seed is not None else None
+        # GHS_FUZZ_SCHED port: per-worker PRNGs decorrelated by a
+        # golden-ratio stride off the run seed (WorkerCtx::new), driving
+        # steal victim shuffles, steal-first coins and drain quotas.
+        self.fuzz = [
+            Xoshiro256((fuzz_seed + GOLDEN * (w + 1)) & M64)
+            if fuzz_seed is not None
+            else None
+            for w in range(self.n_workers)
+        ]
 
-    def _wake(self, t):
+    def _wake(self, t, w):
+        """sched.rs wake(): arrival-triggered requeue onto the delivering
+        worker's own deque (the only deque `w` may push)."""
         if self.state[t] == S_IDLE:
             self.state[t] = S_READY
             self.wakeups[t] += 1
-            self.ready.append(t)
-            self.ready_max = max(self.ready_max, len(self.ready))
+            self.in_flight += 1
+            self.ready_max = max(self.ready_max, self.in_flight)
+            self.deques[w].append(t)
         # S_READY: already queued. (S_RUNNING->WOKEN needs real
         # concurrency; a single-threaded sim never delivers to the task
         # that is currently running.)
+
+    def _try_steal(self, w):
+        """try_steal: probe the other deques in rotation order (seeded
+        Fisher–Yates shuffle under fuzz), taking the victim's *oldest*
+        task (FIFO end). Each empty victim counts one steal_fail."""
+        if self.n_workers <= 1:
+            return None
+        victims = [(w + i) % self.n_workers for i in range(1, self.n_workers)]
+        rng = self.fuzz[w]
+        if rng is not None:
+            for i in range(len(victims) - 1, 0, -1):
+                j = rng.next_below(i + 1)
+                victims[i], victims[j] = victims[j], victims[i]
+        for v in victims:
+            if self.deques[v]:
+                self.steals += 1
+                return self.deques[v].pop(0)
+            self.steal_fails += 1
+        return None
+
+    def _acquire(self, w):
+        """acquire: own deque LIFO pop, then steal (fuzz occasionally
+        probes victims first). None = nothing runnable for this worker."""
+        rng = self.fuzz[w]
+        steal_first = (
+            rng is not None and self.n_workers > 1 and rng.next_below(4) == 0
+        )
+        if not steal_first and self.deques[w]:
+            return self.deques[w].pop()
+        t = self._try_steal(w)
+        if t is not None:
+            return t
+        if steal_first and self.deques[w]:
+            return self.deques[w].pop()
+        return None
 
     def _start(self, rank):
         before = rank.prof.msgs_sent
@@ -1502,61 +1598,95 @@ class AsyncSched:
             and not rank.flushed
         )
 
+    def _run_task(self, t, w):
+        """run_worker's per-task quantum: drain the mailbox ring, step the
+        automaton, deliver flushes into peer rings (counting spills) and
+        wake their owners."""
+        self.state[t] = S_RUNNING
+        rank = self.ranks[t]
+        if rank.prof.iterations == 0:
+            self._start(rank)
+        self.steps[t] += 1
+        rng = self.fuzz[w]
+        blocked = False
+        for _ in range(SCHED_QUANTUM):
+            # read_msgs: drain the mailbox ring into the slot queues
+            # (under fuzzing only a random non-empty prefix; ring-then-
+            # spill drain order keeps each producer's packets FIFO).
+            inbox = self.inboxes[t]
+            quota = inbox.approx_len()
+            if rng is not None and quota > 1:
+                quota = 1 + rng.next_below(quota)
+            for (_src, nbytes, msgs) in inbox.drain(quota):
+                rank.read_buffer(nbytes, msgs)
+                self.pool[0] = min(self.pool[0] + 1, 1024)
+            blocked = self._step(rank)
+            for (dst, nbytes, _n_msgs, msgs) in rank.flushed:
+                if not self.inboxes[dst].push((t, nbytes, msgs)):
+                    self.ring_spills += 1
+                self._wake(dst, w)
+            rank.flushed = []
+            if blocked or self.pending == 0:
+                break
+        if blocked:
+            rank.prof.finish_checks += 1
+            if self.inboxes[t].has_pending():
+                # Packets whose delivery wake already fired (a partial
+                # fuzz drain, or arrivals while RUNNING) — never idle on
+                # a non-empty mailbox (sched.rs leftover requeue).
+                self.state[t] = S_READY
+                self.deques[w].append(t)
+            else:
+                self.state[t] = S_IDLE
+                self.in_flight -= 1
+        else:
+            self.state[t] = S_READY
+            self.deques[w].append(t)
+
+    def _deadlock(self):
+        """sched.rs deadlock_report: the base headline (verbatim from the
+        Rust engine) plus per-rank detail lines for stranded work."""
+        lines = []
+        for r in self.ranks:
+            q = r.queues
+            active = q.active_len()
+            stash = len(q.main_stash) + len(q.test_stash)
+            outbox = sum(b[1] for b in r.outbox.values())
+            if active or stash or outbox:
+                lines.append(
+                    f"  rank {r.rank}: {active} active, {stash} stashed "
+                    f"(postponed), {outbox} unflushed outbox msgs"
+                )
+            if len(lines) == 8:
+                break
+        raise RuntimeError(
+            f"scheduler deadlock: {self.pending} messages pending but "
+            "every task is blocked (postponed messages that no future "
+            "traffic can unblock)\n" + "\n".join(lines)
+        )
+
     def run(self):
         while self.pending != 0:
-            if not self.ready:
-                raise RuntimeError(
-                    f"scheduler deadlock: {self.pending} messages pending "
-                    "but every task is blocked"
-                )
-            if self.fuzz is not None and len(self.ready) > 1:
-                idx = self.fuzz.next_below(len(self.ready))
-                t = self.ready[idx]
-                del self.ready[idx]
-            else:
-                t = self.ready.popleft()
-            self.state[t] = S_RUNNING
-            rank = self.ranks[t]
-            if rank.prof.iterations == 0:
-                self._start(rank)
-            self.steps[t] += 1
-            blocked = False
-            for _ in range(SCHED_QUANTUM):
-                # read_msgs: drain the mailbox into the slot queues (under
-                # fuzzing only a random non-empty prefix; the tail keeps
-                # its order ahead of later arrivals).
-                inbox, self.inboxes[t] = self.inboxes[t], []
-                if self.fuzz is not None and len(inbox) > 1:
-                    quota = 1 + self.fuzz.next_below(len(inbox))
-                    self.inboxes[t] = inbox[quota:]
-                    inbox = inbox[:quota]
-                for (_src, nbytes, msgs) in inbox:
-                    rank.read_buffer(nbytes, msgs)
-                    self.pool[0] = min(self.pool[0] + 1, 1024)
-                blocked = self._step(rank)
-                for (dst, nbytes, _n_msgs, msgs) in rank.flushed:
-                    self.inboxes[dst].append((t, nbytes, msgs))
-                    self._wake(dst)
-                rank.flushed = []
-                if blocked or self.pending == 0:
+            progressed = False
+            for w in range(self.n_workers):
+                t = self._acquire(w)
+                if t is None:
+                    continue
+                progressed = True
+                self._run_task(t, w)
+                if self.pending == 0:
                     break
-            if blocked:
-                rank.prof.finish_checks += 1
-                if self.fuzz is not None and self.inboxes[t]:
-                    # A partial drain left packets whose delivery wake has
-                    # already fired — never idle on a non-empty mailbox
-                    # (sched.rs leftover requeue).
-                    self.state[t] = S_READY
-                    self.ready.append(t)
-                    self.ready_max = max(self.ready_max, len(self.ready))
-                else:
-                    self.state[t] = S_IDLE
-            else:
-                self.state[t] = S_READY
-                self.ready.append(t)
-                self.ready_max = max(self.ready_max, len(self.ready))
+            if not progressed:
+                # A full sweep found nothing runnable: every task idled,
+                # which is exactly the in_flight == 0 quiescence the Rust
+                # pool observes — with work pending, that is a deadlock.
+                assert self.in_flight == 0, (
+                    f"in_flight accounting broke: {self.in_flight} with "
+                    "all deques empty"
+                )
+                self._deadlock()
         # Global silence: nothing may remain anywhere.
-        assert all(not ib for ib in self.inboxes), "inbox packets at silence"
+        assert all(not ib.has_pending() for ib in self.inboxes), "inbox packets at silence"
         for r in self.ranks:
             assert r.pending_local() == 0, "rank work at silence"
         return self.collect()
@@ -1588,6 +1718,10 @@ class AsyncSched:
             steps=sum(self.steps),
             wakeups=sum(self.wakeups),
             ready_max=self.ready_max,
+            steals=self.steals,
+            steal_fails=self.steal_fails,
+            ring_spills=self.ring_spills,
+            workers=self.n_workers,
         )
 
 
@@ -1602,15 +1736,25 @@ def check_async(label, n, edges, cfg, partition="block", fuzz_seed=None):
     assert out["sent_total"] == p.msgs_processed_main + p.msgs_processed_test, (
         f"{label}: every sent message must be processed exactly once"
     )
+    if out["workers"] > 1:
+        assert out["steals"] > 0, (
+            f"{label}: workers 1..{out['workers'] - 1} start empty-handed, "
+            "so a multi-worker run must steal"
+        )
+    else:
+        assert out["steals"] == 0 and out["steal_fails"] == 0, (
+            f"{label}: a single worker has nobody to steal from"
+        )
     print(
         f"  ok {label:55s} msgs={out['sent_total']:7d} steps={out['steps']:7d} "
-        f"wakeups={out['wakeups']:6d} ready_max={out['ready_max']}"
+        f"wakeups={out['wakeups']:6d} ready_max={out['ready_max']} "
+        f"steals={out['steals']}/{out['steal_fails']} spills={out['ring_spills']}"
     )
     return out
 
 
 def async_conformance(quick=False):
-    print("== async scheduler: forest == Kruskal, wake/termination protocol")
+    print("== async scheduler: forest == Kruskal, steal/termination protocol")
     n7, e7 = workload(7)
     for wire in ("naive", "compact", "procid"):
         for sep in (False, True):
@@ -1619,33 +1763,90 @@ def async_conformance(quick=False):
                 check_async(f"rmat7/{wire}/sep={sep}/p={ranks}", n7, e7, cfg)
     for spec in ("block", "degree", "hub", "multilevel"):
         check_async(f"rmat7/final/p=4/{spec}", n7, e7, final_version(4), partition=spec)
-    # Schedule fuzz (GHS_FUZZ_SCHED port): perturbed ready-pop order and
-    # mailbox drain batching must never change the forest.
-    for fz in (1, 2, 0xFACE, 0xF02200):
-        check_async(f"rmat7/final/p=16/fuzz={fz:#x}", n7, e7, final_version(16), fuzz_seed=fz)
+    # Worker axis: multi-worker pools must redistribute the seeded deque
+    # through steals (check_async asserts steals > 0 whenever workers > 1)
+    # and still match the oracle.
+    for w in (2, 3, 8):
+        check_async(
+            f"rmat7/final/p=16/workers={w}", n7, e7, final_version(16, workers=w)
+        )
+    # Schedule fuzz (GHS_FUZZ_SCHED port): eight perturbed schedules —
+    # shuffled steal victim order, steal-first coins, partial mailbox-ring
+    # drains — must never change the forest.
+    for s in range(8):
+        fz = 0xF02200 + s
+        check_async(
+            f"rmat7/final/p=16/w=4/fuzz={fz:#x}", n7, e7,
+            final_version(16, workers=4), fuzz_seed=fz,
+        )
     check_async(
-        "rmat7/final/p=8/multilevel/fuzz=7", n7, e7, final_version(8),
+        "rmat7/final/p=8/multilevel/fuzz=7", n7, e7, final_version(8, workers=3),
         partition="multilevel", fuzz_seed=7,
     )
+    # Deterministic replay mode: workers=1 + seed pins every scheduling
+    # choice, so three runs must produce identical counter fingerprints.
+    fps = []
+    for _ in range(3):
+        out = check_async(
+            "rmat7/final/p=16/w=1/fuzz=0x5eed (replay)", n7, e7,
+            final_version(16, workers=1), fuzz_seed=0x5EED,
+        )
+        fps.append(
+            (
+                out["steps"], out["wakeups"], out["ready_max"], out["sent_total"],
+                out["ring_spills"], out["prof"].iterations, out["prof"].bytes_sent,
+                out["prof"].stash_merges,
+            )
+        )
+    assert fps[0] == fps[1] == fps[2], f"deterministic replay diverged: {fps}"
+    print("  replay fingerprints identical across 3 runs")
     # Zero-vertex ranks: more tasks than vertices.
     check_async("rmat7/final/p=200 (empty ranks)", n7, e7, final_version(200))
-    # The rank-scale demonstration: one vertex per rank on a path graph —
-    # full multiplexing, every edge crossing a rank boundary.
-    ranks = 512 if quick else 4096
+    # The rank-scale demonstration: one vertex per rank on a path graph,
+    # full multiplexing, every edge crossing a rank boundary — on a wide
+    # work-stealing pool (the ISSUE acceptance cell: steals > 0 falls out
+    # of check_async's multi-worker assertion).
+    ranks, workers = (512, 8) if quick else (4096, 64)
     np_, ep = path_graph(ranks, 42)
     out = check_async(
-        f"path{ranks}/final/p={ranks} (1 vertex/rank)",
-        np_, ep, final_version(ranks, max_supersteps=100_000_000),
+        f"path{ranks}/final/p={ranks}/w={workers} (1 vertex/rank)",
+        np_, ep, final_version(ranks, workers=workers, max_supersteps=100_000_000),
     )
-    assert out["ready_max"] >= ranks, "initial seeding fills the run queue"
+    assert out["ready_max"] >= ranks, "initial seeding makes every task in-flight"
     assert out["wakeups"] > 0, "merge cascade must wake blocked tasks"
     # Cross-engine agreement: the async schedule must reproduce the
     # sequential engine's forest bit-for-bit.
     seq = Engine(n7, e7, final_version(4)).run()
-    asy = AsyncSched(n7, e7, final_version(4)).run()
+    asy = AsyncSched(n7, e7, final_version(4, workers=2)).run()
     assert seq["edges"] == asy["edges"], "async vs sequential forest"
     assert seq["sent_total"] > 0 and asy["sent_total"] > 0
     print("  async/sequential forests agree")
+
+
+def sched_snapshot(quick=False):
+    """Steal/contention rows for results/perf_baseline.md: the path-512
+    merge cascade (one vertex per rank) across pool widths. Deterministic
+    — the port's workers take turns on one thread — so the rows gate like
+    every other counter table."""
+    print("== scheduler snapshot: path-512, 1 vertex/rank, pool-width sweep")
+    np_, ep = path_graph(512, 42)
+    rows = {}
+    for w in (1, 4, 8, 64):
+        out = AsyncSched(
+            np_, ep, final_version(512, workers=w, max_supersteps=100_000_000)
+        ).run()
+        want_edges, _ = kruskal(np_, ep)
+        assert out["edges"] == want_edges, f"workers={w}: forest mismatch"
+        rows[w] = out
+        print(
+            f"  workers={w:3d} steps={out['steps']:6d} wakeups={out['wakeups']:6d} "
+            f"ready_max={out['ready_max']:4d} steals={out['steals']:5d} "
+            f"steal_fails={out['steal_fails']:6d} ring_spills={out['ring_spills']:4d}"
+        )
+    assert rows[1]["steals"] == 0, "single worker must not steal"
+    for w in (4, 8, 64):
+        assert rows[w]["steals"] > 0, f"workers={w}: seeding forces steals"
+    return rows
 
 
 # ------------------------------------------------------------ harness --
@@ -1794,6 +1995,7 @@ if __name__ == "__main__":
     assert sm.next_u64() == 0x6E789E6AA1B965F4
     conformance(quick)
     async_conformance(quick)
+    sched_snapshot(quick)
     multilevel_quality()
     snap8 = perf_snapshot(8)
     if not quick:

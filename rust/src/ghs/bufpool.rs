@@ -57,9 +57,11 @@ impl BufferPool {
     }
 
     /// Return a batch of spent buffers under one lock acquisition. The
-    /// async engine's workers drain a whole task mailbox per quantum; with
-    /// many workers sharing one pool, taking the mutex once per drain
-    /// (instead of once per packet) keeps the pool off the contention path.
+    /// async engine's workers drain a task's whole mailbox ring (plus any
+    /// overflow spill) per quantum and hand the spent packet buffers back
+    /// here in one batch; with many workers sharing one pool, taking the
+    /// mutex once per ring drain (instead of once per packet) keeps the
+    /// pool off the contention path even at 64+ workers.
     pub fn put_all<I: IntoIterator<Item = Vec<u8>>>(&self, bufs: I) {
         if let Ok(mut f) = self.free.lock() {
             for mut buf in bufs {

@@ -65,7 +65,11 @@ pub struct GhsConfig {
     pub ranks_per_node: u32,
     /// Worker threads for the async engine's task pool (`--workers`).
     /// `0` (the default) means auto: one worker per available CPU, capped
-    /// at the rank count. Ignored by the sequential and threaded engines.
+    /// at the rank count. Each worker owns a work-stealing deque; with
+    /// more than one worker, scheduling (and therefore counter values) is
+    /// nondeterministic — `workers = 1` plus [`Self::fuzz_sched`] is the
+    /// deterministic replay mode. Ignored by the sequential and threaded
+    /// engines.
     pub workers: u32,
     /// Vertex-to-rank partitioning strategy (paper §3: block; see
     /// `graph::partition` for the skew-aware alternatives).
@@ -103,10 +107,13 @@ pub struct GhsConfig {
     /// Record per-interval message sizes for the Fig 4 timeline.
     pub record_timeline: bool,
     /// Schedule-randomizing fuzz seed for the async engine (env
-    /// `GHS_FUZZ_SCHED=<seed>`): perturbs ready-list pop order and mailbox
-    /// drain batching so the conformance fuzz cells can prove the result
-    /// is schedule-independent. `None` (the default) keeps the plain FIFO
-    /// scheduler. Ignored by the sequential and threaded engines.
+    /// `GHS_FUZZ_SCHED=<seed>`): seeds per-worker perturbations of steal
+    /// victim order, steal-before-own-pop coins, and mailbox drain
+    /// batching so the conformance fuzz cells can prove the result is
+    /// schedule-independent. `None` (the default) keeps the plain
+    /// LIFO-pop / rotation-steal scheduler. With `workers = 1` the seed
+    /// makes the whole schedule deterministic (replay mode). Ignored by
+    /// the sequential and threaded engines.
     pub fuzz_sched: Option<u64>,
 }
 

@@ -1,0 +1,249 @@
+//! Chase–Lev work-stealing deque of task ids (the async scheduler's
+//! per-worker run queue).
+//!
+//! One deque per pool worker. The owning worker pushes and pops at the
+//! *bottom* (LIFO — a just-woken task's mailbox is still hot in cache);
+//! every other worker steals from the *top* (FIFO — thieves take the
+//! oldest task, the one the owner is furthest from revisiting). This is
+//! the classic Chase–Lev layout (SPAA'05), with the SeqCst fences of the
+//! Lê–Pop–Cohen–Nardelli C11 formulation.
+//!
+//! Two simplifications relative to the general algorithm, both bought by
+//! scheduler invariants:
+//!
+//! * **No growth.** A task is on at most one deque at a time (the
+//!   `IDLE/READY/RUNNING/WOKEN` state machine enqueues a task only on the
+//!   `IDLE → READY` and requeue transitions, and it leaves the deque
+//!   before running), so a deque never holds more than the total task
+//!   count. Constructed with capacity > that bound, `push` can never lap
+//!   `top` — no resizing, and no ABA on slot reuse: a slot read by a
+//!   stealer cannot be overwritten until the stealer's `top` CAS has
+//!   settled.
+//! * **No unsafe.** Items are bare `u32` task ids stored in `AtomicU32`
+//!   slots, so the racy buffer reads of the textbook version (the reason
+//!   it needs `UnsafeCell`) are plain relaxed atomic loads here; the `top`
+//!   CAS still decides which contender owns the value it read.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+/// Outcome of a steal attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal {
+    /// Stole the oldest task.
+    Success(u32),
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a race with the owner or another thief; retrying immediately
+    /// is allowed (the loser made the winner's progress possible).
+    Retry,
+}
+
+/// A fixed-capacity Chase–Lev deque of `u32` task ids.
+#[derive(Debug)]
+pub struct WorkDeque {
+    /// Next slot to steal from (only ever incremented, by successful
+    /// steals and by the owner's last-element pop).
+    top: AtomicI64,
+    /// Next slot the owner pushes to (owner-written; thieves only read).
+    bottom: AtomicI64,
+    /// `capacity - 1` (capacity is a power of two).
+    mask: i64,
+    buf: Box<[AtomicU32]>,
+}
+
+impl WorkDeque {
+    /// A deque holding at most `max_items` concurrently. Capacity is
+    /// rounded to the next power of two *strictly above* `max_items`, so
+    /// the no-growth / no-ABA argument in the module docs holds.
+    pub fn new(max_items: usize) -> Self {
+        let cap = (max_items + 1).next_power_of_two();
+        Self {
+            top: AtomicI64::new(0),
+            bottom: AtomicI64::new(0),
+            mask: cap as i64 - 1,
+            buf: (0..cap).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    /// Owner only: push a task at the bottom.
+    pub fn push(&self, task: u32) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        debug_assert!(b - t <= self.mask, "deque over capacity: a task was enqueued twice");
+        self.buf[(b & self.mask) as usize].store(task, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible to thieves.
+        self.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Owner only: pop the most recently pushed task (LIFO).
+    pub fn pop(&self) -> Option<u32> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // The store above must be visible before we read `top`, and
+        // symmetrically for thieves (their SeqCst CAS) — the crux of
+        // Chase–Lev.
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let task = self.buf[(b & self.mask) as usize].load(Ordering::Relaxed);
+            if t == b {
+                // Last element: race the thieves for it via `top`.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                return won.then_some(task);
+            }
+            Some(task)
+        } else {
+            // Already empty; undo the speculative decrement.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Any thread: steal the oldest task (FIFO).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let task = self.buf[(t & self.mask) as usize].load(Ordering::Relaxed);
+        // The CAS decides whether the value we read was ours to take; the
+        // no-lap capacity bound guarantees the slot was not overwritten in
+        // between (see module docs).
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            Steal::Success(task)
+        } else {
+            Steal::Retry
+        }
+    }
+
+    /// Racy emptiness hint (used by parking workers to decide whether a
+    /// re-scan is worthwhile; never used for correctness decisions).
+    pub fn is_empty(&self) -> bool {
+        let t = self.top.load(Ordering::Relaxed);
+        let b = self.bottom.load(Ordering::Relaxed);
+        b <= t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_for_owner_fifo_for_thief() {
+        let d = WorkDeque::new(8);
+        for task in 0..4 {
+            d.push(task);
+        }
+        assert_eq!(d.steal(), Steal::Success(0), "thief takes the oldest");
+        assert_eq!(d.pop(), Some(3), "owner takes the newest");
+        assert_eq!(d.steal(), Steal::Success(1));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), Steal::Empty);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn capacity_rounds_strictly_above_bound() {
+        // max_items tasks plus the owner's in-flight push must fit without
+        // wrapping onto unconsumed slots.
+        for max in [1usize, 7, 8, 4096] {
+            let d = WorkDeque::new(max);
+            assert!(d.mask as usize + 1 > max, "capacity must exceed max_items");
+            for task in 0..max as u32 {
+                d.push(task);
+            }
+            for task in (0..max as u32).rev() {
+                assert_eq!(d.pop(), Some(task));
+            }
+        }
+    }
+
+    /// Owner-pop vs steal race: an owner popping LIFO and thieves stealing
+    /// FIFO concurrently must hand out every task exactly once — no loss,
+    /// no duplication — across seeded schedules (the seed varies the
+    /// owner's push/pop interleaving).
+    #[test]
+    fn concurrent_owner_and_thieves_partition_the_tasks() {
+        for seed in [1u64, 42, 0xC0FFEE] {
+            let n: u32 = 20_000;
+            let d = Arc::new(WorkDeque::new(n as usize));
+            let taken: Arc<Vec<AtomicU64>> =
+                Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let thieves: Vec<_> = (0..3)
+                .map(|_| {
+                    let d = Arc::clone(&d);
+                    let taken = Arc::clone(&taken);
+                    let stop = Arc::clone(&stop);
+                    std::thread::spawn(move || {
+                        let mut got = 0u64;
+                        while !stop.load(Ordering::Acquire) {
+                            match d.steal() {
+                                Steal::Success(t) => {
+                                    taken[t as usize].fetch_add(1, Ordering::Relaxed);
+                                    got += 1;
+                                }
+                                Steal::Retry => {}
+                                Steal::Empty => std::thread::yield_now(),
+                            }
+                        }
+                        // Drain whatever the owner left behind.
+                        loop {
+                            match d.steal() {
+                                Steal::Success(t) => {
+                                    taken[t as usize].fetch_add(1, Ordering::Relaxed);
+                                    got += 1;
+                                }
+                                Steal::Retry => {}
+                                Steal::Empty => return got,
+                            }
+                        }
+                    })
+                })
+                .collect();
+            // Owner: seeded mix of pushes and LIFO pops.
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut next = 0u32;
+            let mut owner_got = 0u64;
+            while next < n {
+                let burst = 1 + rng.next_index(64) as u32;
+                for _ in 0..burst.min(n - next) {
+                    d.push(next);
+                    next += 1;
+                }
+                for _ in 0..rng.next_index(48) {
+                    if let Some(t) = d.pop() {
+                        taken[t as usize].fetch_add(1, Ordering::Relaxed);
+                        owner_got += 1;
+                    }
+                }
+            }
+            stop.store(true, Ordering::Release);
+            let stolen: u64 = thieves.into_iter().map(|h| h.join().unwrap()).sum();
+            // Owner drains its own leftovers last.
+            while let Some(t) = d.pop() {
+                taken[t as usize].fetch_add(1, Ordering::Relaxed);
+                owner_got += 1;
+            }
+            assert_eq!(owner_got + stolen, n as u64, "seed {seed}: tasks lost or duplicated");
+            for (t, c) in taken.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "seed {seed}: task {t} seen != once");
+            }
+        }
+    }
+}

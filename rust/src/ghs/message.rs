@@ -9,12 +9,19 @@ use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::graph::VertexId;
 
 /// Pack a message header into the §3.5 16-bit layout: 3 b type tag at bits
-/// 0..3, 5 b level at 3..8, 1 b state at bit 8, 7 b reserved (zero). This
-/// is both the compact wire header and the flattened form the queue slots
-/// store (see [`crate::ghs::queues::RankQueues`]).
+/// 0..3, 8 b level at 3..11, 1 b state at bit 11, 4 b reserved (zero).
+/// This is both the compact wire header and the flattened form the queue
+/// slots store (see [`crate::ghs::queues::RankQueues`]).
+///
+/// The level field spans the full `Level` (`u8`) range. An earlier layout
+/// gave it only 5 bits, so `(level as u16) << 3` silently collided with
+/// the state bit at bit 8 for level ≥ 32 — corrupting the packed header
+/// of deep-merge runs without any error. Widening the field (the reserved
+/// bits had the room; total header size is unchanged) makes truncation
+/// impossible by construction.
 #[inline]
 pub fn pack_meta(tag: u8, level: Level, state: u8) -> u16 {
-    tag as u16 | (level as u16) << 3 | (state as u16) << 8
+    tag as u16 | (level as u16) << 3 | (state as u16) << 11
 }
 
 /// Type tag of a packed header.
@@ -24,8 +31,8 @@ pub fn meta_tag(meta: u16) -> u8 {
 }
 
 /// Mask selecting the meaningful bits of a packed header (tag + level +
-/// state; the 7 reserved bits are zero).
-pub const META_MASK: u16 = 0x01FF;
+/// state; the 4 reserved bits are zero).
+pub const META_MASK: u16 = 0x0FFF;
 
 /// The wire type tag of `Test` messages (used for queue routing without
 /// materializing a [`Payload`]).
@@ -94,8 +101,8 @@ impl Payload {
     /// Rebuild a payload from the flattened slot form (inverse of
     /// [`Payload::to_meta`]; also the shared wire-decode assembler).
     pub fn from_meta(meta: u16, weight: FragmentId) -> Payload {
-        let level = ((meta >> 3) & 0b1_1111) as Level;
-        let state = ((meta >> 8) & 1) as u8;
+        let level = ((meta >> 3) & 0xFF) as Level;
+        let state = ((meta >> 11) & 1) as u8;
         match meta_tag(meta) {
             0 => Payload::Connect { level },
             1 => Payload::Initiate {
@@ -232,9 +239,15 @@ mod tests {
         let payloads = [
             Payload::Connect { level: 0 },
             Payload::Connect { level: 31 },
+            Payload::Connect { level: Level::MAX },
             Payload::Initiate { level: 7, fragment: w, state: VertexState::Find },
             Payload::Initiate { level: 7, fragment: w, state: VertexState::Found },
+            // Level 32+ collided with the state bit in the old 5-bit
+            // layout; the Find state makes any residual collision visible.
+            Payload::Initiate { level: 32, fragment: w, state: VertexState::Find },
+            Payload::Initiate { level: Level::MAX, fragment: w, state: VertexState::Find },
             Payload::Test { level: 4, fragment: w },
+            Payload::Test { level: 200, fragment: w },
             Payload::Accept,
             Payload::Reject,
             Payload::Report { best: w },
@@ -246,6 +259,24 @@ mod tests {
             assert_eq!(meta & !META_MASK, 0, "reserved bits are zero");
             assert_eq!(meta_tag(meta), p.type_tag());
             assert_eq!(Payload::from_meta(meta, weight), p, "{p:?}");
+        }
+    }
+
+    /// The regression the 8-bit widening fixes: in the 5-bit layout,
+    /// level ≥ 32 bled into the state bit (`(32 << 3) == 1 << 8`). Every
+    /// (level, state) combination must survive packing bit-exactly —
+    /// `wire.rs` asserts the same boundary levels end-to-end through each
+    /// codec (`field_boundary_values_roundtrip_all_formats`).
+    #[test]
+    fn level_field_holds_full_u8_without_state_collision() {
+        for level in [0 as Level, 31, 32, 63, 128, Level::MAX] {
+            for state in [0u8, 1] {
+                let meta = pack_meta(TAG_TEST, level, state);
+                assert_eq!(meta & !META_MASK, 0, "reserved bits stay zero");
+                assert_eq!(meta_tag(meta), TAG_TEST, "level {level} leaked into the tag");
+                assert_eq!(((meta >> 3) & 0xFF) as Level, level, "level truncated");
+                assert_eq!(((meta >> 11) & 1) as u8, state, "level {level} flipped the state bit");
+            }
         }
     }
 

@@ -18,10 +18,15 @@
 //! * [`parallel`] — threaded engine (one OS thread per rank)
 //! * [`sched`] — async engine: cooperative scheduler multiplexing
 //!   thousands of rank tasks onto a fixed worker pool
+//! * [`deque`] — Chase–Lev work-stealing deque (the async engine's
+//!   per-worker run queue)
+//! * [`ring`] — bounded MPSC mailbox ring with counted overflow spill
+//!   (the async engine's per-task inbox)
 //! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
 
 pub mod bufpool;
 pub mod config;
+pub mod deque;
 pub mod edge_lookup;
 pub mod engine;
 pub mod message;
@@ -29,6 +34,7 @@ pub mod parallel;
 pub mod queues;
 pub mod rank;
 pub mod result;
+pub mod ring;
 pub mod sched;
 pub mod types;
 pub mod vertex;

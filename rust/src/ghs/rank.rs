@@ -388,8 +388,10 @@ impl RankState {
     /// burst from the main queue, the Test queue at `CHECK_FREQUENCY`
     /// cadence, and flush aggregation buffers at `SENDING_FREQUENCY`
     /// cadence. The driver is responsible for delivering anything left in
-    /// [`Self::flushed`] and for feeding arrived packets via
-    /// [`Self::read_buffer`] *before* the call.
+    /// [`Self::flushed`] (the async scheduler pushes each packet into the
+    /// destination task's bounded mailbox ring and wakes the task) and for
+    /// feeding arrived packets via [`Self::read_buffer`] *before* the
+    /// call.
     ///
     /// `pending` is the engines' shared silence counter: every send adds
     /// one, every completed (non-postponed) processing removes one; the
@@ -459,6 +461,22 @@ impl RankState {
     pub fn pending_local(&self) -> u64 {
         let outbox_msgs: u64 = self.outbox.iter().map(|(_, n)| *n as u64).sum();
         self.queues.total_len() as u64 + outbox_msgs
+    }
+
+    /// One detail line for a deadlock report: what work is stranded at
+    /// this rank (active-queue messages, stash-stranded postponed
+    /// messages, unflushed outbox messages), or `None` if the rank is
+    /// genuinely quiet. The async scheduler aggregates these into its
+    /// structured deadlock error instead of hanging or dying on an
+    /// invariant `expect`.
+    pub fn stranded_report(&self) -> Option<String> {
+        let active = self.queues.active_len();
+        let stash = self.queues.stash_len();
+        let outbox: u64 = self.outbox.iter().map(|(_, n)| *n as u64).sum();
+        if active == 0 && stash == 0 && outbox == 0 {
+            return None;
+        }
+        Some(format!("{active} active, {stash} stashed (postponed), {outbox} unflushed outbox msgs"))
     }
 
     /// Collect this rank's Branch edges, each reported once (by the

@@ -57,6 +57,17 @@ pub struct ProfileCounters {
     /// High-water mark of the scheduler's ready list (async engine only;
     /// a whole-run property, so [`Self::merge`] takes the max, not a sum).
     pub ready_max: u64,
+    /// Tasks taken from another worker's work-stealing deque (async
+    /// engine only; zero on a single-worker pool).
+    pub steals: u64,
+    /// Steal probes that found the victim's deque empty (async engine
+    /// only).
+    pub steal_fails: u64,
+    /// Packet deliveries that overflowed a task's bounded mailbox ring
+    /// into its spill vector (async engine only). Correctness-neutral:
+    /// spilled packets are drained after the ring, and the silence
+    /// accounting never sees the detour.
+    pub ring_full_spills: u64,
 }
 
 impl ProfileCounters {
@@ -102,6 +113,9 @@ impl ProfileCounters {
         self.wakeups += o.wakeups;
         self.steps += o.steps;
         self.ready_max = self.ready_max.max(o.ready_max);
+        self.steals += o.steals;
+        self.steal_fails += o.steal_fails;
+        self.ring_full_spills += o.ring_full_spills;
     }
 
     /// The park/wake counter discipline each engine must honour (used by
@@ -109,18 +123,30 @@ impl ProfileCounters {
     /// engine-conditional instead of assuming the threaded engine):
     ///
     /// * `Sequential` — never parks, never wakes, never schedules: all of
-    ///   `parked` / `wakeups` / `steps` / `ready_max` are zero.
+    ///   `parked` / `wakeups` / `steps` / `ready_max` are zero, as are the
+    ///   work-stealing counters (`steals` / `steal_fails` /
+    ///   `ring_full_spills`).
     /// * `Threaded` — may park on its channel, but has no scheduler, so
-    ///   `wakeups` / `steps` / `ready_max` are zero.
+    ///   `wakeups` / `steps` / `ready_max` and the work-stealing counters
+    ///   are zero.
     /// * `Async` — never parks a rank on a channel (blocked tasks are
-    ///   descheduled instead); `steps` and `ready_max` are live.
+    ///   descheduled instead); `steps` and `ready_max` are live. The
+    ///   work-stealing counters are unconstrained: a single-worker pool
+    ///   legitimately records zero steals, a contended pool many.
     pub fn park_wake_invariants(&self, kind: crate::ghs::engine::EngineKind) -> bool {
         use crate::ghs::engine::EngineKind;
+        let no_stealing = self.steals == 0 && self.steal_fails == 0 && self.ring_full_spills == 0;
         match kind {
             EngineKind::Sequential => {
-                self.parked == 0 && self.wakeups == 0 && self.steps == 0 && self.ready_max == 0
+                self.parked == 0
+                    && self.wakeups == 0
+                    && self.steps == 0
+                    && self.ready_max == 0
+                    && no_stealing
             }
-            EngineKind::Threaded => self.wakeups == 0 && self.steps == 0 && self.ready_max == 0,
+            EngineKind::Threaded => {
+                self.wakeups == 0 && self.steps == 0 && self.ready_max == 0 && no_stealing
+            }
             EngineKind::Async => self.parked == 0 && self.steps > 0 && self.ready_max > 0,
         }
     }
@@ -193,6 +219,9 @@ mod tests {
             wakeups: 6,
             steps: 11,
             ready_max: 3,
+            steals: 5,
+            steal_fails: 8,
+            ring_full_spills: 2,
             ..Default::default()
         };
         a.merge(&b);
@@ -205,6 +234,9 @@ mod tests {
         assert_eq!(a.stash_merges, 9);
         assert_eq!(a.wakeups, 6);
         assert_eq!(a.steps, 11);
+        assert_eq!(a.steals, 5);
+        assert_eq!(a.steal_fails, 8);
+        assert_eq!(a.ring_full_spills, 2);
         assert_eq!(a.ready_max, 3, "high-water mark merges by max");
         a.merge(&ProfileCounters { ready_max: 2, ..Default::default() });
         assert_eq!(a.ready_max, 3, "smaller high-water marks do not lower the max");
@@ -227,6 +259,17 @@ mod tests {
         assert!(!asy.park_wake_invariants(EngineKind::Threaded));
         let asy_parked = ProfileCounters { parked: 1, ..asy };
         assert!(!asy_parked.park_wake_invariants(EngineKind::Async), "async never parks");
+
+        // Work-stealing counters: live under Async (stealing or not),
+        // forbidden everywhere else — only the async pool has deques.
+        let asy_steals =
+            ProfileCounters { steals: 7, steal_fails: 2, ring_full_spills: 1, ..asy };
+        assert!(asy_steals.park_wake_invariants(EngineKind::Async));
+        assert!(asy.park_wake_invariants(EngineKind::Async), "zero steals is legal (1 worker)");
+        let thr_steals = ProfileCounters { parked: 5, steals: 1, ..Default::default() };
+        assert!(!thr_steals.park_wake_invariants(EngineKind::Threaded), "threaded never steals");
+        let seq_spill = ProfileCounters { ring_full_spills: 1, ..Default::default() };
+        assert!(!seq_spill.park_wake_invariants(EngineKind::Sequential), "sequential has no rings");
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Bounded MPSC mailbox ring (the async scheduler's per-task inbox).
+//!
+//! Replaces the old `Mutex<Vec<Packet>>` inbox: many workers deliver
+//! packets to a task concurrently (multi-producer), while exactly one
+//! worker — whichever currently runs the task — drains it (single
+//! consumer; the `IDLE/READY/RUNNING` state machine guarantees one runner
+//! at a time). The hot consumer path is one acquire load per slot plus a
+//! sequence-tag scan: no lock, no allocation.
+//!
+//! The ring is a fixed-size Vyukov-style queue: each slot carries a
+//! sequence tag (`seq`) that encodes whose turn the slot is. A producer
+//! claims slot `t = tail++` when `seq == t`, writes the value, then
+//! publishes `seq = t + 1`; the consumer at head `h` waits for
+//! `seq == h + 1`, takes the value, and recycles the slot with
+//! `seq = h + capacity`.
+//!
+//! **Spill discipline.** The ring is bounded; a full ring must not drop or
+//! block (silence-termination accounting counts every in-flight packet).
+//! Overflow goes to a mutex-guarded spill vector — and the spill is
+//! *sticky*: once any producer has spilled, every later producer spills
+//! too (checked via `spill_len` before touching the ring) until the
+//! consumer drains ring-then-spill back to empty. Stickiness is what
+//! preserves per-producer FIFO: without it, a producer could overflow
+//! packet A to the spill and then slip packet B into a freed ring slot,
+//! and the ring-first drain would deliver B before A. With it, every
+//! packet a producer sends after its first spill lands behind that spill
+//! entry, and the consumer's ring-then-spill drain replays each
+//! producer's packets in send order. Spills are counted by the scheduler
+//! (`ProfileCounters::ring_full_spills`) but are correctness-neutral.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, ignoring poison: a panicking worker must not cascade
+/// opaque `PoisonError` panics through its peers — the scheduler routes
+/// the *first* failure through its `failed` slot and peers drain cleanly.
+/// The guarded data here (spill vectors, rank slots, the park lock) stays
+/// structurally valid across a payload panic, so continuing is sound.
+pub(crate) fn lock_clean<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Number of in-ring slots per mailbox. Small on purpose: a task drains
+/// its whole mailbox every quantum, so the ring only has to absorb the
+/// burst between two activations; rare overflow is handled (and counted)
+/// by the spill path.
+pub const RING_CAPACITY: usize = 32;
+
+struct Slot<T> {
+    /// Turn tag (see module docs). Producers and the consumer synchronize
+    /// exclusively through this field's acquire/release pairs.
+    seq: AtomicU64,
+    val: UnsafeCell<Option<T>>,
+}
+
+/// A bounded multi-producer single-consumer ring with a sticky overflow
+/// spill. `T` is the packet type; the scheduler instantiates it with its
+/// crate-private `Packet` tuple.
+pub struct MpscRing<T> {
+    slots: Box<[Slot<T>]>,
+    mask: u64,
+    /// Next slot producers claim.
+    tail: AtomicU64,
+    /// Next slot the consumer reads (consumer-written only).
+    head: AtomicU64,
+    spill: Mutex<Vec<T>>,
+    /// Cached `spill.len()` so producers can test spill-mode with one
+    /// acquire load instead of taking the spill lock.
+    spill_len: AtomicUsize,
+}
+
+// SAFETY: the UnsafeCell in each slot is accessed only by the thread that
+// owns the slot's current turn (producers after winning the tail CAS and
+// observing `seq == t`; the consumer after observing `seq == h + 1`), and
+// the seq acquire/release edges order those accesses. Values of T move
+// across threads, hence T: Send; no &T is ever shared.
+unsafe impl<T: Send> Send for MpscRing<T> {}
+unsafe impl<T: Send> Sync for MpscRing<T> {}
+
+impl<T> MpscRing<T> {
+    pub fn new() -> Self {
+        Self::with_capacity(RING_CAPACITY)
+    }
+
+    /// `capacity` must be a power of two.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity.is_power_of_two());
+        Self {
+            slots: (0..capacity as u64)
+                .map(|i| Slot { seq: AtomicU64::new(i), val: UnsafeCell::new(None) })
+                .collect(),
+            mask: capacity as u64 - 1,
+            tail: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+            spill: Mutex::new(Vec::new()),
+            spill_len: AtomicUsize::new(0),
+        }
+    }
+
+    /// Producer side: enqueue `val`. Returns `true` if it landed in the
+    /// ring, `false` if it overflowed to the spill vector (the caller
+    /// counts spills; delivery itself never fails).
+    pub fn push(&self, val: T) -> bool {
+        // Sticky spill: while the spill is non-empty, bypass the ring
+        // entirely so per-producer FIFO survives the overflow (see module
+        // docs).
+        if self.spill_len.load(Ordering::Acquire) != 0 {
+            return self.push_spill(val);
+        }
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(tail & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == tail {
+                // Our turn — claim the slot by advancing tail.
+                match self.tail.compare_exchange_weak(
+                    tail,
+                    tail + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS while seq == tail grants
+                        // exclusive write access to this slot (see Sync
+                        // impl note).
+                        unsafe { *slot.val.get() = Some(val) };
+                        slot.seq.store(tail + 1, Ordering::Release);
+                        return true;
+                    }
+                    Err(t) => tail = t,
+                }
+            } else if seq < tail {
+                // Slot still holds an unconsumed value from a full lap:
+                // the ring is full.
+                return self.push_spill(val);
+            } else {
+                // Another producer advanced tail under us; re-read.
+                tail = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn push_spill(&self, val: T) -> bool {
+        let mut spill = lock_clean(&self.spill);
+        spill.push(val);
+        // Release-publish the new length *under the lock* so a producer
+        // seeing spill_len == 0 knows the spill is truly empty.
+        self.spill_len.store(spill.len(), Ordering::Release);
+        false
+    }
+
+    /// Consumer side: pop one value (ring first, then spill FIFO). Only
+    /// the single consumer may call this.
+    fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head & self.mask) as usize];
+        if slot.seq.load(Ordering::Acquire) == head + 1 {
+            // SAFETY: seq == head + 1 means the producer's release store
+            // published this slot and nobody else touches it until we
+            // recycle it below.
+            let val = unsafe { (*slot.val.get()).take() };
+            // Recycle for the producer one lap ahead.
+            slot.seq.store(head + self.mask + 1, Ordering::Release);
+            self.head.store(head + 1, Ordering::Relaxed);
+            debug_assert!(val.is_some(), "published ring slot held no value");
+            return val;
+        }
+        // Ring empty — drain the spill (FIFO) if any.
+        if self.spill_len.load(Ordering::Acquire) != 0 {
+            let mut spill = lock_clean(&self.spill);
+            if spill.is_empty() {
+                return None;
+            }
+            let val = spill.remove(0);
+            self.spill_len.store(spill.len(), Ordering::Release);
+            return Some(val);
+        }
+        None
+    }
+
+    /// Consumer side: move up to `quota` values into `out`, ring first,
+    /// then spill, preserving per-producer FIFO.
+    pub fn drain_into(&self, out: &mut Vec<T>, quota: usize) {
+        for _ in 0..quota {
+            match self.pop() {
+                Some(v) => out.push(v),
+                None => return,
+            }
+        }
+    }
+
+    /// Racy size hint: how many values are waiting right now. Used to set
+    /// drain quotas and by the fuzz leftover guard; never for termination
+    /// decisions (the scheduler's `pending`/`in_flight` counters own
+    /// those).
+    pub fn approx_len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        tail.saturating_sub(head) as usize + self.spill_len.load(Ordering::Acquire)
+    }
+
+    /// Racy non-emptiness hint (see [`approx_len`](Self::approx_len)).
+    pub fn has_pending(&self) -> bool {
+        self.approx_len() > 0
+    }
+}
+
+impl<T> Default for MpscRing<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_producer_fifo_through_ring() {
+        let r = MpscRing::with_capacity(8);
+        for i in 0..5u32 {
+            assert!(r.push(i), "ring has room");
+        }
+        assert_eq!(r.approx_len(), 5);
+        let mut out = Vec::new();
+        r.drain_into(&mut out, usize::MAX.min(1 << 20));
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert!(!r.has_pending());
+    }
+
+    /// Full-ring spill correctness: overflow past capacity spills (push
+    /// returns false), the spill is sticky, and the drain replays
+    /// everything exactly once in producer order.
+    #[test]
+    fn full_ring_spills_and_drains_in_order() {
+        let r = MpscRing::with_capacity(4);
+        let mut spilled = 0;
+        for i in 0..10u32 {
+            if !r.push(i) {
+                spilled += 1;
+            }
+        }
+        assert_eq!(spilled, 6, "pushes past capacity must spill");
+        assert_eq!(r.approx_len(), 10);
+        // Sticky: even after partial drains free ring slots, new pushes
+        // keep spilling until the spill is empty.
+        let mut out = Vec::new();
+        r.drain_into(&mut out, 2);
+        assert!(!r.push(10), "spill is sticky while non-empty");
+        r.drain_into(&mut out, 64);
+        assert_eq!(out, (0..=10).collect::<Vec<u32>>());
+        // Spill drained — the ring path is live again.
+        assert!(r.push(11));
+        assert_eq!(r.approx_len(), 1);
+    }
+
+    /// Per-producer FIFO across real threads: each producer's values must
+    /// come out in its own send order even under contention and spills.
+    #[test]
+    fn concurrent_producers_keep_per_producer_fifo() {
+        const PRODUCERS: u64 = 4;
+        const PER: u64 = 5_000;
+        let r = Arc::new(MpscRing::with_capacity(8));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        r.push(p * PER + i);
+                    }
+                })
+            })
+            .collect();
+        // Consumer drains concurrently (single consumer = this thread).
+        let mut got: Vec<u64> = Vec::with_capacity((PRODUCERS * PER) as usize);
+        let mut scratch = Vec::new();
+        while got.len() < (PRODUCERS * PER) as usize {
+            scratch.clear();
+            r.drain_into(&mut scratch, 64);
+            if scratch.is_empty() {
+                std::thread::yield_now();
+            }
+            got.extend_from_slice(&scratch);
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        assert!(!r.has_pending(), "everything delivered");
+        // Check per-producer monotonicity and exactly-once delivery.
+        let mut next = vec![0u64; PRODUCERS as usize];
+        for v in got {
+            let p = (v / PER) as usize;
+            assert_eq!(v % PER, next[p], "producer {p} out of order");
+            next[p] += 1;
+        }
+        assert!(next.iter().all(|&n| n == PER), "some values lost");
+    }
+
+    #[test]
+    fn lock_clean_recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_clean(&m), 7, "data survives the poisoned lock");
+    }
+}

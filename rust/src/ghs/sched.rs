@@ -10,65 +10,97 @@
 //!
 //! * **Mailboxes** — each task owns its PR 3 slot-arena queues
 //!   ([`crate::ghs::queues::RankQueues`]); cross-rank traffic travels as
-//!   encoded packet buffers through a small per-task inbox and is
-//!   batch-decoded straight into queue slots on the next activation.
-//! * **Run queue** — a central ready list of task ids. A worker pops a
-//!   task, runs a bounded quantum of [`RankState::step`] calls, delivers
-//!   whatever the task flushed, and either re-queues it (still `Ready`)
-//!   or deschedules it (`Blocked` at a silence point).
+//!   encoded packet buffers through a bounded per-task MPSC ring
+//!   ([`crate::ghs::ring::MpscRing`]) and is batch-decoded straight into
+//!   queue slots on the next activation. The consumer path is one acquire
+//!   load plus a sequence-tag scan — no mailbox lock on the hot path;
+//!   overflow goes to a counted, correctness-neutral spill vector.
+//! * **Run queues** — one Chase–Lev work-stealing deque per worker
+//!   ([`crate::ghs::deque::WorkDeque`]). A worker pops its own deque LIFO
+//!   (the task it just woke is cache-hot), and when empty steals FIFO
+//!   from the other workers' deques (oldest task first). There is no
+//!   central ready list and no run-queue lock: at 64+ workers the old
+//!   `Condvar`-guarded `VecDeque` was the contention point ROADMAP item 2
+//!   flags. Initial seeding places every task on worker 0's deque, so a
+//!   multi-worker pool *must* steal to get started — `steals > 0` is a
+//!   deterministic property of any parallel run, not a race outcome.
 //! * **Wake protocol** — delivering a packet wakes the destination task:
-//!   `Idle → Ready` (push onto the run queue), `Running → Woken` (the
-//!   running worker re-queues it instead of idling it, closing the race
-//!   where traffic lands between a task's last inbox drain and its
-//!   block). Inside a rank, `RankQueues::note_done` remains the
-//!   queue-level wake: new traffic re-arms the postponed stashes.
+//!   `Idle → Ready` (push onto the waking worker's own deque), `Running →
+//!   Woken` (the running worker re-queues it instead of idling it,
+//!   closing the race where traffic lands between a task's last inbox
+//!   drain and its block). Inside a rank, `RankQueues::note_done` remains
+//!   the queue-level wake: new traffic re-arms the postponed stashes.
 //! * **Termination** — the shared pending-message counter of the threaded
 //!   engine (enqueue +1, processing-without-postponement −1, one startup
-//!   token per rank). The worker that observes zero declares global
-//!   silence. A state where messages are pending but no task is runnable
-//!   and no worker is active is reported as a deadlock instead of
-//!   hanging.
+//!   token per rank) decides *silence*; a second counter, `in_flight`,
+//!   decides *quiescence*. `in_flight` counts non-`IDLE` tasks plus
+//!   in-progress wakes (a waker increments it before touching the task
+//!   state and rolls back unless it performed `Idle → Ready`), and a task
+//!   leaves the count only on its `Running → Idle` transition. Because
+//!   packet delivery happens only inside a `RUNNING` quantum,
+//!   `in_flight == 0` is a *stable* observation: every task is idle and
+//!   no wake can be mid-flight, so a worker reading it may safely consult
+//!   `pending` — zero means global silence, non-zero is reported as a
+//!   structured deadlock (with per-rank stranded-message detail from
+//!   [`RankState::stranded_report`]) instead of hanging the pool. Ring
+//!   spills never touch either counter, so the exact silence accounting
+//!   survives mailbox overflow.
 //!
 //! Scheduling is nondeterministic (like the threaded engine) but the
 //! result is the unique MSF — the conformance matrix gates this engine
 //! against the Kruskal oracle cell-for-cell. To widen the schedule space
 //! those cells explore, `GhsConfig::fuzz_sched` (env `GHS_FUZZ_SCHED`)
-//! seeds a perturbation of the two scheduling choices OS timing alone
-//! rarely varies: which ready task a worker pops (random ready-list
-//! index instead of FIFO) and how much of a mailbox one activation
-//! drains (a random prefix, the tail re-queued). The fuzz cells in
-//! `tests/scheduler.rs` / `tests/conformance.rs` run several seeds and
-//! assert the forest never changes.
+//! seeds per-worker perturbations of the scheduling choices OS timing
+//! alone rarely varies: steal victim order (a seeded shuffle instead of
+//! the ring rotation), a steal-before-own-pop coin, and how much of a
+//! mailbox one activation drains (a random prefix, the tail re-queued).
+//! The fuzz cells in `tests/scheduler.rs` / `tests/conformance.rs` run
+//! several seeds and assert the forest never changes. **Deterministic
+//! replay mode** is `workers = 1` plus a fuzz seed: a single pool thread
+//! makes every scheduling choice a pure function of the seed, so entire
+//! counter profiles reproduce bit-for-bit (asserted by
+//! `deterministic_mode_reproduces_identical_counters`). With more than
+//! one worker the *forest* is still invariant but counter values are
+//! schedule-dependent.
+//!
+//! A worker that panics inside a task quantum no longer poisons the pool:
+//! the panic is caught at the worker boundary, routed through the shared
+//! `failed` slot as a structured error, and every lock the peers share is
+//! taken poison-tolerantly ([`crate::ghs::ring::lock_clean`]), so the
+//! first failure surfaces instead of a cascade of opaque `PoisonError`
+//! panics.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::ghs::config::GhsConfig;
+use crate::ghs::deque::{Steal, WorkDeque};
 use crate::ghs::engine::prepare_run;
 use crate::ghs::parallel::{collect, Packet};
 use crate::ghs::rank::{RankState, StepStatus};
 use crate::ghs::result::GhsRun;
+use crate::ghs::ring::{lock_clean, MpscRing};
 use crate::graph::EdgeList;
 use crate::util::prng::Xoshiro256;
 
-/// Steps one activation may run before the task is rotated to the back of
-/// the run queue (fairness) — enough to cover several flush cadences
+/// Steps one activation may run before the task is rotated back onto its
+/// worker's deque (fairness) — enough to cover several flush cadences
 /// without letting one hot rank starve thousands of peers.
 const SCHED_QUANTUM: u32 = 16;
 
-/// Fallback poll interval for workers parked on an empty run queue. Every
-/// state change notifies the condvar, so this only bounds the cost of a
-/// hypothetical lost wakeup.
+/// Fallback poll interval for workers parked with nothing to run or
+/// steal. Every push notifies a sleeper, so this only bounds the cost of
+/// the residual lost-wakeup window (a push landing between a parker's
+/// last deque scan and its wait).
 const IDLE_WAIT: Duration = Duration::from_millis(5);
 
 // Task scheduling states (one `AtomicU8` per task).
 /// Descheduled at a silence point; a wake makes it `READY`.
 const IDLE: u8 = 0;
-/// On the run queue (or just popped, about to run).
+/// On some worker's deque (or just popped, about to run).
 const READY: u8 = 1;
 /// A worker is inside the task's quantum.
 const RUNNING: u8 = 2;
@@ -79,8 +111,9 @@ const WOKEN: u8 = 3;
 /// [`RankState`] lives in [`Sched::slots`] and is only accessed by the
 /// worker currently running the task).
 struct TaskShared {
-    /// Encoded packets awaiting decode: `(src, bytes, n_msgs)`.
-    inbox: Mutex<Vec<Packet>>,
+    /// Encoded packets awaiting decode: `(src, bytes, n_msgs)`. Bounded
+    /// MPSC ring; the single consumer is whichever worker runs the task.
+    inbox: MpscRing<Packet>,
     /// IDLE / READY / RUNNING / WOKEN.
     state: AtomicU8,
     /// Arrival-triggered wakeups of this task (IDLE→READY and
@@ -89,51 +122,106 @@ struct TaskShared {
     wakeups: AtomicU64,
 }
 
-/// Run-queue interior: the deque plus the count of workers currently
-/// inside a task quantum (for deadlock detection — see [`Sched::retire`]).
-struct ReadyList {
-    queue: VecDeque<u32>,
-    active_workers: usize,
-}
-
 /// Scheduler shared state (one per run, `Arc`-shared across workers).
 struct Sched {
     tasks: Vec<TaskShared>,
     /// The rank automata; `None` only transiently (never observed, since a
-    /// task is on the run queue at most once and only its runner locks the
+    /// task is runnable on at most one deque and only its runner locks the
     /// slot) and after final collection.
     slots: Vec<Mutex<Option<RankState>>>,
-    ready: Mutex<ReadyList>,
+    /// One work-stealing deque per worker; index = worker id.
+    deques: Vec<WorkDeque>,
+    /// Park lock + condvar for workers with nothing to run or steal.
+    idle: Mutex<()>,
     cv: Condvar,
+    /// Workers currently parked (or about to park) on `cv`; pushers skip
+    /// the notify syscall when it is zero.
+    sleepers: AtomicUsize,
     /// Shared silence counter (see module docs).
     pending: AtomicI64,
+    /// Quiescence counter: non-IDLE tasks + in-progress wakes (see module
+    /// docs). Zero is a stable "nothing can ever run again" observation.
+    in_flight: AtomicI64,
     /// Set on global silence, error, or deadlock: workers exit.
     done: AtomicBool,
-    /// First error raised by any worker (task step failure or deadlock).
+    /// First error raised by any worker (task step failure, worker panic,
+    /// or deadlock). Later failures are dropped — the first is the cause.
     failed: Mutex<Option<anyhow::Error>>,
-    /// High-water mark of the run-queue length.
+    /// High-water mark of `in_flight` (the live-task peak; may transiently
+    /// overcount by wakes still in their CAS loop).
     ready_max: AtomicU64,
-    /// Seeded schedule perturbation (`GhsConfig::fuzz_sched`): randomizes
-    /// ready-list pop order and mailbox drain batching. `None` in normal
-    /// runs.
-    fuzz: Option<Mutex<Xoshiro256>>,
+    /// Tasks taken from another worker's deque (pool-wide).
+    steals: AtomicU64,
+    /// Steal probes that found the victim's deque empty (pool-wide).
+    steal_fails: AtomicU64,
+    /// Packet deliveries that overflowed a task's mailbox ring into its
+    /// spill vector (pool-wide).
+    ring_full_spills: AtomicU64,
+    /// Seed for the per-worker schedule-perturbation PRNGs
+    /// (`GhsConfig::fuzz_sched`). `None` in normal runs.
+    fuzz_seed: Option<u64>,
+}
+
+/// Per-worker scheduling state: the worker id (= its deque index), local
+/// counter accumulators (flushed to the shared atomics once at exit, so
+/// the hot path never touches contended cache lines), the seeded fuzz
+/// PRNG, and a scratch victim-order buffer.
+struct WorkerCtx {
+    w: usize,
+    steals: u64,
+    steal_fails: u64,
+    ring_spills: u64,
+    fuzz: Option<Xoshiro256>,
+    victims: Vec<usize>,
+}
+
+impl WorkerCtx {
+    fn new(w: usize, fuzz_seed: Option<u64>) -> Self {
+        Self {
+            w,
+            steals: 0,
+            steal_fails: 0,
+            ring_spills: 0,
+            // Decorrelate the per-worker streams with a golden-ratio
+            // stride, so every worker perturbs independently but
+            // reproducibly from the one run seed.
+            fuzz: fuzz_seed.map(|seed| {
+                Xoshiro256::seed_from_u64(
+                    seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(w as u64 + 1)),
+                )
+            }),
+            victims: Vec::new(),
+        }
+    }
+
+    /// How many of `len` pending mailbox packets one activation decodes:
+    /// all of them normally, a random non-empty prefix under fuzzing
+    /// (always at least one, so a re-queued task is guaranteed progress).
+    fn drain_quota(&mut self, len: usize) -> usize {
+        if len > 1 {
+            if let Some(rng) = &mut self.fuzz {
+                return 1 + rng.next_index(len);
+            }
+        }
+        len
+    }
 }
 
 impl Sched {
-    /// Push a task onto the run queue (its state must already be `READY`)
-    /// and wake one parked worker.
-    fn enqueue(&self, task: u32) {
-        let mut r = self.ready.lock().unwrap();
-        r.queue.push_back(task);
-        let len = r.queue.len() as u64;
-        drop(r);
-        self.ready_max.fetch_max(len, Ordering::Relaxed);
-        self.cv.notify_one();
+    /// Push a `READY` task onto worker `w`'s own deque and wake a sleeper.
+    fn push_ready(&self, task: u32, w: usize) {
+        self.deques[w].push(task);
+        self.unpark_one();
     }
 
-    /// Wake `task` because traffic arrived in its inbox.
-    fn wake(&self, task: u32) {
+    /// Wake `task` because traffic arrived in its inbox. `w` is the waking
+    /// worker (the only thread allowed to push onto `deques[w]`).
+    fn wake(&self, task: u32, w: usize) {
         let t = &self.tasks[task as usize];
+        // Count this wake as in-flight *before* touching the task state:
+        // a concurrent quiescence check must never observe `in_flight == 0`
+        // while a wake could still make a task runnable.
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
         loop {
             match t.state.load(Ordering::SeqCst) {
                 IDLE => {
@@ -142,7 +230,10 @@ impl Sched {
                         .is_ok()
                     {
                         t.wakeups.fetch_add(1, Ordering::Relaxed);
-                        self.enqueue(task);
+                        self.ready_max
+                            .fetch_max(self.in_flight.load(Ordering::SeqCst) as u64, Ordering::Relaxed);
+                        self.push_ready(task, w);
+                        // The task went IDLE → non-IDLE: keep the +1.
                         return;
                     }
                 }
@@ -152,150 +243,220 @@ impl Sched {
                         .is_ok()
                     {
                         t.wakeups.fetch_add(1, Ordering::Relaxed);
-                        return;
+                        break;
                     }
                 }
                 // READY: already queued (or about to run and will drain the
                 // inbox after its RUNNING store). WOKEN: re-queue already
                 // guaranteed.
-                _ => return,
+                _ => break,
             }
         }
+        // The task was already non-IDLE (already counted): roll back.
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Flag global completion and release every parked worker.
     fn finish(&self) {
         self.done.store(true, Ordering::SeqCst);
+        let _g = lock_clean(&self.idle);
         self.cv.notify_all();
     }
 
     /// Record the first failure and stop the scheduler.
     fn fail(&self, e: anyhow::Error) {
-        let mut f = self.failed.lock().unwrap();
+        let mut f = lock_clean(&self.failed);
         f.get_or_insert(e);
         drop(f);
         self.finish();
     }
 
-    /// Pop the next runnable task id: FIFO normally, a seeded random
-    /// ready-list index under schedule fuzzing (the perturbation the fuzz
-    /// conformance cells rely on).
-    fn pop_ready(&self, queue: &mut VecDeque<u32>) -> Option<u32> {
-        if queue.len() > 1 {
-            if let Some(f) = &self.fuzz {
-                let idx = f.lock().unwrap().next_index(queue.len());
-                return queue.swap_remove_front(idx);
-            }
+    /// Wake one parked worker, if any. Taking the park lock around the
+    /// notify orders it against a parker's deque re-scan (which happens
+    /// under the same lock), so the notify cannot slip into the gap
+    /// between scan and wait.
+    fn unpark_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = lock_clean(&self.idle);
+            self.cv.notify_one();
         }
-        queue.pop_front()
     }
 
-    /// How many of `len` pending mailbox packets one activation decodes:
-    /// all of them normally, a random non-empty prefix under fuzzing
-    /// (always at least one, so a re-queued task is guaranteed progress).
-    fn drain_quota(&self, len: usize) -> usize {
-        if len > 1 {
-            if let Some(f) = &self.fuzz {
-                return 1 + f.lock().unwrap().next_index(len);
-            }
+    /// Park until a push (or completion) likely made work available. The
+    /// bounded wait backstops the residual window between a pusher's
+    /// `sleepers` read and this worker's increment.
+    fn park(&self) {
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let guard = lock_clean(&self.idle);
+        if !self.done.load(Ordering::SeqCst) && self.deques.iter().all(|d| d.is_empty()) {
+            let _ = self
+                .cv
+                .wait_timeout(guard, IDLE_WAIT)
+                .unwrap_or_else(PoisonError::into_inner);
         }
-        len
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Block until a task is runnable; `None` means the run is over.
-    /// Increments the active-worker count under the run-queue lock, so
-    /// "queue empty and nobody active" is an atomic observation.
-    fn next_ready(&self) -> Option<u32> {
-        let mut r = self.ready.lock().unwrap();
+    /// Steal one task from another worker's deque. Victim order is a ring
+    /// rotation starting after `ctx.w` normally, a seeded shuffle under
+    /// fuzzing (the steal-order perturbation the fuzz conformance cells
+    /// rely on). `Retry` results are looped — only a genuine `Empty`
+    /// counts as a failed probe.
+    fn try_steal(&self, ctx: &mut WorkerCtx) -> Option<u32> {
+        let n = self.deques.len();
+        if n <= 1 {
+            return None;
+        }
+        ctx.victims.clear();
+        ctx.victims.extend((1..n).map(|i| (ctx.w + i) % n));
+        if let Some(rng) = &mut ctx.fuzz {
+            // Fisher–Yates off the worker's seeded stream.
+            for i in (1..ctx.victims.len()).rev() {
+                let j = rng.next_index(i + 1);
+                ctx.victims.swap(i, j);
+            }
+        }
+        for i in 0..ctx.victims.len() {
+            let v = ctx.victims[i];
+            loop {
+                match self.deques[v].steal() {
+                    Steal::Success(task) => {
+                        ctx.steals += 1;
+                        return Some(task);
+                    }
+                    Steal::Retry => continue,
+                    Steal::Empty => {
+                        ctx.steal_fails += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Obtain the next runnable task: own deque (LIFO), then steal (FIFO
+    /// from victims). `None` means the run is over — global silence, a
+    /// peer's failure, or a detected deadlock.
+    fn acquire(&self, ctx: &mut WorkerCtx) -> Option<u32> {
         loop {
             if self.done.load(Ordering::SeqCst) {
                 return None;
             }
-            if let Some(task) = self.pop_ready(&mut r.queue) {
-                r.active_workers += 1;
+            // Fuzz-only coin: occasionally probe victims before the own
+            // deque, surfacing orderings plain LIFO-then-steal never hits.
+            let steal_first = match &mut ctx.fuzz {
+                Some(rng) if self.deques.len() > 1 => rng.next_index(4) == 0,
+                _ => false,
+            };
+            if !steal_first {
+                if let Some(task) = self.deques[ctx.w].pop() {
+                    return Some(task);
+                }
+            }
+            if let Some(task) = self.try_steal(ctx) {
                 return Some(task);
             }
+            if steal_first {
+                if let Some(task) = self.deques[ctx.w].pop() {
+                    return Some(task);
+                }
+            }
+            // Nothing runnable anywhere we looked. `in_flight == 0` is
+            // stable (see module docs), so it cleanly splits "finished"
+            // from "deadlocked"; otherwise a task may still be running or
+            // a wake in flight — re-check `pending` and park.
+            if self.in_flight.load(Ordering::SeqCst) == 0 {
+                let pending = self.pending.load(Ordering::SeqCst);
+                if pending == 0 {
+                    self.finish();
+                } else {
+                    self.fail(deadlock_report(pending, &self.slots));
+                }
+                return None;
+            }
             if self.pending.load(Ordering::SeqCst) == 0 {
-                drop(r);
                 self.finish();
                 return None;
             }
-            let (guard, _) = self.cv.wait_timeout(r, IDLE_WAIT).unwrap();
-            r = guard;
-        }
-    }
-
-    /// A worker finished one activation. With the run-queue lock held:
-    /// leave the active set, and if nothing is runnable, nobody else is
-    /// active, and messages are still pending, no future event can create
-    /// work — report the deadlock instead of letting the pool hang.
-    fn retire(&self) {
-        let mut r = self.ready.lock().unwrap();
-        r.active_workers -= 1;
-        let stuck = r.active_workers == 0 && r.queue.is_empty();
-        drop(r);
-        if !stuck || self.done.load(Ordering::SeqCst) {
-            return;
-        }
-        let pending = self.pending.load(Ordering::SeqCst);
-        if pending == 0 {
-            self.finish();
-        } else {
-            self.fail(anyhow!(
-                "scheduler deadlock: {pending} messages pending but every task is blocked \
-                 (postponed messages that no future traffic can unblock)"
-            ));
+            self.park();
         }
     }
 }
 
-/// Releases the pool when a worker unwinds: a panic inside a task quantum
-/// (an invariant `expect`, an index panic in the automaton) would
-/// otherwise leave `done` unset and `active_workers` inflated — the other
-/// workers would poll forever and `run_async` would hang in `join`
-/// instead of re-raising the panic.
-struct PanicReleaseGuard<'a>(&'a Sched);
-
-impl Drop for PanicReleaseGuard<'_> {
-    fn drop(&mut self) {
-        if std::thread::panicking() {
-            self.0.finish();
+/// Build the structured deadlock error: the silence-counter headline plus
+/// per-rank stranded-work detail (active / stashed / unflushed counts) for
+/// up to eight offending ranks. Free function so the report is unit-
+/// testable without standing up a pool; called only at quiescence
+/// (`in_flight == 0`), when no slot lock is held.
+fn deadlock_report(pending: i64, slots: &[Mutex<Option<RankState>>]) -> anyhow::Error {
+    let mut detail = String::new();
+    let mut shown = 0;
+    for (i, slot) in slots.iter().enumerate() {
+        if shown >= 8 {
+            detail.push_str("\n  ...");
+            break;
         }
+        if let Some(report) = lock_clean(slot).as_ref().and_then(RankState::stranded_report) {
+            detail.push_str(&format!("\n  rank {i}: {report}"));
+            shown += 1;
+        }
+    }
+    anyhow!(
+        "scheduler deadlock: {pending} messages pending but every task is blocked \
+         (postponed messages that no future traffic can unblock){detail}"
+    )
+}
+
+/// One pool worker: the panic boundary around [`run_worker`]. A payload
+/// panic (an invariant `expect`, an index panic in the automaton) is
+/// caught here and routed through the shared `failed` slot, so peers see
+/// one structured error instead of a poisoned-mutex cascade; the local
+/// counters are flushed either way.
+fn worker(s: &Sched, w: usize) {
+    let mut ctx = WorkerCtx::new(w, s.fuzz_seed);
+    let outcome =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_worker(s, &mut ctx)));
+    s.steals.fetch_add(ctx.steals, Ordering::Relaxed);
+    s.steal_fails.fetch_add(ctx.steal_fails, Ordering::Relaxed);
+    s.ring_full_spills.fetch_add(ctx.ring_spills, Ordering::Relaxed);
+    if let Err(payload) = outcome {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|m| m.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        s.fail(anyhow!("worker {w} panicked inside a task quantum: {msg}"));
     }
 }
 
-/// One pool worker: pop tasks off the run queue and drive their automata
-/// until global silence (or failure).
-fn worker(s: &Sched) {
-    let _release_on_panic = PanicReleaseGuard(s);
+/// Worker main loop: acquire tasks and drive their automata until global
+/// silence (or failure).
+fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
     // Reused scratch: drained inbox packets and their spent buffers.
     let mut drained: Vec<Packet> = Vec::new();
     let mut spent: Vec<Vec<u8>> = Vec::new();
-    while let Some(task) = s.next_ready() {
+    while let Some(task) = s.acquire(ctx) {
         let t = &s.tasks[task as usize];
         t.state.store(RUNNING, Ordering::SeqCst);
-        let mut slot = s.slots[task as usize].lock().unwrap();
+        let mut slot = lock_clean(&s.slots[task as usize]);
         let rank = slot.as_mut().expect("task state owned by the run queue");
         // Spontaneous start on the task's first activation (every task is
-        // seeded onto the initial run queue exactly once).
+        // seeded onto worker 0's deque exactly once).
         if rank.prof.iterations == 0 {
             rank.start(&s.pending);
         }
         rank.prof.steps += 1;
         let mut status = StepStatus::Ready;
         'quantum: for _ in 0..SCHED_QUANTUM {
-            // read_msgs: batch-decode the mailbox straight into the
+            // read_msgs: batch-decode the mailbox ring straight into the
             // task's slot-arena queues, then recycle the packet buffers
-            // through the shared pool under a single lock. Under schedule
-            // fuzzing only a random prefix is decoded; the tail goes back
-            // into the (still locked) mailbox, so later arrivals keep
-            // their per-peer FIFO order behind it.
-            {
-                let mut inbox = t.inbox.lock().unwrap();
-                std::mem::swap(&mut *inbox, &mut drained);
-                let quota = s.drain_quota(drained.len());
-                inbox.extend(drained.drain(quota..));
-            }
+            // through the shared pool under a single lock. The quota is a
+            // length snapshot (packets landing mid-drain wait one loop
+            // iteration); under schedule fuzzing it shrinks to a random
+            // prefix, the tail staying queued in per-producer FIFO order.
+            let quota = ctx.drain_quota(t.inbox.approx_len());
+            t.inbox.drain_into(&mut drained, quota);
             for (_src, buf, _n) in drained.drain(..) {
                 rank.read_buffer(&buf);
                 spent.push(buf);
@@ -308,15 +469,19 @@ fn worker(s: &Sched) {
                 Err(e) => {
                     drop(slot);
                     s.fail(e);
-                    s.retire();
                     return;
                 }
             };
-            // Deliver flushed packets and wake their destinations.
+            // Deliver flushed packets and wake their destinations. A full
+            // ring spills (counted, correctness-neutral); `pending` was
+            // already credited at send time, so the silence accounting
+            // never notices the detour.
             for (dst, buf, n) in rank.flushed.drain(..) {
                 let peer = &s.tasks[dst as usize];
-                peer.inbox.lock().unwrap().push((rank.rank, buf, n));
-                s.wake(dst);
+                if !peer.inbox.push((rank.rank, buf, n)) {
+                    ctx.ring_spills += 1;
+                }
+                s.wake(dst, ctx.w);
             }
             if status == StepStatus::Blocked || s.done.load(Ordering::SeqCst) {
                 break 'quantum;
@@ -330,32 +495,35 @@ fn worker(s: &Sched) {
         match status {
             StepStatus::Ready => {
                 t.state.store(READY, Ordering::SeqCst);
-                s.enqueue(task);
+                s.push_ready(task, ctx.w);
             }
             StepStatus::Blocked => {
-                // A fuzzed partial drain can leave packets we ourselves
-                // returned to the mailbox — their delivery wake already
-                // fired, so nobody else will requeue the task. Never idle
-                // on a non-empty mailbox.
-                let leftover = s.fuzz.is_some() && !t.inbox.lock().unwrap().is_empty();
-                if leftover {
+                // A fuzzed partial drain — or a packet that slipped in
+                // after this quantum's last snapshot while the state was
+                // still READY — can leave the ring non-empty with its
+                // delivery wake already fired, so nobody else will requeue
+                // the task. Never idle on a non-empty mailbox.
+                if t.inbox.has_pending() {
                     t.state.store(READY, Ordering::SeqCst);
-                    s.enqueue(task);
-                } else if t.state
+                    s.push_ready(task, ctx.w);
+                } else if t
+                    .state
                     .compare_exchange(RUNNING, IDLE, Ordering::SeqCst, Ordering::SeqCst)
-                    .is_err()
+                    .is_ok()
                 {
+                    // The only transition that leaves the in-flight set.
+                    s.in_flight.fetch_sub(1, Ordering::SeqCst);
+                } else {
                     // Woken mid-quantum (traffic after our last drain):
                     // requeue rather than strand the arrival.
                     t.state.store(READY, Ordering::SeqCst);
-                    s.enqueue(task);
+                    s.push_ready(task, ctx.w);
                 }
             }
         }
         if s.pending.load(Ordering::SeqCst) == 0 {
             s.finish();
         }
-        s.retire();
     }
 }
 
@@ -374,7 +542,7 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
         rank.pool = Arc::clone(&pool);
         slots.push(Mutex::new(Some(rank)));
         tasks.push(TaskShared {
-            inbox: Mutex::new(Vec::new()),
+            inbox: MpscRing::new(),
             state: AtomicU8::new(READY),
             wakeups: AtomicU64::new(0),
         });
@@ -382,46 +550,63 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     let sched = Arc::new(Sched {
         tasks,
         slots,
-        ready: Mutex::new(ReadyList {
-            queue: (0..p as u32).collect(),
-            active_workers: 0,
-        }),
+        // Each deque must hold every task at once (they all start READY on
+        // worker 0, and wake patterns can herd them onto any one deque).
+        deques: (0..workers).map(|_| WorkDeque::new(p)).collect(),
+        idle: Mutex::new(()),
         cv: Condvar::new(),
+        sleepers: AtomicUsize::new(0),
         // One startup token per rank: the counter cannot reach zero before
         // every task has injected its spontaneous wakeup.
         pending: AtomicI64::new(p as i64),
+        // Every task starts READY, so all p are in flight.
+        in_flight: AtomicI64::new(p as i64),
         done: AtomicBool::new(false),
         failed: Mutex::new(None),
         ready_max: AtomicU64::new(p as u64),
-        fuzz: config.fuzz_sched.map(|seed| Mutex::new(Xoshiro256::seed_from_u64(seed))),
+        steals: AtomicU64::new(0),
+        steal_fails: AtomicU64::new(0),
+        ring_full_spills: AtomicU64::new(0),
+        fuzz_seed: config.fuzz_sched,
     });
+    // Seed every task onto worker 0's deque (single-threaded here, before
+    // the pool exists, so the owner-only push contract holds). Workers
+    // 1..W start empty-handed and must steal — the acceptance criterion
+    // `steals > 0` on any multi-worker run falls out of the seeding.
+    for task in 0..p as u32 {
+        sched.deques[0].push(task);
+    }
 
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..workers)
-        .map(|_| {
+        .map(|w| {
             let s = Arc::clone(&sched);
-            std::thread::spawn(move || worker(&s))
+            std::thread::spawn(move || worker(&s, w))
         })
         .collect();
     for h in handles {
         if let Err(e) = h.join() {
+            // Backstop only: payload panics are caught inside `worker`.
             std::panic::resume_unwind(e);
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    if let Some(e) = sched.failed.lock().unwrap().take() {
+    if let Some(e) = lock_clean(&sched.failed).take() {
         return Err(e);
     }
 
     let mut ranks = Vec::with_capacity(p);
     for (i, slot) in sched.slots.iter().enumerate() {
-        let mut rank = slot.lock().unwrap().take().expect("worker pool exited");
+        let mut rank = lock_clean(slot).take().expect("worker pool exited");
         rank.prof.wakeups = sched.tasks[i].wakeups.load(Ordering::Relaxed);
         ranks.push(rank);
     }
     let mut run = collect(ranks, g.n_vertices, wall, partition_stats)?;
-    // A whole-run property, not a per-rank sum (merge() takes the max).
+    // Whole-run properties, not per-rank sums.
     run.profile.ready_max = sched.ready_max.load(Ordering::Relaxed);
+    run.profile.steals = sched.steals.load(Ordering::Relaxed);
+    run.profile.steal_fails = sched.steal_fails.load(Ordering::Relaxed);
+    run.profile.ring_full_spills = sched.ring_full_spills.load(Ordering::Relaxed);
     Ok(run)
 }
 
@@ -483,7 +668,7 @@ mod tests {
         let p = &run.profile;
         assert!(p.steps > 0, "activations recorded");
         assert!(p.wakeups > 0, "blocked tasks woken by message arrival");
-        assert!(p.ready_max >= 2, "initial seeding fills the run queue");
+        assert!(p.ready_max >= 2, "initial seeding fills the run queues");
         assert_eq!(p.parked, 0, "async tasks deschedule, they never park");
         assert!(p.iterations >= p.steps, "a quantum covers >= 1 iteration");
         assert!(
@@ -532,9 +717,9 @@ mod tests {
 
     #[test]
     fn fuzzed_schedules_preserve_the_forest() {
-        // The GHS_FUZZ_SCHED perturbation (random ready-list pops +
-        // partial mailbox drains) must never change the result, and the
-        // silence accounting must stay exact under it.
+        // The GHS_FUZZ_SCHED perturbation (steal-order shuffles, steal-
+        // first coins, partial mailbox drains) must never change the
+        // result, and the silence accounting must stay exact under it.
         let g = generate(GraphFamily::Rmat, 7, 13);
         let (clean, _) = preprocess(&g);
         let oracle = kruskal(&clean).canonical_edges();
@@ -559,5 +744,87 @@ mod tests {
         c.max_supersteps = 1; // absurdly small
         let err = run_async(&clean, c);
         assert!(err.is_err(), "step error must propagate out of the pool");
+    }
+
+    #[test]
+    fn multi_worker_pools_steal_and_count_it() {
+        // All tasks seed onto worker 0's deque, so a multi-worker pool can
+        // only spread load by stealing; the counters must record it.
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(41);
+        let g = structured::path(512, &mut rng);
+        let run = check(&g, 64, 4);
+        let p = &run.profile;
+        assert!(p.steals > 0, "workers 1..4 can only obtain work by stealing");
+        assert!(
+            p.park_wake_invariants(crate::ghs::engine::EngineKind::Async),
+            "steal counters must satisfy the async invariant"
+        );
+    }
+
+    #[test]
+    fn deterministic_mode_reproduces_identical_counters() {
+        // Deterministic replay mode = one worker + a seeded schedule: a
+        // single pool thread makes every scheduling choice (drain quotas,
+        // pop order) a pure function of the seed, so the entire counter
+        // profile must be bit-identical across runs.
+        let g = generate(GraphFamily::Rmat, 7, 21);
+        let (clean, _) = preprocess(&g);
+        let mut fingerprints = Vec::new();
+        for _ in 0..3 {
+            let mut c = cfg(8, 1);
+            c.fuzz_sched = Some(0xD17E_0001);
+            let run = run_async(&clean, c).unwrap();
+            let p = &run.profile;
+            assert_eq!(p.steals, 0, "a single worker has nobody to steal from");
+            assert_eq!(p.steal_fails, 0, "no victims means no failed probes");
+            fingerprints.push((
+                p.steps,
+                p.iterations,
+                p.wakeups,
+                p.ready_max,
+                p.msgs_processed_main,
+                p.msgs_processed_test,
+                p.ring_full_spills,
+                p.flushes,
+                p.bytes_sent,
+                p.stash_merges,
+            ));
+        }
+        assert_eq!(fingerprints[0], fingerprints[1], "deterministic mode diverged");
+        assert_eq!(fingerprints[1], fingerprints[2], "deterministic mode diverged");
+    }
+
+    #[test]
+    fn deadlock_report_names_stranded_ranks() {
+        // The structured report the pool raises instead of hanging (or,
+        // pre-fix, instead of `vertex.rs`'s process-killing expect): build
+        // a rank with a postponed message stranded in its stash and check
+        // the per-rank detail line.
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
+        let g = structured::path(4, &mut rng);
+        let (clean, _) = preprocess(&g);
+        let mut config = cfg(1, 1);
+        let (part, _stats, codec) = prepare_run(&clean, &mut config).unwrap();
+        let mut rank = RankState::new(0, &clean, part, &config, codec);
+        let meta = crate::ghs::message::pack_meta(crate::ghs::message::TAG_TEST, 200, 0);
+        rank.queues.push_raw(0, 1, meta, crate::ghs::weight::EdgeWeight::infinity());
+        let msg = rank
+            .queues
+            .pop_main()
+            .or_else(|| rank.queues.pop_test())
+            .expect("just pushed");
+        rank.queues.postpone(msg);
+        assert!(rank.queues.stash_len() > 0, "message must be stranded in the stash");
+        let report = rank.stranded_report().expect("stranded work must be reported");
+        assert!(report.contains("stashed"), "report lists the stash: {report}");
+
+        let slots = vec![Mutex::new(Some(rank))];
+        let err = deadlock_report(3, &slots);
+        let text = format!("{err}");
+        assert!(
+            text.contains("scheduler deadlock: 3 messages pending"),
+            "headline preserved: {text}"
+        );
+        assert!(text.contains("rank 0:"), "per-rank detail present: {text}");
     }
 }

@@ -22,12 +22,16 @@ pub enum EdgeState {
     Rejected,
 }
 
-/// Fragment level. GHS guarantees level ≤ log2(N); the paper's wire format
-/// allocates 5 bits, i.e. levels up to 31 (graphs up to 2^31 vertices).
+/// Fragment level. GHS guarantees level ≤ log2(N); the wire format
+/// allocates a full 8-bit field, so every `Level` value is representable
+/// on the wire. (The paper's layout reserves 5 bits — enough for its
+/// 2^31-vertex graphs — but the packed header has spare reserved bits,
+/// and a 5-bit field silently corrupted headers at level ≥ 32.)
 pub type Level = u8;
 
-/// Maximum level representable in the paper's 5-bit wire field.
-pub const MAX_WIRE_LEVEL: Level = 31;
+/// Maximum level representable in the packed 8-bit wire field (the whole
+/// `Level` range — truncation is impossible by construction).
+pub const MAX_WIRE_LEVEL: Level = Level::MAX;
 
 #[cfg(test)]
 mod tests {
@@ -41,7 +45,7 @@ mod tests {
 
     #[test]
     fn wire_level_bound() {
-        assert_eq!(MAX_WIRE_LEVEL, 31);
-        assert!((1u64 << 5) > MAX_WIRE_LEVEL as u64);
+        assert_eq!(MAX_WIRE_LEVEL, Level::MAX);
+        assert!((1u64 << 8) > MAX_WIRE_LEVEL as u64, "level fits the 8-bit wire field");
     }
 }

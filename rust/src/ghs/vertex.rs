@@ -135,7 +135,7 @@ impl RankState {
             // merge. j becomes the core of a level L+1 fragment whose
             // identity is the weight of j.
             debug_assert_eq!(self.edge_state[j], EdgeState::Branch, "Connect over Rejected edge");
-            debug_assert!(ln < MAX_WIRE_LEVEL, "fragment level overflows 5-bit wire field");
+            debug_assert!(ln < MAX_WIRE_LEVEL, "fragment level overflows 8-bit wire field");
             let fid: FragmentId = self.edge_weight(v, j);
             self.send(
                 v,
@@ -393,11 +393,16 @@ mod tests {
         // postponed messages re-arm after any completed message.
         let mut guard = 0;
         while r.queues.total_len() > 0 {
-            let msg = r
-                .queues
-                .pop_main()
-                .or_else(|| r.queues.pop_test())
-                .expect("active queues empty but stash stranded (deadlock)");
+            // A stranded stash is a deadlock; report it structurally (the
+            // same per-rank detail the async scheduler's deadlock error
+            // carries) instead of dying on an opaque expect.
+            let msg = match r.queues.pop_main().or_else(|| r.queues.pop_test()) {
+                Some(m) => m,
+                None => panic!(
+                    "active queues empty but stash stranded (deadlock): {}",
+                    r.stranded_report().unwrap_or_else(|| "no stranded work".into())
+                ),
+            };
             if r.handle(msg) == Outcome::Postponed {
                 r.queues.postpone(msg);
             } else {

@@ -3,9 +3,11 @@
 //! Three formats, selectable for the Fig 2 ablation:
 //!
 //! * **Naive** — the base version: a fixed 32-byte struct for every message.
-//! * **Compact + special_id** — packed 16-bit header (3 b type, 5 b level,
-//!   1 b state, 7 b reserved), two 32-bit vertex ids; long messages add the
-//!   64-bit weight and the 64-bit `special_id` → 80 / 208 bits.
+//! * **Compact + special_id** — packed 16-bit header (3 b type, 8 b level,
+//!   1 b state, 4 b reserved; the paper reserves 5 bits for the level, we
+//!   spend three reserved bits to cover the full `Level` range — see
+//!   [`pack_meta`]), two 32-bit vertex ids; long messages add the 64-bit
+//!   weight and the 64-bit `special_id` → 80 / 208 bits.
 //! * **Compact + proc-id** — the paper's final form: after verifying that
 //!   all edge weights within each process are distinct, the 64-bit
 //!   `special_id` is replaced by the 8-bit minimal owning process rank →
@@ -154,7 +156,7 @@ fn encode_naive(msg: &Message, buf: &mut Vec<u8>) {
 }
 
 // The compact layouts are byte-aligned after the 16-bit packed header
-// (3 b type at bits 0..3, 5 b level at 3..8, 1 b state at bit 8, 7 b
+// (3 b type at bits 0..3, 8 b level at 3..11, 1 b state at bit 11, 4 b
 // reserved), so encoding is direct little-endian byte writes. The layout
 // is bit-identical to the BitWriter-based reference encoder, which the
 // `direct_codec_matches_bitpacked_reference` test asserts.
@@ -185,9 +187,9 @@ fn encode_compact_bitpacked(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
     let (tag, level, state, wf) = payload_fields(&msg.payload);
     let mut w = BitWriter::new();
     w.write(tag as u64, 3);
-    w.write(level as u64, 5);
+    w.write(level as u64, 8);
     w.write(state as u64, 1);
-    w.write(0, 7); // reserved, pads header to 16 bits
+    w.write(0, 4); // reserved, pads header to 16 bits
     w.write(msg.src as u64, 32);
     w.write(msg.dst as u64, 32);
     if msg.payload.is_long() {
@@ -323,8 +325,8 @@ impl Iterator for Decoder<'_> {
                 assert!(b.len() >= 10, "truncated compact message");
                 let header = u16::from_le_bytes(b[0..2].try_into().unwrap());
                 let tag = (header & 0b111) as u8;
-                let level = ((header >> 3) & 0b1_1111) as Level;
-                let state = ((header >> 8) & 1) as u8;
+                let level = ((header >> 3) & 0xFF) as Level;
+                let state = ((header >> 11) & 1) as u8;
                 let src = u32::from_le_bytes(b[2..6].try_into().unwrap());
                 let dst = u32::from_le_bytes(b[6..10].try_into().unwrap());
                 let is_long = matches!(tag, 1 | 2 | 5);
@@ -365,7 +367,7 @@ mod tests {
         for _ in 0..n {
             let src = g.u64() as u32;
             let dst = g.u64() as u32;
-            let level = (g.u64_below(32)) as Level;
+            let level = (g.u64_below(256)) as Level;
             let tie = if proc_mode { g.u64_below(0xFF) } else { g.u64() };
             let w = EdgeWeight::with_tie(g.f64(), tie);
             let payload = match g.u64_below(8) {
@@ -446,16 +448,19 @@ mod tests {
 
     #[test]
     fn field_boundary_values_roundtrip_all_formats() {
-        // Property sweep over the wire fields' extreme values: level 31
-        // (the 5-bit maximum), vertex ids at the u32 edges, ties at the
-        // codec-width edges, weights at the (0, 1) interval edges — for all
-        // seven message types in all three formats.
+        // Property sweep over the wire fields' extreme values: level 255
+        // (the 8-bit maximum) plus the 31/32 boundary where the old 5-bit
+        // layout bled into the state bit, vertex ids at the u32 edges,
+        // ties at the codec-width edges, weights at the (0, 1) interval
+        // edges — for all seven message types in all three formats. This
+        // is the boundary round-trip shared with `message.rs`'s
+        // `level_field_holds_full_u8_without_state_collision`.
         use crate::ghs::types::MAX_WIRE_LEVEL;
         for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
             props(&format!("wire boundaries {fmt:?}"), 300, |g| {
                 let src = *g.choose(&[0u32, 1, u32::MAX - 1, u32::MAX]);
                 let dst = *g.choose(&[0u32, 1, u32::MAX - 1, u32::MAX]);
-                let level = *g.choose(&[0, 1, MAX_WIRE_LEVEL - 1, MAX_WIRE_LEVEL]);
+                let level = *g.choose(&[0, 1, 31, 32, MAX_WIRE_LEVEL - 1, MAX_WIRE_LEVEL]);
                 // Proc-id carries an 8-bit tie; 0xFF is reserved for the
                 // infinity sentinel but must round-trip with finite weights.
                 let tie = if fmt == WireFormat::CompactProcId {

@@ -67,6 +67,9 @@ COMMON FLAGS
                   scheduler: --workers pool threads multiplex all ranks;
                   the only engine that runs thousands of ranks on one host)
   --workers N     async worker pool size      [default 0 = one per CPU]
+                  (each worker owns a work-stealing deque; idle workers
+                  steal oldest-first from peers, so rank load balances
+                  itself. 1 worker + GHS_FUZZ_SCHED = deterministic replay)
   --partition S   vertex partitioning: block (paper default), degree
                   (edge-balanced contiguous), hub (scatter top-k hubs),
                   multilevel[:eps] (edge-cut-minimizing coarsen/refine,
@@ -245,11 +248,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     if engine == EngineKind::Async {
         println!(
-            "scheduler       : {} steps ({:.1} iters/step), {} wakeups, ready-list peak {}",
+            "scheduler       : {} steps ({:.1} iters/step), {} wakeups, in-flight peak {}",
             run.profile.steps,
             run.profile.iterations as f64 / run.profile.steps.max(1) as f64,
             run.profile.wakeups,
             run.profile.ready_max
+        );
+        println!(
+            "work stealing   : {} steals, {} failed attempts, {} mailbox ring spills",
+            run.profile.steals, run.profile.steal_fails, run.profile.ring_full_spills
         );
     }
     println!("supersteps      : {}", run.supersteps);

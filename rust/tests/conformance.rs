@@ -251,10 +251,11 @@ fn pipeline_counters_live_on_all_engines() {
 }
 
 /// Schedule-randomizing fuzz cell: under `GhsConfig::fuzz_sched`
-/// (`GHS_FUZZ_SCHED`) the async engine perturbs ready-list pop order and
-/// mailbox drain batching. Eight perturbed schedules across graph cases
-/// must all reproduce the Kruskal oracle — engine results are
-/// schedule-independent, not an artifact of FIFO scheduling.
+/// (`GHS_FUZZ_SCHED`) the async engine perturbs steal victim order,
+/// steal-before-own-pop coin flips, and mailbox-ring drain batching.
+/// Eight perturbed schedules across graph cases must all reproduce the
+/// Kruskal oracle — engine results are schedule-independent, not an
+/// artifact of LIFO-pop/rotation-steal scheduling.
 #[test]
 fn fuzzed_async_schedules_conform() {
     props("conformance fuzzed schedules", 8, |g| {

@@ -90,10 +90,12 @@ fn counter_orderings_match_paper_optimization_stack() {
 /// Park/wakeup counters are engine-conditional — the baseline assertions
 /// must hold under all three engines, not assume the threaded engine:
 ///
-/// * sequential never parks and never schedules,
+/// * sequential never parks, never schedules, and never steals,
 /// * threaded parks (this workload provably does: the 2-rank path merge
-///   cascade leaves each rank waiting on its peer) but never schedules,
-/// * async schedules (steps / wakeups / ready-list) but never parks.
+///   cascade leaves each rank waiting on its peer) but never schedules
+///   or steals,
+/// * async schedules (steps / wakeups / in-flight peak) and may steal /
+///   spill mailbox rings, but never parks a rank on a channel.
 #[test]
 fn park_wake_counters_are_engine_conditional() {
     let mut rng = ghs_mst::util::prng::Xoshiro256::seed_from_u64(23);
@@ -125,7 +127,35 @@ fn park_wake_counters_are_engine_conditional() {
                 assert!(p.wakeups > 0, "blocked async tasks must be woken by arrivals")
             }
         }
+        if kind != EngineKind::Async {
+            assert_eq!(p.steals, 0, "{kind:?}: only the async pool steals");
+            assert_eq!(p.steal_fails, 0, "{kind:?}: only the async pool steals");
+            assert_eq!(p.ring_full_spills, 0, "{kind:?}: only the async pool has rings");
+        }
     }
+}
+
+/// A one-worker async pool has nobody to steal from: the steal counters
+/// must stay pinned at zero however long the run is. Guards against a
+/// future scheduler change accidentally counting own-deque pops (or
+/// self-steals) as steals, which would poison the deterministic-replay
+/// fingerprint.
+#[test]
+fn single_worker_async_never_steals() {
+    let mut rng = ghs_mst::util::prng::Xoshiro256::seed_from_u64(29);
+    let g = ghs_mst::graph::generators::structured::path(1024, &mut rng);
+    let (clean, _) = preprocess(&g);
+    let cfg = GhsConfig {
+        n_ranks: 16,
+        workers: 1,
+        max_supersteps: 50_000_000,
+        ..GhsConfig::default()
+    };
+    let run = run_kind(EngineKind::Async, &clean, cfg).unwrap();
+    let p = &run.profile;
+    assert_eq!(p.steals, 0, "single worker stole from itself");
+    assert_eq!(p.steal_fails, 0, "single worker attempted a steal");
+    assert!(p.steps > 0, "the run actually executed");
 }
 
 #[test]

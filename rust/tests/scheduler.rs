@@ -2,13 +2,15 @@
 //! threaded engine cannot match: thousands of simulated ranks multiplexed
 //! onto a handful of workers.
 //!
-//! The headline case mirrors the ISSUE acceptance criterion: a path-4096
+//! The headline cases mirror the ISSUE acceptance criteria: a path-4096
 //! graph run with **4096 ranks on an 8-worker pool** (one vertex per rank,
 //! every edge crossing a rank boundary — the maximal-communication
-//! configuration). The per-rank-thread engine would need 4096 OS threads
-//! for the same experiment, well past typical single-process limits; the
-//! async engine needs 8. Rank count is env-overridable for the nightly
-//! soak lane (`GHS_SCHED_RANKS`, like `GHS_SCALE` elsewhere).
+//! configuration), and the same graph on a **64-worker pool** where the
+//! work-stealing deques must actually redistribute load (`steals > 0`).
+//! The per-rank-thread engine would need 4096 OS threads for the same
+//! experiment, well past typical single-process limits; the async engine
+//! needs 8. Rank count is env-overridable for the nightly soak lane
+//! (`GHS_SCHED_RANKS`, like `GHS_SCALE` elsewhere).
 
 mod common;
 
@@ -68,6 +70,62 @@ fn path_4096_ranks_on_8_workers_matches_kruskal() {
         p.msgs_processed_main + p.msgs_processed_test,
         "silence termination: every message processed exactly once"
     );
+}
+
+/// The work-stealing acceptance criterion: the same path graph on a
+/// **64-worker pool**. All tasks are seeded onto worker 0's deque, so the
+/// other 63 workers can only obtain work by stealing — a correct run at
+/// this width *must* record `steals > 0`, and the result must still be
+/// the exact Kruskal forest with exact silence accounting.
+#[test]
+fn path_4096_ranks_on_64_workers_steals_work() {
+    let ranks = sched_ranks();
+    let mut rng = Xoshiro256::seed_from_u64(43);
+    let (clean, _) = preprocess(&structured::path(ranks, &mut rng));
+    let run = run_async(&clean, cfg(ranks, 64)).unwrap();
+    let oracle = kruskal(&clean);
+    assert_eq!(run.forest.canonical_edges(), oracle.canonical_edges());
+    assert_eq!(run.forest.edges.len(), ranks as usize - 1);
+    let p = &run.profile;
+    assert!(p.steals > 0, "64 idle workers must steal from the seeded deque");
+    assert_eq!(
+        run.sent.total(),
+        p.msgs_processed_main + p.msgs_processed_test,
+        "silence accounting must survive stealing and ring spills"
+    );
+}
+
+/// Deterministic replay at integration scale: `workers = 1` plus a fuzz
+/// seed pins every scheduling choice, so three back-to-back runs must
+/// produce bit-identical profile counters (the other acceptance
+/// criterion). Any hidden nondeterminism — an unseeded tie-break, an
+/// iteration over a hash map — shows up as a diverging fingerprint.
+#[test]
+fn deterministic_replay_reproduces_counters_across_three_runs() {
+    let mut rng = Xoshiro256::seed_from_u64(91);
+    let (clean, _) = preprocess(&structured::connected_random(256, 1024, &mut rng));
+    let mut fingerprints = Vec::new();
+    for _ in 0..3 {
+        let mut c = cfg(32, 1);
+        c.fuzz_sched = Some(0x5EED_0042);
+        let run = run_async(&clean, c).unwrap();
+        let p = &run.profile;
+        fingerprints.push((
+            p.steps,
+            p.iterations,
+            p.wakeups,
+            p.ready_max,
+            p.msgs_processed_main,
+            p.msgs_processed_test,
+            p.ring_full_spills,
+            p.flushes,
+            p.bytes_sent,
+            p.stash_merges,
+        ));
+        assert_eq!(p.steals, 0, "a single worker has nobody to steal from");
+    }
+    assert_eq!(fingerprints[0], fingerprints[1], "replay diverged between runs 1 and 2");
+    assert_eq!(fingerprints[1], fingerprints[2], "replay diverged between runs 2 and 3");
 }
 
 /// 1 worker × many ranks: full multiplexing with zero parallelism — every
@@ -134,10 +192,11 @@ fn async_forests_match_kruskal_under_three_seeds() {
 }
 
 /// Schedule-randomizing fuzz cell (`GhsConfig::fuzz_sched`, env
-/// `GHS_FUZZ_SCHED`): eight perturbed schedules — random ready-list pops
-/// and partial mailbox drains — must all reproduce the Kruskal forest
-/// with exact silence accounting. Proves the async result is
-/// schedule-independent rather than an accident of FIFO order.
+/// `GHS_FUZZ_SCHED`): eight perturbed schedules — shuffled steal victim
+/// order, steal-before-own-pop coin flips, and partial mailbox-ring
+/// drains — must all reproduce the Kruskal forest with exact silence
+/// accounting. Proves the async result is schedule-independent rather
+/// than an accident of LIFO-pop/rotation-steal order.
 #[test]
 fn eight_fuzzed_schedules_match_kruskal() {
     let mut rng = Xoshiro256::seed_from_u64(77);
