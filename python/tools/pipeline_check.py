@@ -25,6 +25,10 @@ What it validates when run:
      rust/tests/perf_regression.rs, at the same scales/seeds.
   5. The engine-counter rows of results/partition_baseline.md and the
      counter table of results/perf_baseline.md.
+  6. The flight recorder (rust/src/obs/): per-rank event streams recorded
+     at the same hook positions as the Rust engines, their order-sensitive
+     fingerprints (the `ghs-mst trace --expect` CI pin), and the fragment
+     -lifecycle timeline replay (results/perf_baseline.md table).
 
 Usage: python3 python/tools/pipeline_check.py [--quick]
 """
@@ -363,12 +367,16 @@ def _cut_of(adj, owner):
     return cut // 2
 
 
-def _refine(adj, vwt, owner, loads, cap, conn):
+def _refine(adj, vwt, owner, loads, cap, conn, trace=None):
     """multilevel.rs refine: KL/FM-style positive-gain boundary moves
-    under the balance cap; returns the cut after each pass."""
+    under the balance cap; returns the cut after each pass. `trace`
+    mirrors MultilevelTrace's refinement-work counters (passes_run /
+    moves_applied / gain_total)."""
     cut = _cut_of(adj, owner)
     pass_cuts = [cut]
     for _ in range(MAX_REFINE_PASSES):
+        if trace is not None:
+            trace["passes_run"] += 1
         moves = 0
         for v in range(len(adj)):
             r = owner[v]
@@ -396,6 +404,9 @@ def _refine(adj, vwt, owner, loads, cap, conn):
                 owner[v] = s
                 cut -= gain
                 moves += 1
+                if trace is not None:
+                    trace["moves_applied"] += 1
+                    trace["gain_total"] += gain
             for o in touched:
                 conn[o] = 0
         pass_cuts.append(cut)
@@ -404,7 +415,7 @@ def _refine(adj, vwt, owner, loads, cap, conn):
     return pass_cuts
 
 
-def multilevel(n, p, edges, eps=MULTILEVEL_EPS, seed=MULTILEVEL_SEED):
+def multilevel(n, p, edges, eps=MULTILEVEL_EPS, seed=MULTILEVEL_SEED, trace=None):
     """Bit-for-bit port of partition/multilevel.rs: seeded heavy-edge
     matching coarsening to <= 32*p vertices, greedy balanced k-way initial
     assignment, KL/FM refinement during uncoarsening under the eps balance
@@ -495,13 +506,13 @@ def multilevel(n, p, edges, eps=MULTILEVEL_EPS, seed=MULTILEVEL_SEED):
         for o in touched:
             conn[o] = 0
 
-    _refine(adj, vwt, owner, loads, cap, conn)
+    _refine(adj, vwt, owner, loads, cap, conn, trace)
     for (f_adj, f_vwt, cid) in reversed(finer):
         f_owner = [owner[cid[v]] for v in range(len(f_vwt))]
         loads = [0] * p
         for v, o in enumerate(f_owner):
             loads[o] += f_vwt[v]
-        _refine(f_adj, f_vwt, f_owner, loads, cap, conn)
+        _refine(f_adj, f_vwt, f_owner, loads, cap, conn, trace)
         owner = f_owner
 
     block = BlockPartition(n, p)
@@ -606,6 +617,53 @@ def size_of(fmt, payload):
     if payload[0] in LONG_TAGS:
         return 26 if fmt == "compact" else 19
     return 10
+
+
+# ------------------------------------------------------ flight recorder --
+# Lock-step port of rust/src/obs/trace.rs. The event kinds, the payload
+# fields (a, b, c) and the order-sensitive fingerprint fold are identical;
+# hooks fire at the same source positions as the Rust engines, so the
+# per-rank fingerprint here IS the oracle for `ghs-mst trace --expect`.
+# The port's ring is unbounded: retention/drop accounting is a Rust-side
+# concern (rust/tests/trace.rs), and the fingerprint covers every OFFERED
+# event regardless of ring depth, so depth cannot matter here either.
+
+EV_SEND, EV_RECV, EV_POSTPONE, EV_STASH_REMERGE = 0, 1, 2, 3
+EV_FRAGMENT_MERGE, EV_FRAGMENT_ABSORB, EV_FRAGMENT_ADOPT = 4, 5, 6
+EV_QUEUE_DEPTH, EV_HALT = 13, 15
+FP_PRIME = 0x100000001B3  # trace.rs FINGERPRINT_PRIME
+TAG_INDEX = {"C": 0, "I": 1, "T": 2, "A": 3, "R": 4, "P": 5, "X": 6}
+
+
+def fold_fp(acc, x):
+    return (acc * FP_PRIME + x) & M64
+
+
+class TraceRing:
+    """trace.rs TraceRing minus the bounding: every offered event is
+    retained as (ts, kind, a, b, c) with the same monotone per-track
+    timestamp clamp, and the fingerprint folds (kind, a, b, c) of every
+    event in order — timestamps excluded, exactly like the Rust ring."""
+
+    def __init__(self):
+        self.events = []
+        self.recorded = 0
+        self.fp = 0
+        self.now = 0
+        self._last = 0
+
+    def set_now(self, ts):
+        self.now = ts
+
+    def record(self, kind, a, b, c):
+        ts = max(self.now, self._last)
+        self._last = ts
+        self.recorded += 1
+        fp = self.fp
+        for x in (kind, a, b, c):
+            fp = (fp * FP_PRIME + x) & M64
+        self.fp = fp
+        self.events.append((ts, kind, a, b, c))
 
 
 def per_process_weights_unique(edges, part):
@@ -841,6 +899,9 @@ class Rank:
         self.sent_counts = {}
         self.halts = 0
         self.superstep = 0
+        # Flight recorder (rank.rs `trace`): armed by cfg["trace"].
+        self.trace = TraceRing() if cfg.get("trace") else None
+        self.trace_stash = 0
 
     # -- messaging ---------------------------------------------------
 
@@ -850,6 +911,9 @@ class Rank:
         self.sent_counts[payload[0]] = self.sent_counts.get(payload[0], 0) + 1
         self.prof.msgs_sent += 1
         owner = self.part.owner(dst)
+        if self.trace is not None:
+            nbytes = 0 if owner == self.rank else size_of(self.wire, payload)
+            self.trace.record(EV_SEND, dst, TAG_INDEX[payload[0]], nbytes)
         if owner == self.rank:
             self.queues.push(msg)
         else:
@@ -894,8 +958,25 @@ class Rank:
         self.prof.bytes_decoded += nbytes
         self.prof.decode_batches += 1
         self.prof.msgs_decoded += len(msgs)
+        if self.trace is not None:
+            self.trace.record(EV_RECV, len(msgs), nbytes, 0)
         for m in msgs:
             self.queues.push(m)
+
+    def trace_flush_sample(self):
+        """rank.rs trace_flush_sample: stash splice churn since the last
+        sample, then a queue-depth snapshot. Every engine calls this at
+        SENDING_FREQUENCY cadence, right before flush_all."""
+        if self.trace is None:
+            return
+        splices = self.queues.stash_merges - self.trace_stash
+        self.trace_stash = self.queues.stash_merges
+        if splices > 0:
+            self.trace.record(EV_STASH_REMERGE, splices, 0, 0)
+        active = self.queues.active_len()
+        stash = len(self.queues.main_stash) + len(self.queues.test_stash)
+        done = self.prof.msgs_processed_main + self.prof.msgs_processed_test
+        self.trace.record(EV_QUEUE_DEPTH, active, stash, done)
 
     def pending_local(self):
         return self.queues.total_len() + sum(b[1] for b in self.outbox.values())
@@ -952,6 +1033,8 @@ class Rank:
     def on_connect(self, v, j, l):
         vars = self.vars[self.part.row_of(v)]
         if l < vars.ln:
+            if self.trace is not None:
+                self.trace.record(EV_FRAGMENT_ABSORB, v, self.csr.cols[j], vars.ln)
             self.mark_branch(v, j)
             self.send(v, j, ("I", vars.ln, vars.fragment, vars.sn == FIND))
             if vars.sn == FIND:
@@ -960,12 +1043,17 @@ class Rank:
         if self.edge_state[j] == BASIC:
             return False  # postponed
         fid = self.adj_weight[j]
+        if self.trace is not None:
+            # Fires at both core endpoints; the replay counts unions.
+            self.trace.record(EV_FRAGMENT_MERGE, v, self.csr.cols[j], vars.ln + 1)
         self.send(v, j, ("I", vars.ln + 1, fid, True))
         return True
 
     def on_initiate(self, v, j, l, f, find):
         row = self.part.row_of(v)
         vars = self.vars[row]
+        if self.trace is not None:
+            self.trace.record(EV_FRAGMENT_ADOPT, v, l, vars.ln)
         vars.ln = l
         vars.fragment = f
         vars.sn = FIND if find else FOUND
@@ -1052,6 +1140,8 @@ class Rank:
         elif w == vars.best_wt and w == INF_W:
             vars.halted = True
             self.halts += 1
+            if self.trace is not None:
+                self.trace.record(EV_HALT, v, 0, vars.ln)
         return True
 
     def change_core(self, v):
@@ -1266,6 +1356,10 @@ class Engine:
                 r_i = rank.rank
                 rank.superstep = superstep
                 rank.prof.iterations += 1
+                if rank.trace is not None:
+                    # Sequential clock source: the LogGOPS virtual clock in
+                    # nanoseconds (excluded from fingerprints).
+                    rank.trace.set_now(int(self.sim.clock[r_i] * 1e9))
                 if (
                     not self.inboxes[r_i]
                     and rank.queues.active_len() == 0
@@ -1294,6 +1388,8 @@ class Engine:
                     msg = rank.queues.pop_main()
                     if not rank.handle(msg):
                         rank.prof.msgs_postponed += 1
+                        if rank.trace is not None:
+                            rank.trace.record(EV_POSTPONE, msg[1], TAG_INDEX[msg[2][0]], 0)
                         rank.queues.postpone(msg)
                     else:
                         rank.prof.msgs_processed_main += 1
@@ -1305,6 +1401,8 @@ class Engine:
                         msg = rank.queues.pop_test()
                         if not rank.handle(msg):
                             rank.prof.msgs_postponed += 1
+                            if rank.trace is not None:
+                                rank.trace.record(EV_POSTPONE, msg[1], TAG_INDEX[msg[2][0]], 0)
                             rank.queues.postpone(msg)
                         else:
                             rank.prof.msgs_processed_test += 1
@@ -1316,6 +1414,7 @@ class Engine:
                         self.sim.comm_wait[r_i] += min_arrival - self.sim.clock[r_i]
                         self.sim.clock[r_i] = min_arrival
                 if superstep % cfg["sending_frequency"] == 0:
+                    rank.trace_flush_sample()
                     rank.flush_all()
                 rank.prof.lookups = rank.lookup.lookups
                 rank.prof.lookup_probes = rank.lookup.probes
@@ -1398,6 +1497,106 @@ def kruskal(n, edges):
         if uf.union(u, v):
             out.append((min(u, v), max(u, v)))
     return sorted(out), uf.n_sets(n)
+
+
+# ---------------------------------------------------- fragment timeline --
+# Port of obs/timeline.rs fragment_timeline: replay the FragmentMerge /
+# FragmentAbsorb events as a union-find script, twice — (ts, rank, seq)
+# order for the growth curve and critical merge chain, level-grouped
+# (stable) order for the per-level rows.
+
+
+class _TlUf:
+    """Size + merge-depth union-find (timeline.rs Uf)."""
+
+    def __init__(self, n):
+        self.parent = list(range(n))
+        self.size = [1] * n
+        self.depth = [0] * n
+        self.sets = n
+        self.largest = 0 if n == 0 else 1
+
+    def find(self, v):
+        while self.parent[v] != v:
+            self.parent[v] = self.parent[self.parent[v]]
+            v = self.parent[v]
+        return v
+
+    def union(self, a, b, deepen):
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        big, small = (ra, rb) if self.size[ra] >= self.size[rb] else (rb, ra)
+        self.parent[small] = big
+        self.size[big] += self.size[small]
+        joined = max(self.depth[big], self.depth[small])
+        self.depth[big] = joined + 1 if deepen else joined
+        self.sets -= 1
+        self.largest = max(self.largest, self.size[big])
+        return True
+
+
+def fragment_timeline(n, rank_traces):
+    """rank_traces: [(rank, events)] with events (ts, kind, a, b, c).
+    Returns the same aggregates as timeline.rs FragmentTimeline."""
+    evs = []
+    for (rk, events) in rank_traces:
+        for i, e in enumerate(events):
+            if e[1] in (EV_FRAGMENT_MERGE, EV_FRAGMENT_ABSORB, EV_HALT):
+                evs.append((e[0], rk, i, e))
+    evs.sort(key=lambda t: (t[0], t[1], t[2]))
+
+    # Pass 1 — virtual-time order: growth curve + critical merge chain.
+    uf = _TlUf(n)
+    growth = []
+    halts = 0
+    for (ts, _rk, _i, (_t, kind, a, b, _c)) in evs:
+        if kind == EV_HALT:
+            halts += 1
+            continue
+        before = uf.largest
+        uf.union(a, b, kind == EV_FRAGMENT_MERGE)
+        if uf.largest > before:
+            growth.append((ts, uf.largest))
+    final_fragments = uf.sets
+    critical_depth = 0
+    best_size = 0
+    for v in range(n):
+        r = uf.find(v)
+        if uf.size[r] > best_size:
+            best_size = uf.size[r]
+            critical_depth = uf.depth[r]
+
+    # Pass 2 — level-grouped (stable within level): per-level rows. The
+    # event's `c` field carries the level.
+    by_level = sorted(
+        ((e[4], e) for (_ts, _rk, _i, e) in evs if e[1] != EV_HALT),
+        key=lambda t: t[0],
+    )
+    uf = _TlUf(n)
+    levels = []
+    max_level = 0
+    for (lvl, (_t, kind, a, b, _c)) in by_level:
+        max_level = max(max_level, lvl)
+        if not levels or levels[-1][0] != lvl:
+            levels.append([lvl, 0, 0, 0, 0])  # level, merges, absorbs, frags, largest
+        united = uf.union(a, b, kind == EV_FRAGMENT_MERGE)
+        row = levels[-1]
+        if united:
+            if kind == EV_FRAGMENT_MERGE:
+                row[1] += 1
+            else:
+                row[2] += 1
+        row[3] = uf.sets
+        row[4] = uf.largest
+    return dict(
+        levels=[tuple(r) for r in levels],
+        growth=growth,
+        critical_depth=critical_depth,
+        final_fragments=final_fragments,
+        max_level=max_level,
+        halts=halts,
+    )
 
 
 
@@ -1557,6 +1756,10 @@ class AsyncSched:
         cfg = self.cfg
         rank.prof.iterations += 1
         it = rank.prof.iterations
+        if rank.trace is not None:
+            # Concurrent-engine clock source: the rank's own iteration
+            # count (rank.rs step; excluded from fingerprints).
+            rank.trace.set_now(it)
         if it > cfg["max_supersteps"]:
             raise RuntimeError(f"rank {rank.rank}: exceeded max iterations")
         main_burst = min(rank.queues.main_len(), cfg["burst_size"])
@@ -1567,6 +1770,8 @@ class AsyncSched:
             self.pending += rank.prof.msgs_sent - before
             if not ok:
                 rank.prof.msgs_postponed += 1
+                if rank.trace is not None:
+                    rank.trace.record(EV_POSTPONE, msg[1], TAG_INDEX[msg[2][0]], 0)
                 rank.queues.postpone(msg)
             else:
                 rank.prof.msgs_processed_main += 1
@@ -1582,6 +1787,8 @@ class AsyncSched:
                 self.pending += rank.prof.msgs_sent - before
                 if not ok:
                     rank.prof.msgs_postponed += 1
+                    if rank.trace is not None:
+                        rank.trace.record(EV_POSTPONE, msg[1], TAG_INDEX[msg[2][0]], 0)
                     rank.queues.postpone(msg)
                 else:
                     rank.prof.msgs_processed_test += 1
@@ -1589,6 +1796,7 @@ class AsyncSched:
                     rank.queues.note_done()
         if it % cfg["sending_frequency"] == 0:
             rank.superstep = it
+            rank.trace_flush_sample()
             rank.flush_all()
         return (
             main_burst == 0
@@ -1935,6 +2143,90 @@ def perf_snapshot(scale):
     return snap
 
 
+def trace_fingerprints(quick=False):
+    """Flight-recorder oracle: replay the `ghs-mst trace` conformance
+    seeds with tracing armed and print the per-rank / combined event-
+    stream fingerprints. The path-512 async/workers=1 combined value is
+    the pin asserted by rust/tests/trace.rs and the CI `--expect` cell."""
+    print("== flight recorder: lock-step event-stream fingerprints")
+    # Sequential engine: two runs of a conformance seed must agree.
+    n7, e7 = workload(7)
+    ref = None
+    for _ in range(2):
+        eng = Engine(n7, e7, final_version(4, trace=True))
+        out = eng.run()
+        fps = [(r.rank, r.trace.fp, r.trace.recorded) for r in eng.ranks]
+        assert all(cnt > 0 for (_r, _f, cnt) in fps), "every rank saw traffic"
+        if ref is None:
+            ref = (fps, out["edges"])
+        else:
+            assert ref == (fps, out["edges"]), "sequential event streams diverged"
+    seq_combined = 0
+    for (_r, f, _c) in ref[0]:
+        seq_combined = fold_fp(seq_combined, f)
+    total = sum(c for (_r, _f, c) in ref[0])
+    print(f"  rmat7/final/p=4 (sequential): {total} events, combined fp {seq_combined:#018x}")
+
+    # The CI pin: path-512, 8 ranks, async scheduler, 1 worker, no fuzz —
+    # every scheduling choice is deterministic, so the full per-rank event
+    # streams are replayable bit-for-bit.
+    np_, ep = path_graph(512, 42)
+    want_edges, _ = kruskal(np_, ep)
+    pinned = None
+    for _ in range(3):
+        sched = AsyncSched(np_, ep, final_version(8, trace=True))
+        out = sched.run()
+        assert out["edges"] == want_edges, "traced async run: forest != Kruskal"
+        fps = [(r.rank, r.trace.fp, r.trace.recorded) for r in sched.ranks]
+        combined = 0
+        for (_r, f, _c) in fps:
+            combined = fold_fp(combined, f)
+        if pinned is None:
+            pinned = (fps, combined)
+            # Timeline replay cross-check on the same event streams.
+            tl = fragment_timeline(np_, [(r.rank, r.trace.events) for r in sched.ranks])
+            assert tl["final_fragments"] == out["n_components"], (
+                f"timeline replay ({tl['final_fragments']}) != forest "
+                f"components ({out['n_components']})"
+            )
+            assert tl["max_level"] > 0 and tl["halts"] >= 1, tl
+            assert all(g1 > g0 for ((_, g0), (_, g1)) in zip(tl["growth"], tl["growth"][1:]))
+        else:
+            assert pinned == (fps, combined), "async replay event streams diverged"
+    fps, combined = pinned
+    for (rk, f, cnt) in fps:
+        print(f"    rank {rk}: fp {f:#018x} ({cnt} events)")
+    print(
+        f"  path512/final/p=8/w=1 combined fp {combined:#018x}"
+        "  <- PINNED_PATH512_ASYNC_W1 (rust/tests/trace.rs) and CI --expect"
+    )
+    return combined
+
+
+def trace_timeline():
+    """Fragment-lifecycle timeline for results/perf_baseline.md: RMAT-10
+    at 16 ranks on the sequential engine, replayed from the traced event
+    streams and cross-checked against the finished forest."""
+    print("== fragment timeline, RMAT-10, 16 ranks (results/perf_baseline.md)")
+    n, edges = workload(10)
+    eng = Engine(n, edges, final_version(16, trace=True))
+    out = eng.run()
+    tl = fragment_timeline(n, [(r.rank, r.trace.events) for r in eng.ranks])
+    assert tl["final_fragments"] == out["n_components"], (
+        f"timeline replay ({tl['final_fragments']}) != forest components "
+        f"({out['n_components']})"
+    )
+    print("  | level | merges | absorbs | fragments after | largest after |")
+    print("  |------:|-------:|--------:|----------------:|--------------:|")
+    for (lvl, merges, absorbs, frags, largest) in tl["levels"]:
+        print(f"  | {lvl} | {merges} | {absorbs} | {frags} | {largest} |")
+    print(
+        f"  final fragments={tl['final_fragments']} max_level={tl['max_level']} "
+        f"critical_depth={tl['critical_depth']} halts={tl['halts']}"
+    )
+    return tl
+
+
 def multilevel_quality():
     """The tentpole quality claim behind results/partition_baseline.md:
     on the scrambled RMAT-10 workload at 16 ranks the multilevel strategy
@@ -1944,7 +2236,8 @@ def multilevel_quality():
     print("== multilevel quality, RMAT-10, 16 ranks")
     n, edges = workload(10)
     p = 16
-    ml = multilevel(n, p, edges)
+    refine_trace = dict(passes_run=0, moves_applied=0, gain_total=0)
+    ml = multilevel(n, p, edges, trace=refine_trace)
     block = BlockPartition(n, p)
     ml_cut = block_cut = 0
     loads = [0] * p
@@ -1963,8 +2256,20 @@ def multilevel_quality():
         f"  block cut={block_cut}  multilevel cut={ml_cut}  m={len(edges)}  "
         f"max_vtx={max(loads)} cap={cap}  owner fnv-1a'={fp:#018x}"
     )
+    # MultilevelTrace refinement-work counters (`ghs-mst partition` line).
+    print(
+        f"  refinement: {refine_trace['passes_run']} passes, "
+        f"{refine_trace['moves_applied']} moves applied, "
+        f"total gain {refine_trace['gain_total']}"
+    )
     assert ml_cut < block_cut, "multilevel must strictly beat block on RMAT-10@16"
     assert max(loads) <= cap, "eps balance bound violated"
+    assert refine_trace["passes_run"] > 0 and refine_trace["moves_applied"] > 0, (
+        "refinement must do (and count) work on RMAT-10@16"
+    )
+    assert refine_trace["gain_total"] >= refine_trace["moves_applied"], (
+        "every applied move has positive integer gain"
+    )
     return ml_cut, block_cut
 
 
@@ -1996,9 +2301,11 @@ if __name__ == "__main__":
     conformance(quick)
     async_conformance(quick)
     sched_snapshot(quick)
+    trace_fingerprints(quick)
     multilevel_quality()
     snap8 = perf_snapshot(8)
     if not quick:
         snap9 = perf_snapshot(9)
         partition_counters()
+        trace_timeline()
     print("ALL CHECKS PASSED")

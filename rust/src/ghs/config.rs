@@ -115,6 +115,13 @@ pub struct GhsConfig {
     /// makes the whole schedule deterministic (replay mode). Ignored by
     /// the sequential and threaded engines.
     pub fuzz_sched: Option<u64>,
+    /// Flight-recorder tracing (`--trace[=depth]`): `Some(depth)` gives
+    /// every rank (and, on the async engine, every worker) a bounded
+    /// event ring retaining the last `depth` events; the run returns them
+    /// as `GhsRun::trace`. `None` (the default) records nothing — the
+    /// hooks reduce to a branch on this option, no allocation, and every
+    /// trace counter stays zero.
+    pub trace: Option<u32>,
 }
 
 impl Default for GhsConfig {
@@ -136,6 +143,7 @@ impl Default for GhsConfig {
             max_supersteps: u64::MAX,
             record_timeline: false,
             fuzz_sched: std::env::var("GHS_FUZZ_SCHED").ok().and_then(|v| v.parse().ok()),
+            trace: None,
         }
     }
 }
@@ -194,6 +202,7 @@ mod tests {
         assert_eq!(c.search, SearchStrategy::Hash);
         assert!(c.separate_test_queue);
         assert_eq!(c.wire_format, WireFormat::CompactProcId);
+        assert!(c.trace.is_none(), "flight recorder is off by default");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use crate::ghs::wire::{per_process_weights_unique, IdentityCodec, WireFormat};
 use crate::graph::partition::{Partition, PartitionStats};
 use crate::graph::preprocess::is_simple;
 use crate::graph::EdgeList;
+use crate::obs::trace::{EventKind, TraceData, TraceSink};
 use crate::sim::{SimConfig, SimState, TimingMode};
 
 /// The engine implementations a run can be dispatched to (`--engine`).
@@ -196,6 +197,11 @@ impl Engine {
             for rank in self.ranks.iter_mut() {
                 rank.superstep = superstep;
                 rank.prof.iterations += 1;
+                if let Some(t) = rank.trace.as_mut() {
+                    // Sequential clock source: this rank's LogGOPS virtual
+                    // clock, in nanoseconds (excluded from fingerprints).
+                    t.set_now((self.sim.clock[rank.rank as usize] * 1e9) as u64);
+                }
                 // Fast path: nothing to read, process or flush — charge one
                 // poll iteration and move on (the common case once a rank's
                 // subgraph has quiesced). Messages parked in the postponed
@@ -255,6 +261,14 @@ impl Engine {
                     let msg = rank.queues.pop_main().expect("len checked");
                     if rank.handle(msg) == Outcome::Postponed {
                         rank.prof.msgs_postponed += 1;
+                        if rank.trace.is_some() {
+                            rank.trace_ev(
+                                EventKind::Postpone,
+                                msg.dst as u64,
+                                msg.payload.type_tag() as u64,
+                                0,
+                            );
+                        }
                         rank.queues.postpone(msg);
                     } else {
                         rank.prof.msgs_processed_main += 1;
@@ -273,6 +287,14 @@ impl Engine {
                         let msg = rank.queues.pop_test().expect("len checked");
                         if rank.handle(msg) == Outcome::Postponed {
                             rank.prof.msgs_postponed += 1;
+                            if rank.trace.is_some() {
+                                rank.trace_ev(
+                                    EventKind::Postpone,
+                                    msg.dst as u64,
+                                    msg.payload.type_tag() as u64,
+                                    0,
+                                );
+                            }
                             rank.queues.postpone(msg);
                         } else {
                             rank.prof.msgs_processed_test += 1;
@@ -294,6 +316,7 @@ impl Engine {
                 }
                 // 4. send_all_bufs every SENDING_FREQUENCY iterations.
                 if superstep % rank.config.sending_frequency as u64 == 0 {
+                    rank.trace_flush_sample();
                     rank.flush_all();
                 }
                 // Charge the step's compute to the rank's virtual clock,
@@ -335,6 +358,10 @@ impl Engine {
             r.prof.lookups = r.lookup_stats.lookups;
             r.prof.lookup_probes = r.lookup_stats.probes;
             r.prof.stash_merges = r.queues.stash_merges;
+            if let Some(t) = &r.trace {
+                r.prof.trace_events = t.recorded;
+                r.prof.trace_dropped = t.dropped;
+            }
         }
         let n_vertices = self.ranks[0].part.n_vertices();
         let mut edges = Vec::new();
@@ -366,6 +393,17 @@ impl Engine {
             timeline.append(&mut r.timeline);
         }
         timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
+        let trace = if self.config.trace.is_some() {
+            let mut tracks = Vec::with_capacity(self.ranks.len());
+            for r in &mut self.ranks {
+                if let Some(ring) = r.trace.take() {
+                    tracks.push(ring.into_rank_trace(r.rank));
+                }
+            }
+            Some(TraceData { ranks: tracks, workers: Vec::new() })
+        } else {
+            None
+        };
         Ok(GhsRun {
             forest: Forest { edges, n_components },
             supersteps,
@@ -375,6 +413,7 @@ impl Engine {
             timeline,
             sim: self.sim.summary(),
             partition: self.partition_stats,
+            trace,
         })
     }
 

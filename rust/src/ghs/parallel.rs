@@ -34,6 +34,7 @@ use crate::ghs::rank::{RankState, StepStatus};
 use crate::ghs::result::{GhsRun, ProfileCounters};
 use crate::graph::partition::PartitionStats;
 use crate::graph::EdgeList;
+use crate::obs::trace::{EventKind, TraceData};
 
 /// One aggregated buffer on the interconnect: `(src, bytes, n_msgs)`.
 /// Shared with the async scheduler's mailboxes.
@@ -158,6 +159,7 @@ fn run_rank(
             return Ok(());
         }
         rank.prof.parked += 1;
+        rank.trace_ev(EventKind::Park, 0, 0, 0);
         match rx.recv_timeout(Duration::from_micros(park_us)) {
             Ok((_src, buf, _n)) => {
                 rank.read_buffer(&buf);
@@ -188,6 +190,10 @@ pub(crate) fn collect(
         r.prof.lookups = r.lookup_stats.lookups;
         r.prof.lookup_probes = r.lookup_stats.probes;
         r.prof.stash_merges = r.queues.stash_merges;
+        if let Some(t) = &r.trace {
+            r.prof.trace_events = t.recorded;
+            r.prof.trace_dropped = t.dropped;
+        }
     }
     let mut edges = Vec::new();
     for r in &ranks {
@@ -212,6 +218,19 @@ pub(crate) fn collect(
         timeline.append(&mut r.timeline);
     }
     timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
+    let traced = ranks.iter().any(|r| r.trace.is_some());
+    let trace = if traced {
+        let mut tracks = Vec::with_capacity(ranks.len());
+        for r in &mut ranks {
+            if let Some(ring) = r.trace.take() {
+                tracks.push(ring.into_rank_trace(r.rank));
+            }
+        }
+        // Worker tracks (async engine) are attached by `run_async`.
+        Some(TraceData { ranks: tracks, workers: Vec::new() })
+    } else {
+        None
+    };
     Ok(GhsRun {
         forest: Forest { edges, n_components },
         supersteps,
@@ -222,6 +241,7 @@ pub(crate) fn collect(
         // Threaded mode: real wall clock, no virtual network.
         sim: crate::sim::SimSummary { total_time: wall, ..Default::default() },
         partition: partition_stats,
+        trace,
     })
 }
 

@@ -20,6 +20,7 @@ use crate::ghs::types::{EdgeState, Level, VertexState};
 use crate::ghs::vertex::Outcome;
 use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::ghs::wire::{self, IdentityCodec, WireFormat};
+use crate::obs::trace::{EventKind, TraceRing, TraceSink};
 use crate::graph::csr::Csr;
 use crate::graph::partition::Partition;
 use crate::graph::{EdgeList, VertexId};
@@ -158,6 +159,12 @@ pub struct RankState {
     pub timeline: Vec<FlushEvent>,
     /// Current superstep (set by the engine before each step).
     pub superstep: u64,
+    /// Flight-recorder event ring (`GhsConfig::trace`); `None` records
+    /// nothing and every hook reduces to this option check.
+    pub trace: Option<TraceRing>,
+    /// `stash_merges` value at the last trace flush sample (delta base
+    /// for `StashRemerge` events).
+    trace_stash: u64,
 }
 
 impl RankState {
@@ -237,7 +244,36 @@ impl RankState {
             halts: 0,
             timeline: Vec::new(),
             superstep: 0,
+            trace: config.trace.map(|depth| TraceRing::new(depth as usize)),
+            trace_stash: 0,
         }
+    }
+
+    /// Record one flight-recorder event (no-op when tracing is off).
+    #[inline]
+    pub(crate) fn trace_ev(&mut self, kind: EventKind, a: u64, b: u64, c: u64) {
+        if let Some(t) = self.trace.as_mut() {
+            t.record(kind, a, b, c);
+        }
+    }
+
+    /// Flush-cadence trace sample: postponed-stash splice churn since the
+    /// last sample, then a queue-depth snapshot. Called by every engine at
+    /// `SENDING_FREQUENCY` cadence, right before `flush_all` (mirrored at
+    /// the same point by `pipeline_check.py`).
+    pub(crate) fn trace_flush_sample(&mut self) {
+        if self.trace.is_none() {
+            return;
+        }
+        let splices = self.queues.stash_merges - self.trace_stash;
+        self.trace_stash = self.queues.stash_merges;
+        if splices > 0 {
+            self.trace_ev(EventKind::StashRemerge, splices, 0, 0);
+        }
+        let active = self.queues.active_len() as u64;
+        let stash = self.queues.stash_len() as u64;
+        let done = self.prof.msgs_processed_main + self.prof.msgs_processed_test;
+        self.trace_ev(EventKind::QueueDepth, active, stash, done);
     }
 
     /// Mutable vertex variables of a local vertex.
@@ -279,6 +315,11 @@ impl RankState {
         self.sent_counts.bump(&payload);
         self.prof.msgs_sent += 1;
         let slot = self.adj_peer[adj];
+        if self.trace.is_some() {
+            let bytes =
+                if slot == PEER_LOCAL { 0 } else { self.wire.size_of(&payload) as u64 };
+            self.trace_ev(EventKind::Send, dst as u64, payload.type_tag() as u64, bytes);
+        }
         if slot == PEER_LOCAL {
             debug_assert_eq!(self.part.owner(dst), self.rank);
             self.queues.push_incoming(msg);
@@ -363,7 +404,11 @@ impl RankState {
     pub fn read_buffer(&mut self, buf: &[u8]) {
         self.prof.bytes_decoded += buf.len() as u64;
         self.prof.decode_batches += 1;
-        self.prof.msgs_decoded += wire::decode_into(buf, self.wire, &mut self.queues);
+        let n = wire::decode_into(buf, self.wire, &mut self.queues);
+        self.prof.msgs_decoded += n;
+        if self.trace.is_some() {
+            self.trace_ev(EventKind::Recv, n, buf.len() as u64, 0);
+        }
     }
 
     /// Inject this rank's spontaneous start into the pending-message
@@ -399,6 +444,11 @@ impl RankState {
     pub fn step(&mut self, pending: &AtomicI64) -> Result<StepStatus> {
         self.prof.iterations += 1;
         let iter = self.prof.iterations;
+        if let Some(t) = self.trace.as_mut() {
+            // Concurrent-engine clock source: the rank's own iteration
+            // count (monotone per rank; excluded from fingerprints).
+            t.set_now(iter);
+        }
         if iter > self.config.max_supersteps {
             bail!("rank {}: exceeded max iterations {}", self.rank, self.config.max_supersteps);
         }
@@ -414,6 +464,14 @@ impl RankState {
             }
             if outcome == Outcome::Postponed {
                 self.prof.msgs_postponed += 1;
+                if self.trace.is_some() {
+                    self.trace_ev(
+                        EventKind::Postpone,
+                        msg.dst as u64,
+                        msg.payload.type_tag() as u64,
+                        0,
+                    );
+                }
                 self.queues.postpone(msg);
             } else {
                 self.prof.msgs_processed_main += 1;
@@ -435,6 +493,14 @@ impl RankState {
                 }
                 if outcome == Outcome::Postponed {
                     self.prof.msgs_postponed += 1;
+                    if self.trace.is_some() {
+                        self.trace_ev(
+                            EventKind::Postpone,
+                            msg.dst as u64,
+                            msg.payload.type_tag() as u64,
+                            0,
+                        );
+                    }
                     self.queues.postpone(msg);
                 } else {
                     self.prof.msgs_processed_test += 1;
@@ -446,6 +512,7 @@ impl RankState {
         // send_all_bufs, every SENDING_FREQUENCY iterations.
         if iter % self.config.sending_frequency as u64 == 0 {
             self.superstep = iter;
+            self.trace_flush_sample();
             self.flush_all();
         }
         let blocked = main_burst == 0

@@ -68,6 +68,13 @@ pub struct ProfileCounters {
     /// spilled packets are drained after the ring, and the silence
     /// accounting never sees the detour.
     pub ring_full_spills: u64,
+    /// Flight-recorder events offered to this rank's trace ring. Zero
+    /// whenever tracing is disabled (`GhsConfig::trace == None`) — the
+    /// perf baselines assert exactly that.
+    pub trace_events: u64,
+    /// Flight-recorder events overwritten after the ring filled
+    /// (retained events = `trace_events - trace_dropped`).
+    pub trace_dropped: u64,
 }
 
 impl ProfileCounters {
@@ -116,6 +123,8 @@ impl ProfileCounters {
         self.steals += o.steals;
         self.steal_fails += o.steal_fails;
         self.ring_full_spills += o.ring_full_spills;
+        self.trace_events += o.trace_events;
+        self.trace_dropped += o.trace_dropped;
     }
 
     /// The park/wake counter discipline each engine must honour (used by
@@ -187,6 +196,11 @@ pub struct GhsRun {
     /// Quality report of the partition this run executed under (vertex /
     /// edge balance, edge cut — correlate with `sim` comm costs).
     pub partition: PartitionStats,
+    /// Flight-recorder tracks (only populated when `GhsConfig::trace` is
+    /// set): one event ring per rank, plus one per scheduler worker on
+    /// the async engine. Feed to `obs::timeline::fragment_timeline` or
+    /// the `obs::chrome` exporters.
+    pub trace: Option<crate::obs::trace::TraceData>,
 }
 
 impl GhsRun {
@@ -222,6 +236,8 @@ mod tests {
             steals: 5,
             steal_fails: 8,
             ring_full_spills: 2,
+            trace_events: 100,
+            trace_dropped: 40,
             ..Default::default()
         };
         a.merge(&b);
@@ -237,6 +253,8 @@ mod tests {
         assert_eq!(a.steals, 5);
         assert_eq!(a.steal_fails, 8);
         assert_eq!(a.ring_full_spills, 2);
+        assert_eq!(a.trace_events, 100);
+        assert_eq!(a.trace_dropped, 40);
         assert_eq!(a.ready_max, 3, "high-water mark merges by max");
         a.merge(&ProfileCounters { ready_max: 2, ..Default::default() });
         assert_eq!(a.ready_max, 3, "smaller high-water marks do not lower the max");

@@ -84,6 +84,7 @@ use crate::ghs::rank::{RankState, StepStatus};
 use crate::ghs::result::GhsRun;
 use crate::ghs::ring::{lock_clean, MpscRing};
 use crate::graph::EdgeList;
+use crate::obs::trace::{EventKind, TraceRing, TraceSink};
 use crate::util::prng::Xoshiro256;
 
 /// Steps one activation may run before the task is rotated back onto its
@@ -160,6 +161,13 @@ struct Sched {
     /// Seed for the per-worker schedule-perturbation PRNGs
     /// (`GhsConfig::fuzz_sched`). `None` in normal runs.
     fuzz_seed: Option<u64>,
+    /// Flight-recorder ring depth (`GhsConfig::trace`); `None` disables
+    /// worker-side tracing entirely.
+    trace_depth: Option<u32>,
+    /// Finished worker rings, flushed once per worker at exit and attached
+    /// to the run's [`TraceData`](crate::obs::trace::TraceData) as
+    /// per-worker tracks.
+    worker_traces: Mutex<Vec<(usize, TraceRing)>>,
 }
 
 /// Per-worker scheduling state: the worker id (= its deque index), local
@@ -173,10 +181,22 @@ struct WorkerCtx {
     ring_spills: u64,
     fuzz: Option<Xoshiro256>,
     victims: Vec<usize>,
+    /// Flight-recorder ring for this worker's scheduling events (task
+    /// run/block/ready, steals, parks, spills, in-flight high-waters).
+    /// `None` unless `GhsConfig::trace` is set — the hot path then pays
+    /// one branch per hook.
+    trace: Option<TraceRing>,
+    /// Activation ordinal: the worker-track virtual clock. Bumped once per
+    /// task activation, so a track's timeline reads as "what this worker
+    /// ran, in order".
+    activations: u64,
+    /// Worker-local high-water of the shared `in_flight` counter; only new
+    /// maxima emit an `InFlight` sample.
+    inflight_max: u64,
 }
 
 impl WorkerCtx {
-    fn new(w: usize, fuzz_seed: Option<u64>) -> Self {
+    fn new(w: usize, fuzz_seed: Option<u64>, trace_depth: Option<u32>) -> Self {
         Self {
             w,
             steals: 0,
@@ -191,6 +211,17 @@ impl WorkerCtx {
                 )
             }),
             victims: Vec::new(),
+            trace: trace_depth.map(|depth| TraceRing::new(depth as usize)),
+            activations: 0,
+            inflight_max: 0,
+        }
+    }
+
+    /// Record a scheduling event if tracing is on (one branch otherwise).
+    #[inline]
+    fn trace_ev(&mut self, kind: EventKind, a: u64, b: u64, c: u64) {
+        if let Some(t) = self.trace.as_mut() {
+            t.record(kind, a, b, c);
         }
     }
 
@@ -322,6 +353,7 @@ impl Sched {
                 match self.deques[v].steal() {
                     Steal::Success(task) => {
                         ctx.steals += 1;
+                        ctx.trace_ev(EventKind::Steal, v as u64, task as u64, 0);
                         return Some(task);
                     }
                     Steal::Retry => continue,
@@ -379,6 +411,7 @@ impl Sched {
                 self.finish();
                 return None;
             }
+            ctx.trace_ev(EventKind::Park, 0, 0, 0);
             self.park();
         }
     }
@@ -414,12 +447,15 @@ fn deadlock_report(pending: i64, slots: &[Mutex<Option<RankState>>]) -> anyhow::
 /// one structured error instead of a poisoned-mutex cascade; the local
 /// counters are flushed either way.
 fn worker(s: &Sched, w: usize) {
-    let mut ctx = WorkerCtx::new(w, s.fuzz_seed);
+    let mut ctx = WorkerCtx::new(w, s.fuzz_seed, s.trace_depth);
     let outcome =
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_worker(s, &mut ctx)));
     s.steals.fetch_add(ctx.steals, Ordering::Relaxed);
     s.steal_fails.fetch_add(ctx.steal_fails, Ordering::Relaxed);
     s.ring_full_spills.fetch_add(ctx.ring_spills, Ordering::Relaxed);
+    if let Some(ring) = ctx.trace.take() {
+        lock_clean(&s.worker_traces).push((w, ring));
+    }
     if let Err(payload) = outcome {
         let msg = payload
             .downcast_ref::<&str>()
@@ -439,6 +475,18 @@ fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
     while let Some(task) = s.acquire(ctx) {
         let t = &s.tasks[task as usize];
         t.state.store(RUNNING, Ordering::SeqCst);
+        if let Some(tr) = ctx.trace.as_mut() {
+            // The activation ordinal is the worker track's virtual clock:
+            // the timeline reads as "what this worker ran, in order".
+            tr.set_now(ctx.activations);
+            ctx.activations += 1;
+            tr.record(EventKind::TaskRun, task as u64, 0, 0);
+            let infl = s.in_flight.load(Ordering::Relaxed).max(0) as u64;
+            if infl > ctx.inflight_max {
+                ctx.inflight_max = infl;
+                tr.record(EventKind::InFlight, infl, 0, 0);
+            }
+        }
         let mut slot = lock_clean(&s.slots[task as usize]);
         let rank = slot.as_mut().expect("task state owned by the run queue");
         // Spontaneous start on the task's first activation (every task is
@@ -480,7 +528,9 @@ fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
                 let peer = &s.tasks[dst as usize];
                 if !peer.inbox.push((rank.rank, buf, n)) {
                     ctx.ring_spills += 1;
+                    ctx.trace_ev(EventKind::Spill, dst as u64, 0, 0);
                 }
+                ctx.trace_ev(EventKind::TaskReady, dst as u64, 0, 0);
                 s.wake(dst, ctx.w);
             }
             if status == StepStatus::Blocked || s.done.load(Ordering::SeqCst) {
@@ -512,6 +562,7 @@ fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
                     .is_ok()
                 {
                     // The only transition that leaves the in-flight set.
+                    ctx.trace_ev(EventKind::TaskBlock, task as u64, 0, 0);
                     s.in_flight.fetch_sub(1, Ordering::SeqCst);
                 } else {
                     // Woken mid-quantum (traffic after our last drain):
@@ -568,6 +619,8 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
         steal_fails: AtomicU64::new(0),
         ring_full_spills: AtomicU64::new(0),
         fuzz_seed: config.fuzz_sched,
+        trace_depth: config.trace,
+        worker_traces: Mutex::new(Vec::new()),
     });
     // Seed every task onto worker 0's deque (single-threaded here, before
     // the pool exists, so the owner-only push contract holds). Workers
@@ -607,6 +660,20 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     run.profile.steals = sched.steals.load(Ordering::Relaxed);
     run.profile.steal_fails = sched.steal_fails.load(Ordering::Relaxed);
     run.profile.ring_full_spills = sched.ring_full_spills.load(Ordering::Relaxed);
+    // Attach the worker-side flight-recorder tracks (rank tracks were
+    // already gathered by `collect`). Worker event totals ride on top of
+    // the per-rank sums in the profile.
+    if let Some(trace) = run.trace.as_mut() {
+        let mut rings: Vec<(usize, TraceRing)> =
+            lock_clean(&sched.worker_traces).drain(..).collect();
+        rings.sort_by_key(|(w, _)| *w);
+        for (w, ring) in rings {
+            let track = ring.into_worker_trace(w as u32);
+            run.profile.trace_events += track.recorded;
+            run.profile.trace_dropped += track.dropped;
+            trace.workers.push(track);
+        }
+    }
     Ok(run)
 }
 

@@ -16,6 +16,7 @@
 
 use crate::ghs::message::{Message, Payload};
 use crate::ghs::rank::{RankState, NIL};
+use crate::obs::trace::EventKind;
 use crate::ghs::types::{EdgeState, Level, VertexState, MAX_WIRE_LEVEL};
 use crate::ghs::weight::{EdgeWeight, FragmentId};
 use crate::graph::VertexId;
@@ -121,6 +122,10 @@ impl RankState {
         if l < ln {
             // Absorb the lower-level fragment: j becomes a Branch and the
             // absorbed subtree receives our (level, identity, state).
+            if self.trace.is_some() {
+                let nbr = self.csr.col(j);
+                self.trace_ev(EventKind::FragmentAbsorb, v as u64, nbr as u64, ln as u64);
+            }
             self.mark_branch(v, j);
             self.send(v, j, Payload::Initiate { level: ln, fragment, state: sn });
             if sn == VertexState::Find {
@@ -137,6 +142,12 @@ impl RankState {
             debug_assert_eq!(self.edge_state[j], EdgeState::Branch, "Connect over Rejected edge");
             debug_assert!(ln < MAX_WIRE_LEVEL, "fragment level overflows 8-bit wire field");
             let fid: FragmentId = self.edge_weight(v, j);
+            if self.trace.is_some() {
+                // Fires at both core endpoints; the timeline replay
+                // counts unions, so the double emission is by design.
+                let nbr = self.csr.col(j);
+                self.trace_ev(EventKind::FragmentMerge, v as u64, nbr as u64, (ln + 1) as u64);
+            }
             self.send(
                 v,
                 j,
@@ -148,6 +159,10 @@ impl RankState {
 
     /// GHS (4): response to Initiate(L, F, S) on edge j.
     fn on_initiate(&mut self, v: VertexId, j: usize, l: Level, f: FragmentId, s: VertexState) {
+        if self.trace.is_some() {
+            let old = self.vars_of(v).ln;
+            self.trace_ev(EventKind::FragmentAdopt, v as u64, l as u64, old as u64);
+        }
         {
             let vars = self.vars_mut(v);
             vars.ln = l;
@@ -309,6 +324,10 @@ impl RankState {
                 // fragment spans its entire connected component.
                 self.vars_mut(v).halted = true;
                 self.halts += 1;
+                if self.trace.is_some() {
+                    let ln = self.vars_of(v).ln;
+                    self.trace_ev(EventKind::Halt, v as u64, 0, ln as u64);
+                }
             }
             // w < best_wt: the other core vertex performs change_core.
             Outcome::Done

@@ -103,6 +103,16 @@ pub struct MultilevelTrace {
     pub block_cut: u64,
     /// Whether the block layout won the comparison and was returned.
     pub used_fallback: bool,
+    /// Refinement passes executed, summed over every level (each level
+    /// runs at most `MAX_REFINE_PASSES`, stopping early when a pass moves
+    /// nothing).
+    pub passes_run: u64,
+    /// Positive-gain single-vertex moves applied across all passes.
+    pub moves_applied: u64,
+    /// Total cut weight removed by those moves (fine-edge units — the sum
+    /// of every applied move's gain, so `initial cut - gain_total` is the
+    /// refined cut when no level re-adds cut via uncoarsening).
+    pub gain_total: u64,
 }
 
 /// Merged adjacency: one `(neighbour, weight)` entry per neighbour,
@@ -152,13 +162,16 @@ fn cut_of(adj: &Adjacency, owner: &[u32]) -> u64 {
 
 /// One KL/FM-style boundary refinement phase at one level: repeated
 /// positive-gain single-vertex moves under the balance cap. Returns the
-/// cut after each pass (index 0 = before refinement).
+/// cut after each pass (index 0 = before refinement) and accumulates the
+/// work counters (`passes_run` / `moves_applied` / `gain_total`) into the
+/// build trace.
 fn refine(
     adj: &Adjacency,
     vwt: &[u64],
     owner: &mut [u32],
     loads: &mut [u64],
     cap: u64,
+    trace: &mut MultilevelTrace,
 ) -> Vec<u64> {
     let p = loads.len();
     let mut conn = vec![0u64; p];
@@ -166,6 +179,7 @@ fn refine(
     let mut cut = cut_of(adj, owner);
     let mut pass_cuts = vec![cut];
     for _ in 0..MAX_REFINE_PASSES {
+        trace.passes_run += 1;
         let mut moves = 0u32;
         for v in 0..adj.len() {
             let r = owner[v];
@@ -204,6 +218,8 @@ fn refine(
                 owner[v] = s;
                 cut -= gain;
                 moves += 1;
+                trace.moves_applied += 1;
+                trace.gain_total += gain;
             }
             for &o in &touched {
                 conn[o as usize] = 0;
@@ -233,6 +249,9 @@ pub fn multilevel_with_trace(
         final_cut: 0,
         block_cut: 0,
         used_fallback: false,
+        passes_run: 0,
+        moves_applied: 0,
+        gain_total: 0,
     };
     if n == 0 {
         return (MappedPartition::new(MappedData::from_owner_map(Vec::new(), p)), trace);
@@ -396,7 +415,7 @@ pub fn multilevel_with_trace(
     }
 
     // ---- 3. refine, then uncoarsen level by level and refine again ----
-    let pass_cuts = refine(&adj, &vwt, &mut owner, &mut loads, cap);
+    let pass_cuts = refine(&adj, &vwt, &mut owner, &mut loads, cap, &mut trace);
     trace.levels.push(LevelTrace {
         n_vertices: n_cur as u32,
         vertex_weights: vwt.clone(),
@@ -411,7 +430,7 @@ pub fn multilevel_with_trace(
         for (v, &o) in f_owner.iter().enumerate() {
             f_loads[o as usize] += lvl.vwt[v];
         }
-        let pass_cuts = refine(&lvl.adj, &lvl.vwt, &mut f_owner, &mut f_loads, cap);
+        let pass_cuts = refine(&lvl.adj, &lvl.vwt, &mut f_owner, &mut f_loads, cap, &mut trace);
         trace.levels.push(LevelTrace {
             n_vertices: lvl.vwt.len() as u32,
             vertex_weights: lvl.vwt,
@@ -514,6 +533,31 @@ mod tests {
         assert_eq!(trace.cap, 16 + 64, "slack clamps at n");
         let part = Partition::Mapped(mapped);
         assert_eq!((0..4).map(|r| part.n_local(r)).sum::<u32>(), 64);
+    }
+
+    /// The refinement-work counters must account exactly: `passes_run`
+    /// matches the recorded pass cuts and `gain_total` is the total cut
+    /// weight the passes removed.
+    #[test]
+    fn refinement_counters_account_for_the_work() {
+        let n = 4096u32;
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(5);
+        let mut perm: Vec<u32> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut g = EdgeList::with_vertices(n);
+        for i in 0..(n - 1) as usize {
+            g.push(perm[i], perm[i + 1], 0.5);
+        }
+        let (_, trace) = build(&g, n, 4);
+        let passes: u64 = trace.levels.iter().map(|l| l.pass_cuts.len() as u64 - 1).sum();
+        assert_eq!(trace.passes_run, passes, "one pass per recorded pass cut");
+        let gain: u64 = trace
+            .levels
+            .iter()
+            .map(|l| l.pass_cuts[0] - *l.pass_cuts.last().expect("never empty"))
+            .sum();
+        assert_eq!(trace.gain_total, gain, "gain sums to the cut removed per level");
+        assert!(trace.moves_applied > 0 && trace.gain_total > 0, "refinement did work");
     }
 
     /// On a contiguous path, block is already optimal (p - 1 cut edges);

@@ -13,6 +13,9 @@
 //!   multiplexes thousands of rank tasks onto a worker pool).
 //! * [`sim`] — simulated cluster: LogGOPS interconnect model, cost-model
 //!   clocks, profiling and message-size timelines.
+//! * [`obs`] — observability: flight-recorder event tracing (per-rank
+//!   bounded rings, deterministic fingerprints), fragment-lifecycle
+//!   timeline reconstruction, and Chrome-trace/JSONL exporters.
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas min-edge
 //!   kernel (`artifacts/*.hlo.txt`) and drives the accelerated Borůvka
 //!   fragment engine. Gated behind the off-by-default **`accelerate`**
@@ -36,6 +39,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod ghs;
 pub mod graph;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

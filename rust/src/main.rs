@@ -37,6 +37,13 @@ COMMANDS
                   --partition block|degree|hub|multilevel[:eps]|file:<path>
                   --hash-sizing paper|pow2 (mask-indexed hash table)
                   --no-test-queue  --input FILE  --threaded  --verify
+                  --trace[=depth]  (flight recorder: per-rank event rings)
+  trace         Record a flight-recorder run and export/inspect the trace:
+                  --path N (path graph, seed 42) | --family --scale | --input FILE
+                  --ranks N  --workers N [default 1]  --engine E [default async]
+                  --depth N (ring depth)  --out FILE  --format chrome|jsonl
+                  --expect HEX (exit nonzero unless the combined per-rank
+                  fingerprint matches — the CI trace-conformance gate)
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
   partition     Print partition quality metrics (vertex/edge balance, edge
                   cut) per strategy: --family --scale --ranks [--top-k N]
@@ -85,6 +92,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     match args.command.as_str() {
         "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
         "generate" => cmd_generate(&args),
         "partition" => cmd_partition(&args),
         "verify" => cmd_verify(&args),
@@ -149,6 +157,19 @@ fn load_or_generate(args: &Args) -> Result<(String, EdgeList)> {
     }
 }
 
+/// Parse `--trace[=depth]`: absent → tracing off, bare `--trace` → the
+/// default ring depth, `--trace=N` / `--trace N` → depth N.
+fn parse_trace_flag(args: &Args) -> Result<Option<u32>> {
+    match args.get_opt("trace") {
+        None => Ok(None),
+        Some("true") => Ok(Some(ghs_mst::obs::trace::DEFAULT_TRACE_DEPTH)),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("bad --trace {v} (expected a ring depth)")),
+    }
+}
+
 /// Parse `--engine` (with the legacy `--threaded` boolean as an alias for
 /// `--engine threaded`).
 fn parse_engine_flag(args: &Args) -> Result<EngineKind> {
@@ -166,7 +187,7 @@ fn parse_engine_flag(args: &Args) -> Result<EngineKind> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "family", "scale", "ranks", "engine", "workers", "search", "wire", "partition",
-        "hash-sizing", "no-test-queue", "input", "threaded", "verify", "quiet",
+        "hash-sizing", "no-test-queue", "input", "threaded", "verify", "quiet", "trace",
     ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
@@ -192,6 +213,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.get_bool("no-test-queue") {
         cfg.separate_test_queue = false;
     }
+    cfg.trace = parse_trace_flag(args)?;
     let t0 = std::time::Instant::now();
     let run = match engine {
         EngineKind::Sequential if args.get_bool("verify") => {
@@ -259,11 +281,121 @@ fn cmd_run(args: &Args) -> Result<()> {
             run.profile.steals, run.profile.steal_fails, run.profile.ring_full_spills
         );
     }
+    if let Some(trace) = &run.trace {
+        println!(
+            "flight recorder : {} events recorded, {} dropped, combined fp {:#018x}",
+            run.profile.trace_events,
+            run.profile.trace_dropped,
+            trace.combined_fingerprint()
+        );
+    }
     println!("supersteps      : {}", run.supersteps);
     println!("sim time        : {}", fmt_seconds(run.sim.total_time));
     println!("wall time       : {}", fmt_seconds(wall.as_secs_f64()));
     if args.get_bool("verify") {
         println!("verified        : forest == Kruskal oracle ✓");
+    }
+    Ok(())
+}
+
+/// Flight-recorder driver: run one traced GHS execution, print the
+/// per-rank event fingerprints and the fragment-lifecycle timeline, and
+/// optionally export the trace (Chrome/Perfetto JSON or JSONL) or gate on
+/// a pinned combined fingerprint (`--expect`, the CI conformance hook).
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "path", "family", "scale", "input", "ranks", "workers", "engine", "depth", "out",
+        "format", "expect",
+    ])?;
+    let (label, clean) = if let Some(n) = args.get_opt("path") {
+        let n: u32 = n.parse().map_err(|_| anyhow::anyhow!("bad --path {n}"))?;
+        // Seed 42 matches the Python oracle's `path_graph(n, seed=42)`.
+        let mut rng = ghs_mst::util::prng::Xoshiro256::seed_from_u64(42);
+        let g = ghs_mst::graph::generators::structured::path(n, &mut rng);
+        let (g, _) = preprocess(&g);
+        (format!("path-{n}"), g)
+    } else {
+        load_or_generate(args)?
+    };
+    let ranks = args.get_num("ranks", 8u32)?;
+    let engine = match args.get_opt("engine") {
+        None => EngineKind::Async,
+        Some(s) => EngineKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --engine {s} (sequential|threaded|async)"))?,
+    };
+    let mut cfg = GhsConfig::final_version(ranks);
+    // One worker by default: single-threaded async scheduling is fully
+    // deterministic, so the fingerprint is reproducible run-to-run.
+    cfg.workers = args.get_num("workers", 1u32)?;
+    cfg.trace = Some(args.get_num("depth", ghs_mst::obs::trace::DEFAULT_TRACE_DEPTH)?);
+    let run = run_kind(engine, &clean, cfg)?;
+    let trace = run
+        .trace
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("engine returned no trace despite cfg.trace"))?;
+
+    println!(
+        "trace           : {label}, {ranks} ranks, {} engine ({} events, {} dropped)",
+        engine.label(),
+        run.profile.trace_events,
+        run.profile.trace_dropped
+    );
+    for r in &trace.ranks {
+        println!(
+            "  rank {:>4}     : fp {:#018x}  ({} events, {} dropped)",
+            r.rank, r.fingerprint, r.recorded, r.dropped
+        );
+    }
+    for w in &trace.workers {
+        println!(
+            "  worker {:>2}    : {} events, {} dropped",
+            w.worker, w.recorded, w.dropped
+        );
+    }
+    let combined = trace.combined_fingerprint();
+    println!("combined fp     : {combined:#018x}");
+
+    let tl = ghs_mst::obs::timeline::fragment_timeline(clean.n_vertices, trace);
+    println!(
+        "fragment tree   : {} final fragments (forest: {}), max level {}, \
+         critical merge depth {}, {} halts",
+        tl.final_fragments, run.forest.n_components, tl.max_level, tl.critical_depth, tl.halts
+    );
+    for row in &tl.levels {
+        println!(
+            "  level {:>2}      : {:>6} merges {:>6} absorbs -> {:>7} fragments, largest {}",
+            row.level, row.merges, row.absorbs, row.fragments_after, row.largest_after
+        );
+    }
+    let costs = ghs_mst::sim::costmodel::OpCosts::default();
+    let phases = ghs_mst::obs::timeline::phase_series(trace, &costs, 8);
+    println!("phase series    : (per virtual-time window, modeled seconds)");
+    for p in &phases {
+        println!(
+            "  t0 {:>12}  : read {:.3e}  process {:.3e}  send {:.3e}  postpone {:.3e}",
+            p.t0, p.read, p.process, p.send, p.postpone
+        );
+    }
+
+    if let Some(out) = args.get_opt("out") {
+        let body = match args.get("format", "chrome").as_str() {
+            "chrome" => ghs_mst::obs::chrome::chrome_trace_json(trace),
+            "jsonl" => ghs_mst::obs::chrome::jsonl(trace),
+            f => bail!("bad --format {f} (chrome|jsonl)"),
+        };
+        std::fs::write(out, &body)?;
+        println!("export          : wrote {} bytes to {out}", body.len());
+    }
+    if let Some(expect) = args.get_opt("expect") {
+        let want = u64::from_str_radix(expect.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow::anyhow!("bad --expect {expect} (hex fingerprint)"))?;
+        if combined != want {
+            bail!(
+                "trace fingerprint mismatch: got {combined:#018x}, expected {want:#018x} \
+                 (event stream diverged from the pinned conformance baseline)"
+            );
+        }
+        println!("fingerprint OK  : matches pinned {want:#018x}");
     }
     Ok(())
 }
@@ -341,6 +473,27 @@ fn cmd_partition(args: &Args) -> Result<()> {
         clean.n_edges()
     ));
     println!("{}", t.to_markdown());
+    // Refinement-work counters for the multilevel build (the ROADMAP
+    // "refinement-pass counters" item): how much the KL/FM passes did.
+    {
+        let (_, mt) = ghs_mst::graph::partition::multilevel::multilevel_with_trace(
+            &clean,
+            clean.n_vertices.max(1),
+            ranks,
+            ghs_mst::graph::partition::multilevel::DEFAULT_EPS,
+            ghs_mst::graph::partition::multilevel::DEFAULT_SEED,
+        );
+        println!(
+            "multilevel refinement: {} passes, {} moves applied, total gain {} \
+             (cut {} vs block {}{})",
+            mt.passes_run,
+            mt.moves_applied,
+            mt.gain_total,
+            mt.final_cut,
+            mt.block_cut,
+            if mt.used_fallback { ", fell back to block" } else { "" }
+        );
+    }
     if args.get_bool("write") {
         let path = t.write("partition_quality")?;
         eprintln!("  [exp] wrote {path:?}");

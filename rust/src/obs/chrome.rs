@@ -1,0 +1,197 @@
+//! Trace exporters: Chrome-trace (`chrome://tracing` / Perfetto) JSON and
+//! a line-delimited JSON event stream.
+//!
+//! The Chrome format is the "JSON Array Format" subset every viewer
+//! accepts: a single `traceEvents` array of metadata (`ph:"M"`), instant
+//! (`ph:"i"`) and counter (`ph:"C"`) events. Rank tracks live under
+//! `pid 1`, scheduler-worker tracks under `pid 2`, one `tid` per track.
+//! Queue-depth and in-flight samples become counter series so the viewer
+//! draws them as area charts; everything else is an instant with the raw
+//! `(a, b, c)` payload in `args`.
+//!
+//! All strings emitted are static labels and formatted integers, so the
+//! writer needs no JSON escaping. Timestamps are emitted verbatim in the
+//! ring's clock units (ns of virtual time on the sequential engine,
+//! iterations / activation ordinals elsewhere); viewers only require
+//! per-track monotonicity, which [`super::trace::TraceRing`] guarantees.
+
+use crate::obs::trace::{EventKind, TraceData, TraceEvent};
+use std::fmt::Write as _;
+
+/// pid of rank tracks in the Chrome export.
+pub const RANK_PID: u32 = 1;
+/// pid of scheduler-worker tracks in the Chrome export.
+pub const WORKER_PID: u32 = 2;
+
+fn push_meta(out: &mut String, pid: u32, tid: u32, key: &str, name: &str, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    let _ = write!(
+        out,
+        "\n{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{key}\",\"args\":{{\"name\":\"{name}\"}}}}"
+    );
+}
+
+fn push_event(out: &mut String, pid: u32, tid: u32, ev: &TraceEvent, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    match ev.kind {
+        EventKind::QueueDepth => {
+            let _ = write!(
+                out,
+                "\n{{\"ph\":\"C\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\"name\":\"queue t{tid}\",\
+                 \"args\":{{\"active\":{a},\"stash\":{b}}}}}",
+                ts = ev.ts,
+                a = ev.a,
+                b = ev.b,
+            );
+        }
+        EventKind::InFlight => {
+            let _ = write!(
+                out,
+                "\n{{\"ph\":\"C\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\
+                 \"name\":\"in_flight t{tid}\",\"args\":{{\"tasks\":{a}}}}}",
+                ts = ev.ts,
+                a = ev.a,
+            );
+        }
+        _ => {
+            let _ = write!(
+                out,
+                "\n{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\"name\":\"{name}\",\
+                 \"s\":\"t\",\"args\":{{\"a\":{a},\"b\":{b},\"c\":{c}}}}}",
+                ts = ev.ts,
+                name = ev.kind.label(),
+                a = ev.a,
+                b = ev.b,
+                c = ev.c,
+            );
+        }
+    }
+}
+
+/// Render the full trace as a Chrome-trace JSON document.
+pub fn chrome_trace_json(trace: &TraceData) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    push_meta(&mut out, RANK_PID, 0, "process_name", "ghs ranks", &mut first);
+    if !trace.workers.is_empty() {
+        push_meta(&mut out, WORKER_PID, 0, "process_name", "scheduler workers", &mut first);
+    }
+    for rt in &trace.ranks {
+        push_meta(&mut out, RANK_PID, rt.rank, "thread_name", &format!("rank {}", rt.rank), &mut first);
+    }
+    for wt in &trace.workers {
+        push_meta(
+            &mut out,
+            WORKER_PID,
+            wt.worker,
+            "thread_name",
+            &format!("worker {}", wt.worker),
+            &mut first,
+        );
+    }
+    for rt in &trace.ranks {
+        for ev in &rt.events {
+            push_event(&mut out, RANK_PID, rt.rank, ev, &mut first);
+        }
+    }
+    for wt in &trace.workers {
+        for ev in &wt.events {
+            push_event(&mut out, WORKER_PID, wt.worker, ev, &mut first);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Render the full trace as line-delimited JSON: one event object per
+/// line, rank tracks first, then worker tracks.
+pub fn jsonl(trace: &TraceData) -> String {
+    let mut out = String::new();
+    let mut line = |track: &str, id: u32, ev: &TraceEvent| {
+        let _ = writeln!(
+            out,
+            "{{\"track\":\"{track}\",\"id\":{id},\"ts\":{ts},\"kind\":\"{kind}\",\
+             \"a\":{a},\"b\":{b},\"c\":{c}}}",
+            ts = ev.ts,
+            kind = ev.kind.label(),
+            a = ev.a,
+            b = ev.b,
+            c = ev.c,
+        );
+    };
+    for rt in &trace.ranks {
+        for ev in &rt.events {
+            line("rank", rt.rank, ev);
+        }
+    }
+    for wt in &trace.workers {
+        for ev in &wt.events {
+            line("worker", wt.worker, ev);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{TraceRing, TraceSink, WorkerTrace};
+
+    fn sample() -> TraceData {
+        let mut r = TraceRing::new(16);
+        r.set_now(3);
+        r.record(EventKind::Send, 1, 2, 13);
+        r.record(EventKind::QueueDepth, 4, 1, 9);
+        let mut w = TraceRing::new(16);
+        w.set_now(0);
+        w.record(EventKind::TaskRun, 0, 0, 0);
+        w.record(EventKind::InFlight, 5, 0, 0);
+        TraceData {
+            ranks: vec![r.into_rank_trace(0)],
+            workers: vec![WorkerTrace {
+                worker: 0,
+                events: w.events(),
+                recorded: w.recorded,
+                dropped: w.dropped,
+            }],
+        }
+    }
+
+    #[test]
+    fn chrome_export_has_both_process_groups_and_named_tracks() {
+        let doc = chrome_trace_json(&sample());
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.trim_end().ends_with("]}"));
+        assert!(doc.contains("\"name\":\"ghs ranks\""));
+        assert!(doc.contains("\"name\":\"scheduler workers\""));
+        assert!(doc.contains("\"name\":\"rank 0\""));
+        assert!(doc.contains("\"name\":\"worker 0\""));
+    }
+
+    #[test]
+    fn queue_and_inflight_become_counter_series() {
+        let doc = chrome_trace_json(&sample());
+        assert!(doc.contains("\"ph\":\"C\""));
+        assert!(doc.contains("\"args\":{\"active\":4,\"stash\":1}"));
+        assert!(doc.contains("\"args\":{\"tasks\":5}"));
+        assert!(doc.contains("\"ph\":\"i\"") && doc.contains("\"name\":\"send\""));
+    }
+
+    #[test]
+    fn jsonl_emits_one_line_per_event() {
+        let data = sample();
+        let text = jsonl(&data);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')));
+        assert!(lines[0].contains("\"track\":\"rank\""));
+        assert!(lines[3].contains("\"track\":\"worker\""));
+        assert!(lines[0].contains("\"kind\":\"send\""));
+    }
+}

@@ -1,0 +1,15 @@
+//! Observability: the flight-recorder tracing subsystem.
+//!
+//! * [`trace`] — event schema, per-track bounded rings, deterministic
+//!   stream fingerprints ([`trace::TraceRing`], [`trace::TraceData`]).
+//! * [`timeline`] — fragment-lifecycle reconstruction (GHS merge tree,
+//!   growth curve, critical merge chain) and a per-window phase series.
+//! * [`chrome`] — Chrome-trace/Perfetto JSON and JSONL exporters.
+//!
+//! Tracing is enabled with `GhsConfig::trace = Some(ring_depth)` (CLI:
+//! `--trace[=depth]`, subcommand: `ghs-mst trace`); the result surfaces
+//! as `GhsRun::trace`.
+
+pub mod chrome;
+pub mod timeline;
+pub mod trace;

@@ -1,0 +1,397 @@
+//! Fragment-lifecycle timeline: replay the flight-recorder event stream
+//! into the GHS merge tree.
+//!
+//! `FragmentMerge` / `FragmentAbsorb` events carry `(vertex, neighbour,
+//! level)`, which is exactly a union-find script for the spanning forest:
+//! replaying the unions reconstructs, per GHS level, how many fragments
+//! merged or were absorbed, how many fragments remain, and how the
+//! largest fragment grew — the §4 "merge cascade" view the aggregate
+//! `ProfileCounters` cannot show. Merge events fire at *both* core
+//! endpoints, so the replay counts successful unions (the second union of
+//! a core pair is a no-op) rather than raw events.
+//!
+//! The replay is order-insensitive for the final fragment count (unions
+//! commute), which is what makes `final_fragments == forest components`
+//! assertable even for multi-worker async runs with nondeterministic
+//! event interleavings.
+
+use crate::obs::trace::{EventKind, TraceData, TraceEvent};
+use crate::sim::costmodel::OpCosts;
+
+/// Aggregates for one GHS level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelRow {
+    /// Fragment level *after* the operation (merge rows report `ln + 1`).
+    pub level: u32,
+    /// Successful core-edge merges at this level.
+    pub merges: u64,
+    /// Fragments absorbed into a level-`level` fragment.
+    pub absorbs: u64,
+    /// Fragments remaining after all operations up to and including this
+    /// level.
+    pub fragments_after: u64,
+    /// Largest fragment size after this level.
+    pub largest_after: u64,
+}
+
+/// The reconstructed merge tree of one traced run.
+#[derive(Debug, Clone, Default)]
+pub struct FragmentTimeline {
+    pub n_vertices: u32,
+    /// Per-level rows in ascending level order (levels with no events are
+    /// omitted).
+    pub levels: Vec<LevelRow>,
+    /// `(ts, size)` samples of the largest-fragment size, emitted each
+    /// time the maximum grows (virtual-clock x-axis of the growth curve).
+    pub growth: Vec<(u64, u64)>,
+    /// Depth of the merge chain ending in the final largest fragment —
+    /// the critical path of the cascade (absorbs do not deepen it).
+    pub critical_depth: u64,
+    /// Fragments remaining after the full replay. Must equal the forest's
+    /// component count when no fragment events were dropped.
+    pub final_fragments: u64,
+    /// Highest level observed in any fragment event.
+    pub max_level: u32,
+    /// `Halt` events seen (== halted core vertices).
+    pub halts: u64,
+}
+
+/// Size + merge-depth union-find over vertex ids.
+struct Uf {
+    parent: Vec<u32>,
+    size: Vec<u64>,
+    depth: Vec<u64>,
+    sets: u64,
+    largest: u64,
+}
+
+impl Uf {
+    fn new(n: u32) -> Self {
+        Self {
+            parent: (0..n).collect(),
+            size: vec![1; n as usize],
+            depth: vec![0; n as usize],
+            sets: n as u64,
+            largest: if n == 0 { 0 } else { 1 },
+        }
+    }
+
+    fn find(&mut self, mut v: u32) -> u32 {
+        while self.parent[v as usize] != v {
+            let gp = self.parent[self.parent[v as usize] as usize];
+            self.parent[v as usize] = gp;
+            v = gp;
+        }
+        v
+    }
+
+    /// Union the sets of `a` and `b`; `true` if they were distinct.
+    /// `deepen` marks a core merge, which extends the merge chain.
+    fn union(&mut self, a: u32, b: u32, deepen: bool) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (big, small) = if self.size[ra as usize] >= self.size[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[small as usize] = big;
+        self.size[big as usize] += self.size[small as usize];
+        let joined = self.depth[big as usize].max(self.depth[small as usize]);
+        self.depth[big as usize] = if deepen { joined + 1 } else { joined };
+        self.sets -= 1;
+        self.largest = self.largest.max(self.size[big as usize]);
+        true
+    }
+}
+
+/// `(ts, rank, seq)`-ordered fragment/halt events of every rank track.
+fn fragment_events(trace: &TraceData) -> Vec<(u64, u32, usize, TraceEvent)> {
+    let mut evs = Vec::new();
+    for rt in &trace.ranks {
+        for (i, ev) in rt.events.iter().enumerate() {
+            match ev.kind {
+                EventKind::FragmentMerge | EventKind::FragmentAbsorb | EventKind::Halt => {
+                    evs.push((ev.ts, rt.rank, i, *ev));
+                }
+                _ => {}
+            }
+        }
+    }
+    evs.sort_by_key(|&(ts, rank, i, _)| (ts, rank, i));
+    evs
+}
+
+/// Replay the fragment events of `trace` into a timeline over
+/// `n_vertices` vertices.
+pub fn fragment_timeline(n_vertices: u32, trace: &TraceData) -> FragmentTimeline {
+    let evs = fragment_events(trace);
+
+    // Pass 1 — virtual-time order: growth curve + critical merge chain.
+    let mut uf = Uf::new(n_vertices);
+    let mut growth = Vec::new();
+    let mut halts = 0u64;
+    for &(ts, _, _, ev) in &evs {
+        match ev.kind {
+            EventKind::FragmentMerge | EventKind::FragmentAbsorb => {
+                let before = uf.largest;
+                uf.union(ev.a as u32, ev.b as u32, ev.kind == EventKind::FragmentMerge);
+                if uf.largest > before {
+                    growth.push((ts, uf.largest));
+                }
+            }
+            EventKind::Halt => halts += 1,
+            _ => {}
+        }
+    }
+    let final_fragments = uf.sets;
+    let critical_depth = if n_vertices == 0 {
+        0
+    } else {
+        let mut deepest = 0u64;
+        let mut best_size = 0u64;
+        for v in 0..n_vertices {
+            let r = uf.find(v);
+            if uf.size[r as usize] > best_size {
+                best_size = uf.size[r as usize];
+                deepest = uf.depth[r as usize];
+            }
+        }
+        deepest
+    };
+
+    // Pass 2 — level-grouped order: per-level rows. Events within a level
+    // keep their virtual-time order; levels are processed ascending so
+    // `fragments_after` is cumulative in the GHS sense even when a slow
+    // rank's level-k merge lands after a fast rank's level-(k+1) one.
+    let mut by_level: Vec<(u32, TraceEvent)> = evs
+        .iter()
+        .filter(|(_, _, _, ev)| ev.kind != EventKind::Halt)
+        .map(|&(_, _, _, ev)| (ev.c as u32, ev))
+        .collect();
+    by_level.sort_by_key(|&(lvl, _)| lvl); // stable: in-level order preserved
+    let mut uf = Uf::new(n_vertices);
+    let mut levels: Vec<LevelRow> = Vec::new();
+    let mut max_level = 0u32;
+    for &(lvl, ev) in &by_level {
+        max_level = max_level.max(lvl);
+        if levels.last().map(|r| r.level) != Some(lvl) {
+            levels.push(LevelRow {
+                level: lvl,
+                merges: 0,
+                absorbs: 0,
+                fragments_after: 0,
+                largest_after: 0,
+            });
+        }
+        let united = uf.union(ev.a as u32, ev.b as u32, ev.kind == EventKind::FragmentMerge);
+        let row = levels.last_mut().expect("row pushed above");
+        if united {
+            match ev.kind {
+                EventKind::FragmentMerge => row.merges += 1,
+                EventKind::FragmentAbsorb => row.absorbs += 1,
+                _ => {}
+            }
+        }
+        row.fragments_after = uf.sets;
+        row.largest_after = uf.largest;
+    }
+
+    FragmentTimeline {
+        n_vertices,
+        levels,
+        growth,
+        critical_depth,
+        final_fragments,
+        max_level,
+        halts,
+    }
+}
+
+/// One window of the Fig-3-style per-phase time series: the run's
+/// [`crate::sim::profile::Breakdown`] phases priced per trace window
+/// instead of once per run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseWindow {
+    /// Window start timestamp (ring clock units).
+    pub t0: u64,
+    /// Read phase: batch decode + per-byte receive costs (`Recv`).
+    pub read: f64,
+    /// Process phase: queue messages processed (`QueueDepth.c` deltas).
+    pub process: f64,
+    /// Send phase: encode + per-byte transmit costs (`Send`).
+    pub send: f64,
+    /// Postpone churn: stash re-tries (`Postpone`).
+    pub postpone: f64,
+}
+
+impl PhaseWindow {
+    pub fn total(&self) -> f64 {
+        self.read + self.process + self.send + self.postpone
+    }
+}
+
+/// Price the rank event stream into `n_windows` equal virtual-time
+/// windows. Message processing is recovered from the cumulative-processed
+/// counter sampled by `QueueDepth` events (per-rank deltas), the other
+/// phases directly from their events.
+pub fn phase_series(trace: &TraceData, costs: &OpCosts, n_windows: usize) -> Vec<PhaseWindow> {
+    let n_windows = n_windows.max(1);
+    let ts_max = trace
+        .ranks
+        .iter()
+        .flat_map(|r| r.events.iter().map(|e| e.ts))
+        .max()
+        .unwrap_or(0);
+    let span = ts_max + 1;
+    let width = (span + n_windows as u64 - 1) / n_windows as u64;
+    let mut windows: Vec<PhaseWindow> = (0..n_windows)
+        .map(|i| PhaseWindow { t0: i as u64 * width, ..PhaseWindow::default() })
+        .collect();
+    for rt in &trace.ranks {
+        let mut last_processed = 0u64;
+        for ev in &rt.events {
+            let w = &mut windows[((ev.ts / width) as usize).min(n_windows - 1)];
+            match ev.kind {
+                EventKind::Recv => {
+                    w.read += ev.a as f64 * costs.decode_msg + ev.b as f64 * costs.byte_rx;
+                }
+                EventKind::Send => {
+                    w.send += costs.encode_msg + ev.c as f64 * costs.byte_tx;
+                }
+                EventKind::Postpone => w.postpone += costs.postpone_retry,
+                EventKind::QueueDepth => {
+                    // `c` is cumulative; a ring that dropped its oldest
+                    // samples still yields correct deltas from the first
+                    // retained sample onward.
+                    let delta = ev.c.saturating_sub(last_processed);
+                    last_processed = ev.c;
+                    w.process += delta as f64 * costs.process_msg;
+                }
+                _ => {}
+            }
+        }
+    }
+    windows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{RankTrace, TraceRing, TraceSink};
+
+    fn ring_to_trace(mut f: impl FnMut(&mut TraceRing), rank: u32) -> RankTrace {
+        let mut r = TraceRing::new(1024);
+        f(&mut r);
+        r.into_rank_trace(rank)
+    }
+
+    /// 6 vertices: level-1 merges {0,1} and {2,3} (both endpoints emit),
+    /// level-1 absorb of 4 into {0,1}, then a level-2 merge of the two
+    /// fragments. Vertex 5 stays isolated.
+    fn cascade() -> TraceData {
+        let r0 = ring_to_trace(
+            |r| {
+                r.set_now(1);
+                r.record(EventKind::FragmentMerge, 0, 1, 1);
+                r.record(EventKind::FragmentMerge, 1, 0, 1);
+                r.set_now(2);
+                r.record(EventKind::FragmentAbsorb, 0, 4, 1);
+                r.set_now(5);
+                r.record(EventKind::FragmentMerge, 0, 2, 2);
+                r.record(EventKind::Halt, 0, 0, 2);
+            },
+            0,
+        );
+        let r1 = ring_to_trace(
+            |r| {
+                r.set_now(1);
+                r.record(EventKind::FragmentMerge, 2, 3, 1);
+                r.record(EventKind::FragmentMerge, 3, 2, 1);
+                r.set_now(5);
+                r.record(EventKind::FragmentMerge, 2, 0, 2);
+            },
+            1,
+        );
+        TraceData { ranks: vec![r0, r1], workers: Vec::new() }
+    }
+
+    #[test]
+    fn replay_reconstructs_the_merge_tree() {
+        let tl = fragment_timeline(6, &cascade());
+        assert_eq!(tl.final_fragments, 2, "{{0..4}} and isolated 5");
+        assert_eq!(tl.max_level, 2);
+        assert_eq!(tl.halts, 1);
+        assert_eq!(tl.levels.len(), 2);
+        let l1 = tl.levels[0];
+        assert_eq!((l1.level, l1.merges, l1.absorbs), (1, 2, 1));
+        assert_eq!(l1.fragments_after, 3, "{{0,1,4}}, {{2,3}}, {{5}}");
+        assert_eq!(l1.largest_after, 3);
+        let l2 = tl.levels[1];
+        assert_eq!((l2.level, l2.merges, l2.absorbs), (2, 1, 0));
+        assert_eq!(l2.fragments_after, 2);
+        assert_eq!(l2.largest_after, 5);
+    }
+
+    #[test]
+    fn double_emitted_merges_count_once() {
+        let tl = fragment_timeline(6, &cascade());
+        let total_merges: u64 = tl.levels.iter().map(|l| l.merges).sum();
+        assert_eq!(total_merges, 3, "6 merge events, 3 actual merges");
+    }
+
+    #[test]
+    fn growth_curve_is_monotone_and_ends_at_largest() {
+        let tl = fragment_timeline(6, &cascade());
+        assert!(!tl.growth.is_empty());
+        for w in tl.growth.windows(2) {
+            assert!(w[0].0 <= w[1].0, "ts monotone");
+            assert!(w[0].1 < w[1].1, "size strictly growing");
+        }
+        assert_eq!(tl.growth.last().expect("non-empty").1, 5);
+    }
+
+    #[test]
+    fn critical_depth_tracks_the_merge_chain() {
+        // {0,1} depth 1; {2,3} depth 1; absorb keeps 1; level-2 merge
+        // joins two depth-1 chains -> depth 2.
+        let tl = fragment_timeline(6, &cascade());
+        assert_eq!(tl.critical_depth, 2);
+    }
+
+    #[test]
+    fn empty_trace_yields_singletons() {
+        let tl = fragment_timeline(7, &TraceData::default());
+        assert_eq!(tl.final_fragments, 7);
+        assert_eq!(tl.levels.len(), 0);
+        assert_eq!(tl.critical_depth, 0);
+    }
+
+    #[test]
+    fn phase_series_prices_each_window() {
+        let costs = OpCosts::default();
+        let rt = ring_to_trace(
+            |r| {
+                r.set_now(0);
+                r.record(EventKind::Send, 7, 0, 10); // 10 wire bytes
+                r.record(EventKind::Recv, 2, 20, 0); // 2 msgs, 20 bytes
+                r.set_now(9);
+                r.record(EventKind::Postpone, 7, 2, 0);
+                r.record(EventKind::QueueDepth, 3, 1, 5); // 5 processed
+            },
+            0,
+        );
+        let data = TraceData { ranks: vec![rt], workers: Vec::new() };
+        let w = phase_series(&data, &costs, 2);
+        assert_eq!(w.len(), 2);
+        assert_eq!((w[0].t0, w[1].t0), (0, 5));
+        let eps = 1e-15;
+        assert!((w[0].send - (costs.encode_msg + 10.0 * costs.byte_tx)).abs() < eps);
+        assert!((w[0].read - (2.0 * costs.decode_msg + 20.0 * costs.byte_rx)).abs() < eps);
+        assert!((w[1].postpone - costs.postpone_retry).abs() < eps);
+        assert!((w[1].process - 5.0 * costs.process_msg).abs() < eps);
+        assert!(w[1].total() > 0.0);
+    }
+}

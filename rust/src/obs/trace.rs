@@ -1,0 +1,392 @@
+//! Flight-recorder event tracing: per-rank (and per-worker) bounded event
+//! rings stamped with the virtual clock.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled overhead is provably zero.** Tracing is off by default
+//!    (`GhsConfig::trace == None`); every hook in the hot path is an
+//!    `Option` check on a field the rank already owns — no allocation, no
+//!    atomic, no counter twitch. The perf-regression counter baselines are
+//!    byte-identical with tracing off (asserted in `rust/tests/trace.rs`).
+//! 2. **Deterministic fingerprints.** Every event offered to a ring folds
+//!    into an order-sensitive FNV-style fingerprint *before* any ring
+//!    bounding, so the fingerprint is independent of ring depth and of the
+//!    (engine-dependent) timestamps: the same logical event stream always
+//!    hashes the same, which is what lets `pipeline_check.py` reproduce
+//!    per-rank fingerprints without modelling clocks.
+//! 3. **Bounded memory, oldest dropped.** The ring holds the last
+//!    `cap` events (overwrite-oldest); `dropped` counts the overwritten
+//!    ones. Storage grows lazily — a quiet rank with a deep ring costs a
+//!    few machine words, not `cap * size_of::<TraceEvent>()`.
+//!
+//! Timestamp sources differ per engine (and are excluded from the
+//! fingerprint for exactly that reason): the sequential engine stamps
+//! nanoseconds of the LogGOPS virtual clock, the threaded/async engines
+//! stamp the rank's iteration count, and worker rings stamp the worker's
+//! activation ordinal. Within one ring, timestamps are forced monotone
+//! (`ts = max(now, last_ts)`) so every exported track is well-ordered.
+
+/// Default ring depth for `--trace` without an explicit depth.
+pub const DEFAULT_TRACE_DEPTH: u32 = 65_536;
+
+/// FNV-1a-style prime used by the order-sensitive stream fingerprint.
+pub const FINGERPRINT_PRIME: u64 = 0x100_0000_01b3;
+
+/// Fold one value into a stream fingerprint (shared with the CLI's
+/// combined-fingerprint fold and mirrored in `pipeline_check.py`).
+#[inline]
+pub fn fold_fingerprint(acc: u64, x: u64) -> u64 {
+    acc.wrapping_mul(FINGERPRINT_PRIME).wrapping_add(x)
+}
+
+/// What happened. Discriminants are stable wire/fingerprint values —
+/// mirrored by `pipeline_check.py`; never renumber, only append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A GHS message left a vertex: `a` = destination vertex, `b` =
+    /// payload type tag (see `Payload::type_tag`), `c` = encoded wire
+    /// bytes for a remote destination, 0 for a rank-local one.
+    Send = 0,
+    /// An aggregated buffer was batch-decoded: `a` = messages, `b` = bytes.
+    Recv = 1,
+    /// A message could not be processed yet and moved to the postponed
+    /// stash: `a` = destination vertex, `b` = payload type tag.
+    Postpone = 2,
+    /// Postponed stash splices back onto its queue: `a` = splice count
+    /// since the previous sample.
+    StashRemerge = 3,
+    /// Two equal-level fragments merged over their core edge: `a` =
+    /// vertex, `b` = core-edge neighbour, `c` = new (merged) level. Fires
+    /// at *both* core endpoints — the timeline replay counts successful
+    /// union-find unions, so the double emission is harmless.
+    FragmentMerge = 4,
+    /// A lower-level fragment was absorbed: `a` = absorbing vertex, `b` =
+    /// absorbed neighbour, `c` = absorbing fragment's level.
+    FragmentAbsorb = 5,
+    /// A vertex adopted new fragment coordinates from an `Initiate`:
+    /// `a` = vertex, `b` = new level, `c` = previous level.
+    FragmentAdopt = 6,
+    /// Scheduler: a blocked task was made runnable: `a` = task (rank) id.
+    TaskReady = 7,
+    /// Scheduler: a worker entered a task's quantum: `a` = task id.
+    TaskRun = 8,
+    /// Scheduler: a task blocked at a silence point: `a` = task id.
+    TaskBlock = 9,
+    /// Scheduler: a task was stolen: `a` = victim worker, `b` = task id.
+    Steal = 10,
+    /// A drained rank/worker parked (threaded channel park or pool park).
+    Park = 11,
+    /// A packet delivery overflowed a mailbox ring into its spill list:
+    /// `a` = destination task.
+    Spill = 12,
+    /// Queue-depth sample at flush cadence: `a` = active queue length,
+    /// `b` = stashed (postponed) length, `c` = cumulative messages
+    /// processed (main + Test).
+    QueueDepth = 13,
+    /// New in-flight-task high-water mark observed: `a` = value.
+    InFlight = 14,
+    /// Forest halt at a core vertex: `a` = vertex, `c` = fragment level.
+    Halt = 15,
+}
+
+impl EventKind {
+    /// Stable lowercase label (Chrome-trace event names, JSONL `kind`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Send => "send",
+            EventKind::Recv => "recv",
+            EventKind::Postpone => "postpone",
+            EventKind::StashRemerge => "stash_remerge",
+            EventKind::FragmentMerge => "fragment_merge",
+            EventKind::FragmentAbsorb => "fragment_absorb",
+            EventKind::FragmentAdopt => "fragment_adopt",
+            EventKind::TaskReady => "task_ready",
+            EventKind::TaskRun => "task_run",
+            EventKind::TaskBlock => "task_block",
+            EventKind::Steal => "steal",
+            EventKind::Park => "park",
+            EventKind::Spill => "spill",
+            EventKind::QueueDepth => "queue_depth",
+            EventKind::InFlight => "in_flight",
+            EventKind::Halt => "halt",
+        }
+    }
+}
+
+/// One recorded event. `ts` units depend on the ring's clock source (see
+/// module docs); `a`/`b`/`c` payload semantics are per [`EventKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub ts: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+/// Anything events can be recorded into. The engines are generic over
+/// "record or not" through `Option<TraceRing>`; this trait exists so
+/// call sites that want compile-time no-op tracing (benchmarks, future
+/// transports) can take `impl TraceSink` and pass [`NoopSink`] — every
+/// method body is empty and `#[inline(always)]`, so the disabled path
+/// optimizes to nothing.
+pub trait TraceSink {
+    /// Update the current virtual timestamp for subsequent events.
+    fn set_now(&mut self, ts: u64);
+    /// Record one event.
+    fn record(&mut self, kind: EventKind, a: u64, b: u64, c: u64);
+}
+
+/// The always-off sink: every call compiles away.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    #[inline(always)]
+    fn set_now(&mut self, _ts: u64) {}
+    #[inline(always)]
+    fn record(&mut self, _kind: EventKind, _a: u64, _b: u64, _c: u64) {}
+}
+
+/// Bounded per-track event ring with overwrite-oldest semantics and an
+/// incremental order-sensitive fingerprint over *all* offered events.
+#[derive(Debug, Clone)]
+pub struct TraceRing {
+    /// Maximum retained events.
+    cap: usize,
+    /// Lazily grown storage (never preallocated to `cap`: thousands of
+    /// mostly-quiet ranks would otherwise cost gigabytes).
+    buf: Vec<TraceEvent>,
+    /// When full: index of the oldest event (== next overwrite position).
+    head: usize,
+    /// Total events offered (recorded + later overwritten).
+    pub recorded: u64,
+    /// Events overwritten after the ring filled.
+    pub dropped: u64,
+    /// Order-sensitive fingerprint over every offered event's
+    /// `(kind, a, b, c)` — timestamps excluded (engine-dependent units),
+    /// ring bounding irrelevant.
+    pub fingerprint: u64,
+    /// Current virtual timestamp (set by the engine before hooks fire).
+    pub now: u64,
+    /// Last stamped timestamp, for per-track monotonicity.
+    last_ts: u64,
+}
+
+impl TraceRing {
+    /// New ring retaining at most `cap` events (floored at 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            buf: Vec::new(),
+            head: 0,
+            recorded: 0,
+            dropped: 0,
+            fingerprint: 0,
+            now: 0,
+            last_ts: 0,
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+            out
+        }
+    }
+
+    /// Consume the ring into a finished per-rank track.
+    pub fn into_rank_trace(self, rank: u32) -> RankTrace {
+        let events = self.events();
+        RankTrace {
+            rank,
+            events,
+            recorded: self.recorded,
+            dropped: self.dropped,
+            fingerprint: self.fingerprint,
+        }
+    }
+
+    /// Consume the ring into a finished per-worker track (async engine).
+    /// Worker tracks carry no fingerprint: their event order is a schedule
+    /// outcome, not part of the replayable protocol stream.
+    pub fn into_worker_trace(self, worker: u32) -> WorkerTrace {
+        let events = self.events();
+        WorkerTrace { worker, events, recorded: self.recorded, dropped: self.dropped }
+    }
+}
+
+impl TraceSink for TraceRing {
+    #[inline]
+    fn set_now(&mut self, ts: u64) {
+        self.now = ts;
+    }
+
+    #[inline]
+    fn record(&mut self, kind: EventKind, a: u64, b: u64, c: u64) {
+        // Per-track monotone timestamps: an engine whose clock source
+        // stalls (or a worker ring fed out-of-order ordinals) never
+        // produces a backwards track.
+        let ts = self.now.max(self.last_ts);
+        self.last_ts = ts;
+        self.recorded += 1;
+        let mut fp = self.fingerprint;
+        fp = fold_fingerprint(fp, kind as u64);
+        fp = fold_fingerprint(fp, a);
+        fp = fold_fingerprint(fp, b);
+        fp = fold_fingerprint(fp, c);
+        self.fingerprint = fp;
+        let ev = TraceEvent { ts, kind, a, b, c };
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Finished event track of one rank.
+#[derive(Debug, Clone)]
+pub struct RankTrace {
+    pub rank: u32,
+    /// Retained events, oldest first (the last `cap` offered).
+    pub events: Vec<TraceEvent>,
+    /// Total events offered to the ring.
+    pub recorded: u64,
+    /// Events lost to ring overflow.
+    pub dropped: u64,
+    /// Order-sensitive fingerprint over all offered events.
+    pub fingerprint: u64,
+}
+
+/// Finished event track of one scheduler worker (async engine only).
+#[derive(Debug, Clone)]
+pub struct WorkerTrace {
+    pub worker: u32,
+    pub events: Vec<TraceEvent>,
+    pub recorded: u64,
+    pub dropped: u64,
+}
+
+/// All tracks of one traced run.
+#[derive(Debug, Clone, Default)]
+pub struct TraceData {
+    /// One track per rank, in rank order.
+    pub ranks: Vec<RankTrace>,
+    /// One track per pool worker (empty off the async engine).
+    pub workers: Vec<WorkerTrace>,
+}
+
+impl TraceData {
+    /// Fold the per-rank fingerprints (in rank order) into one value —
+    /// the `ghs-mst trace` headline and the CI pin.
+    pub fn combined_fingerprint(&self) -> u64 {
+        self.ranks.iter().fold(0u64, |acc, r| fold_fingerprint(acc, r.fingerprint))
+    }
+
+    /// Total events offered across every rank track.
+    pub fn total_recorded(&self) -> u64 {
+        self.ranks.iter().map(|r| r.recorded).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_last_cap_events_and_counts_drops() {
+        let mut r = TraceRing::new(4);
+        for i in 0..10u64 {
+            r.set_now(i);
+            r.record(EventKind::Send, i, 0, 0);
+        }
+        assert_eq!(r.recorded, 10);
+        assert_eq!(r.dropped, 6);
+        let ev = r.events();
+        assert_eq!(ev.len(), 4);
+        assert_eq!(ev.iter().map(|e| e.a).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(ev[0].ts, 6, "timestamps ride along");
+    }
+
+    #[test]
+    fn fingerprint_is_ring_depth_independent() {
+        let mut deep = TraceRing::new(1024);
+        let mut shallow = TraceRing::new(2);
+        for i in 0..100u64 {
+            deep.record(EventKind::Postpone, i, i * 3, 7);
+            shallow.record(EventKind::Postpone, i, i * 3, 7);
+        }
+        assert_eq!(deep.fingerprint, shallow.fingerprint);
+        assert_eq!(deep.dropped, 0);
+        assert_eq!(shallow.dropped, 98);
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive_and_ts_independent() {
+        let mut a = TraceRing::new(8);
+        a.set_now(100);
+        a.record(EventKind::Send, 1, 0, 0);
+        a.record(EventKind::Recv, 2, 0, 0);
+        let mut b = TraceRing::new(8);
+        b.set_now(999_999); // different clock, same stream
+        b.record(EventKind::Send, 1, 0, 0);
+        b.record(EventKind::Recv, 2, 0, 0);
+        let mut c = TraceRing::new(8);
+        c.record(EventKind::Recv, 2, 0, 0);
+        c.record(EventKind::Send, 1, 0, 0);
+        assert_eq!(a.fingerprint, b.fingerprint, "timestamps are excluded");
+        assert_ne!(a.fingerprint, c.fingerprint, "order matters");
+    }
+
+    #[test]
+    fn timestamps_are_monotone_per_track() {
+        let mut r = TraceRing::new(8);
+        r.set_now(50);
+        r.record(EventKind::Send, 0, 0, 0);
+        r.set_now(10); // clock source went backwards (e.g. rank migration)
+        r.record(EventKind::Send, 1, 0, 0);
+        r.set_now(60);
+        r.record(EventKind::Send, 2, 0, 0);
+        let ts: Vec<u64> = r.events().iter().map(|e| e.ts).collect();
+        assert_eq!(ts, vec![50, 50, 60]);
+    }
+
+    #[test]
+    fn storage_grows_lazily() {
+        let r = TraceRing::new(1 << 20);
+        assert_eq!(r.buf.capacity(), 0, "a quiet ring must not preallocate");
+    }
+
+    #[test]
+    fn noop_sink_accepts_everything() {
+        let mut s = NoopSink;
+        s.set_now(1);
+        s.record(EventKind::Halt, 1, 2, 3);
+    }
+
+    #[test]
+    fn combined_fingerprint_folds_in_rank_order() {
+        let mut r0 = TraceRing::new(4);
+        r0.record(EventKind::Send, 1, 2, 3);
+        let mut r1 = TraceRing::new(4);
+        r1.record(EventKind::Halt, 4, 0, 1);
+        let f0 = r0.fingerprint;
+        let f1 = r1.fingerprint;
+        let data = TraceData {
+            ranks: vec![r0.into_rank_trace(0), r1.into_rank_trace(1)],
+            workers: Vec::new(),
+        };
+        let expect = fold_fingerprint(fold_fingerprint(0, f0), f1);
+        assert_eq!(data.combined_fingerprint(), expect);
+        assert_eq!(data.total_recorded(), 2);
+    }
+}

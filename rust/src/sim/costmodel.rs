@@ -50,6 +50,17 @@ pub struct OpCosts {
     /// Local work of one completion check (the Allreduce network part is
     /// priced by LogGOPS).
     pub finish_check: f64,
+    /// One successful work steal: a cross-worker deque CAS plus the cold
+    /// cache migration of the stolen task's hot state.
+    pub steal: f64,
+    /// One failed steal probe: a top/bottom load pair on an empty victim.
+    pub steal_fail: f64,
+    /// One arrival-triggered task wakeup: the state CAS, the deque push
+    /// and (sometimes) a condvar notify syscall amortized in.
+    pub wakeup: f64,
+    /// One mailbox-ring overflow spill: the fallback mutex push plus the
+    /// consumer-side splice back out of the spill vector.
+    pub ring_spill: f64,
 }
 
 impl Default for OpCosts {
@@ -64,6 +75,10 @@ impl Default for OpCosts {
             postpone_retry: 120e-9,
             iteration: 100e-9,
             finish_check: 300e-9,
+            steal: 150e-9,
+            steal_fail: 25e-9,
+            wakeup: 100e-9,
+            ring_spill: 200e-9,
         }
     }
 }
@@ -98,6 +113,14 @@ impl OpCosts {
             + d(now.msgs_sent, prev.msgs_sent) * self.encode_msg
             + d(now.iterations, prev.iterations) * self.iteration
             + d(now.finish_checks, prev.finish_checks) * self.finish_check
+            // Scheduler work (async engine). All four are zero on the
+            // sequential engine, so its virtual-clock pricing is unchanged.
+            // `ready_max` is deliberately absent: it is a high-water mark,
+            // not a monotone counter, so a delta would underflow.
+            + d(now.steals, prev.steals) * self.steal
+            + d(now.steal_fails, prev.steal_fails) * self.steal_fail
+            + d(now.wakeups, prev.wakeups) * self.wakeup
+            + d(now.ring_full_spills, prev.ring_full_spills) * self.ring_spill
     }
 
     /// Price aggregate counters (from zero) — used for the Fig 3 breakdown.
@@ -162,6 +185,31 @@ mod tests {
         let compact = costs.total_time(&mk(13));
         let reduction = (naive - compact) / naive;
         assert!(reduction > 0.2 && reduction < 0.6, "reduction {reduction}");
+    }
+
+    #[test]
+    fn scheduler_counters_are_priced() {
+        // The PR 6 pricing blind spot: steal/wakeup/spill churn must show
+        // up in modeled time, and ranks without scheduler activity must
+        // price exactly as before the category existed.
+        let costs = OpCosts::default();
+        let zero = ProfileCounters::default();
+        let mut quiet = zero;
+        quiet.msgs_processed_main = 1000;
+        let base = costs.step_time(&zero, &quiet);
+        assert!((base - 1000.0 * costs.process_msg).abs() < 1e-15, "no phantom scheduler cost");
+        let mut busy = quiet;
+        busy.steals = 10;
+        busy.steal_fails = 40;
+        busy.wakeups = 100;
+        busy.ring_full_spills = 5;
+        let priced = costs.step_time(&zero, &busy);
+        let expect = base
+            + 10.0 * costs.steal
+            + 40.0 * costs.steal_fail
+            + 100.0 * costs.wakeup
+            + 5.0 * costs.ring_spill;
+        assert!((priced - expect).abs() < 1e-15, "scheduler churn priced linearly");
     }
 
     #[test]

@@ -14,17 +14,22 @@ pub enum Category {
     Send,
     CheckFinish,
     LoopOther,
+    /// Async-engine scheduling churn (steals, failed probes, wakeups,
+    /// mailbox spills). Zero on the sequential and threaded engines, so
+    /// the paper-figure breakdowns are unchanged there.
+    Scheduler,
 }
 
 impl Category {
     /// All categories in display order.
-    pub const ALL: [Category; 6] = [
+    pub const ALL: [Category; 7] = [
         Category::ReadMsgs,
         Category::ProcessQueue,
         Category::ProcessTestQueue,
         Category::Send,
         Category::CheckFinish,
         Category::LoopOther,
+        Category::Scheduler,
     ];
 
     /// Display label.
@@ -36,6 +41,7 @@ impl Category {
             Category::Send => "send",
             Category::CheckFinish => "check_finish",
             Category::LoopOther => "loop_other",
+            Category::Scheduler => "scheduler",
         }
     }
 }
@@ -73,6 +79,13 @@ impl Breakdown {
             (Category::Send, send_t),
             (Category::CheckFinish, c.finish_checks as f64 * costs.finish_check),
             (Category::LoopOther, c.iterations as f64 * costs.iteration),
+            (
+                Category::Scheduler,
+                c.steals as f64 * costs.steal
+                    + c.steal_fails as f64 * costs.steal_fail
+                    + c.wakeups as f64 * costs.wakeup
+                    + c.ring_full_spills as f64 * costs.ring_spill,
+            ),
         ];
         Self { seconds }
     }
@@ -124,6 +137,25 @@ mod tests {
         let main = get(Category::ProcessQueue) - 300.0 * costs.process_msg;
         let test = get(Category::ProcessTestQueue) - 100.0 * costs.process_msg;
         assert!((main / test - 3.0).abs() < 1e-9, "3:1 split");
+    }
+
+    #[test]
+    fn scheduler_category_prices_async_churn() {
+        let mut c = ProfileCounters::default();
+        c.steals = 8;
+        c.steal_fails = 32;
+        c.wakeups = 500;
+        c.ring_full_spills = 2;
+        let costs = OpCosts::default();
+        let b = Breakdown::of(&c, &costs);
+        let sched =
+            b.seconds.iter().find(|(cat, _)| *cat == Category::Scheduler).map(|(_, s)| *s).unwrap();
+        let expect = 8.0 * costs.steal
+            + 32.0 * costs.steal_fail
+            + 500.0 * costs.wakeup
+            + 2.0 * costs.ring_spill;
+        assert!((sched - expect).abs() < 1e-15);
+        assert!((b.total() - expect).abs() < 1e-15, "only the scheduler did work");
     }
 
     #[test]
