@@ -154,6 +154,11 @@ def path_graph(n, seed):
     return n, [(i, i + 1, rng.next_weight()) for i in range(n - 1)]
 
 
+def star_graph(n, seed):
+    rng = Xoshiro256(seed)
+    return n, [(0, i, rng.next_weight()) for i in range(1, n)]
+
+
 def sid_of(u, v):
     lo, hi = (u, v) if u < v else (v, u)
     return (lo << 32) | hi
@@ -818,7 +823,8 @@ class Prof:
         "msgs_decoded bytes_decoded decode_batches msgs_processed_main "
         "msgs_processed_test msgs_postponed lookups lookup_probes flushes "
         "bytes_sent msgs_sent finish_checks iterations buf_reuse buf_alloc "
-        "stash_merges"
+        "stash_merges retransmits acks_sent dup_dropped corrupt_dropped "
+        "reorder_buffered fault_injected timeout_checks"
     ).split()
 
     def __init__(self):
@@ -830,6 +836,272 @@ class Prof:
         for f in self.FIELDS:
             setattr(p, f, getattr(self, f))
         return p
+
+
+# --------------------------------------------------- chaos + reliable --
+#
+# Lock-step port of rust/src/ghs/fault.rs + rust/src/ghs/reliable.rs. The
+# Rust side frames real byte buffers; this port's packets are logical
+# tuples, so a frame is an object carrying the header fields plus the
+# message list, and payload corruption is a flag (the Rust FNV-1a
+# checksum catches a single flipped byte with certainty, so the flag is
+# an exact model of "checksum rejects this frame"). The fault *stream*
+# is bit-exact: same per-link Xoshiro256 seeding (`link_seed`), same
+# draw order (drop, dup, corrupt, delay — gated only by the config,
+# never by prior outcomes), same corruption-position draw.
+
+HEADER_LEN = 16  # reliable.rs frame header bytes (seq|ack|cksum|src|n)
+SEQ_ACK_ONLY = (1 << 32) - 1
+RTO_BASE = 32
+RTO_MAX = 1024
+ACK_IDLE = 16
+MAX_ATTEMPTS = 16
+LINK_STRIDE = 0x9E3779B97F4A7C15
+FAULT_KEYS = ("drops", "dups", "corrupts", "delays", "stalls", "slowdowns", "degraded")
+
+
+def link_seed(seed, src, dst):
+    return seed ^ ((((src << 32) | dst) * LINK_STRIDE) & M64)
+
+
+def fault_config(**kw):
+    """FaultConfig::default() with overrides (the CLI grammar's keys)."""
+    cfg = dict(drop=0.0, dup=0.0, reorder=0, corrupt=0.0, slow=0.0, stall_rank=None, seed=1)
+    for k, v in kw.items():
+        assert k in cfg, f"unknown fault key {k}"
+        cfg[k] = v
+    return cfg
+
+
+def any_link_fault(fc):
+    return fc["drop"] > 0.0 or fc["dup"] > 0.0 or fc["corrupt"] > 0.0 or fc["reorder"] > 0
+
+
+class Frame:
+    """One reliable-delivery frame: header fields + logical payload."""
+
+    __slots__ = ("seq", "ack", "src", "n_msgs", "nbytes", "msgs", "corrupt")
+
+    def __init__(self, src, n_msgs, nbytes, msgs, seq=0, ack=0, corrupt=False):
+        self.src = src
+        self.n_msgs = n_msgs
+        self.nbytes = nbytes
+        self.msgs = msgs
+        self.seq = seq
+        self.ack = ack
+        self.corrupt = corrupt
+
+    def copy(self):
+        return Frame(
+            self.src, self.n_msgs, self.nbytes, self.msgs, self.seq, self.ack, self.corrupt
+        )
+
+
+class Flow:
+    """reliable.rs Flow: one peer's send window + receive-side state."""
+
+    __slots__ = ("next_seq", "window", "expect", "reorder", "owed_ack", "owed_since")
+
+    def __init__(self):
+        self.next_seq = 0
+        self.window = []  # [frame, sent_at, rto, attempts] in seq order
+        self.expect = 0
+        self.reorder = {}  # seq -> frame
+        self.owed_ack = False
+        self.owed_since = 0
+
+
+class Reliable:
+    """Seq/ack/retransmit protocol state for one rank (reliable.rs)."""
+
+    def __init__(self, rank):
+        self.rank = rank
+        self.flows = {}
+
+    def flow(self, peer):
+        f = self.flows.get(peer)
+        if f is None:
+            f = self.flows[peer] = Flow()
+        return f
+
+    def frame(self, dst, frame, now):
+        """Seal one outgoing data frame: assign the next seq, piggyback
+        the cumulative ack, and clone into the retransmit window (the
+        window copy is pristine — injector corruption never reaches it)."""
+        f = self.flow(dst)
+        frame.seq = f.next_seq
+        assert frame.seq != SEQ_ACK_ONLY, "seq space exhausted"
+        f.next_seq += 1
+        frame.ack = f.expect
+        f.owed_ack = False  # the piggybacked ack settles the debt
+        f.window.append([frame.copy(), now, RTO_BASE, 0])
+
+    def accept(self, frame, now):
+        """Verdict for one incoming frame: 'corrupt' | 'ack' | 'dup' |
+        'buffered' | 'deliver'. The piggybacked ack is processed first
+        (only when the checksum holds, i.e. the frame is not corrupt)."""
+        if frame.corrupt:
+            return "corrupt"
+        f = self.flow(frame.src)
+        while f.window and f.window[0][0].seq < frame.ack:
+            f.window.pop(0)
+        if frame.seq == SEQ_ACK_ONLY:
+            return "ack"
+        if frame.seq < f.expect or frame.seq in f.reorder:
+            return "dup"
+        if frame.seq > f.expect:
+            f.reorder[frame.seq] = frame
+            return "buffered"
+        f.expect += 1
+        if not f.owed_ack:
+            f.owed_ack = True
+            f.owed_since = now
+        return "deliver"
+
+    def drain_ready(self, src):
+        f = self.flow(src)
+        nxt = f.reorder.pop(f.expect, None)
+        if nxt is not None:
+            f.expect += 1
+        return nxt
+
+    def tick(self, now, retrans, acks):
+        """Timer scan at the flush cadence. Expired window frames are
+        re-armed (ack refreshed, backoff doubled) into `retrans`; owed
+        acks past ACK_IDLE go standalone into `acks`. Returns a watchdog
+        dict when a frame exhausted MAX_ATTEMPTS, else None."""
+        for peer in sorted(self.flows):
+            f = self.flows[peer]
+            ack_now = f.expect
+            for s in f.window:
+                if now - s[1] < s[2]:
+                    continue
+                s[3] += 1
+                if s[3] > MAX_ATTEMPTS:
+                    return dict(peer=peer, seq=s[0].seq, attempts=s[3], n_msgs=s[0].n_msgs)
+                s[1] = now
+                s[2] = min(s[2] * 2, RTO_MAX)
+                rt = s[0].copy()
+                rt.ack = ack_now
+                retrans.append((peer, rt))
+            if f.owed_ack and now - f.owed_since >= ACK_IDLE:
+                f.owed_ack = False
+                acks.append((peer, Frame(self.rank, 0, 0, [], seq=SEQ_ACK_ONLY, ack=ack_now)))
+        return None
+
+    def has_work(self):
+        return any(
+            f.window or f.owed_ack or f.reorder for f in self.flows.values()
+        )
+
+    def window_msgs(self):
+        return sum(s[0].n_msgs for f in self.flows.values() for s in f.window)
+
+
+class Link:
+    __slots__ = ("rng", "offers", "held")
+
+    def __init__(self, rng):
+        self.rng = rng
+        self.offers = 0
+        self.held = []  # (release_at_offer, frame)
+
+
+class Injector:
+    """fault.rs Injector: per-link seeded fault streams on the packet
+    path. Draw order per offer is fixed and config-gated (never outcome-
+    gated) so the stream replays the Rust one bit-exactly."""
+
+    def __init__(self, fc, src):
+        self.cfg = fc
+        self.src = src
+        self.links = {}
+        self.stats = dict.fromkeys(FAULT_KEYS, 0)
+
+    def injected(self):
+        s = self.stats
+        return s["drops"] + s["dups"] + s["corrupts"] + s["delays"]
+
+    def offer(self, dst, frame, out):
+        cfg = self.cfg
+        link = self.links.get(dst)
+        if link is None:
+            link = self.links[dst] = Link(Xoshiro256(link_seed(cfg["seed"], self.src, dst)))
+        link.offers += 1
+        self._release_due(dst, link, out)
+        rng = link.rng
+        dropped = cfg["drop"] > 0.0 and rng.next_f64() < cfg["drop"]
+        duped = cfg["dup"] > 0.0 and rng.next_f64() < cfg["dup"]
+        corrupted = cfg["corrupt"] > 0.0 and rng.next_f64() < cfg["corrupt"]
+        delay = rng.next_below(cfg["reorder"] + 1) if cfg["reorder"] > 0 else 0
+        if dropped:
+            self.stats["drops"] += 1
+            return
+        if corrupted and frame.nbytes > 0:
+            rng.next_below(frame.nbytes)  # corruption position draw
+            frame.corrupt = True
+            self.stats["corrupts"] += 1
+        if duped:
+            out.append((dst, frame.copy()))
+            self.stats["dups"] += 1
+        if delay > 0:
+            link.held.append((link.offers + delay, frame))
+            self.stats["delays"] += 1
+        else:
+            out.append((dst, frame))
+
+    def tick(self, out):
+        """Aging tick: quiet links still release held frames (sorted-dst
+        sweep, mirroring the Rust deterministic order)."""
+        for dst in sorted(self.links):
+            link = self.links[dst]
+            if not link.held:
+                continue
+            link.offers += 1
+            self._release_due(dst, link, out)
+
+    @staticmethod
+    def _release_due(dst, link, out):
+        """Emit held frames whose release offer has come due (they predate
+        anything offered now, so they go out first, in held order)."""
+        due = link.offers
+        still = []
+        for (at, f) in link.held:
+            if at <= due:
+                out.append((dst, f))
+            else:
+                still.append((at, f))
+        link.held = still
+
+    def holding(self):
+        return any(link.held for link in self.links.values())
+
+    def held_msgs(self):
+        """Messages inside held (delayed) frames: a retransmit can clear
+        the window while the original copy is still held, so silence
+        accounting counts the stale copy until the aging tick releases
+        it (the receiver then dup-drops it, keeping the ledger exact)."""
+        return sum(f.n_msgs for link in self.links.values() for (_at, f) in link.held)
+
+
+class Chaos:
+    """rank.rs Chaos bundle: the reliability protocol plus (when any
+    link-fault rate is non-zero) the packet-path injector."""
+
+    def __init__(self, rank, fc):
+        self.rel = Reliable(rank)
+        self.inj = Injector(fc, rank) if any_link_fault(fc) else None
+
+
+def merged_fault_stats(ranks):
+    """Run-level FaultStats merge (None off the chaos path)."""
+    if not ranks or ranks[0].chaos is None:
+        return None
+    total = dict.fromkeys(FAULT_KEYS, 0)
+    for r in ranks:
+        for k, v in r.fault_stats().items():
+            total[k] += v
+    return total
 
 
 class VertexVars:
@@ -902,6 +1174,10 @@ class Rank:
         # Flight recorder (rank.rs `trace`): armed by cfg["trace"].
         self.trace = TraceRing() if cfg.get("trace") else None
         self.trace_stash = 0
+        # Chaos + reliability state (rank.rs `chaos`): armed by
+        # cfg["faults"] (a fault_config dict); None off the chaos path.
+        fc = cfg.get("faults")
+        self.chaos = Chaos(rank, fc) if fc is not None else None
 
     # -- messaging ---------------------------------------------------
 
@@ -941,20 +1217,85 @@ class Rank:
         else:
             self.prof.buf_alloc += 1
         self.prof.flushes += 1
-        self.flushed.append((dst, box[0], box[1], self._pending_msgs[dst]))
+        if self.chaos is not None:
+            frame = Frame(self.rank, box[1], box[0], self._pending_msgs[dst])
+            self.chaos.rel.frame(dst, frame, self.prof.iterations)
+            self._dispatch(dst, frame)
+        else:
+            self.flushed.append((dst, box[0], box[1], self._pending_msgs[dst]))
         self._pending_msgs[dst] = []
         box[0] = 0
         box[1] = 0
+
+    def _dispatch(self, dst, frame):
+        """Route one framed packet through the fault injector (if
+        configured) into `flushed`, tallying what it did (rank.rs
+        dispatch). The staged tuple's byte count includes the 16-byte
+        header (what the wire carries); `frame.nbytes` stays payload-only
+        so `bytes_decoded` matches fault-free baselines."""
+        inj = self.chaos.inj
+        if inj is None:
+            self.flushed.append((dst, HEADER_LEN + frame.nbytes, frame.n_msgs, frame))
+            return
+        before = inj.injected()
+        out = []
+        inj.offer(dst, frame, out)
+        self.prof.fault_injected += inj.injected() - before
+        for (d, f) in out:
+            self.flushed.append((d, HEADER_LEN + f.nbytes, f.n_msgs, f))
 
     def flush_all(self):
         dirty, self.dirty = self.dirty, []
         for dst in dirty:
             self.flush_one(dst)
+        if self.chaos is not None:
+            self._reliability_tick()
+
+    def _reliability_tick(self):
+        """Reliable-delivery timer pass at the flush cadence (rank.rs
+        reliability_tick): retransmit expired frames back through the
+        injector, emit standalone acks owed past ACK_IDLE (these bypass
+        the injector — the recovery control channel), age the injector's
+        delayed frames. A peer silent past the watchdog budget raises the
+        structured degradation report instead of hanging."""
+        chaos = self.chaos
+        now = self.prof.iterations
+        self.prof.timeout_checks += 1
+        retrans = []
+        acks = []
+        wd = chaos.rel.tick(now, retrans, acks)
+        if wd is not None:
+            if chaos.inj is not None:
+                chaos.inj.stats["degraded"] += wd["n_msgs"]
+            raise RuntimeError(
+                f"reliable delivery gave up: rank {self.rank} -> rank {wd['peer']} "
+                f"frame seq {wd['seq']} unacked after {wd['attempts']} retransmits "
+                f"({wd['n_msgs']} messages undeliverable; peer stalled past the "
+                "watchdog budget)"
+            )
+        for (dst, frame) in retrans:
+            self.prof.retransmits += 1
+            self._dispatch(dst, frame)
+        for (dst, frame) in acks:
+            self.prof.acks_sent += 1
+            self.flushed.append((dst, HEADER_LEN, 0, frame))
+        if chaos.inj is not None:
+            out = []
+            chaos.inj.tick(out)
+            for (d, f) in out:
+                self.flushed.append((d, HEADER_LEN + f.nbytes, f.n_msgs, f))
 
     def has_dirty_outbox(self):
         return bool(self.dirty)
 
     def read_buffer(self, nbytes, msgs):
+        if self.chaos is not None:
+            # Chaos runs deliver frames; `msgs` holds the Frame object.
+            self.read_frame(msgs)
+            return
+        self._decode_payload(nbytes, msgs)
+
+    def _decode_payload(self, nbytes, msgs):
         self.prof.bytes_decoded += nbytes
         self.prof.decode_batches += 1
         self.prof.msgs_decoded += len(msgs)
@@ -962,6 +1303,41 @@ class Rank:
             self.trace.record(EV_RECV, len(msgs), nbytes, 0)
         for m in msgs:
             self.queues.push(m)
+
+    def read_frame(self, frame):
+        """Chaos-run receive path (rank.rs read_frame): checksum verdict,
+        seq/ack state machine, in-order delivery including any reorder-
+        buffered frames this one unblocks."""
+        verdict = self.chaos.rel.accept(frame, self.prof.iterations)
+        if verdict == "corrupt":
+            self.prof.corrupt_dropped += 1
+        elif verdict == "dup":
+            self.prof.dup_dropped += 1
+        elif verdict == "buffered":
+            self.prof.reorder_buffered += 1
+        elif verdict == "deliver":
+            self._decode_payload(frame.nbytes, frame.msgs)
+            while True:
+                nxt = self.chaos.rel.drain_ready(frame.src)
+                if nxt is None:
+                    break
+                self._decode_payload(nxt.nbytes, nxt.msgs)
+        # 'ack': window already trimmed by accept(); nothing to decode.
+
+    def rel_has_work(self):
+        """Unacked windows, owed acks, reorder-buffered frames, or held
+        delayed frames: the rank must keep stepping so timers advance."""
+        c = self.chaos
+        return c is not None and (
+            c.rel.has_work() or (c.inj is not None and c.inj.holding())
+        )
+
+    def fault_stats(self):
+        if self.chaos is None:
+            return None
+        if self.chaos.inj is None:
+            return dict.fromkeys(FAULT_KEYS, 0)
+        return dict(self.chaos.inj.stats)
 
     def trace_flush_sample(self):
         """rank.rs trace_flush_sample: stash splice churn since the last
@@ -979,7 +1355,16 @@ class Rank:
         self.trace.record(EV_QUEUE_DEPTH, active, stash, done)
 
     def pending_local(self):
-        return self.queues.total_len() + sum(b[1] for b in self.outbox.values())
+        pend = self.queues.total_len() + sum(b[1] for b in self.outbox.values())
+        if self.chaos is not None:
+            # Unacked window messages count as pending: a dropped frame's
+            # messages are nowhere else until the retransmit lands. Held
+            # (delayed) copies count too — a retransmit can clear the
+            # window while the injector still holds the original.
+            pend += self.chaos.rel.window_msgs()
+            if self.chaos.inj is not None:
+                pend += self.chaos.inj.held_msgs()
+        return pend
 
     # -- GHS automaton (vertex.rs) -----------------------------------
 
@@ -1364,6 +1749,7 @@ class Engine:
                     not self.inboxes[r_i]
                     and rank.queues.active_len() == 0
                     and not rank.has_dirty_outbox()
+                    and not rank.rel_has_work()
                 ):
                     self.sim.idle_step(r_i)
                     continue
@@ -1465,6 +1851,7 @@ class Engine:
             prof=prof,
             supersteps=supersteps,
             sim_time=self.sim.total_time(),
+            faults=merged_fault_stats(self.ranks),
         )
 
 
@@ -1804,6 +2191,7 @@ class AsyncSched:
             and rank.queues.active_len() == 0
             and not rank.has_dirty_outbox()
             and not rank.flushed
+            and not rank.rel_has_work()
         )
 
     def _run_task(self, t, w):
@@ -1834,7 +2222,7 @@ class AsyncSched:
                     self.ring_spills += 1
                 self._wake(dst, w)
             rank.flushed = []
-            if blocked or self.pending == 0:
+            if blocked or self.quiescent():
                 break
         if blocked:
             rank.prof.finish_checks += 1
@@ -1873,8 +2261,23 @@ class AsyncSched:
             "traffic can unblock)\n" + "\n".join(lines)
         )
 
+    def quiescent(self):
+        """Global silence. On chaos runs `pending == 0` is necessary but
+        not sufficient: reliability obligations (unacked windows, owed
+        acks, held frames) and in-transit chaos frames (a duplicate copy
+        still sitting in a mailbox ring) must drain too — run_async's
+        in_flight detector covers these via the blocked predicate."""
+        if self.pending != 0:
+            return False
+        if self.ranks and self.ranks[0].chaos is not None:
+            if any(r.rel_has_work() for r in self.ranks):
+                return False
+            if any(ib.has_pending() for ib in self.inboxes):
+                return False
+        return True
+
     def run(self):
-        while self.pending != 0:
+        while not self.quiescent():
             progressed = False
             for w in range(self.n_workers):
                 t = self._acquire(w)
@@ -1882,7 +2285,7 @@ class AsyncSched:
                     continue
                 progressed = True
                 self._run_task(t, w)
-                if self.pending == 0:
+                if self.quiescent():
                     break
             if not progressed:
                 # A full sweep found nothing runnable: every task idled,
@@ -1930,6 +2333,7 @@ class AsyncSched:
             steal_fails=self.steal_fails,
             ring_spills=self.ring_spills,
             workers=self.n_workers,
+            faults=merged_fault_stats(self.ranks),
         )
 
 
@@ -2293,6 +2697,195 @@ def partition_counters():
     return rows
 
 
+def chaos_profiles():
+    """The Rust chaos matrix's five fault profiles (rust/tests/chaos.rs),
+    rates at the acceptance ceiling."""
+    return [
+        ("drop", fault_config(drop=0.05, seed=11)),
+        ("dup", fault_config(dup=0.02, seed=12)),
+        ("reorder", fault_config(reorder=8, seed=13)),
+        ("corrupt", fault_config(corrupt=0.01, seed=14)),
+        ("mixed", fault_config(drop=0.05, dup=0.02, reorder=4, corrupt=0.01, seed=15)),
+    ]
+
+
+def assert_fault_ledger(label, out):
+    """The exact frame ledger: every frame handed to the interconnect is
+    an original flush, a retransmit, or an injected duplicate; dropped
+    frames vanish; everything else surfaces at a receiver as exactly one
+    of delivered / dup-suppressed / checksum-rejected. (Standalone acks
+    live outside all of these counters by design.)"""
+    p, fs = out["prof"], out["faults"]
+    assert fs is not None, f"{label}: chaos run must report fault stats"
+    assert fs["degraded"] == 0, f"{label}: recovered run reports nothing degraded"
+    injected = fs["drops"] + fs["dups"] + fs["corrupts"] + fs["delays"]
+    assert p.fault_injected == injected, f"{label}: fault ledger out of balance"
+    lhs = p.flushes + p.retransmits + fs["dups"] - fs["drops"]
+    rhs = p.decode_batches + p.dup_dropped + p.corrupt_dropped
+    assert lhs == rhs, (
+        f"{label}: frames in != frames accounted for (flushes={p.flushes} "
+        f"retransmits={p.retransmits} dups={fs['dups']} drops={fs['drops']} "
+        f"decoded={p.decode_batches} dup_dropped={p.dup_dropped} "
+        f"corrupt_dropped={p.corrupt_dropped})"
+    )
+    assert p.retransmits >= fs["drops"], f"{label}: every drop needed a retransmit"
+    assert p.corrupt_dropped >= fs["corrupts"], f"{label}: every corrupt was rejected"
+    return injected
+
+
+def chaos_protocol_units():
+    """Direct protocol checks (reliable.rs / fault.rs test vectors)."""
+    # In-order delivery, reorder buffering, duplicate suppression,
+    # checksum rejection — the accept() verdict machine.
+    a, b = Reliable(0), Reliable(1)
+    frames = []
+    for i in range(3):
+        fr = Frame(0, 1, 10, [("C", i)])
+        a.frame(1, fr, 0)
+        frames.append(fr)
+    assert a.window_msgs() == 3
+    assert b.accept(frames[2], 0) == "buffered"
+    assert b.accept(frames[2].copy(), 0) == "dup", "dup of a buffered frame"
+    bad = frames[0].copy()
+    bad.corrupt = True
+    assert b.accept(bad, 0) == "corrupt", "checksum rejects before seq tracking"
+    assert b.accept(frames[0], 0) == "deliver"
+    assert b.drain_ready(0) is None, "gap at seq 1 still open"
+    assert b.accept(frames[1], 0) == "deliver"
+    nxt = b.drain_ready(0)
+    assert nxt is not None and nxt.msgs == [("C", 2)], "reorder buffer drains in order"
+    assert b.drain_ready(0) is None
+    assert b.accept(frames[0].copy(), 0) == "dup", "dup of a delivered frame"
+    # Piggybacked cumulative ack clears the sender's window.
+    back = Frame(1, 1, 10, [("A",)])
+    b.frame(0, back, 0)
+    assert back.ack == 3
+    assert a.accept(back, 0) == "deliver"
+    assert a.window_msgs() == 0, "cumulative ack cleared the window"
+    # Retransmit backoff doubles; the watchdog trips after MAX_ATTEMPTS.
+    rel = Reliable(0)
+    rel.frame(1, Frame(0, 2, 8, [("T", 0, 0)]), 0)
+    now, fires, wd = 0, [], None
+    while wd is None:
+        now += RTO_BASE
+        retrans, acks = [], []
+        wd = rel.tick(now, retrans, acks)
+        fires.extend(now for _ in retrans)
+        assert now < 10_000_000, "watchdog must eventually fire"
+    assert wd["peer"] == 1 and wd["attempts"] == MAX_ATTEMPTS + 1
+    assert len(fires) == MAX_ATTEMPTS, "every budgeted attempt was spent first"
+    assert fires[1] - fires[0] == 2 * RTO_BASE and fires[2] - fires[1] == 4 * RTO_BASE
+    # Standalone ack after ACK_IDLE silent iterations.
+    a, b = Reliable(0), Reliable(1)
+    fr = Frame(0, 1, 4, [("R",)])
+    a.frame(1, fr, 0)
+    assert b.accept(fr, 5) == "deliver"
+    retrans, acks = [], []
+    assert b.tick(5 + ACK_IDLE - 1, retrans, acks) is None and not acks
+    assert b.tick(5 + ACK_IDLE, retrans, acks) is None
+    assert len(acks) == 1 and acks[0][0] == 0 and acks[0][1].seq == SEQ_ACK_ONLY
+    assert not b.has_work()
+    assert a.accept(acks[0][1], 20) == "ack"
+    assert not a.has_work(), "acked sender is quiescent"
+    # Injector: same seed, same schedule; different seed, different one.
+    fc = fault_config(drop=0.3, dup=0.2, reorder=4, corrupt=0.2, seed=42)
+
+    def run_inj(cfg):
+        inj = Injector(cfg, 0)
+        out = []
+        for i in range(200):
+            inj.offer(1 + (i % 3), Frame(0, 1, 20, [i]), out)
+        inj.tick(out)
+        return [(d, f.msgs[0], f.corrupt) for (d, f) in out], dict(inj.stats)
+
+    sched_a, stats_a = run_inj(fc)
+    sched_b, stats_b = run_inj(fc)
+    assert sched_a == sched_b and stats_a == stats_b, "seeded schedule must replay"
+    assert stats_a["drops"] + stats_a["dups"] + stats_a["corrupts"] + stats_a["delays"] > 0
+    sched_c, _ = run_inj(dict(fc, seed=43))
+    assert sched_a != sched_c, "different seed, different schedule"
+    print("  protocol units: verdicts, backoff, watchdog, ack-idle, seeded streams")
+
+
+def chaos_conformance(quick=False):
+    print("== chaos: seeded fault matrix, reliable-delivery recovery")
+    chaos_protocol_units()
+    graphs = [
+        ("path96", path_graph(96, 0xC4A05)),
+        ("rmat6", workload(6)),
+        ("star64", star_graph(64, 0xC4A06)),
+    ]
+    profiles = chaos_profiles()
+    if quick:
+        graphs = graphs[:2]
+        profiles = [pr for pr in profiles if pr[0] in ("drop", "mixed")]
+    # -- the matrix: every cell recovers the Kruskal forest exactly --
+    total_injected = 0
+    for (plabel, fc) in profiles:
+        for (glabel, (n, edges)) in graphs:
+            out = check(
+                f"{glabel}/seq/p=4/{plabel}", n, edges, final_version(4, faults=fc)
+            )
+            total_injected += assert_fault_ledger(f"{glabel}/{plabel}", out)
+    assert total_injected > 0, "the matrix must actually inject faults"
+    # -- zero-rate control cell: reliability framing on, nothing injected;
+    #    recovers the faults=None forest with zero fault counters. Schedule
+    #    identity is NOT asserted: standalone ack frames are real wire
+    #    traffic whose LogGOPS cost shifts arrival times, legally
+    #    reordering Test/Reject interleavings. Byte-identity holds only
+    #    for faults=None, which the conformance/fingerprint suites pin. --
+    n6, e6 = workload(6)
+    base = Engine(n6, e6, final_version(4)).run()
+    ctrl = Engine(n6, e6, final_version(4, faults=fault_config())).run()
+    assert ctrl["edges"] == base["edges"] and ctrl["weight"] == base["weight"]
+    assert ctrl["faults"] == dict.fromkeys(FAULT_KEYS, 0)
+    p = ctrl["prof"]
+    assert p.fault_injected == 0 and p.dup_dropped == 0
+    assert p.corrupt_dropped == 0 and p.reorder_buffered == 0
+    assert p.retransmits == 0, "timely acks: no retransmits at zero rates"
+    assert p.timeout_checks > 0, "the retransmit timer did run"
+    bp = base["prof"]
+    assert bp.timeout_checks == 0 and bp.acks_sent == 0 and bp.retransmits == 0
+    assert base["faults"] is None, "fault-free runs report no fault stats"
+    print("  zero-rate control cell: baseline forest, all fault counters zero")
+    # -- determinism: same seed => same schedule, recovery work, clock --
+    fcm = fault_config(drop=0.05, dup=0.02, reorder=4, corrupt=0.01, seed=77)
+    runs = [Engine(n6, e6, final_version(4, faults=fcm)).run() for _ in range(3)]
+    for b in runs[1:]:
+        assert runs[0]["edges"] == b["edges"]
+        assert runs[0]["faults"] == b["faults"]
+        assert runs[0]["sent"] == b["sent"]
+        assert runs[0]["supersteps"] == b["supersteps"]
+        assert runs[0]["sim_time"] == b["sim_time"]
+        for f in Prof.FIELDS:
+            assert getattr(runs[0]["prof"], f) == getattr(b["prof"], f), f
+    assert runs[0]["prof"].fault_injected > 0
+    print("  fault schedule deterministic across 3 runs (seed=77)")
+    # -- async x fuzz-sched x fault: a perturbed work-stealing schedule on
+    #    a lossy interconnect still recovers the oracle forest --
+    out = check_async(
+        "rmat6/async/p=8/w=3/fuzz=0xfa57/mixed", n6, e6,
+        final_version(8, workers=3, faults=fcm), fuzz_seed=0xFA57,
+    )
+    assert assert_fault_ledger("async/fuzz/mixed", out) > 0
+    # -- perf-baseline recovery-counter row (results/perf_baseline.md) --
+    if not quick:
+        n10, e10 = workload(10)
+        out = check(
+            "rmat10/seq/p=16/drop=0.05", n10, e10,
+            final_version(16, faults=fault_config(drop=0.05, seed=7)),
+        )
+        assert_fault_ledger("rmat10/drop", out)
+        p, fs = out["prof"], out["faults"]
+        print(
+            "  perf_baseline row (rmat10 p=16 drop=0.05 seed=7): "
+            f"injected={p.fault_injected} drops={fs['drops']} "
+            f"retransmits={p.retransmits} acks_sent={p.acks_sent} "
+            f"dup_dropped={p.dup_dropped} timeout_checks={p.timeout_checks} "
+            f"supersteps={out['supersteps']}"
+        )
+
+
 if __name__ == "__main__":
     quick = "--quick" in sys.argv
     sm = SplitMix64(0)
@@ -2300,6 +2893,7 @@ if __name__ == "__main__":
     assert sm.next_u64() == 0x6E789E6AA1B965F4
     conformance(quick)
     async_conformance(quick)
+    chaos_conformance(quick)
     sched_snapshot(quick)
     trace_fingerprints(quick)
     multilevel_quality()

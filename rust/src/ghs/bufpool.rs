@@ -16,6 +16,8 @@
 
 use std::sync::Mutex;
 
+use crate::ghs::ring::lock_clean;
+
 /// Keep at most this many idle buffers (bounds worst-case retained memory
 /// to `MAX_POOLED × max_msg_size`; beyond it, buffers just drop).
 const MAX_POOLED: usize = 1024;
@@ -34,10 +36,13 @@ impl BufferPool {
 
     /// Take a cleared buffer; the flag is `true` when it was recycled from
     /// the pool (capacity retained) rather than freshly created.
+    ///
+    /// A peer thread panicking while holding the pool lock (poison) must
+    /// not disable the pool: the free list is just a `Vec` of owned
+    /// buffers, structurally valid across any payload panic, so
+    /// [`lock_clean`] keeps recycling through it.
     pub fn get(&self) -> (Vec<u8>, bool) {
-        // A poisoned lock (a panicking peer thread) degrades to fresh
-        // allocations rather than propagating the panic.
-        match self.free.lock().ok().and_then(|mut f| f.pop()) {
+        match lock_clean(&self.free).pop() {
             Some(buf) => (buf, true),
             None => (Vec::new(), false),
         }
@@ -49,10 +54,9 @@ impl BufferPool {
             return;
         }
         buf.clear();
-        if let Ok(mut f) = self.free.lock() {
-            if f.len() < MAX_POOLED {
-                f.push(buf);
-            }
+        let mut f = lock_clean(&self.free);
+        if f.len() < MAX_POOLED {
+            f.push(buf);
         }
     }
 
@@ -63,22 +67,21 @@ impl BufferPool {
     /// mutex once per ring drain (instead of once per packet) keeps the
     /// pool off the contention path even at 64+ workers.
     pub fn put_all<I: IntoIterator<Item = Vec<u8>>>(&self, bufs: I) {
-        if let Ok(mut f) = self.free.lock() {
-            for mut buf in bufs {
-                if buf.capacity() == 0 {
-                    continue;
-                }
-                buf.clear();
-                if f.len() < MAX_POOLED {
-                    f.push(buf);
-                }
+        let mut f = lock_clean(&self.free);
+        for mut buf in bufs {
+            if buf.capacity() == 0 {
+                continue;
+            }
+            buf.clear();
+            if f.len() < MAX_POOLED {
+                f.push(buf);
             }
         }
     }
 
     /// Idle buffers currently pooled.
     pub fn idle(&self) -> usize {
-        self.free.lock().map(|f| f.len()).unwrap_or(0)
+        lock_clean(&self.free).len()
     }
 }
 
@@ -117,6 +120,28 @@ mod tests {
         assert_eq!(pool.idle(), 3, "capacityless buffers skipped, rest pooled");
         let (b, hit) = pool.get();
         assert!(hit && b.is_empty() && b.capacity() >= 8);
+    }
+
+    #[test]
+    fn poisoned_pool_keeps_recycling() {
+        // Regression: the old `.lock().ok()` paths silently dropped every
+        // buffer (and reported idle() == 0) forever after one peer panic.
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new());
+        pool.put(Vec::with_capacity(32));
+        let p2 = Arc::clone(&pool);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.free.lock().unwrap();
+            panic!("poison the pool lock");
+        })
+        .join();
+        assert!(pool.free.is_poisoned());
+        assert_eq!(pool.idle(), 1, "pooled buffer survives the poison");
+        let (b, hit) = pool.get();
+        assert!(hit && b.capacity() >= 32, "get still recycles");
+        pool.put(b);
+        pool.put_all(vec![Vec::with_capacity(8)]);
+        assert_eq!(pool.idle(), 2, "put/put_all still pool after poison");
     }
 
     #[test]

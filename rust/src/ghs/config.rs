@@ -2,6 +2,7 @@
 //! switches used by the Fig 2 optimization study.
 
 use crate::ghs::edge_lookup::SearchStrategy;
+use crate::ghs::fault::FaultConfig;
 use crate::ghs::wire::WireFormat;
 use crate::graph::partition::PartitionSpec;
 
@@ -122,6 +123,15 @@ pub struct GhsConfig {
     /// hooks reduce to a branch on this option, no allocation, and every
     /// trace counter stays zero.
     pub trace: Option<u32>,
+    /// Chaos layer (`--faults drop=0.05,dup=0.02,reorder=8,corrupt=0.01,
+    /// seed=N`): seeded deterministic fault injection on the packet path
+    /// plus the seq/ack/retransmit reliable-delivery protocol that
+    /// recovers from it. `None` (the default) is the fault-free fast
+    /// path — no framing, no injection, zero new allocations, counter
+    /// baselines byte-identical. `Some` with all-zero rates still frames
+    /// every packet (reliability on, nothing injected), which is the
+    /// chaos suite's protocol-overhead-only control cell.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for GhsConfig {
@@ -144,6 +154,7 @@ impl Default for GhsConfig {
             record_timeline: false,
             fuzz_sched: std::env::var("GHS_FUZZ_SCHED").ok().and_then(|v| v.parse().ok()),
             trace: None,
+            faults: None,
         }
     }
 }
@@ -203,6 +214,7 @@ mod tests {
         assert!(c.separate_test_queue);
         assert_eq!(c.wire_format, WireFormat::CompactProcId);
         assert!(c.trace.is_none(), "flight recorder is off by default");
+        assert!(c.faults.is_none(), "chaos layer is off by default");
     }
 
     #[test]

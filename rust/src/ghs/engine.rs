@@ -208,9 +208,13 @@ impl Engine {
                 // stash don't count: they cannot progress until new traffic
                 // arrives, so a stash-only rank is idle too (the silence
                 // check still sees them via `pending_local`).
+                // (On chaos runs a rank with reliability work — unacked
+                // windows, owed acks, injector-held frames — must keep
+                // iterating so its retransmit/ack timers advance.)
                 if self.inboxes[rank.rank as usize].is_empty()
                     && rank.queues.active_len() == 0
                     && !rank.has_dirty_outbox()
+                    && !rank.rel_has_work()
                 {
                     self.sim.idle_step(rank.rank);
                     continue;
@@ -233,7 +237,7 @@ impl Engine {
                         if arrival <= clock {
                             let same = self.sim.is_same_node(src, rank.rank);
                             self.sim.on_buffer_read(rank.rank, arrival, same);
-                            rank.read_buffer(&buf);
+                            rank.read_buffer(&buf)?;
                             // Spent packet back to the shared pool for the
                             // next flush to reuse.
                             rank.pool.put(buf);
@@ -317,7 +321,7 @@ impl Engine {
                 // 4. send_all_bufs every SENDING_FREQUENCY iterations.
                 if superstep % rank.config.sending_frequency as u64 == 0 {
                     rank.trace_flush_sample();
-                    rank.flush_all();
+                    rank.flush_all()?;
                 }
                 // Charge the step's compute to the rank's virtual clock,
                 // then price each flushed buffer's injection + transit.
@@ -386,11 +390,15 @@ impl Engine {
         let mut per_rank = Vec::with_capacity(self.ranks.len());
         let mut sent = MessageCounts::default();
         let mut timeline = Vec::new();
+        let mut faults: Option<crate::ghs::fault::FaultStats> = None;
         for r in &mut self.ranks {
             profile.merge(&r.prof);
             per_rank.push(r.prof);
             sent.merge(&r.sent_counts);
             timeline.append(&mut r.timeline);
+            if let Some(fs) = r.fault_stats() {
+                faults.get_or_insert_with(Default::default).merge(&fs);
+            }
         }
         timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
         let trace = if self.config.trace.is_some() {
@@ -414,6 +422,7 @@ impl Engine {
             sim: self.sim.summary(),
             partition: self.partition_stats,
             trace,
+            faults,
         })
     }
 
@@ -631,6 +640,17 @@ mod tests {
         assert!(p.buf_reuse > 0, "steady state must recycle packet buffers");
         assert!(p.buffer_reuse_rate() > 0.0);
         assert_eq!(p.parked, 0, "sequential engine never parks");
+    }
+
+    #[test]
+    fn chaos_faults_recovered_to_kruskal_sequential() {
+        use crate::ghs::fault::FaultConfig;
+        let g = generate(GraphFamily::Rmat, 6, 13);
+        let mut c = cfg(4);
+        c.faults = Some(
+            FaultConfig::parse("drop=0.05,dup=0.02,reorder=4,corrupt=0.01,seed=11").unwrap(),
+        );
+        assert_matches_kruskal(&g, c);
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Seeded, deterministic fault injection on the packet path (chaos layer).
+//!
+//! The paper assumes a lossless Infiniband fabric; ROADMAP item 4 (a real
+//! multi-process transport) does not get that luxury. This module
+//! interposes a per-link fault injector between a rank's outbox flush and
+//! the interconnect of every engine: frames can be **dropped**,
+//! **duplicated**, **payload-corrupted** (one flipped byte — header
+//! corruption is indistinguishable from a drop on a real transport and is
+//! modeled by `drop`), or **delay-reordered** (held back a bounded number
+//! of subsequent offers on the same link). The async scheduler adds two
+//! schedule-level faults: a permanently **stalled rank** (the watchdog
+//! demo) and probabilistic **worker slowdowns** (activation deferrals).
+//!
+//! Determinism is the whole point: every link (src, dst) derives its own
+//! [`Xoshiro256`] stream from the configured seed, and all decisions are
+//! drawn in a fixed order gated only by the *configuration* (never by
+//! prior outcomes), so a fault schedule is a pure function of
+//! `(seed, offered frame sequence)` — the same run replays identically,
+//! and `pipeline_check.py` reproduces the exact stream in lock-step.
+//!
+//! Faults are off by default (`GhsConfig::faults == None`): the injector
+//! is never constructed, no allocation happens, and every counter baseline
+//! stays byte-identical. Turning faults on (even with all-zero rates)
+//! also turns on the reliability layer ([`crate::ghs::reliable`]) that
+//! recovers from them.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::prng::Xoshiro256;
+
+/// Golden-ratio stride used to decorrelate per-link streams (same constant
+/// the scheduler uses for per-worker fuzz streams).
+const LINK_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// XOR mask applied to one payload byte by corruption injection. Non-zero,
+/// so the byte always changes and the FNV-1a frame checksum — injective
+/// under a single-byte flip — always catches it.
+const CORRUPT_MASK: u8 = 0xA5;
+
+/// Per-link fault rates and scheduler-fault knobs. Parsed from the CLI
+/// `--faults` grammar and carried on [`crate::ghs::config::GhsConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Probability a frame is dropped on the wire.
+    pub drop: f64,
+    /// Probability a frame is duplicated (the copy is delivered
+    /// immediately; the original keeps its own delay fate).
+    pub dup: f64,
+    /// Maximum reorder window: a delayed frame is held back up to this
+    /// many subsequent offers on its link (0 disables delay-reorder).
+    pub reorder: u32,
+    /// Probability one payload byte of a frame is flipped.
+    pub corrupt: f64,
+    /// Async scheduler: probability an activation is deferred (the task is
+    /// requeued without running) — a recoverable schedule perturbation.
+    pub slow: f64,
+    /// Permanently stall this rank: its task is never run (async), its
+    /// superstep body is skipped (sequential), its thread idles
+    /// (threaded). Peers' retransmit watchdogs then fire deterministically
+    /// — the structured-degradation demo.
+    pub stall_rank: Option<u32>,
+    /// Seed of every per-link fault stream.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            drop: 0.0,
+            dup: 0.0,
+            reorder: 0,
+            corrupt: 0.0,
+            slow: 0.0,
+            stall_rank: None,
+            seed: 1,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse the CLI grammar:
+    /// `drop=0.05,dup=0.02,reorder=8,corrupt=0.01,slow=0.05,stall=3,seed=7`.
+    /// Every key is optional; unknown keys and out-of-range rates are
+    /// structured errors.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut cfg = FaultConfig::default();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("--faults: expected key=value, got {part:?}"),
+            };
+            let rate = |v: &str| -> Result<f64> {
+                let r: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--faults: {key}={v:?} is not a number")
+                })?;
+                if !(0.0..1.0).contains(&r) {
+                    bail!("--faults: {key}={r} outside [0, 1)");
+                }
+                Ok(r)
+            };
+            match key {
+                "drop" => cfg.drop = rate(val)?,
+                "dup" => cfg.dup = rate(val)?,
+                "corrupt" => cfg.corrupt = rate(val)?,
+                "slow" => cfg.slow = rate(val)?,
+                "reorder" => {
+                    cfg.reorder = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--faults: reorder={val:?} is not a u32"))?
+                }
+                "stall" => {
+                    cfg.stall_rank = Some(val.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults: stall={val:?} is not a rank id")
+                    })?)
+                }
+                "seed" => {
+                    cfg.seed = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--faults: seed={val:?} is not a u64"))?
+                }
+                _ => bail!("--faults: unknown key {key:?} in {part:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// True when any packet-path fault can fire (the injector needs per-link
+    /// streams); scheduler-only configs skip the packet-path bookkeeping.
+    pub fn any_link_fault(&self) -> bool {
+        self.drop > 0.0 || self.dup > 0.0 || self.corrupt > 0.0 || self.reorder > 0
+    }
+}
+
+/// Counters of injected (and degradation-reported) faults, attached to
+/// [`crate::ghs::result::GhsRun`] as `faults` when the chaos layer is on.
+/// The conformance ledger: `ProfileCounters::fault_injected` per rank
+/// equals `drops + dups + corrupts + delays` here, and every injected
+/// packet fault is either recovered by the reliability layer or reported
+/// through the watchdog (`degraded`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames removed from the wire.
+    pub drops: u64,
+    /// Extra frame copies delivered.
+    pub dups: u64,
+    /// Frames with a flipped payload byte.
+    pub corrupts: u64,
+    /// Frames held back for reordering.
+    pub delays: u64,
+    /// Activations skipped because the task's rank is stalled (async).
+    pub stalls: u64,
+    /// Activations deferred by worker-slowdown injection (async).
+    pub slowdowns: u64,
+    /// Watchdog give-ups reported as structured degradation.
+    pub degraded: u64,
+}
+
+impl FaultStats {
+    /// Sum another rank's stats into this one.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.drops += other.drops;
+        self.dups += other.dups;
+        self.corrupts += other.corrupts;
+        self.delays += other.delays;
+        self.stalls += other.stalls;
+        self.slowdowns += other.slowdowns;
+        self.degraded += other.degraded;
+    }
+
+    /// Total packet-path faults (the per-rank `fault_injected` ledger).
+    pub fn injected(&self) -> u64 {
+        self.drops + self.dups + self.corrupts + self.delays
+    }
+}
+
+/// Derive the seed of one directed link's fault stream. Mirrored verbatim
+/// by `pipeline_check.py` — change both together or not at all.
+pub fn link_seed(seed: u64, src: u32, dst: u32) -> u64 {
+    seed ^ (((src as u64) << 32) | dst as u64).wrapping_mul(LINK_STRIDE)
+}
+
+/// One directed link's fault state: its decision stream, offer counter,
+/// and held-back (delayed) frames.
+struct LinkState {
+    rng: Xoshiro256,
+    /// Frames offered on this link so far (delay release is counted in
+    /// offers, so a busy link reorders and a quiet one releases via
+    /// [`Injector::tick`] aging).
+    offers: u64,
+    /// Held frames: `(release_at_offer, bytes, n_msgs)`.
+    held: Vec<(u64, Vec<u8>, u32)>,
+}
+
+/// Per-sender packet-path fault injector. One instance per rank; links are
+/// created lazily per destination.
+pub struct Injector {
+    cfg: FaultConfig,
+    src: u32,
+    links: HashMap<u32, LinkState>,
+    /// Injection tally (merged into the run-level [`FaultStats`]).
+    pub stats: FaultStats,
+}
+
+impl Injector {
+    pub fn new(cfg: FaultConfig, src: u32) -> Self {
+        Self { cfg, src, links: HashMap::new(), stats: FaultStats::default() }
+    }
+
+    /// Offer one framed buffer to the link `src -> dst`; frames that
+    /// survive (plus any held frames now due, which are older and are
+    /// emitted first) are appended to `out` as `(dst, bytes, n_msgs)`.
+    ///
+    /// Decision draws happen in a fixed order gated only by the config
+    /// (drop, dup, corrupt, delay) — never by prior outcomes — so the
+    /// stream stays in lock-step with the Python port.
+    pub fn offer(
+        &mut self,
+        dst: u32,
+        bytes: Vec<u8>,
+        n_msgs: u32,
+        out: &mut Vec<(u32, Vec<u8>, u32)>,
+    ) {
+        let cfg = self.cfg.clone();
+        let src = self.src;
+        let link = self.links.entry(dst).or_insert_with(|| LinkState {
+            rng: Xoshiro256::seed_from_u64(link_seed(cfg.seed, src, dst)),
+            offers: 0,
+            held: Vec::new(),
+        });
+        link.offers += 1;
+        // Release held frames that came due — they predate this frame.
+        let due = link.offers;
+        let mut i = 0;
+        while i < link.held.len() {
+            if link.held[i].0 <= due {
+                let (_, b, n) = link.held.remove(i);
+                out.push((dst, b, n));
+            } else {
+                i += 1;
+            }
+        }
+        let dropped = cfg.drop > 0.0 && link.rng.next_bool(cfg.drop);
+        let duped = cfg.dup > 0.0 && link.rng.next_bool(cfg.dup);
+        let corrupted = cfg.corrupt > 0.0 && link.rng.next_bool(cfg.corrupt);
+        let delay = if cfg.reorder > 0 { link.rng.next_below(cfg.reorder as u64 + 1) } else { 0 };
+        if dropped {
+            self.stats.drops += 1;
+            return;
+        }
+        let mut bytes = bytes;
+        if corrupted && bytes.len() > crate::ghs::reliable::HEADER_LEN {
+            // Flip one payload byte (never the header: see module docs).
+            let span = (bytes.len() - crate::ghs::reliable::HEADER_LEN) as u64;
+            let at = crate::ghs::reliable::HEADER_LEN + link.rng.next_below(span) as usize;
+            bytes[at] ^= CORRUPT_MASK;
+            self.stats.corrupts += 1;
+        }
+        if duped {
+            // The copy is delivered immediately (identical bytes, so a
+            // corrupted original yields two rejected copies — both
+            // recovered by the same retransmit).
+            out.push((dst, bytes.clone(), n_msgs));
+            self.stats.dups += 1;
+        }
+        if delay > 0 {
+            link.held.push((link.offers + delay, bytes, n_msgs));
+            self.stats.delays += 1;
+        } else {
+            out.push((dst, bytes, n_msgs));
+        }
+    }
+
+    /// Aging tick (called at the flush cadence): advance every link's
+    /// offer counter so held frames on quiet links still come due, and
+    /// emit the released frames. Links are swept in sorted-destination
+    /// order (HashMap iteration order is not deterministic).
+    pub fn tick(&mut self, out: &mut Vec<(u32, Vec<u8>, u32)>) {
+        let mut dsts: Vec<u32> = self.links.keys().copied().collect();
+        dsts.sort_unstable();
+        for dst in dsts {
+            let link = self.links.get_mut(&dst).expect("link just listed");
+            if link.held.is_empty() {
+                continue;
+            }
+            link.offers += 1;
+            let due = link.offers;
+            let mut i = 0;
+            while i < link.held.len() {
+                if link.held[i].0 <= due {
+                    let (_, b, n) = link.held.remove(i);
+                    out.push((dst, b, n));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// True while any link still holds a delayed frame.
+    pub fn holding(&self) -> bool {
+        self.links.values().any(|l| !l.held.is_empty())
+    }
+
+    /// Messages inside held (delayed) frames across all links. Usually
+    /// these are still covered by the sender's unacked window, but a
+    /// retransmit can be delivered and acked while the original copy is
+    /// still held — silence accounting must count the stale copy until
+    /// the aging tick releases it (the receiver then dup-drops it, which
+    /// is what keeps the injected/recovered ledger exact).
+    pub fn held_msgs(&self) -> u64 {
+        self.links.values().flat_map(|l| l.held.iter()).map(|(_, _, n)| *n as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ghs::reliable::HEADER_LEN;
+
+    fn frame(len: usize, fill: u8) -> Vec<u8> {
+        let mut v = vec![0u8; HEADER_LEN];
+        v.extend(std::iter::repeat(fill).take(len));
+        v
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let spec = "drop=0.05,dup=0.02,reorder=8,corrupt=0.01,slow=0.1,stall=3,seed=7";
+        let c = FaultConfig::parse(spec).unwrap();
+        assert_eq!(c.drop, 0.05);
+        assert_eq!(c.dup, 0.02);
+        assert_eq!(c.reorder, 8);
+        assert_eq!(c.corrupt, 0.01);
+        assert_eq!(c.slow, 0.1);
+        assert_eq!(c.stall_rank, Some(3));
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn parse_partial_and_empty() {
+        let c = FaultConfig::parse("drop=0.5").unwrap();
+        assert_eq!(c.drop, 0.5);
+        assert_eq!(c.dup, 0.0);
+        assert_eq!(c.seed, 1, "default seed");
+        let d = FaultConfig::parse("").unwrap();
+        assert_eq!(d, FaultConfig::default());
+        assert!(!d.any_link_fault());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultConfig::parse("drop=2.0").is_err(), "rate out of range");
+        assert!(FaultConfig::parse("drop").is_err(), "missing value");
+        assert!(FaultConfig::parse("warp=0.1").is_err(), "unknown key");
+        assert!(FaultConfig::parse("reorder=-1").is_err());
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let cfg = FaultConfig {
+            drop: 0.3,
+            dup: 0.2,
+            reorder: 4,
+            corrupt: 0.2,
+            seed: 42,
+            ..FaultConfig::default()
+        };
+        let run = |cfg: &FaultConfig| {
+            let mut inj = Injector::new(cfg.clone(), 0);
+            let mut out = Vec::new();
+            for i in 0..200u32 {
+                inj.offer(1 + (i % 3), frame(20, i as u8), 1, &mut out);
+            }
+            inj.tick(&mut out);
+            (out, inj.stats)
+        };
+        let (a, sa) = run(&cfg);
+        let (b, sb) = run(&cfg);
+        assert_eq!(a, b, "same seed, same schedule, same bytes");
+        assert_eq!(sa, sb);
+        assert!(sa.injected() > 0, "rates this high must fire");
+        let mut other = cfg.clone();
+        other.seed = 43;
+        let (c, _) = run(&other);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn drop_removes_and_dup_duplicates() {
+        // drop=1 swallows everything.
+        let mut inj = Injector::new(
+            FaultConfig { drop: 1.0 - 1e-12, ..FaultConfig::default() },
+            0,
+        );
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            inj.offer(1, frame(8, 7), 1, &mut out);
+        }
+        assert!(out.is_empty());
+        assert_eq!(inj.stats.drops, 10);
+        // dup=1 doubles everything.
+        let mut inj = Injector::new(
+            FaultConfig { dup: 1.0 - 1e-12, ..FaultConfig::default() },
+            0,
+        );
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            inj.offer(1, frame(8, 7), 1, &mut out);
+        }
+        assert_eq!(out.len(), 20);
+        assert_eq!(inj.stats.dups, 10);
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_payload_byte() {
+        let mut inj = Injector::new(
+            FaultConfig { corrupt: 1.0 - 1e-12, ..FaultConfig::default() },
+            0,
+        );
+        let mut out = Vec::new();
+        inj.offer(1, frame(32, 0x11), 1, &mut out);
+        assert_eq!(out.len(), 1);
+        let got = &out[0].1;
+        let want = frame(32, 0x11);
+        let diffs: Vec<usize> = (0..want.len()).filter(|&i| got[i] != want[i]).collect();
+        assert_eq!(diffs.len(), 1, "exactly one byte differs");
+        assert!(diffs[0] >= HEADER_LEN, "header bytes are never corrupted");
+        assert_eq!(inj.stats.corrupts, 1);
+    }
+
+    #[test]
+    fn delayed_frames_release_in_bounded_window() {
+        let cfg = FaultConfig { reorder: 4, seed: 5, ..FaultConfig::default() };
+        let mut inj = Injector::new(cfg, 0);
+        let mut out = Vec::new();
+        for i in 0..50u8 {
+            inj.offer(1, frame(4, i), 1, &mut out);
+        }
+        // Aging ticks flush whatever is still held.
+        for _ in 0..8 {
+            inj.tick(&mut out);
+        }
+        assert!(!inj.holding(), "every held frame must come due");
+        assert_eq!(out.len(), 50, "delay reorders, never loses");
+        assert_eq!(inj.stats.drops + inj.stats.dups + inj.stats.corrupts, 0);
+        // The stream is a permutation of the offered frames with bounded
+        // displacement.
+        let mut seen = vec![false; 50];
+        for (pos, (_, b, _)) in out.iter().enumerate() {
+            let id = b[HEADER_LEN] as usize;
+            assert!(!seen[id], "frame {id} delivered twice");
+            seen[id] = true;
+            let disp = (pos as i64 - id as i64).abs();
+            assert!(disp <= 8, "frame {id} displaced {disp} > window");
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn link_streams_are_decorrelated() {
+        assert_ne!(link_seed(1, 0, 1), link_seed(1, 1, 0), "direction matters");
+        assert_ne!(link_seed(1, 0, 1), link_seed(2, 0, 1), "seed matters");
+    }
+}

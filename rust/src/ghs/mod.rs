@@ -22,6 +22,8 @@
 //!   per-worker run queue)
 //! * [`ring`] — bounded MPSC mailbox ring with counted overflow spill
 //!   (the async engine's per-task inbox)
+//! * [`fault`] — seeded deterministic fault injector (chaos layer)
+//! * [`reliable`] — seq/ack/retransmit reliable-delivery protocol
 //! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
 
 pub mod bufpool;
@@ -29,10 +31,12 @@ pub mod config;
 pub mod deque;
 pub mod edge_lookup;
 pub mod engine;
+pub mod fault;
 pub mod message;
 pub mod parallel;
 pub mod queues;
 pub mod rank;
+pub mod reliable;
 pub mod result;
 pub mod ring;
 pub mod sched;

@@ -17,7 +17,7 @@
 //! checking the silence counter before every park. Park events are
 //! recorded in `ProfileCounters::parked`.
 
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -69,26 +69,41 @@ pub fn run_threaded(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     // One shared buffer pool: receivers return spent packet buffers, any
     // sender's next flush reuses them.
     let pool = Arc::new(BufferPool::new());
+    // Raised when any rank fails (chaos watchdog, decode error): peers
+    // exit their loops instead of waiting forever on a silence that can
+    // no longer arrive.
+    let abort = Arc::new(AtomicBool::new(false));
     let mut handles = Vec::with_capacity(p);
     for (rank_id, rx) in receivers.into_iter().enumerate() {
         let mut rank = RankState::new(rank_id as u32, g, part.clone(), &config, codec);
         rank.pool = Arc::clone(&pool);
         let senders = senders.clone();
         let pending = Arc::clone(&pending);
+        let abort = Arc::clone(&abort);
         handles.push(std::thread::spawn(move || -> Result<RankState> {
-            run_rank(&mut rank, rx, &senders, &pending)?;
-            Ok(rank)
+            match run_rank(&mut rank, rx, &senders, &pending, &abort) {
+                Ok(()) => Ok(rank),
+                Err(e) => {
+                    abort.store(true, Ordering::Release);
+                    Err(e)
+                }
+            }
         }));
     }
     drop(senders);
 
     let t0 = std::time::Instant::now();
     let mut ranks = Vec::with_capacity(p);
+    let mut first_err = None;
     for h in handles {
         match h.join() {
-            Ok(r) => ranks.push(r?),
+            Ok(Ok(r)) => ranks.push(r),
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(e) => std::panic::resume_unwind(e),
         }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     collect(ranks, g.n_vertices, t0.elapsed().as_secs_f64(), partition_stats)
 }
@@ -98,6 +113,7 @@ fn run_rank(
     rx: Receiver<Packet>,
     senders: &[Sender<Packet>],
     pending: &AtomicI64,
+    abort: &AtomicBool,
 ) -> Result<()> {
     // Wake every local vertex, credit the injected sends, release the
     // startup token (shared silence-accounting protocol: see
@@ -112,7 +128,7 @@ fn run_rank(
         loop {
             match rx.try_recv() {
                 Ok((_src, buf, _n)) => {
-                    rank.read_buffer(&buf);
+                    rank.read_buffer(&buf)?;
                     rank.pool.put(buf);
                     received = true;
                 }
@@ -132,6 +148,9 @@ fn run_rank(
             rank.prof.finish_checks += 1;
             if pending.load(Ordering::Acquire) == 0 {
                 return Ok(());
+            }
+            if abort.load(Ordering::Acquire) {
+                return Ok(()); // a peer failed; silence can never arrive
             }
         }
         // Idle backoff: a rank with nothing to read, pop, or flush used to
@@ -158,11 +177,14 @@ fn run_rank(
         if pending.load(Ordering::Acquire) == 0 {
             return Ok(());
         }
+        if abort.load(Ordering::Acquire) {
+            return Ok(());
+        }
         rank.prof.parked += 1;
         rank.trace_ev(EventKind::Park, 0, 0, 0);
         match rx.recv_timeout(Duration::from_micros(park_us)) {
             Ok((_src, buf, _n)) => {
-                rank.read_buffer(&buf);
+                rank.read_buffer(&buf)?;
                 rank.pool.put(buf);
                 idle_streak = 0;
                 park_us = PARK_MIN_US;
@@ -210,12 +232,16 @@ pub(crate) fn collect(
     let mut per_rank = Vec::with_capacity(ranks.len());
     let mut sent = MessageCounts::default();
     let mut timeline = Vec::new();
+    let mut faults: Option<crate::ghs::fault::FaultStats> = None;
     let supersteps = ranks.iter().map(|r| r.prof.iterations).max().unwrap_or(0);
     for r in &mut ranks {
         profile.merge(&r.prof);
         per_rank.push(r.prof);
         sent.merge(&r.sent_counts);
         timeline.append(&mut r.timeline);
+        if let Some(fs) = r.fault_stats() {
+            faults.get_or_insert_with(Default::default).merge(&fs);
+        }
     }
     timeline.sort_by_key(|e| (e.superstep, e.src, e.dst));
     let traced = ranks.iter().any(|r| r.trace.is_some());
@@ -242,6 +268,7 @@ pub(crate) fn collect(
         sim: crate::sim::SimSummary { total_time: wall, ..Default::default() },
         partition: partition_stats,
         trace,
+        faults,
     })
 }
 

@@ -8,13 +8,15 @@
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::ghs::bufpool::BufferPool;
 use crate::ghs::config::GhsConfig;
 use crate::ghs::edge_lookup::{EdgeLookup, LookupStats, SearchStrategy};
+use crate::ghs::fault::{FaultStats, Injector};
 use crate::ghs::message::{Message, MessageCounts, Payload};
 use crate::ghs::queues::RankQueues;
+use crate::ghs::reliable::{self, RecvVerdict, Reliable};
 use crate::ghs::result::{FlushEvent, ProfileCounters};
 use crate::ghs::types::{EdgeState, Level, VertexState};
 use crate::ghs::vertex::Outcome;
@@ -165,6 +167,22 @@ pub struct RankState {
     /// `stash_merges` value at the last trace flush sample (delta base
     /// for `StashRemerge` events).
     trace_stash: u64,
+    /// Chaos + reliability state (`GhsConfig::faults`). `None` off the
+    /// chaos path: zero allocation, and every hook on the hot path is one
+    /// `Option` check — counter baselines and trace fingerprints stay
+    /// byte-identical (asserted by `rust/tests/chaos.rs`).
+    pub(crate) chaos: Option<Box<Chaos>>,
+}
+
+/// The per-rank chaos-layer state bundle: the reliable-delivery protocol
+/// plus (when any link-fault rate is non-zero) the packet-path injector.
+pub(crate) struct Chaos {
+    /// Seq/ack/retransmit protocol state (always on when faults are
+    /// configured, even with all-zero rates).
+    pub(crate) rel: Reliable,
+    /// Packet-path fault injector; `None` when only scheduler faults
+    /// (stall/slow) are configured.
+    pub(crate) inj: Option<Injector>,
 }
 
 impl RankState {
@@ -246,6 +264,12 @@ impl RankState {
             superstep: 0,
             trace: config.trace.map(|depth| TraceRing::new(depth as usize)),
             trace_stash: 0,
+            chaos: config.faults.as_ref().map(|fc| {
+                Box::new(Chaos {
+                    rel: Reliable::new(rank),
+                    inj: fc.any_link_fault().then(|| Injector::new(fc.clone(), rank)),
+                })
+            }),
         }
     }
 
@@ -325,14 +349,18 @@ impl RankState {
             self.queues.push_incoming(msg);
         } else {
             debug_assert_eq!(self.part.owner(dst), self.peers[slot as usize]);
+            // Chaos runs reserve header space up front so `flush_peer` can
+            // frame in place without shifting the payload.
+            let hdr = if self.chaos.is_some() { reliable::HEADER_LEN } else { 0 };
             let (buf, n) = &mut self.outbox[slot as usize];
             if buf.is_empty() {
                 self.dirty_dsts.push(slot);
+                buf.resize(hdr, 0);
             }
             wire::encode(&msg, self.wire, buf);
             *n += 1;
             self.prof.bytes_sent += self.wire.size_of(&payload) as u64;
-            if buf.len() >= self.config.max_msg_size {
+            if buf.len() - hdr >= self.config.max_msg_size {
                 self.flush_peer(slot as usize);
             }
         }
@@ -357,7 +385,8 @@ impl RankState {
     /// than a fresh allocation; [`ProfileCounters::buf_reuse`] /
     /// [`ProfileCounters::buf_alloc`] record the hit rate.
     fn flush_peer(&mut self, slot: usize) {
-        if self.outbox[slot].0.is_empty() {
+        let hdr = if self.chaos.is_some() { reliable::HEADER_LEN } else { 0 };
+        if self.outbox[slot].0.len() <= hdr {
             return;
         }
         let dst = self.peers[slot];
@@ -368,7 +397,7 @@ impl RankState {
             self.prof.buf_alloc += 1;
         }
         let (buf, n) = &mut self.outbox[slot];
-        let bytes = std::mem::replace(buf, replacement);
+        let mut bytes = std::mem::replace(buf, replacement);
         let n_msgs = std::mem::replace(n, 0);
         self.prof.flushes += 1;
         if self.config.record_timeline {
@@ -380,17 +409,114 @@ impl RankState {
                 n_msgs,
             });
         }
-        self.flushed.push((dst, bytes, n_msgs));
+        if let Some(mut chaos) = self.chaos.take() {
+            let now = self.prof.iterations;
+            chaos.rel.frame(dst, &mut bytes, n_msgs, now);
+            self.dispatch(&mut chaos, dst, bytes, n_msgs);
+            self.chaos = Some(chaos);
+        } else {
+            self.flushed.push((dst, bytes, n_msgs));
+        }
+    }
+
+    /// Route one framed packet through the fault injector (if configured)
+    /// into [`Self::flushed`], tallying what the injector did to it.
+    fn dispatch(&mut self, chaos: &mut Chaos, dst: u32, bytes: Vec<u8>, n_msgs: u32) {
+        let Some(inj) = chaos.inj.as_mut() else {
+            self.flushed.push((dst, bytes, n_msgs));
+            return;
+        };
+        let before = inj.stats;
+        inj.offer(dst, bytes, n_msgs, &mut self.flushed);
+        let after = inj.stats;
+        self.prof.fault_injected += after.injected() - before.injected();
+        if self.trace.is_some() {
+            let deltas = [
+                after.drops - before.drops,
+                after.dups - before.dups,
+                after.corrupts - before.corrupts,
+                after.delays - before.delays,
+            ];
+            for (kind, d) in deltas.iter().enumerate() {
+                if *d > 0 {
+                    self.trace_ev(EventKind::FaultInject, dst as u64, kind as u64, *d);
+                }
+            }
+        }
     }
 
     /// Flush all non-empty buffers ("send_all_bufs" in the paper's scheme).
-    pub fn flush_all(&mut self) {
+    /// On chaos runs this is also the reliability timer pass; the only
+    /// error it can return is the retransmit watchdog giving up on a dead
+    /// peer.
+    pub fn flush_all(&mut self) -> Result<()> {
         let mut dirty = std::mem::take(&mut self.dirty_dsts);
         for slot in dirty.drain(..) {
             self.flush_peer(slot as usize);
         }
         // Keep the drained allocation (flush cadence reuses it forever).
         self.dirty_dsts = dirty;
+        self.reliability_tick()
+    }
+
+    /// Reliable-delivery timer pass (chaos runs only; no-op otherwise):
+    /// retransmit expired window frames back through the injector, emit
+    /// standalone acks for receive-side debts older than
+    /// [`reliable::ACK_IDLE`], and age the injector's delayed frames. A
+    /// peer silent past the watchdog budget ([`reliable::MAX_ATTEMPTS`]
+    /// exponential-backoff retransmits) degrades into a structured report
+    /// in the same shape as the async engine's deadlock report, instead
+    /// of hanging the run.
+    fn reliability_tick(&mut self) -> Result<()> {
+        let Some(mut chaos) = self.chaos.take() else { return Ok(()) };
+        let now = self.prof.iterations;
+        self.prof.timeout_checks += 1;
+        let mut retrans = Vec::new();
+        let mut acks = Vec::new();
+        if let Err(w) = chaos.rel.tick(now, &mut retrans, &mut acks) {
+            if let Some(inj) = chaos.inj.as_mut() {
+                inj.stats.degraded += w.n_msgs as u64;
+            }
+            self.chaos = Some(chaos);
+            let local = self
+                .stranded_report()
+                .unwrap_or_else(|| "no local work stranded".to_string());
+            bail!(
+                "reliable delivery gave up: rank {} -> rank {} frame seq {} unacked after {} \
+                 retransmits ({} messages undeliverable; peer stalled past the watchdog \
+                 budget)\n  rank {}: {}",
+                self.rank,
+                w.peer,
+                w.seq,
+                w.attempts,
+                w.n_msgs,
+                self.rank,
+                local,
+            );
+        }
+        for (dst, bytes, n_msgs) in retrans {
+            self.prof.retransmits += 1;
+            if self.trace.is_some() {
+                let seq = reliable::parse_header(&bytes).map_or(0, |h| h.seq as u64);
+                self.trace_ev(EventKind::Retransmit, dst as u64, seq, n_msgs as u64);
+            }
+            self.dispatch(&mut chaos, dst, bytes, n_msgs);
+        }
+        for (dst, bytes, n_msgs) in acks {
+            self.prof.acks_sent += 1;
+            self.trace_ev(EventKind::AckSend, dst as u64, 0, 0);
+            // Standalone acks bypass the injector: they are the recovery
+            // control channel, and a lossy ack channel would make the
+            // conformance matrix timing-dependent beyond what the seeded
+            // streams pin down (they still converge — retransmits refresh
+            // the cumulative ack — just not deterministically fast).
+            self.flushed.push((dst, bytes, n_msgs));
+        }
+        if let Some(inj) = chaos.inj.as_mut() {
+            inj.tick(&mut self.flushed);
+        }
+        self.chaos = Some(chaos);
+        Ok(())
     }
 
     /// Any unflushed aggregated bytes?
@@ -400,15 +526,95 @@ impl RankState {
 
     /// Batch-decode an arrived aggregated buffer into the queues
     /// ("read_msgs"): one frame walk writes the packet straight into queue
-    /// slots, with no per-message `Payload` dispatch until pop.
-    pub fn read_buffer(&mut self, buf: &[u8]) {
+    /// slots, with no per-message `Payload` dispatch until pop. On chaos
+    /// runs the buffer is a reliable-delivery frame and goes through the
+    /// checksum + seq/ack state machine first. Errors are structured
+    /// decode failures ([`wire::DecodeError`]), never panics.
+    pub fn read_buffer(&mut self, buf: &[u8]) -> Result<()> {
+        if self.chaos.is_some() {
+            return self.read_frame(buf);
+        }
+        self.decode_payload(buf)
+    }
+
+    /// Decode one batch of wire-encoded messages straight into the queues,
+    /// with byte/batch accounting. Chaos runs pass the payload *after* the
+    /// reliability header, so `bytes_decoded` stays payload-only and
+    /// comparable to fault-free baselines.
+    fn decode_payload(&mut self, buf: &[u8]) -> Result<()> {
         self.prof.bytes_decoded += buf.len() as u64;
         self.prof.decode_batches += 1;
-        let n = wire::decode_into(buf, self.wire, &mut self.queues);
+        let n = wire::decode_into(buf, self.wire, &mut self.queues)
+            .map_err(|e| anyhow!("rank {}: {e}", self.rank))?;
         self.prof.msgs_decoded += n;
         if self.trace.is_some() {
             self.trace_ev(EventKind::Recv, n, buf.len() as u64, 0);
         }
+        Ok(())
+    }
+
+    /// Chaos-run receive path: verify the checksum, run the seq/ack state
+    /// machine, and deliver in-order payloads — including any
+    /// reorder-buffered frames this one unblocks — into the queues.
+    /// Corrupt and duplicate frames are counted and dropped (the sender's
+    /// retransmit window recovers the corrupted ones).
+    fn read_frame(&mut self, buf: &[u8]) -> Result<()> {
+        let now = self.prof.iterations;
+        let chaos = self.chaos.as_mut().expect("read_frame only on chaos runs");
+        match chaos.rel.accept(buf, now) {
+            RecvVerdict::AckOnly => Ok(()),
+            RecvVerdict::Corrupt => {
+                self.prof.corrupt_dropped += 1;
+                self.trace_ev(EventKind::CorruptDrop, buf.len() as u64, 0, 0);
+                Ok(())
+            }
+            RecvVerdict::Dup => {
+                self.prof.dup_dropped += 1;
+                if self.trace.is_some() {
+                    let h = reliable::parse_header(buf).expect("Dup implies parsed header");
+                    self.trace_ev(EventKind::DupDrop, h.src as u64, h.seq as u64, 0);
+                }
+                Ok(())
+            }
+            RecvVerdict::Buffered => {
+                self.prof.reorder_buffered += 1;
+                if self.trace.is_some() {
+                    let h = reliable::parse_header(buf).expect("Buffered implies parsed header");
+                    self.trace_ev(EventKind::ReorderHold, h.src as u64, h.seq as u64, 0);
+                }
+                Ok(())
+            }
+            RecvVerdict::Deliver => {
+                let src = reliable::parse_header(buf).expect("Deliver implies parsed header").src;
+                self.decode_payload(&buf[reliable::HEADER_LEN..])?;
+                while let Some((payload, _)) = {
+                    let chaos = self.chaos.as_mut().expect("chaos on");
+                    chaos.rel.drain_ready(src as u32)
+                } {
+                    self.decode_payload(&payload)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Does the reliability layer still have in-flight state (unacked
+    /// windows, owed acks, reorder-buffered frames), or is the injector
+    /// holding delayed frames? Chaos runs must not park or terminate while
+    /// this is true — the retransmit/ack timers only advance while the
+    /// rank keeps stepping. Always `false` off the chaos path.
+    pub fn rel_has_work(&self) -> bool {
+        self.chaos
+            .as_ref()
+            .is_some_and(|c| c.rel.has_work() || c.inj.as_ref().is_some_and(|i| i.holding()))
+    }
+
+    /// Injected-fault statistics for this rank (`None` off the chaos
+    /// path; all-zero when reliability is on but every link rate is 0).
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        self.chaos
+            .as_ref()
+            .map(|c| c.inj.as_ref().map_or(FaultStats::default(), |i| i.stats))
     }
 
     /// Inject this rank's spontaneous start into the pending-message
@@ -513,13 +719,14 @@ impl RankState {
         if iter % self.config.sending_frequency as u64 == 0 {
             self.superstep = iter;
             self.trace_flush_sample();
-            self.flush_all();
+            self.flush_all()?;
         }
         let blocked = main_burst == 0
             && test_burst == 0
             && self.queues.active_len() == 0
             && !self.has_dirty_outbox()
-            && self.flushed.is_empty();
+            && self.flushed.is_empty()
+            && !self.rel_has_work();
         Ok(if blocked { StepStatus::Blocked } else { StepStatus::Ready })
     }
 
@@ -527,7 +734,16 @@ impl RankState {
     /// yet-delivered is tracked by the engine).
     pub fn pending_local(&self) -> u64 {
         let outbox_msgs: u64 = self.outbox.iter().map(|(_, n)| *n as u64).sum();
-        self.queues.total_len() as u64 + outbox_msgs
+        // Unacked window messages count as pending on chaos runs: a
+        // dropped frame's messages live nowhere else until the retransmit
+        // lands, and the sequential engine's silence allreduce must not
+        // terminate past them. Held (delayed) copies count too — a
+        // retransmit can clear the window while the injector still holds
+        // the original, and terminating past it would strand the frame.
+        let unacked = self.chaos.as_ref().map_or(0, |c| {
+            c.rel.window_msgs() + c.inj.as_ref().map_or(0, |i| i.held_msgs())
+        });
+        self.queues.total_len() as u64 + outbox_msgs + unacked
     }
 
     /// One detail line for a deadlock report: what work is stranded at
@@ -540,10 +756,16 @@ impl RankState {
         let active = self.queues.active_len();
         let stash = self.queues.stash_len();
         let outbox: u64 = self.outbox.iter().map(|(_, n)| *n as u64).sum();
-        if active == 0 && stash == 0 && outbox == 0 {
+        let unacked = self.chaos.as_ref().map_or(0, |c| c.rel.window_msgs());
+        if active == 0 && stash == 0 && outbox == 0 && unacked == 0 {
             return None;
         }
-        Some(format!("{active} active, {stash} stashed (postponed), {outbox} unflushed outbox msgs"))
+        let mut line =
+            format!("{active} active, {stash} stashed (postponed), {outbox} unflushed outbox msgs");
+        if unacked > 0 {
+            line.push_str(&format!(", {unacked} unacked window msgs"));
+        }
+        Some(line)
     }
 
     /// Collect this rank's Branch edges, each reported once (by the
@@ -629,12 +851,59 @@ mod tests {
         let mut buf = Vec::new();
         let msg = Message::new(0, r1.csr.first_vertex(), Payload::Accept);
         wire::encode(&msg, r0.wire, &mut buf);
-        r1.read_buffer(&buf);
+        r1.read_buffer(&buf).unwrap();
         assert_eq!(r1.prof.msgs_decoded, 1);
         assert_eq!(r1.queues.total_len(), 1);
         let got = r1.queues.pop_main().unwrap();
         assert_eq!(got.payload, Payload::Accept);
         let _ = &mut r0;
+    }
+
+    #[test]
+    fn chaos_flush_carries_reliable_header_and_roundtrips() {
+        use crate::ghs::fault::FaultConfig;
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = Partition::block(g.n_vertices, 2);
+        // Zero-rate fault config: reliability framing on, no injection.
+        let cfg = GhsConfig {
+            n_ranks: 2,
+            faults: Some(FaultConfig::default()),
+            ..GhsConfig::default()
+        };
+        let mut r0 = RankState::new(0, &g, part.clone(), &cfg, IdentityCodec::SpecialId);
+        let mut r1 = RankState::new(1, &g, part.clone(), &cfg, IdentityCodec::SpecialId);
+        let mut cross = None;
+        'outer: for row in 0..r0.csr.rows() {
+            let v = r0.csr.vertex_of(row);
+            for (i, nbr, _) in r0.csr.neighbours(v) {
+                if part.owner(nbr) == 1 {
+                    cross = Some((v, i));
+                    break 'outer;
+                }
+            }
+        }
+        let (v, adj) = cross.expect("cross edges exist");
+        for _ in 0..3 {
+            r0.send(v, adj, Payload::Accept);
+        }
+        r0.flush_one(1);
+        let (dst, buf, n) = r0.flushed.pop().expect("flush produced a frame");
+        assert_eq!((dst, n), (1, 3));
+        assert_eq!(buf.len(), reliable::HEADER_LEN + 30, "16 B header + 3 x 10 B msgs");
+        let h = reliable::parse_header(&buf).expect("checksum-valid header");
+        assert_eq!((h.seq, h.src, h.n_msgs), (0, 0, 3));
+        assert!(r0.rel_has_work(), "frame sits unacked in the window");
+        assert_eq!(r0.pending_local(), 3, "unacked window msgs count as pending");
+        // Receiver decodes the payload; byte accounting excludes the header.
+        r1.read_buffer(&buf).unwrap();
+        assert_eq!(r1.prof.msgs_decoded, 3);
+        assert_eq!(r1.prof.bytes_decoded, 30);
+        assert_eq!(r1.queues.total_len(), 3);
+        assert!(r1.rel_has_work(), "receiver owes a cumulative ack");
+        // A duplicate of the same frame is suppressed, not re-queued.
+        r1.read_buffer(&buf).unwrap();
+        assert_eq!(r1.prof.dup_dropped, 1);
+        assert_eq!(r1.queues.total_len(), 3, "exactly-once delivery");
     }
 
     #[test]

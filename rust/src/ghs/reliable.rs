@@ -1,0 +1,467 @@
+//! Reliable-delivery layer: the protocol that survives the chaos layer.
+//!
+//! Active iff `GhsConfig::faults` is set (even with all-zero rates). Every
+//! aggregated buffer a rank flushes gains a 16-byte frame header:
+//!
+//! ```text
+//! [0..4)   seq       u32 LE   per-(src,dst) sequence number
+//!                             (0xFFFF_FFFF = standalone ack frame)
+//! [4..8)   ack       u32 LE   cumulative ack: next seq expected from dst
+//! [8..12)  checksum  u32 LE   FNV-1a over seq|ack|src|n_msgs|payload
+//! [12..14) src       u16 LE   sending rank
+//! [14..16) n_msgs    u16 LE   messages in the payload
+//! ```
+//!
+//! Sender side: a sliding per-peer retransmit window keyed by seq, timed
+//! on the rank's **iteration count** (the virtual clock all three engines
+//! already advance) with exponential backoff ([`RTO_BASE`] doubling to
+//! [`RTO_MAX`]); a frame retransmitted more than [`MAX_ATTEMPTS`] times
+//! trips the watchdog, which degrades the run into the PR 6 structured
+//! deadlock/strand report instead of hanging. Acks are cumulative and
+//! piggybacked on every data frame already flowing the other way;
+//! standalone ack frames are emitted only after [`ACK_IDLE`] silent
+//! iterations (and bypass the fault injector — a documented
+//! simplification that keeps the injected/recovered ledger exact).
+//!
+//! Receiver side: the checksum rejects corrupted frames into the
+//! retransmit path, duplicate seqs are suppressed, and out-of-order
+//! frames are buffered and re-delivered in order.
+//!
+//! Off by default: no header bytes, no allocation, byte-identical counter
+//! baselines and trace fingerprints (asserted by `rust/tests/chaos.rs`).
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Frame header length in bytes (prepended to every flushed buffer).
+pub const HEADER_LEN: usize = 16;
+
+/// `seq` value marking a standalone ack frame (carries no payload).
+pub const SEQ_ACK_ONLY: u32 = u32::MAX;
+
+/// Initial retransmit timeout, in rank iterations.
+pub const RTO_BASE: u64 = 32;
+
+/// Retransmit timeout ceiling (exponential backoff cap).
+pub const RTO_MAX: u64 = 1024;
+
+/// Iterations of ack-owing silence before a standalone ack frame is sent.
+pub const ACK_IDLE: u64 = 16;
+
+/// Retransmit attempts after which the watchdog declares the peer dead.
+pub const MAX_ATTEMPTS: u32 = 16;
+
+const FNV_OFFSET: u32 = 0x811C_9DC5;
+const FNV_PRIME: u32 = 0x0100_0193;
+
+/// Parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub seq: u32,
+    pub ack: u32,
+    pub checksum: u32,
+    pub src: u16,
+    pub n_msgs: u16,
+}
+
+/// FNV-1a over the checksummed header fields and the payload. A single
+/// flipped byte anywhere in that span always changes the value (each step
+/// is `(h ^ b) * PRIME` with an odd prime — injective per byte).
+pub fn checksum(seq: u32, ack: u32, src: u16, n_msgs: u16, payload: &[u8]) -> u32 {
+    let mut h = FNV_OFFSET;
+    let mut eat = |b: u8| h = (h ^ b as u32).wrapping_mul(FNV_PRIME);
+    for b in seq.to_le_bytes() {
+        eat(b);
+    }
+    for b in ack.to_le_bytes() {
+        eat(b);
+    }
+    for b in src.to_le_bytes() {
+        eat(b);
+    }
+    for b in n_msgs.to_le_bytes() {
+        eat(b);
+    }
+    for &b in payload {
+        eat(b);
+    }
+    h
+}
+
+/// Fill the reserved 16-byte header at the front of `buf`.
+pub fn write_header(buf: &mut [u8], seq: u32, ack: u32, src: u16, n_msgs: u16) {
+    let sum = checksum(seq, ack, src, n_msgs, &buf[HEADER_LEN..]);
+    buf[0..4].copy_from_slice(&seq.to_le_bytes());
+    buf[4..8].copy_from_slice(&ack.to_le_bytes());
+    buf[8..12].copy_from_slice(&sum.to_le_bytes());
+    buf[12..14].copy_from_slice(&src.to_le_bytes());
+    buf[14..16].copy_from_slice(&n_msgs.to_le_bytes());
+}
+
+/// Parse (without validating) the header of a framed buffer.
+pub fn parse_header(buf: &[u8]) -> Option<Header> {
+    if buf.len() < HEADER_LEN {
+        return None;
+    }
+    let rd32 = |at: usize| u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]]);
+    let rd16 = |at: usize| u16::from_le_bytes([buf[at], buf[at + 1]]);
+    Some(Header {
+        seq: rd32(0),
+        ack: rd32(4),
+        checksum: rd32(8),
+        src: rd16(12),
+        n_msgs: rd16(14),
+    })
+}
+
+/// What the receive path decided about one incoming frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvVerdict {
+    /// Checksum mismatch — discard; the sender's retransmit recovers it.
+    Corrupt,
+    /// Standalone ack (or truncated runt) — ack processed, no payload.
+    AckOnly,
+    /// Already-delivered seq — suppress.
+    Dup,
+    /// Ahead of the expected seq — buffered for in-order delivery.
+    Buffered,
+    /// The expected seq — decode now, then drain [`Reliable::drain_ready`].
+    Deliver,
+}
+
+/// One unacked sent frame.
+struct SentFrame {
+    seq: u32,
+    /// The full framed bytes (header + payload) for retransmission.
+    bytes: Vec<u8>,
+    n_msgs: u32,
+    sent_at: u64,
+    rto: u64,
+    attempts: u32,
+}
+
+/// Per-peer flow state (both directions of one (rank, peer) pair).
+#[derive(Default)]
+struct Flow {
+    // -- send side --
+    next_seq: u32,
+    window: VecDeque<SentFrame>,
+    // -- receive side --
+    expect: u32,
+    /// Out-of-order frames: seq -> (payload copy, n_msgs).
+    reorder: BTreeMap<u32, (Vec<u8>, u32)>,
+    owed_ack: bool,
+    owed_since: u64,
+}
+
+/// The watchdog verdict: a peer stopped acking past every backoff budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Watchdog {
+    pub peer: u32,
+    pub seq: u32,
+    pub attempts: u32,
+    pub n_msgs: u32,
+}
+
+/// Per-rank reliability state: one [`Flow`] per peer, created lazily.
+pub struct Reliable {
+    rank: u32,
+    flows: HashMap<u32, Flow>,
+}
+
+impl Reliable {
+    pub fn new(rank: u32) -> Self {
+        Self { rank, flows: HashMap::new() }
+    }
+
+    fn flow(&mut self, peer: u32) -> &mut Flow {
+        self.flows.entry(peer).or_default()
+    }
+
+    /// Seal one outgoing data frame: `buf` must have [`HEADER_LEN`]
+    /// reserved zero bytes at the front and the encoded payload after.
+    /// Assigns the next seq, piggybacks the cumulative ack for `dst`,
+    /// checksums, and clones the framed bytes into the retransmit window.
+    pub fn frame(&mut self, dst: u32, buf: &mut [u8], n_msgs: u32, now: u64) {
+        let rank = self.rank;
+        let f = self.flow(dst);
+        let seq = f.next_seq;
+        debug_assert!(seq != SEQ_ACK_ONLY, "seq space exhausted");
+        f.next_seq += 1;
+        let ack = f.expect;
+        write_header(buf, seq, ack, rank as u16, n_msgs as u16);
+        f.owed_ack = false; // the piggybacked ack settles the debt
+        f.window.push_back(SentFrame {
+            seq,
+            bytes: buf.to_vec(),
+            n_msgs,
+            sent_at: now,
+            rto: RTO_BASE,
+            attempts: 0,
+        });
+    }
+
+    /// Classify one incoming framed buffer. Always processes the
+    /// piggybacked ack first (when the checksum holds). On
+    /// [`RecvVerdict::Deliver`] the caller decodes `buf[HEADER_LEN..]` and
+    /// then drains [`Self::drain_ready`] until empty.
+    pub fn accept(&mut self, buf: &[u8], now: u64) -> RecvVerdict {
+        let h = match parse_header(buf) {
+            Some(h) => h,
+            // A runt shorter than a header cannot be attributed to a flow;
+            // the sender's retransmit recovers it. (Unreachable with the
+            // in-repo injector, which never truncates.)
+            None => return RecvVerdict::Corrupt,
+        };
+        if h.checksum != checksum(h.seq, h.ack, h.src, h.n_msgs, &buf[HEADER_LEN..]) {
+            return RecvVerdict::Corrupt;
+        }
+        let src = h.src as u32;
+        // Cumulative ack: everything below h.ack has been received.
+        let f = self.flow(src);
+        while f.window.front().map_or(false, |s| s.seq < h.ack) {
+            f.window.pop_front();
+        }
+        if h.seq == SEQ_ACK_ONLY {
+            return RecvVerdict::AckOnly;
+        }
+        if h.seq < f.expect || f.reorder.contains_key(&h.seq) {
+            return RecvVerdict::Dup;
+        }
+        if h.seq > f.expect {
+            f.reorder.insert(h.seq, (buf[HEADER_LEN..].to_vec(), h.n_msgs as u32));
+            return RecvVerdict::Buffered;
+        }
+        f.expect += 1;
+        if !f.owed_ack {
+            f.owed_ack = true;
+            f.owed_since = now;
+        }
+        RecvVerdict::Deliver
+    }
+
+    /// After a [`RecvVerdict::Deliver`], pop the next in-order buffered
+    /// payload from `src` (if the reorder buffer has caught up).
+    pub fn drain_ready(&mut self, src: u32) -> Option<(Vec<u8>, u32)> {
+        let f = self.flow(src);
+        let (payload, n) = f.reorder.remove(&f.expect)?;
+        f.expect += 1;
+        Some((payload, n))
+    }
+
+    /// Timer scan, called at the flush cadence with the rank's iteration
+    /// count. Expired window frames are re-armed (ack + checksum
+    /// refreshed) and appended to `retrans` — these re-enter the fault
+    /// injector. Standalone acks owed past [`ACK_IDLE`] go to `acks`,
+    /// which bypass it. Returns the watchdog verdict if any frame
+    /// exhausted [`MAX_ATTEMPTS`].
+    pub fn tick(
+        &mut self,
+        now: u64,
+        retrans: &mut Vec<(u32, Vec<u8>, u32)>,
+        acks: &mut Vec<(u32, Vec<u8>, u32)>,
+    ) -> Result<(), Watchdog> {
+        let rank = self.rank;
+        // Deterministic scan order (HashMap iteration is not).
+        let mut peers: Vec<u32> = self.flows.keys().copied().collect();
+        peers.sort_unstable();
+        for peer in peers {
+            let f = self.flows.get_mut(&peer).expect("flow just listed");
+            let ack_now = f.expect;
+            for s in f.window.iter_mut() {
+                if now.saturating_sub(s.sent_at) < s.rto {
+                    continue;
+                }
+                s.attempts += 1;
+                if s.attempts > MAX_ATTEMPTS {
+                    return Err(Watchdog {
+                        peer,
+                        seq: s.seq,
+                        attempts: s.attempts,
+                        n_msgs: s.n_msgs,
+                    });
+                }
+                s.sent_at = now;
+                s.rto = (s.rto * 2).min(RTO_MAX);
+                // Refresh the piggybacked ack and checksum in place.
+                write_header(&mut s.bytes, s.seq, ack_now, rank as u16, s.n_msgs as u16);
+                retrans.push((peer, s.bytes.clone(), s.n_msgs));
+            }
+            if f.owed_ack && now.saturating_sub(f.owed_since) >= ACK_IDLE {
+                f.owed_ack = false;
+                let mut buf = vec![0u8; HEADER_LEN];
+                write_header(&mut buf, SEQ_ACK_ONLY, ack_now, rank as u16, 0);
+                acks.push((peer, buf, 0));
+            }
+        }
+        Ok(())
+    }
+
+    /// True while the protocol still has obligations: unacked sent frames,
+    /// owed acks, or buffered out-of-order payloads. Engines must not
+    /// treat a rank as quiescent while this holds (timers need iterations
+    /// to advance).
+    pub fn has_work(&self) -> bool {
+        self.flows
+            .values()
+            .any(|f| !f.window.is_empty() || f.owed_ack || !f.reorder.is_empty())
+    }
+
+    /// Messages sitting in unacked send windows (sequential engine's
+    /// silence accounting counts these as still pending).
+    pub fn window_msgs(&self) -> u64 {
+        self.flows
+            .values()
+            .flat_map(|f| f.window.iter())
+            .map(|s| s.n_msgs as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut v = vec![0u8; HEADER_LEN];
+        v.extend_from_slice(payload);
+        v
+    }
+
+    #[test]
+    fn header_roundtrip_and_checksum() {
+        let mut buf = framed(b"hello ghs");
+        write_header(&mut buf, 7, 3, 12, 2);
+        let h = parse_header(&buf).unwrap();
+        assert_eq!(h, Header { seq: 7, ack: 3, checksum: h.checksum, src: 12, n_msgs: 2 });
+        assert_eq!(h.checksum, checksum(7, 3, 12, 2, b"hello ghs"));
+        // Any single payload-byte flip breaks the checksum.
+        for at in HEADER_LEN..buf.len() {
+            let mut bad = buf.clone();
+            bad[at] ^= 0xA5;
+            let hb = parse_header(&bad).unwrap();
+            let sum = checksum(hb.seq, hb.ack, hb.src, hb.n_msgs, &bad[HEADER_LEN..]);
+            assert_ne!(hb.checksum, sum);
+        }
+    }
+
+    #[test]
+    fn in_order_delivery_and_cumulative_ack() {
+        let mut a = Reliable::new(0);
+        let mut b = Reliable::new(1);
+        let mut frames = Vec::new();
+        for i in 0..3u8 {
+            let mut f = framed(&[i; 4]);
+            a.frame(1, &mut f, 1, 0);
+            frames.push(f);
+        }
+        assert_eq!(a.window_msgs(), 3);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(b.accept(f, 0), RecvVerdict::Deliver, "frame {i}");
+            assert!(b.drain_ready(0).is_none(), "nothing buffered");
+        }
+        assert!(b.has_work(), "b owes an ack");
+        // b's next data frame to a piggybacks ack=3, clearing a's window.
+        let mut back = framed(&[9]);
+        b.frame(0, &mut back, 1, 0);
+        assert_eq!(a.accept(&back, 0), RecvVerdict::Deliver);
+        assert_eq!(a.window_msgs(), 0, "cumulative ack cleared the window");
+    }
+
+    #[test]
+    fn duplicates_are_suppressed_and_reorder_buffered() {
+        let mut a = Reliable::new(0);
+        let mut b = Reliable::new(1);
+        let mut f0 = framed(&[0; 4]);
+        let mut f1 = framed(&[1; 4]);
+        let mut f2 = framed(&[2; 4]);
+        a.frame(1, &mut f0, 1, 0);
+        a.frame(1, &mut f1, 1, 0);
+        a.frame(1, &mut f2, 1, 0);
+        // Arrival order: f2, f2 (dup), f0, f1 — delivery must be 0,1,2.
+        assert_eq!(b.accept(&f2, 0), RecvVerdict::Buffered);
+        assert_eq!(b.accept(&f2, 0), RecvVerdict::Dup, "dup of a buffered frame");
+        assert_eq!(b.accept(&f0, 0), RecvVerdict::Deliver);
+        assert!(b.drain_ready(0).is_none(), "gap at seq 1 still open");
+        assert_eq!(b.accept(&f1, 0), RecvVerdict::Deliver);
+        let (p2, n2) = b.drain_ready(0).unwrap();
+        assert_eq!((p2.as_slice(), n2), (&[2u8; 4][..], 1));
+        assert!(b.drain_ready(0).is_none());
+        assert_eq!(b.accept(&f0, 0), RecvVerdict::Dup, "dup of a delivered frame");
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_then_recovered_by_retransmit() {
+        let mut a = Reliable::new(0);
+        let mut b = Reliable::new(1);
+        let mut f = framed(&[7; 8]);
+        a.frame(1, &mut f, 2, 0);
+        let mut bad = f.clone();
+        bad[HEADER_LEN + 3] ^= 0xA5;
+        assert_eq!(b.accept(&bad, 0), RecvVerdict::Corrupt);
+        assert!(!b.has_work(), "a rejected frame leaves no receiver state");
+        // The retransmit timer re-offers the pristine copy.
+        let (mut rt, mut acks) = (Vec::new(), Vec::new());
+        a.tick(RTO_BASE, &mut rt, &mut acks).unwrap();
+        assert_eq!(rt.len(), 1);
+        assert!(acks.is_empty());
+        assert_eq!(b.accept(&rt[0].1, RTO_BASE), RecvVerdict::Deliver);
+    }
+
+    #[test]
+    fn retransmit_backoff_doubles_and_watchdog_trips() {
+        let mut a = Reliable::new(0);
+        let mut f = framed(&[1; 4]);
+        a.frame(1, &mut f, 1, 0);
+        let mut now = 0;
+        let mut sent = 0;
+        let wd = loop {
+            now += RTO_BASE;
+            let (mut rt, mut acks) = (Vec::new(), Vec::new());
+            match a.tick(now, &mut rt, &mut acks) {
+                Ok(()) => sent += rt.len(),
+                Err(w) => break w,
+            }
+            assert!(now < 1_000_000, "watchdog must eventually fire");
+        };
+        assert_eq!(wd.peer, 1);
+        assert_eq!(wd.attempts, MAX_ATTEMPTS + 1);
+        assert_eq!(sent as u32, MAX_ATTEMPTS, "every budgeted attempt was spent first");
+    }
+
+    #[test]
+    fn standalone_ack_after_idle_and_receiver_processes_it() {
+        let mut a = Reliable::new(0);
+        let mut b = Reliable::new(1);
+        let mut f = framed(&[3; 4]);
+        a.frame(1, &mut f, 1, 0);
+        assert_eq!(b.accept(&f, 5), RecvVerdict::Deliver);
+        // Before the idle budget: no standalone ack yet.
+        let (mut rt, mut acks) = (Vec::new(), Vec::new());
+        b.tick(5 + ACK_IDLE - 1, &mut rt, &mut acks).unwrap();
+        assert!(acks.is_empty());
+        b.tick(5 + ACK_IDLE, &mut rt, &mut acks).unwrap();
+        assert_eq!(acks.len(), 1, "silence elapsed, ack goes standalone");
+        assert!(!b.has_work());
+        let (dst, ref bytes, n) = acks[0];
+        assert_eq!((dst, n), (0, 0));
+        assert_eq!(a.accept(bytes, 20), RecvVerdict::AckOnly);
+        assert_eq!(a.window_msgs(), 0);
+        assert!(!a.has_work(), "acked sender is quiescent");
+    }
+
+    #[test]
+    fn retransmit_interval_backs_off_exponentially() {
+        let mut a = Reliable::new(0);
+        let mut f = framed(&[1; 4]);
+        a.frame(1, &mut f, 1, 0);
+        let mut fires = Vec::new();
+        for now in 0..(RTO_BASE * 8) {
+            let (mut rt, mut acks) = (Vec::new(), Vec::new());
+            a.tick(now, &mut rt, &mut acks).unwrap();
+            if !rt.is_empty() {
+                fires.push(now);
+            }
+        }
+        assert_eq!(fires, vec![RTO_BASE, RTO_BASE * 3, RTO_BASE * 7], "1x, then 2x, then 4x gaps");
+    }
+}

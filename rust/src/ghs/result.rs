@@ -75,6 +75,29 @@ pub struct ProfileCounters {
     /// Flight-recorder events overwritten after the ring filled
     /// (retained events = `trace_events - trace_dropped`).
     pub trace_dropped: u64,
+    /// Reliability layer: expired window frames retransmitted (chaos runs
+    /// only — all seven recovery counters below are provably zero when
+    /// `GhsConfig::faults` is `None`, asserted by the perf baselines).
+    pub retransmits: u64,
+    /// Reliability layer: standalone cumulative-ack frames emitted after
+    /// `ACK_IDLE` receive-side silence (piggybacked acks are free and not
+    /// counted).
+    pub acks_sent: u64,
+    /// Receive side: duplicate frames suppressed (injected duplicates and
+    /// spurious retransmits both land here — exactly-once processing).
+    pub dup_dropped: u64,
+    /// Receive side: frames rejected on checksum failure (recovered by
+    /// the sender's retransmit window).
+    pub corrupt_dropped: u64,
+    /// Receive side: out-of-order frames parked in the reorder buffer
+    /// until the sequence gap closed.
+    pub reorder_buffered: u64,
+    /// Chaos layer: faults injected on this rank's outgoing frames
+    /// (drops + duplicates + corruptions + delays; the per-category split
+    /// lives in [`crate::ghs::fault::FaultStats`]).
+    pub fault_injected: u64,
+    /// Reliability timer passes (one per `flush_all` on chaos runs).
+    pub timeout_checks: u64,
 }
 
 impl ProfileCounters {
@@ -125,6 +148,13 @@ impl ProfileCounters {
         self.ring_full_spills += o.ring_full_spills;
         self.trace_events += o.trace_events;
         self.trace_dropped += o.trace_dropped;
+        self.retransmits += o.retransmits;
+        self.acks_sent += o.acks_sent;
+        self.dup_dropped += o.dup_dropped;
+        self.corrupt_dropped += o.corrupt_dropped;
+        self.reorder_buffered += o.reorder_buffered;
+        self.fault_injected += o.fault_injected;
+        self.timeout_checks += o.timeout_checks;
     }
 
     /// The park/wake counter discipline each engine must honour (used by
@@ -201,6 +231,10 @@ pub struct GhsRun {
     /// the async engine. Feed to `obs::timeline::fragment_timeline` or
     /// the `obs::chrome` exporters.
     pub trace: Option<crate::obs::trace::TraceData>,
+    /// Injected-fault statistics merged over all ranks (only populated on
+    /// chaos runs, i.e. when `GhsConfig::faults` is set; all-zero rates
+    /// still produce `Some` with zero counts).
+    pub faults: Option<crate::ghs::fault::FaultStats>,
 }
 
 impl GhsRun {
@@ -238,6 +272,13 @@ mod tests {
             ring_full_spills: 2,
             trace_events: 100,
             trace_dropped: 40,
+            retransmits: 12,
+            acks_sent: 13,
+            dup_dropped: 14,
+            corrupt_dropped: 15,
+            reorder_buffered: 16,
+            fault_injected: 17,
+            timeout_checks: 18,
             ..Default::default()
         };
         a.merge(&b);
@@ -255,6 +296,13 @@ mod tests {
         assert_eq!(a.ring_full_spills, 2);
         assert_eq!(a.trace_events, 100);
         assert_eq!(a.trace_dropped, 40);
+        assert_eq!(a.retransmits, 12);
+        assert_eq!(a.acks_sent, 13);
+        assert_eq!(a.dup_dropped, 14);
+        assert_eq!(a.corrupt_dropped, 15);
+        assert_eq!(a.reorder_buffered, 16);
+        assert_eq!(a.fault_injected, 17);
+        assert_eq!(a.timeout_checks, 18);
         assert_eq!(a.ready_max, 3, "high-water mark merges by max");
         a.merge(&ProfileCounters { ready_max: 2, ..Default::default() });
         assert_eq!(a.ready_max, 3, "smaller high-water marks do not lower the max");

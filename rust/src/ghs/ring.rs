@@ -298,6 +298,34 @@ mod tests {
         assert!(next.iter().all(|&n| n == PER), "some values lost");
     }
 
+    /// Regression: a producer panicking while it holds the spill mutex
+    /// (any payload panic between `lock` and unlock poisons it) must not
+    /// wedge the mailbox — later producers still spill, the consumer
+    /// still drains ring-then-spill in order, and nothing is lost.
+    #[test]
+    fn producer_panic_mid_spill_does_not_wedge_the_mailbox() {
+        let r = Arc::new(MpscRing::with_capacity(4));
+        for i in 0..6u32 {
+            r.push(i); // 4 in the ring, 2 spilled → spill mode is on
+        }
+        let r2 = Arc::clone(&r);
+        let joined = std::thread::spawn(move || {
+            // A producer dies mid-spill: it has taken the spill lock and
+            // panics before releasing it, leaving the mutex poisoned.
+            let mut spill = r2.spill.lock().unwrap();
+            spill.push(6);
+            r2.spill_len.store(spill.len(), Ordering::Release);
+            panic!("producer dies while spilling");
+        })
+        .join();
+        assert!(joined.is_err() && r.spill.is_poisoned());
+        assert!(!r.push(7), "new producers still spill past the poison");
+        let mut out = Vec::new();
+        r.drain_into(&mut out, 64);
+        assert_eq!(out, (0..=7).collect::<Vec<u32>>(), "nothing lost or reordered");
+        assert!(r.push(8), "spill drained — the ring path is live again");
+    }
+
     #[test]
     fn lock_clean_recovers_poisoned_mutex() {
         let m = Arc::new(Mutex::new(7u32));

@@ -161,6 +161,19 @@ struct Sched {
     /// Seed for the per-worker schedule-perturbation PRNGs
     /// (`GhsConfig::fuzz_sched`). `None` in normal runs.
     fuzz_seed: Option<u64>,
+    /// Chaos: task id whose rank is permanently stalled — acquired and
+    /// re-queued without ever running a quantum (`FaultConfig::stall_rank`).
+    /// Peers' reliability watchdogs are what eventually notice.
+    stall_rank: Option<u32>,
+    /// Chaos: per-activation probability that a worker "loses" the
+    /// quantum and re-queues the task untouched (`FaultConfig::slow`).
+    slow: f64,
+    /// Seed for the per-worker slowdown coin streams (`FaultConfig::seed`).
+    fault_seed: Option<u64>,
+    /// Chaos: stalled-task activations skipped (pool-wide).
+    stalls: AtomicU64,
+    /// Chaos: slowdown-skipped activations (pool-wide).
+    slowdowns: AtomicU64,
     /// Flight-recorder ring depth (`GhsConfig::trace`); `None` disables
     /// worker-side tracing entirely.
     trace_depth: Option<u32>,
@@ -180,6 +193,8 @@ struct WorkerCtx {
     steal_fails: u64,
     ring_spills: u64,
     fuzz: Option<Xoshiro256>,
+    /// Seeded slowdown-coin stream (chaos runs with `slow > 0` only).
+    fault_rng: Option<Xoshiro256>,
     victims: Vec<usize>,
     /// Flight-recorder ring for this worker's scheduling events (task
     /// run/block/ready, steals, parks, spills, in-flight high-waters).
@@ -196,7 +211,12 @@ struct WorkerCtx {
 }
 
 impl WorkerCtx {
-    fn new(w: usize, fuzz_seed: Option<u64>, trace_depth: Option<u32>) -> Self {
+    fn new(
+        w: usize,
+        fuzz_seed: Option<u64>,
+        fault_seed: Option<u64>,
+        trace_depth: Option<u32>,
+    ) -> Self {
         Self {
             w,
             steals: 0,
@@ -208,6 +228,11 @@ impl WorkerCtx {
             fuzz: fuzz_seed.map(|seed| {
                 Xoshiro256::seed_from_u64(
                     seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(w as u64 + 1)),
+                )
+            }),
+            fault_rng: fault_seed.map(|seed| {
+                Xoshiro256::seed_from_u64(
+                    seed ^ 0xA076_1D64_78BD_642Fu64.wrapping_mul(w as u64 + 1),
                 )
             }),
             victims: Vec::new(),
@@ -261,8 +286,8 @@ impl Sched {
                         .is_ok()
                     {
                         t.wakeups.fetch_add(1, Ordering::Relaxed);
-                        self.ready_max
-                            .fetch_max(self.in_flight.load(Ordering::SeqCst) as u64, Ordering::Relaxed);
+                        let now = self.in_flight.load(Ordering::SeqCst) as u64;
+                        self.ready_max.fetch_max(now, Ordering::Relaxed);
                         self.push_ready(task, w);
                         // The task went IDLE → non-IDLE: keep the +1.
                         return;
@@ -447,7 +472,8 @@ fn deadlock_report(pending: i64, slots: &[Mutex<Option<RankState>>]) -> anyhow::
 /// one structured error instead of a poisoned-mutex cascade; the local
 /// counters are flushed either way.
 fn worker(s: &Sched, w: usize) {
-    let mut ctx = WorkerCtx::new(w, s.fuzz_seed, s.trace_depth);
+    let fault_seed = if s.slow > 0.0 { s.fault_seed } else { None };
+    let mut ctx = WorkerCtx::new(w, s.fuzz_seed, fault_seed, s.trace_depth);
     let outcome =
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_worker(s, &mut ctx)));
     s.steals.fetch_add(ctx.steals, Ordering::Relaxed);
@@ -474,6 +500,23 @@ fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
     let mut spent: Vec<Vec<u8>> = Vec::new();
     while let Some(task) = s.acquire(ctx) {
         let t = &s.tasks[task as usize];
+        // Chaos scheduler faults, decided before the task transitions to
+        // RUNNING (the task is READY; re-queuing it untouched is always
+        // legal). A stalled rank never runs — its peers' reliability
+        // watchdogs are what eventually turn that into a structured
+        // failure. A slowdown loses this quantum only.
+        if s.stall_rank == Some(task) {
+            s.stalls.fetch_add(1, Ordering::Relaxed);
+            s.push_ready(task, ctx.w);
+            continue;
+        }
+        if let Some(rng) = ctx.fault_rng.as_mut() {
+            if rng.next_bool(s.slow) {
+                s.slowdowns.fetch_add(1, Ordering::Relaxed);
+                s.push_ready(task, ctx.w);
+                continue;
+            }
+        }
         t.state.store(RUNNING, Ordering::SeqCst);
         if let Some(tr) = ctx.trace.as_mut() {
             // The activation ordinal is the worker track's virtual clock:
@@ -505,12 +548,22 @@ fn run_worker(s: &Sched, ctx: &mut WorkerCtx) {
             // prefix, the tail staying queued in per-producer FIFO order.
             let quota = ctx.drain_quota(t.inbox.approx_len());
             t.inbox.drain_into(&mut drained, quota);
+            let mut read_err = None;
             for (_src, buf, _n) in drained.drain(..) {
-                rank.read_buffer(&buf);
+                if read_err.is_none() {
+                    if let Err(e) = rank.read_buffer(&buf) {
+                        read_err = Some(e);
+                    }
+                }
                 spent.push(buf);
             }
             if !spent.is_empty() {
                 rank.pool.put_all(spent.drain(..));
+            }
+            if let Some(e) = read_err {
+                drop(slot);
+                s.fail(e);
+                return;
             }
             status = match rank.step(&s.pending) {
                 Ok(st) => st,
@@ -619,6 +672,11 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
         steal_fails: AtomicU64::new(0),
         ring_full_spills: AtomicU64::new(0),
         fuzz_seed: config.fuzz_sched,
+        stall_rank: config.faults.as_ref().and_then(|f| f.stall_rank),
+        slow: config.faults.as_ref().map_or(0.0, |f| f.slow),
+        fault_seed: config.faults.as_ref().map(|f| f.seed),
+        stalls: AtomicU64::new(0),
+        slowdowns: AtomicU64::new(0),
         trace_depth: config.trace,
         worker_traces: Mutex::new(Vec::new()),
     });
@@ -660,6 +718,12 @@ pub fn run_async(g: &EdgeList, mut config: GhsConfig) -> Result<GhsRun> {
     run.profile.steals = sched.steals.load(Ordering::Relaxed);
     run.profile.steal_fails = sched.steal_fails.load(Ordering::Relaxed);
     run.profile.ring_full_spills = sched.ring_full_spills.load(Ordering::Relaxed);
+    // Scheduler-side chaos faults (stall / slowdown) are pool properties,
+    // folded into the link-fault stats `collect` merged from the ranks.
+    if let Some(fs) = run.faults.as_mut() {
+        fs.stalls = sched.stalls.load(Ordering::Relaxed);
+        fs.slowdowns = sched.slowdowns.load(Ordering::Relaxed);
+    }
     // Attach the worker-side flight-recorder tracks (rank tracks were
     // already gathered by `collect`). Worker event totals ride on top of
     // the per-rank sums in the profile.

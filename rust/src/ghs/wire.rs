@@ -26,6 +26,38 @@ use crate::graph::{EdgeList, VertexId};
 #[cfg(test)]
 use crate::util::bitpack::BitWriter;
 
+/// Structured decode failure. Before the chaos layer these conditions were
+/// `assert!` panics (truncation) or silent misreads (a reserved tag
+/// landing in the queues); with payload corruption on the wire they are
+/// ordinary runtime events that must surface as errors through `GhsRun`.
+/// (With the reliability layer active the frame checksum rejects corrupted
+/// payloads *before* decode, so this is the defense-in-depth tier.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ends mid-message: `need` bytes required at offset `at`,
+    /// only `have` present. Also covers over-length frames — trailing
+    /// bytes that are too short to be another message.
+    Truncated { at: usize, need: usize, have: usize },
+    /// A message header carries a tag outside the seven GHS types.
+    BadTag { at: usize, tag: u8 },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DecodeError::Truncated { at, need, have } => write!(
+                f,
+                "truncated wire frame: message at byte {at} needs {need} bytes, buffer has {have}"
+            ),
+            DecodeError::BadTag { at, tag } => {
+                write!(f, "invalid message tag {tag} at byte {at} (valid tags are 0..=6)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
 /// Wire format selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireFormat {
@@ -223,16 +255,27 @@ fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
 /// (src, dst, packed header, weight) fields via [`RankQueues::push_raw`].
 /// No [`Payload`] enum is materialized — that dispatch is deferred to
 /// `pop` (see the queues module docs). Returns the number of messages
-/// decoded. Produces queue contents identical to pushing each message of
-/// [`Decoder`] (asserted by the round-trip fuzz tests).
-pub fn decode_into(buf: &[u8], fmt: WireFormat, queues: &mut RankQueues) -> u64 {
+/// decoded, or a structured [`DecodeError`] on a truncated or malformed
+/// frame (nothing further is pushed past the bad message). Produces queue
+/// contents identical to pushing each message of [`Decoder`] (asserted by
+/// the round-trip fuzz tests).
+pub fn decode_into(
+    buf: &[u8],
+    fmt: WireFormat,
+    queues: &mut RankQueues,
+) -> Result<u64, DecodeError> {
     let mut at = 0usize;
     let mut n = 0u64;
     match fmt {
         WireFormat::Naive => {
             while at < buf.len() {
-                assert!(buf.len() - at >= 32, "truncated naive message");
+                if buf.len() - at < 32 {
+                    return Err(DecodeError::Truncated { at, need: 32, have: buf.len() - at });
+                }
                 let b = &buf[at..at + 32];
+                if b[0] > 6 {
+                    return Err(DecodeError::BadTag { at, tag: b[0] });
+                }
                 at += 32;
                 let meta = pack_meta(b[0], b[1], b[2]);
                 let src = u32::from_le_bytes(b[4..8].try_into().unwrap());
@@ -251,12 +294,21 @@ pub fn decode_into(buf: &[u8], fmt: WireFormat, queues: &mut RankQueues) -> u64 
         WireFormat::CompactSpecialId | WireFormat::CompactProcId => {
             while at < buf.len() {
                 let b = &buf[at..];
-                assert!(b.len() >= 10, "truncated compact message");
+                if b.len() < 10 {
+                    return Err(DecodeError::Truncated { at, need: 10, have: b.len() });
+                }
                 let header = u16::from_le_bytes(b[0..2].try_into().unwrap()) & META_MASK;
                 let tag = (header & 0b111) as u8;
+                if tag > 6 {
+                    return Err(DecodeError::BadTag { at, tag });
+                }
                 let src = u32::from_le_bytes(b[2..6].try_into().unwrap());
                 let dst = u32::from_le_bytes(b[6..10].try_into().unwrap());
                 let weight = if matches!(tag, 1 | 2 | 5) {
+                    let long = if fmt == WireFormat::CompactProcId { 19 } else { 26 };
+                    if b.len() < long {
+                        return Err(DecodeError::Truncated { at, need: long, have: b.len() });
+                    }
                     let wbits = u64::from_le_bytes(b[10..18].try_into().unwrap());
                     let tie = if fmt == WireFormat::CompactProcId {
                         at += 19;
@@ -275,7 +327,7 @@ pub fn decode_into(buf: &[u8], fmt: WireFormat, queues: &mut RankQueues) -> u64 
             }
         }
     }
-    n
+    Ok(n)
 }
 
 /// Streaming per-message decoder over an aggregated buffer (reference
@@ -299,18 +351,32 @@ impl<'a> Decoder<'a> {
 }
 
 impl Iterator for Decoder<'_> {
-    type Item = Message;
+    /// A decoded message, or the structured error that stopped the stream
+    /// (iteration ends after the first error).
+    type Item = Result<Message, DecodeError>;
 
-    fn next(&mut self) -> Option<Message> {
+    fn next(&mut self) -> Option<Self::Item> {
         if self.remaining() == 0 {
             return None;
         }
+        let at = self.at;
         match self.fmt {
             WireFormat::Naive => {
-                assert!(self.remaining() >= 32, "truncated naive message");
+                if self.remaining() < 32 {
+                    self.at = self.buf.len(); // stop after the error
+                    return Some(Err(DecodeError::Truncated {
+                        at,
+                        need: 32,
+                        have: self.buf.len() - at,
+                    }));
+                }
                 let b = &self.buf[self.at..self.at + 32];
-                self.at += 32;
                 let tag = b[0];
+                if tag > 6 {
+                    self.at = self.buf.len();
+                    return Some(Err(DecodeError::BadTag { at, tag }));
+                }
+                self.at += 32;
                 let level = b[1];
                 let state = b[2];
                 let src = u32::from_le_bytes(b[4..8].try_into().unwrap());
@@ -318,19 +384,31 @@ impl Iterator for Decoder<'_> {
                 let wbits = u64::from_le_bytes(b[12..20].try_into().unwrap());
                 let tie = u64::from_le_bytes(b[20..28].try_into().unwrap());
                 let weight = EdgeWeight::from_parts(wbits, tie);
-                Some(Message::new(src, dst, assemble(tag, level, state, weight)))
+                Some(Ok(Message::new(src, dst, assemble(tag, level, state, weight))))
             }
             WireFormat::CompactSpecialId | WireFormat::CompactProcId => {
                 let b = &self.buf[self.at..];
-                assert!(b.len() >= 10, "truncated compact message");
+                if b.len() < 10 {
+                    self.at = self.buf.len();
+                    return Some(Err(DecodeError::Truncated { at, need: 10, have: b.len() }));
+                }
                 let header = u16::from_le_bytes(b[0..2].try_into().unwrap());
                 let tag = (header & 0b111) as u8;
+                if tag > 6 {
+                    self.at = self.buf.len();
+                    return Some(Err(DecodeError::BadTag { at, tag }));
+                }
                 let level = ((header >> 3) & 0xFF) as Level;
                 let state = ((header >> 11) & 1) as u8;
                 let src = u32::from_le_bytes(b[2..6].try_into().unwrap());
                 let dst = u32::from_le_bytes(b[6..10].try_into().unwrap());
                 let is_long = matches!(tag, 1 | 2 | 5);
                 let weight = if is_long {
+                    let long = if self.fmt == WireFormat::CompactProcId { 19 } else { 26 };
+                    if b.len() < long {
+                        self.at = self.buf.len();
+                        return Some(Err(DecodeError::Truncated { at, need: long, have: b.len() }));
+                    }
                     let wbits = u64::from_le_bytes(b[10..18].try_into().unwrap());
                     let tie = if self.fmt == WireFormat::CompactProcId {
                         self.at += 19;
@@ -344,7 +422,7 @@ impl Iterator for Decoder<'_> {
                     self.at += 10;
                     EdgeWeight::infinity() // unused by short payloads
                 };
-                Some(Message::new(src, dst, assemble(tag, level, state, weight)))
+                Some(Ok(Message::new(src, dst, assemble(tag, level, state, weight))))
             }
         }
     }
@@ -412,7 +490,8 @@ mod tests {
                     expect_bytes += encode(m, fmt, &mut buf);
                 }
                 assert_eq!(buf.len(), expect_bytes);
-                let decoded: Vec<Message> = Decoder::new(&buf, fmt).collect();
+                let decoded: Vec<Message> =
+                    Decoder::new(&buf, fmt).collect::<Result<_, _>>().unwrap();
                 assert_eq!(decoded.len(), msgs.len());
                 for (a, b) in msgs.iter().zip(&decoded) {
                     assert_eq!(a.src, b.src);
@@ -491,7 +570,8 @@ mod tests {
                     let mut buf = Vec::new();
                     let written = encode(&m, fmt, &mut buf);
                     assert_eq!(written, fmt.size_of(&payload), "size accounting");
-                    let out: Vec<Message> = Decoder::new(&buf, fmt).collect();
+                    let out: Vec<Message> =
+                        Decoder::new(&buf, fmt).collect::<Result<_, _>>().unwrap();
                     assert_eq!(out.len(), 1);
                     assert_eq!(out[0].src, src);
                     assert_eq!(out[0].dst, dst);
@@ -519,7 +599,7 @@ mod tests {
             for m in &msgs {
                 encode(m, fmt, &mut buf);
             }
-            let out: Vec<Message> = Decoder::new(&buf, fmt).collect();
+            let out: Vec<Message> = Decoder::new(&buf, fmt).collect::<Result<_, _>>().unwrap();
             assert_eq!(out, msgs, "{fmt:?}");
         }
     }
@@ -541,11 +621,11 @@ mod tests {
                     // Reference: per-message decode + route.
                     let mut want = RankQueues::new(separate_test);
                     for m in Decoder::new(&buf, fmt) {
-                        want.push_incoming(m);
+                        want.push_incoming(m.unwrap());
                     }
                     // Batch: one frame walk straight into slots.
                     let mut got = RankQueues::new(separate_test);
-                    let n = decode_into(&buf, fmt, &mut got);
+                    let n = decode_into(&buf, fmt, &mut got).unwrap();
                     assert_eq!(n as usize, msgs.len());
                     assert_eq!(got.main_len(), want.main_len());
                     assert_eq!(got.test_len(), want.test_len());
@@ -562,11 +642,97 @@ mod tests {
     }
 
     #[test]
+    fn truncated_buffers_yield_structured_errors_not_panics() {
+        // A frame cut at every possible byte boundary must produce a
+        // Truncated error (never a panic, never a silent partial decode)
+        // from both the batch and the streaming decoder.
+        let w = EdgeWeight::with_tie(0.5, 3);
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            let mut buf = Vec::new();
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
+            encode(&Message::new(2, 3, Payload::Test { level: 4, fragment: w }), fmt, &mut buf);
+            for cut in 1..buf.len() {
+                let short = &buf[..cut];
+                let mut q = RankQueues::new(false);
+                match decode_into(short, fmt, &mut q) {
+                    Ok(n) => {
+                        // Only exact frame boundaries may decode cleanly.
+                        let frame0 = fmt.size_of(&Payload::Accept);
+                        assert_eq!(cut, frame0, "{fmt:?} cut={cut} decoded {n}");
+                    }
+                    Err(DecodeError::Truncated { need, have, .. }) => {
+                        assert!(have < need, "{fmt:?} cut={cut}");
+                    }
+                    Err(e) => panic!("{fmt:?} cut={cut}: unexpected {e}"),
+                }
+                let last = Decoder::new(short, fmt).last();
+                if let Some(Err(e)) = last {
+                    assert!(matches!(e, DecodeError::Truncated { .. }), "{fmt:?} cut={cut}: {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_tags_are_rejected_with_offset() {
+        // Tag 7 is the one reserved value in the 3-bit tag space.
+        let mut naive = Vec::new();
+        encode(&Message::new(1, 2, Payload::Accept), WireFormat::Naive, &mut naive);
+        encode(&Message::new(2, 3, Payload::Reject), WireFormat::Naive, &mut naive);
+        naive[32] = 7; // second message's tag byte
+        let mut q = RankQueues::new(false);
+        assert_eq!(
+            decode_into(&naive, WireFormat::Naive, &mut q),
+            Err(DecodeError::BadTag { at: 32, tag: 7 })
+        );
+        assert_eq!(q.main_len(), 1, "messages before the bad one already landed");
+        for fmt in [WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            let mut buf = Vec::new();
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
+            buf[0] |= 0b111; // force tag bits to 7
+            let mut q = RankQueues::new(false);
+            assert_eq!(decode_into(&buf, fmt, &mut q), Err(DecodeError::BadTag { at: 0, tag: 7 }));
+            let got: Vec<_> = Decoder::new(&buf, fmt).collect();
+            assert_eq!(got, vec![Err(DecodeError::BadTag { at: 0, tag: 7 })]);
+        }
+    }
+
+    #[test]
+    fn over_length_frames_error_on_the_trailing_bytes() {
+        // Extra trailing garbage shorter than a minimal message must be a
+        // Truncated error at the tail offset, after the real messages
+        // decoded fine.
+        for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
+            let mut buf = Vec::new();
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
+            let good = buf.len();
+            buf.extend_from_slice(&[0u8; 3]);
+            let mut q = RankQueues::new(false);
+            let err = decode_into(&buf, fmt, &mut q).unwrap_err();
+            let need = if fmt == WireFormat::Naive { 32 } else { 10 };
+            assert_eq!(err, DecodeError::Truncated { at: good, need, have: 3 }, "{fmt:?}");
+            assert_eq!(q.main_len(), 1);
+        }
+    }
+
+    #[test]
+    fn decode_error_messages_are_actionable() {
+        let t = DecodeError::Truncated { at: 40, need: 19, have: 7 };
+        assert_eq!(
+            t.to_string(),
+            "truncated wire frame: message at byte 40 needs 19 bytes, buffer has 7"
+        );
+        let b = DecodeError::BadTag { at: 0, tag: 7 };
+        assert!(b.to_string().contains("tag 7"));
+    }
+
+    #[test]
     fn infinity_report_survives_procid() {
         let m = Message::new(1, 2, Payload::Report { best: EdgeWeight::infinity() });
         let mut buf = Vec::new();
         encode(&m, WireFormat::CompactProcId, &mut buf);
-        let out: Vec<Message> = Decoder::new(&buf, WireFormat::CompactProcId).collect();
+        let out: Vec<Message> =
+            Decoder::new(&buf, WireFormat::CompactProcId).collect::<Result<_, _>>().unwrap();
         match out[0].payload {
             Payload::Report { best } => assert!(best.is_infinite()),
             _ => panic!("wrong payload"),

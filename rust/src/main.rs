@@ -38,6 +38,8 @@ COMMANDS
                   --hash-sizing paper|pow2 (mask-indexed hash table)
                   --no-test-queue  --input FILE  --threaded  --verify
                   --trace[=depth]  (flight recorder: per-rank event rings)
+                  --faults drop=P,dup=P,reorder=N,corrupt=P,slow=P,stall=R,seed=N
+                  (chaos layer: seeded link faults + seq/ack reliable delivery)
   trace         Record a flight-recorder run and export/inspect the trace:
                   --path N (path graph, seed 42) | --family --scale | --input FILE
                   --ranks N  --workers N [default 1]  --engine E [default async]
@@ -188,6 +190,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "family", "scale", "ranks", "engine", "workers", "search", "wire", "partition",
         "hash-sizing", "no-test-queue", "input", "threaded", "verify", "quiet", "trace",
+        "faults",
     ])?;
     let (label, clean) = load_or_generate(args)?;
     let ranks = args.get_num("ranks", 8u32)?;
@@ -214,6 +217,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.separate_test_queue = false;
     }
     cfg.trace = parse_trace_flag(args)?;
+    if let Some(spec) = args.get_opt("faults") {
+        cfg.faults = Some(ghs_mst::ghs::fault::FaultConfig::parse(spec)?);
+    }
     let t0 = std::time::Instant::now();
     let run = match engine {
         EngineKind::Sequential if args.get_bool("verify") => {
@@ -279,6 +285,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "work stealing   : {} steals, {} failed attempts, {} mailbox ring spills",
             run.profile.steals, run.profile.steal_fails, run.profile.ring_full_spills
+        );
+    }
+    if let Some(fs) = &run.faults {
+        println!(
+            "faults injected : {} total  ({} dropped, {} duplicated, {} corrupted, \
+             {} delayed, {} stalls, {} slowdowns)",
+            fs.injected(),
+            fs.drops,
+            fs.dups,
+            fs.corrupts,
+            fs.delays,
+            fs.stalls,
+            fs.slowdowns
+        );
+        println!(
+            "recovery        : {} retransmits, {} acks sent, {} dup dropped, \
+             {} corrupt dropped, {} reorder buffered, {} timeout checks",
+            run.profile.retransmits,
+            run.profile.acks_sent,
+            run.profile.dup_dropped,
+            run.profile.corrupt_dropped,
+            run.profile.reorder_buffered,
+            run.profile.timeout_checks
         );
     }
     if let Some(trace) = &run.trace {

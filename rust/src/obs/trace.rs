@@ -88,6 +88,25 @@ pub enum EventKind {
     InFlight = 14,
     /// Forest halt at a core vertex: `a` = vertex, `c` = fragment level.
     Halt = 15,
+    /// Chaos layer injected a fault on an outgoing frame: `a` =
+    /// destination rank, `b` = fault category (0 drop, 1 duplicate,
+    /// 2 corrupt, 3 delay), `c` = count. Only fires on `--faults` runs,
+    /// so fault-free fingerprints are untouched.
+    FaultInject = 16,
+    /// Reliability layer retransmitted an expired window frame: `a` =
+    /// destination rank, `b` = frame sequence number, `c` = messages.
+    Retransmit = 17,
+    /// Reliability layer emitted a standalone cumulative ack after
+    /// `ACK_IDLE` silence: `a` = destination rank.
+    AckSend = 18,
+    /// Receive side suppressed a duplicate frame: `a` = source rank,
+    /// `b` = frame sequence number.
+    DupDrop = 19,
+    /// Receive side rejected a checksum-failing frame: `a` = frame bytes.
+    CorruptDrop = 20,
+    /// Receive side buffered an out-of-order frame: `a` = source rank,
+    /// `b` = frame sequence number.
+    ReorderHold = 21,
 }
 
 impl EventKind {
@@ -110,6 +129,12 @@ impl EventKind {
             EventKind::QueueDepth => "queue_depth",
             EventKind::InFlight => "in_flight",
             EventKind::Halt => "halt",
+            EventKind::FaultInject => "fault_inject",
+            EventKind::Retransmit => "retransmit",
+            EventKind::AckSend => "ack_send",
+            EventKind::DupDrop => "dup_drop",
+            EventKind::CorruptDrop => "corrupt_drop",
+            EventKind::ReorderHold => "reorder_hold",
         }
     }
 }

@@ -61,6 +61,15 @@ pub struct OpCosts {
     /// One mailbox-ring overflow spill: the fallback mutex push plus the
     /// consumer-side splice back out of the spill vector.
     pub ring_spill: f64,
+    /// One retransmitted frame: the window lookup, the buffer clone and
+    /// the re-dispatch through the send path. Zero when the chaos layer's
+    /// reliability protocol is off (the counter never moves).
+    pub retransmit: f64,
+    /// One standalone ack frame (header build + dispatch). Piggybacked
+    /// acks ride existing frames for free.
+    pub ack_tx: f64,
+    /// One retransmit-timer sweep over the send window (per flush cycle).
+    pub timeout_check: f64,
 }
 
 impl Default for OpCosts {
@@ -79,6 +88,9 @@ impl Default for OpCosts {
             steal_fail: 25e-9,
             wakeup: 100e-9,
             ring_spill: 200e-9,
+            retransmit: 500e-9,
+            ack_tx: 120e-9,
+            timeout_check: 30e-9,
         }
     }
 }
@@ -121,6 +133,12 @@ impl OpCosts {
             + d(now.steal_fails, prev.steal_fails) * self.steal_fail
             + d(now.wakeups, prev.wakeups) * self.wakeup
             + d(now.ring_full_spills, prev.ring_full_spills) * self.ring_spill
+            // Reliability-protocol work (chaos layer). All three counters
+            // stay zero with `faults: None`, so fault-free pricing is
+            // byte-identical to before the Recovery category existed.
+            + d(now.retransmits, prev.retransmits) * self.retransmit
+            + d(now.acks_sent, prev.acks_sent) * self.ack_tx
+            + d(now.timeout_checks, prev.timeout_checks) * self.timeout_check
     }
 
     /// Price aggregate counters (from zero) — used for the Fig 3 breakdown.
@@ -210,6 +228,29 @@ mod tests {
             + 100.0 * costs.wakeup
             + 5.0 * costs.ring_spill;
         assert!((priced - expect).abs() < 1e-15, "scheduler churn priced linearly");
+    }
+
+    #[test]
+    fn recovery_counters_are_priced_and_zero_when_off() {
+        // Chaos-layer pricing: retransmit/ack/timeout churn must show up
+        // in modeled time, and fault-free runs (all three counters zero)
+        // must price exactly as before the Recovery bucket existed.
+        let costs = OpCosts::default();
+        let zero = ProfileCounters::default();
+        let mut quiet = zero;
+        quiet.msgs_processed_main = 1000;
+        let base = costs.step_time(&zero, &quiet);
+        assert!((base - 1000.0 * costs.process_msg).abs() < 1e-15, "no phantom recovery cost");
+        let mut chaotic = quiet;
+        chaotic.retransmits = 7;
+        chaotic.acks_sent = 21;
+        chaotic.timeout_checks = 900;
+        let priced = costs.step_time(&zero, &chaotic);
+        let expect = base
+            + 7.0 * costs.retransmit
+            + 21.0 * costs.ack_tx
+            + 900.0 * costs.timeout_check;
+        assert!((priced - expect).abs() < 1e-15, "recovery churn priced linearly");
     }
 
     #[test]

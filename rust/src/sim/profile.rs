@@ -18,11 +18,15 @@ pub enum Category {
     /// mailbox spills). Zero on the sequential and threaded engines, so
     /// the paper-figure breakdowns are unchanged there.
     Scheduler,
+    /// Chaos-layer reliability work (retransmits, standalone acks,
+    /// retransmit-timer sweeps). Zero whenever `GhsConfig::faults` is
+    /// `None`, so fault-free paper-figure breakdowns are unchanged.
+    Recovery,
 }
 
 impl Category {
     /// All categories in display order.
-    pub const ALL: [Category; 7] = [
+    pub const ALL: [Category; 8] = [
         Category::ReadMsgs,
         Category::ProcessQueue,
         Category::ProcessTestQueue,
@@ -30,6 +34,7 @@ impl Category {
         Category::CheckFinish,
         Category::LoopOther,
         Category::Scheduler,
+        Category::Recovery,
     ];
 
     /// Display label.
@@ -42,6 +47,7 @@ impl Category {
             Category::CheckFinish => "check_finish",
             Category::LoopOther => "loop_other",
             Category::Scheduler => "scheduler",
+            Category::Recovery => "recovery",
         }
     }
 }
@@ -85,6 +91,12 @@ impl Breakdown {
                     + c.steal_fails as f64 * costs.steal_fail
                     + c.wakeups as f64 * costs.wakeup
                     + c.ring_full_spills as f64 * costs.ring_spill,
+            ),
+            (
+                Category::Recovery,
+                c.retransmits as f64 * costs.retransmit
+                    + c.acks_sent as f64 * costs.ack_tx
+                    + c.timeout_checks as f64 * costs.timeout_check,
             ),
         ];
         Self { seconds }
@@ -156,6 +168,21 @@ mod tests {
             + 2.0 * costs.ring_spill;
         assert!((sched - expect).abs() < 1e-15);
         assert!((b.total() - expect).abs() < 1e-15, "only the scheduler did work");
+    }
+
+    #[test]
+    fn recovery_category_prices_chaos_churn() {
+        let mut c = ProfileCounters::default();
+        c.retransmits = 6;
+        c.acks_sent = 18;
+        c.timeout_checks = 400;
+        let costs = OpCosts::default();
+        let b = Breakdown::of(&c, &costs);
+        let rec =
+            b.seconds.iter().find(|(cat, _)| *cat == Category::Recovery).map(|(_, s)| *s).unwrap();
+        let expect = 6.0 * costs.retransmit + 18.0 * costs.ack_tx + 400.0 * costs.timeout_check;
+        assert!((rec - expect).abs() < 1e-15);
+        assert!((b.total() - expect).abs() < 1e-15, "only the recovery path did work");
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Chaos-layer conformance — the fault-injection/recovery gate.
+//!
+//! Exercises the seeded fault matrix
+//!
+//! ```text
+//! {drop, dup, reorder, corrupt, mixed} fault profiles
+//!   × {sequential, threaded, async} engines
+//!   × {path, RMAT, star} graphs
+//! ```
+//!
+//! against the Kruskal oracle: every cell must *recover* — the
+//! seq/ack/retransmit reliability layer turns a lossy, duplicating,
+//! reordering, corrupting interconnect back into exactly-once in-order
+//! delivery, so the forest is byte-identical to the fault-free one.
+//! Around the matrix sit the protocol's bookkeeping gates: the zero-rate
+//! control cell (reliability on, nothing injected) must recover the
+//! `faults: None` baseline forest with zero fault counters, fault
+//! schedules must replay deterministically per seed, the sequential
+//! engine's frame ledger must reconcile exactly (injected = recovered +
+//! degraded-reported), and an unrecoverable peer (scheduler-stalled past
+//! the watchdog budget) must degrade into the structured failure report,
+//! not a hang. The nightly soak lane reruns this matrix at `GHS_SCALE=12`
+//! with `GHS_FUZZ_SCHED` (see `.github/workflows/nightly-soak.yml`).
+
+mod common;
+
+use common::{
+    conformance_config, graph_case, run_engine, verify_against_oracle, EngineKind, ENGINE_KINDS,
+};
+use ghs_mst::ghs::edge_lookup::SearchStrategy;
+use ghs_mst::ghs::fault::FaultConfig;
+use ghs_mst::ghs::wire::WireFormat;
+
+/// Matrix scale (2^6 vertices); the nightly soak lane raises it via
+/// `GHS_SCALE` like the conformance matrix does.
+const MATRIX_SCALE: u32 = 6;
+const MATRIX_RANKS: u32 = 4;
+
+fn matrix_scale() -> u32 {
+    std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(MATRIX_SCALE)
+}
+
+/// The five fault profiles of the matrix, via the user-facing grammar so
+/// the parser is on the tested path. Rates sit at the acceptance ceiling
+/// (drop ≤ 0.05, dup ≤ 0.02, reorder ≤ 8, corrupt ≤ 0.01).
+fn fault_profiles() -> Vec<(&'static str, FaultConfig)> {
+    [
+        ("drop", "drop=0.05,seed=11"),
+        ("dup", "dup=0.02,seed=12"),
+        ("reorder", "reorder=8,seed=13"),
+        ("corrupt", "corrupt=0.01,seed=14"),
+        ("mixed", "drop=0.05,dup=0.02,reorder=4,corrupt=0.01,seed=15"),
+    ]
+    .into_iter()
+    .map(|(label, spec)| (label, FaultConfig::parse(spec).expect(spec)))
+    .collect()
+}
+
+/// Graph axis: path (every edge crosses a rank boundary at small scale),
+/// RMAT (skewed), star (one hub rank handles everything).
+fn chaos_graphs() -> Vec<(String, ghs_mst::graph::EdgeList)> {
+    [3usize, 0, 4].iter().map(|&idx| graph_case(matrix_scale(), 0xC4A05, idx)).collect()
+}
+
+fn chaos_config(ranks: u32, faults: FaultConfig) -> ghs_mst::ghs::config::GhsConfig {
+    let mut cfg = conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, ranks);
+    cfg.faults = Some(faults);
+    cfg
+}
+
+/// The tentpole matrix: every fault profile × engine × graph cell must
+/// reproduce the Kruskal forest, report zero degraded messages, and keep
+/// the injected-fault ledger consistent with its per-category parts.
+#[test]
+fn seeded_fault_matrix_conforms_to_kruskal() {
+    let graphs = chaos_graphs();
+    let mut cells = 0usize;
+    for &kind in &ENGINE_KINDS {
+        for (profile, fc) in fault_profiles() {
+            for (label, clean) in &graphs {
+                let tag = format!("{kind:?}/{profile}/{label}");
+                let run = run_engine(kind, clean, chaos_config(MATRIX_RANKS, fc.clone()));
+                verify_against_oracle(&tag, clean, &run);
+                let fs = run.faults.as_ref().unwrap_or_else(|| panic!("{tag}: no fault stats"));
+                assert_eq!(fs.degraded, 0, "{tag}: recovered runs report nothing degraded");
+                assert_eq!(
+                    run.profile.fault_injected,
+                    fs.drops + fs.dups + fs.corrupts + fs.delays,
+                    "{tag}: fault ledger out of balance"
+                );
+                cells += 1;
+            }
+        }
+    }
+    assert_eq!(cells, 45, "3 engines x 5 profiles x 3 graphs");
+}
+
+/// Zero-rate control cell: `faults: Some` with every rate at zero frames
+/// each packet through the reliability layer but injects nothing — the
+/// run must recover the baseline forest and every fault/recovery-drop
+/// counter must stay zero. Message-*schedule* identity is deliberately
+/// not asserted: standalone ack frames are real wire traffic, and their
+/// LogGOPS cost shifts arrival times enough to legally reorder
+/// Test/Reject interleavings. Byte-identity to the pre-chaos baselines
+/// is guaranteed only for `faults: None` (the default), which the
+/// conformance and trace-fingerprint suites pin.
+#[test]
+fn zero_rate_control_cell_recovers_baseline_forest() {
+    for idx in [3usize, 0] {
+        let (label, clean) = graph_case(matrix_scale(), 0xC4A05, idx);
+        let base = run_engine(
+            EngineKind::Sequential,
+            &clean,
+            conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, MATRIX_RANKS),
+        );
+        let run = run_engine(
+            EngineKind::Sequential,
+            &clean,
+            chaos_config(MATRIX_RANKS, FaultConfig::default()),
+        );
+        assert_eq!(
+            run.forest.canonical_edges(),
+            base.forest.canonical_edges(),
+            "{label}: control-cell forest"
+        );
+        let fs = run.faults.expect("chaos run reports fault stats");
+        assert_eq!(fs.injected(), 0, "{label}: nothing injected at zero rates");
+        assert_eq!(run.profile.fault_injected, 0, "{label}");
+        assert_eq!(run.profile.retransmits, 0, "{label}: timely acks, no retransmits");
+        assert_eq!(run.profile.dup_dropped, 0, "{label}");
+        assert_eq!(run.profile.corrupt_dropped, 0, "{label}");
+        assert_eq!(run.profile.reorder_buffered, 0, "{label}");
+        assert!(run.profile.timeout_checks > 0, "{label}: the retransmit timer did run");
+        // Baseline (faults: None) never pays any of this:
+        assert_eq!(base.profile.timeout_checks, 0, "{label}: fault-free runs tick no timers");
+        assert_eq!(base.profile.acks_sent, 0, "{label}");
+        assert!(base.faults.is_none(), "{label}: fault-free runs report no fault stats");
+    }
+}
+
+/// Fault schedules replay: the same seed must produce the identical fault
+/// schedule — and therefore identical recovery work, traffic, and virtual
+/// time — across three runs of the (deterministic) sequential engine.
+#[test]
+fn fault_schedules_are_deterministic_per_seed() {
+    let (_, clean) = graph_case(matrix_scale(), 0xC4A05, 0); // RMAT
+    let fc = FaultConfig::parse("drop=0.05,dup=0.02,reorder=4,corrupt=0.01,seed=77").unwrap();
+    let runs: Vec<_> = (0..3)
+        .map(|_| run_engine(EngineKind::Sequential, &clean, chaos_config(MATRIX_RANKS, fc.clone())))
+        .collect();
+    let (a, rest) = runs.split_first().unwrap();
+    for (i, b) in rest.iter().enumerate() {
+        assert_eq!(a.faults, b.faults, "run {}: fault schedule diverged", i + 1);
+        assert_eq!(a.forest.canonical_edges(), b.forest.canonical_edges(), "run {}", i + 1);
+        assert_eq!(a.sent.total(), b.sent.total(), "run {}", i + 1);
+        assert_eq!(a.profile.retransmits, b.profile.retransmits, "run {}", i + 1);
+        assert_eq!(a.profile.acks_sent, b.profile.acks_sent, "run {}", i + 1);
+        assert_eq!(a.profile.dup_dropped, b.profile.dup_dropped, "run {}", i + 1);
+        assert_eq!(a.profile.corrupt_dropped, b.profile.corrupt_dropped, "run {}", i + 1);
+        assert_eq!(a.profile.reorder_buffered, b.profile.reorder_buffered, "run {}", i + 1);
+        assert_eq!(a.profile.fault_injected, b.profile.fault_injected, "run {}", i + 1);
+        assert_eq!(a.supersteps, b.supersteps, "run {}", i + 1);
+        assert_eq!(a.sim.total_time, b.sim.total_time, "run {}", i + 1);
+    }
+    assert!(a.profile.fault_injected > 0, "the matrix cell actually injected faults");
+}
+
+/// Exact frame ledger on the sequential engine: every frame handed to the
+/// interconnect is either an original flush, a retransmit, or an injected
+/// duplicate; dropped frames vanish; everything else must surface at a
+/// receiver as exactly one of delivered / duplicate-suppressed /
+/// checksum-rejected. (Standalone ack frames live outside all of these
+/// counters by design.)
+#[test]
+fn sequential_ledger_reconciles_exactly() {
+    let (_, clean) = graph_case(matrix_scale(), 0xC4A05, 0); // RMAT
+    let fc = FaultConfig::parse("drop=0.05,dup=0.02,reorder=4,corrupt=0.01,seed=15").unwrap();
+    let run = run_engine(EngineKind::Sequential, &clean, chaos_config(MATRIX_RANKS, fc));
+    let p = &run.profile;
+    let fs = run.faults.expect("fault stats");
+    assert!(p.fault_injected > 0, "cell must inject something to be a ledger test");
+    assert_eq!(p.fault_injected, fs.drops + fs.dups + fs.corrupts + fs.delays);
+    assert_eq!(
+        p.flushes + p.retransmits + fs.dups - fs.drops,
+        p.decode_batches + p.dup_dropped + p.corrupt_dropped,
+        "frames in != frames accounted for (flushes {}, retransmits {}, dups {}, drops {}, \
+         decoded {}, dup_dropped {}, corrupt_dropped {})",
+        p.flushes,
+        p.retransmits,
+        fs.dups,
+        fs.drops,
+        p.decode_batches,
+        p.dup_dropped,
+        p.corrupt_dropped
+    );
+    assert!(p.retransmits >= fs.drops, "every dropped frame needed at least one retransmit");
+    assert!(p.corrupt_dropped >= fs.corrupts, "every corrupted frame was checksum-rejected");
+    assert!(p.acks_sent > 0 || p.flushes > 0, "acks flowed");
+    assert_eq!(fs.degraded, 0);
+}
+
+/// Scheduler-side faults: worker slowdowns perturb the async schedule but
+/// the reliability layer (and the scheduler's quiescence accounting) must
+/// still converge on the oracle forest, with the slowdowns counted.
+#[test]
+fn async_slowdown_cell_conforms() {
+    let (label, clean) = graph_case(matrix_scale(), 0xC4A05, 0); // RMAT
+    let fc = FaultConfig::parse("drop=0.05,dup=0.02,slow=0.2,seed=21").unwrap();
+    let mut cfg = chaos_config(6, fc);
+    cfg.workers = 3;
+    let run = run_engine(EngineKind::Async, &clean, cfg);
+    verify_against_oracle(&format!("async/slow/{label}"), &clean, &run);
+    let fs = run.faults.expect("fault stats");
+    assert!(fs.slowdowns > 0, "a 20% slowdown rate must trip at least once");
+    assert_eq!(fs.degraded, 0);
+}
+
+/// Unrecoverable peer: a rank stalled by the scheduler past the retransmit
+/// watchdog budget must degrade into the structured failure report — the
+/// run errors out (no hang, no wrong forest) naming both ends of the dead
+/// link and the undeliverable frame.
+#[test]
+fn async_stall_degrades_into_watchdog_report() {
+    let (_, clean) = graph_case(matrix_scale(), 0xC4A05, 3); // path: rank 1 has neighbors
+    let fc = FaultConfig::parse("stall=1,seed=31").unwrap();
+    let mut cfg = chaos_config(MATRIX_RANKS, fc);
+    cfg.workers = 2;
+    let err = ghs_mst::ghs::sched::run_async(&clean, cfg)
+        .err()
+        .expect("a stalled rank must fail the run, not hang or mis-converge");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("reliable delivery gave up"), "report names the protocol: {msg}");
+    assert!(msg.contains("rank 1"), "report names the stalled peer: {msg}");
+    assert!(msg.contains("stalled past the watchdog budget"), "report names the cause: {msg}");
+    assert!(msg.contains("retransmits"), "report counts the attempts: {msg}");
+}
