@@ -56,6 +56,29 @@ impl UnionFind {
     pub fn n_sets(&self) -> u32 {
         self.n_sets
     }
+
+    /// Dissolve the sets covering `vs` back into singletons.
+    ///
+    /// Precondition: `vs` must be closed under set membership — every
+    /// vertex of every set that intersects `vs` is in `vs` (the dynamic
+    /// engine's localized repair passes whole components, which satisfy
+    /// this by construction: a component's union-find trees only ever
+    /// contain its own vertices). The caller then re-unions the repaired
+    /// forest edges over the same vertex set.
+    pub fn reset_vertices(&mut self, vs: &[u32]) {
+        let mut roots = 0u32;
+        for &v in vs {
+            if self.find(v) == v {
+                roots += 1;
+            }
+        }
+        for &v in vs {
+            self.parent[v as usize] = v;
+            self.rank[v as usize] = 0;
+        }
+        // `vs` singletons replace `roots` dissolved sets.
+        self.n_sets += vs.len() as u32 - roots;
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +99,24 @@ mod tests {
         assert!(uf.union(1, 3));
         assert!(uf.same(0, 2));
         assert_eq!(uf.n_sets(), 2);
+    }
+
+    #[test]
+    fn reset_vertices_dissolves_whole_components() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 1);
+        uf.union(1, 2); // component {0,1,2}
+        uf.union(4, 5); // component {4,5}
+        assert_eq!(uf.n_sets(), 3);
+        uf.reset_vertices(&[0, 1, 2]);
+        assert_eq!(uf.n_sets(), 5, "one 3-set became three singletons");
+        assert!(!uf.same(0, 1));
+        assert!(uf.same(4, 5), "untouched components survive");
+        uf.union(0, 2);
+        assert_eq!(uf.n_sets(), 4);
+        // Resetting singletons is a no-op on the set count.
+        uf.reset_vertices(&[3]);
+        assert_eq!(uf.n_sets(), 4);
     }
 
     #[test]

@@ -532,6 +532,73 @@ pub fn sweep_search(opts: &ExpOptions) -> Result<Table> {
     Ok(t)
 }
 
+/// **Serving baseline**: deterministic delta counters for a 1000-op
+/// stream (mix insert:delete:reweight = 5:3:2, stream seed 1, batches of
+/// 100) over RMAT at 16 ranks. The pinned artifact
+/// `results/dynamic_baseline.md` is generated by the Python port
+/// (`pipeline_check.py dynamic-baseline`) at RMAT-10; this driver prints
+/// the same counters from the Rust engine for side-by-side comparison.
+pub fn dynamic_baseline(opts: &ExpOptions) -> Result<Table> {
+    use crate::baseline::kruskal::kruskal;
+    use crate::ghs::dynamic::{MstState, OpStreamGen};
+    use crate::ghs::engine::EngineKind;
+    use crate::sim::costmodel::OpCosts;
+
+    let scale = opts.scale.min(10);
+    let w = Workload::new(GraphFamily::Rmat, scale);
+    opts.progress(&format!("serving baseline: generating {}", w.label()));
+    let clean = w.build();
+    let mut cfg = GhsConfig::final_version(16);
+    cfg.partition = opts.partition.clone();
+    let mut state = MstState::bootstrap(&clean, EngineKind::Sequential, cfg)?;
+    let mut gen = OpStreamGen::new(&clean, 1, (5, 3, 2));
+    for batch in 0..10 {
+        let ops = gen.take_ops(100);
+        let r = state.apply_batch(&ops)?;
+        opts.progress(&format!(
+            "serving baseline: batch {batch} versions {}..{} ({} repairs)",
+            r.first_version, r.last_version, r.local_repairs
+        ));
+        if opts.verify
+            && state.forest().canonical_edges() != kruskal(&state.current_graph()).canonical_edges()
+        {
+            anyhow::bail!("dynamic forest diverged from Kruskal after version {}", r.last_version);
+        }
+    }
+    let c = *state.counters();
+    let f = state.forest();
+    let serving_s = Breakdown::of(&c, &OpCosts::default())
+        .seconds
+        .iter()
+        .find(|(cat, _)| *cat == Category::Serving)
+        .map(|(_, s)| *s)
+        .unwrap_or(0.0);
+    let mut t = Table::new(
+        format!("Serving baseline — {} at 16 ranks, 1000 ops (5:3:2, seed 1)", w.label()),
+        &["Counter", "Value"],
+    );
+    for (name, val) in [
+        ("ops applied", c.delta_ops),
+        ("fast-path inserts", c.delta_fast_inserts),
+        ("cycle-check swaps", c.delta_swaps),
+        ("localized repairs", c.delta_local_repairs),
+        ("tree-path steps", c.delta_path_steps),
+        ("repair messages", c.delta_repair_msgs),
+        ("bootstrap messages", state.bootstrap_msgs()),
+        ("final forest edges", f.edges.len() as u64),
+        ("final components", f.n_components as u64),
+    ] {
+        t.push_row(vec![name.to_string(), val.to_string()]);
+    }
+    t.push_row(vec!["modeled serving time".into(), fmt_time(serving_s)]);
+    t.push_row(vec!["final forest weight".into(), format!("{:.6}", f.total_weight())]);
+    t.note(
+        "Counters are deterministic (fixed stream seed + sequential repairs); the pinned \
+         artifact results/dynamic_baseline.md is generated by the Python port at RMAT-10.",
+    );
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,6 +691,17 @@ mod tests {
         let opts = ExpOptions { partition: PartitionSpec::multilevel(), ..tiny_opts() };
         let t = sweep_search(&opts).unwrap();
         assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn dynamic_baseline_shape_and_verified() {
+        // tiny_opts has verify=true, so this also conformance-checks the
+        // dynamic forest against Kruskal after every one of the 10 batches.
+        let t = dynamic_baseline(&tiny_opts()).unwrap();
+        assert_eq!(t.rows.len(), 11, "9 counters + modeled time + weight");
+        assert_eq!(t.rows[0][1], "1000", "1000 ops applied");
+        let repairs: u64 = t.rows[3][1].parse().unwrap();
+        assert!(repairs > 0, "a 300-delete stream must hit at least one tree edge");
     }
 
     #[test]

@@ -132,6 +132,12 @@ pub struct GhsConfig {
     /// every packet (reliability on, nothing injected), which is the
     /// chaos suite's protocol-overhead-only control cell.
     pub faults: Option<FaultConfig>,
+    /// Run epoch folded into the reliable-delivery frame checksum when the
+    /// chaos layer is on. The dynamic engine bumps this for every localized
+    /// GHS re-run so a repair's fresh seq-0 frames can never validate
+    /// against a peer's stale window from an earlier run (epoch `0`, the
+    /// default, keeps the wire format byte-identical to static runs).
+    pub run_epoch: u64,
 }
 
 impl Default for GhsConfig {
@@ -155,6 +161,7 @@ impl Default for GhsConfig {
             fuzz_sched: std::env::var("GHS_FUZZ_SCHED").ok().and_then(|v| v.parse().ok()),
             trace: None,
             faults: None,
+            run_epoch: 0,
         }
     }
 }
@@ -215,6 +222,7 @@ mod tests {
         assert_eq!(c.wire_format, WireFormat::CompactProcId);
         assert!(c.trace.is_none(), "flight recorder is off by default");
         assert!(c.faults.is_none(), "chaos layer is off by default");
+        assert_eq!(c.run_epoch, 0, "static runs stay in epoch 0 (legacy wire bytes)");
     }
 
     #[test]

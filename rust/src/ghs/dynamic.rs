@@ -1,0 +1,811 @@
+//! Incremental MST serving engine: a versioned edge-delta log applied in
+//! batches against a maintained minimum spanning forest.
+//!
+//! The paper's GHS variant answers one batch question — compute the MST
+//! once. [`MstState`] turns that into a serving system: bootstrap the
+//! forest with any of the three engines, then apply
+//! [`EdgeOp::Insert`] / [`EdgeOp::Delete`] / [`EdgeOp::Reweight`] streams
+//! with monotone version stamps. The maintenance rules follow the classic
+//! cut/cycle properties (all weights are unique via the paper's §3.2
+//! `special_id` extension, so the MST is unique and every rule is exact):
+//!
+//! * **Insert, endpoints in different components** — O(α) union-find fast
+//!   path: the edge joins the forest unconditionally (cut property).
+//! * **Insert / reweight-down, endpoints in one component** — bounded walk
+//!   of the unique tree path between the endpoints; the new edge enters
+//!   iff it is lighter than the current path maximum, displacing exactly
+//!   that edge (cycle property).
+//! * **Delete / reweight-up of a tree edge** — *localized repair*: GHS
+//!   re-runs on the induced subgraph of the affected component only, via
+//!   the same [`run_kind`] dispatch as static runs. Because spanning
+//!   forests span whole components, the affected vertex set is an entire
+//!   graph component, so the sub-MST equals the global MST restricted to
+//!   it — components are independent.
+//! * **Delete of a non-tree edge / reweight-up of a non-tree edge /
+//!   reweight-down of a tree edge** — O(1) no-ops on the forest.
+//!
+//! Every applied op emits [`EventKind::DeltaApply`] and every sub-run
+//! emits [`EventKind::LocalRepair`] into the serving trace track, and the
+//! work is metered through the six `delta_*` [`ProfileCounters`] priced
+//! under `Category::Serving` — all provably zero on static runs.
+//!
+//! Chaos interaction: each localized re-run bumps `GhsConfig::run_epoch`,
+//! which the reliable-delivery layer folds into frame checksums, so a
+//! repair's fresh seq-0 frames can never validate against a peer window
+//! left over from an earlier run (see `reliable::checksum_epoch`).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::baseline::union_find::UnionFind;
+use crate::baseline::Forest;
+use crate::ghs::config::GhsConfig;
+use crate::ghs::engine::{run_kind, EngineKind};
+use crate::ghs::result::ProfileCounters;
+use crate::graph::{EdgeList, WeightedEdge};
+use crate::obs::trace::{EventKind, TraceData, TraceRing, TraceSink};
+use crate::util::prng::Xoshiro256;
+
+/// One edge mutation against the current graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EdgeOp {
+    /// Add edge `{u, v}` with weight `w`. Fails if the edge exists.
+    Insert { u: u32, v: u32, w: f64 },
+    /// Remove edge `{u, v}`. Fails if the edge does not exist.
+    Delete { u: u32, v: u32 },
+    /// Set the weight of existing edge `{u, v}` to `w`.
+    Reweight { u: u32, v: u32, w: f64 },
+}
+
+impl EdgeOp {
+    /// Stable tag for trace events and wire formats: 0 insert, 1 delete,
+    /// 2 reweight.
+    pub fn tag(&self) -> u64 {
+        match self {
+            EdgeOp::Insert { .. } => 0,
+            EdgeOp::Delete { .. } => 1,
+            EdgeOp::Reweight { .. } => 2,
+        }
+    }
+
+    /// Lowercase op name (JSONL `op` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EdgeOp::Insert { .. } => "insert",
+            EdgeOp::Delete { .. } => "delete",
+            EdgeOp::Reweight { .. } => "reweight",
+        }
+    }
+
+    /// Canonical `(min, max)` endpoint pair.
+    pub fn endpoints(&self) -> (u32, u32) {
+        let (u, v) = match *self {
+            EdgeOp::Insert { u, v, .. } => (u, v),
+            EdgeOp::Delete { u, v } => (u, v),
+            EdgeOp::Reweight { u, v, .. } => (u, v),
+        };
+        (u.min(v), u.max(v))
+    }
+}
+
+/// An op stamped with its position in the monotone version log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VersionedOp {
+    /// Monotone version stamp (1-based; version 0 is the bootstrap).
+    pub version: u64,
+    pub op: EdgeOp,
+}
+
+/// What one [`MstState::apply_batch`] call did to the forest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeltaResult {
+    /// Version of the first op in the batch.
+    pub first_version: u64,
+    /// Version of the last op in the batch.
+    pub last_version: u64,
+    /// Canonical forest edges the batch added.
+    pub edges_added: Vec<(u32, u32)>,
+    /// Canonical forest edges the batch removed.
+    pub edges_removed: Vec<(u32, u32)>,
+    /// Distinct current components touched by the forest diff.
+    pub affected_components: u32,
+    /// Inserts accepted on the different-component fast path.
+    pub fast_inserts: u64,
+    /// Cycle-check swaps (insert or reweight-down displaced a path max).
+    pub swaps: u64,
+    /// Localized GHS re-runs (tree-edge deletes / reweight-ups).
+    pub local_repairs: u64,
+    /// O(1) deletes of non-tree edges.
+    pub nontree_deletes: u64,
+    /// Ops that left the forest unchanged (incl. non-tree deletes).
+    pub noops: u64,
+}
+
+impl DeltaResult {
+    /// True when the batch left the forest untouched.
+    pub fn forest_unchanged(&self) -> bool {
+        self.edges_added.is_empty() && self.edges_removed.is_empty()
+    }
+}
+
+/// Outcome tag carried in [`EventKind::DeltaApply`]'s `c` payload.
+const OUT_NOOP: u64 = 0;
+const OUT_FAST_INSERT: u64 = 1;
+const OUT_SWAP: u64 = 2;
+const OUT_REPAIR: u64 = 3;
+
+/// The serving state: current graph + maintained minimum spanning forest.
+pub struct MstState {
+    n_vertices: u32,
+    /// Current edge weights, keyed by canonical `(min, max)` pair.
+    weights: HashMap<(u32, u32), f64>,
+    /// Graph adjacency. Mutation discipline (mirrored bit-for-bit by the
+    /// Python oracle so induced-subgraph edge order matches): push on
+    /// insert, position + `swap_remove` on delete. Induced subgraphs are
+    /// built by walking these lists, never the weights map.
+    adj: Vec<Vec<u32>>,
+    /// Forest adjacency (same mutation discipline).
+    tree_adj: Vec<Vec<u32>>,
+    /// Canonical forest edge set.
+    tree: HashSet<(u32, u32)>,
+    /// Component structure of the current forest.
+    uf: UnionFind,
+    /// Last applied version (0 = bootstrap only).
+    version: u64,
+    /// Full versioned op log.
+    log: Vec<VersionedOp>,
+    /// Template config for localized repair sub-runs.
+    cfg: GhsConfig,
+    /// Engine the bootstrap ran on and repairs re-enter.
+    engine: EngineKind,
+    /// Serving-session counters: bootstrap + every repair sub-run merged,
+    /// plus the six `delta_*` serving counters.
+    prof: ProfileCounters,
+    /// Serving trace track (when `cfg.trace` is set).
+    trace: Option<TraceRing>,
+    /// Epochs handed to repair sub-runs (monotone, starts past the
+    /// bootstrap's own epoch).
+    repair_epoch: u64,
+    /// Repair events staged during op processing, flushed to the trace
+    /// right after the op's own `DeltaApply` event so the track reads
+    /// cause-then-effect.
+    pending_repairs: Vec<(u64, u64, u64)>,
+    /// GHS messages the bootstrap run sent.
+    bootstrap_msgs: u64,
+}
+
+impl MstState {
+    /// Bootstrap the forest by running `engine` once over `g`.
+    pub fn bootstrap(g: &EdgeList, engine: EngineKind, cfg: GhsConfig) -> Result<Self> {
+        let n = g.n_vertices;
+        let mut weights = HashMap::with_capacity(g.edges.len());
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n as usize];
+        for e in &g.edges {
+            let key = e.canonical();
+            if key.0 == key.1 || e.u >= n || e.v >= n {
+                bail!("bootstrap graph must be clean (bad edge {} - {})", e.u, e.v);
+            }
+            if weights.insert(key, e.w).is_some() {
+                bail!("bootstrap graph has duplicate edge {} - {}", key.0, key.1);
+            }
+            adj[e.u as usize].push(e.v);
+            adj[e.v as usize].push(e.u);
+        }
+        let mut boot_cfg = cfg.clone();
+        boot_cfg.trace = None;
+        let run = run_kind(engine, g, boot_cfg)?;
+        let mut tree_adj: Vec<Vec<u32>> = vec![Vec::new(); n as usize];
+        let mut tree = HashSet::with_capacity(run.forest.edges.len());
+        let mut uf = UnionFind::new(n);
+        for e in &run.forest.edges {
+            tree.insert(e.canonical());
+            tree_adj[e.u as usize].push(e.v);
+            tree_adj[e.v as usize].push(e.u);
+            uf.union(e.u, e.v);
+        }
+        let mut prof = ProfileCounters::default();
+        prof.merge(&run.profile);
+        Ok(Self {
+            n_vertices: n,
+            weights,
+            adj,
+            tree_adj,
+            tree,
+            uf,
+            version: 0,
+            log: Vec::new(),
+            trace: cfg.trace.map(|depth| TraceRing::new(depth as usize)),
+            repair_epoch: cfg.run_epoch,
+            pending_repairs: Vec::new(),
+            cfg,
+            engine,
+            prof,
+            bootstrap_msgs: run.sent.total(),
+        })
+    }
+
+    /// Apply one batch of ops, in order, each stamped with the next
+    /// version. Returns the forest diff; fails (leaving prior ops of the
+    /// batch applied) on an op that contradicts the current graph.
+    pub fn apply_batch(&mut self, ops: &[EdgeOp]) -> Result<DeltaResult> {
+        let mut res = DeltaResult { first_version: self.version + 1, ..Default::default() };
+        for &op in ops {
+            self.version += 1;
+            self.log.push(VersionedOp { version: self.version, op });
+            self.prof.delta_ops += 1;
+            let outcome = match op {
+                EdgeOp::Insert { u, v, w } => self.apply_insert(u, v, w, &mut res)?,
+                EdgeOp::Delete { u, v } => self.apply_delete(u, v, &mut res)?,
+                EdgeOp::Reweight { u, v, w } => self.apply_reweight(u, v, w, &mut res)?,
+            };
+            let (version, tag) = (self.version, op.tag());
+            if let Some(t) = self.trace.as_mut() {
+                t.set_now(version);
+                t.record(EventKind::DeltaApply, tag, version, outcome);
+                for (size, msgs, comps) in self.pending_repairs.drain(..) {
+                    t.record(EventKind::LocalRepair, size, msgs, comps);
+                }
+            } else {
+                self.pending_repairs.clear();
+            }
+        }
+        res.last_version = self.version;
+        let mut roots: Vec<u32> = res
+            .edges_added
+            .iter()
+            .chain(res.edges_removed.iter())
+            .flat_map(|&(a, b)| [a, b])
+            .map(|v| self.uf.find(v))
+            .collect();
+        roots.sort_unstable();
+        roots.dedup();
+        res.affected_components = roots.len() as u32;
+        Ok(res)
+    }
+
+    fn check_endpoints(&self, u: u32, v: u32) -> Result<(u32, u32)> {
+        if u == v || u >= self.n_vertices || v >= self.n_vertices {
+            bail!("bad edge {u} - {v} (n = {})", self.n_vertices);
+        }
+        Ok((u.min(v), u.max(v)))
+    }
+
+    fn apply_insert(&mut self, u: u32, v: u32, w: f64, res: &mut DeltaResult) -> Result<u64> {
+        let key = self.check_endpoints(u, v)?;
+        if self.weights.insert(key, w).is_some() {
+            bail!("insert of existing edge {} - {}", key.0, key.1);
+        }
+        self.adj[u as usize].push(v);
+        self.adj[v as usize].push(u);
+        if self.uf.union(u, v) {
+            // Different components: the edge joins the forest (cut
+            // property), no tree walk needed.
+            self.add_tree_edge(key);
+            self.prof.delta_fast_inserts += 1;
+            res.fast_inserts += 1;
+            res.edges_added.push(key);
+            return Ok(OUT_FAST_INSERT);
+        }
+        self.cycle_check(key, w, res)
+    }
+
+    fn apply_delete(&mut self, u: u32, v: u32, res: &mut DeltaResult) -> Result<u64> {
+        let key = self.check_endpoints(u, v)?;
+        if self.weights.remove(&key).is_none() {
+            bail!("delete of missing edge {} - {}", key.0, key.1);
+        }
+        adj_remove(&mut self.adj, u, v);
+        if !self.tree.remove(&key) {
+            // Non-tree edge: the forest is untouched, O(1).
+            res.nontree_deletes += 1;
+            res.noops += 1;
+            return Ok(OUT_NOOP);
+        }
+        adj_remove(&mut self.tree_adj, u, v);
+        res.edges_removed.push(key);
+        // Both tree fragments together are the entire old graph component
+        // (spanning forests span components), so candidate replacement
+        // edges cannot leave the repair set.
+        let mut comp = self.tree_reach(u);
+        comp.extend(self.tree_reach(v));
+        comp.sort_unstable();
+        self.repair_component(&comp, res)?;
+        Ok(OUT_REPAIR)
+    }
+
+    fn apply_reweight(&mut self, u: u32, v: u32, w: f64, res: &mut DeltaResult) -> Result<u64> {
+        let key = self.check_endpoints(u, v)?;
+        let old = match self.weights.get_mut(&key) {
+            Some(slot) => std::mem::replace(slot, w),
+            None => bail!("reweight of missing edge {} - {}", key.0, key.1),
+        };
+        let went_up = uw(w, key) > uw(old, key);
+        if self.tree.contains(&key) {
+            if !went_up {
+                // A tree edge that got lighter keeps every cut it wins.
+                res.noops += 1;
+                return Ok(OUT_NOOP);
+            }
+            // Heavier tree edge: it may be displaced by any edge of its
+            // component, so re-run GHS over the whole component (the tree
+            // still spans it — one traversal covers everything).
+            let mut comp = self.tree_reach(u);
+            comp.sort_unstable();
+            self.repair_component(&comp, res)?;
+            return Ok(OUT_REPAIR);
+        }
+        if went_up {
+            // A non-tree edge that got heavier stays out (cycle property).
+            res.noops += 1;
+            return Ok(OUT_NOOP);
+        }
+        self.cycle_check(key, w, res)
+    }
+
+    /// Cycle property for an intra-component candidate edge `key` of
+    /// weight `w`: walk the unique tree path between its endpoints and
+    /// swap against the path maximum if the candidate is lighter.
+    fn cycle_check(&mut self, key: (u32, u32), w: f64, res: &mut DeltaResult) -> Result<u64> {
+        let max_key = self.tree_path_max(key.0, key.1);
+        let max_w = self.weights[&max_key];
+        if uw(w, key) < uw(max_w, max_key) {
+            self.tree.remove(&max_key);
+            adj_remove(&mut self.tree_adj, max_key.0, max_key.1);
+            self.add_tree_edge(key);
+            self.prof.delta_swaps += 1;
+            res.swaps += 1;
+            res.edges_added.push(key);
+            res.edges_removed.push(max_key);
+            // Component membership is unchanged: the swap closes the same
+            // cut it opens, so the union-find stays valid as-is.
+            Ok(OUT_SWAP)
+        } else {
+            res.noops += 1;
+            Ok(OUT_NOOP)
+        }
+    }
+
+    fn add_tree_edge(&mut self, key: (u32, u32)) {
+        self.tree.insert(key);
+        self.tree_adj[key.0 as usize].push(key.1);
+        self.tree_adj[key.1 as usize].push(key.0);
+    }
+
+    /// Max-unique-weight edge on the tree path `u .. v` (the endpoints
+    /// must share a component). BFS with parent pointers; every adjacency
+    /// entry examined is one metered path step.
+    fn tree_path_max(&mut self, u: u32, v: u32) -> (u32, u32) {
+        let mut parent: HashMap<u32, u32> = HashMap::new();
+        parent.insert(u, u);
+        let mut queue = VecDeque::new();
+        queue.push_back(u);
+        'bfs: while let Some(x) = queue.pop_front() {
+            for i in 0..self.tree_adj[x as usize].len() {
+                let nb = self.tree_adj[x as usize][i];
+                self.prof.delta_path_steps += 1;
+                if parent.contains_key(&nb) {
+                    continue;
+                }
+                parent.insert(nb, x);
+                if nb == v {
+                    break 'bfs;
+                }
+                queue.push_back(nb);
+            }
+        }
+        let mut best: Option<((u32, u32), f64)> = None;
+        let mut x = v;
+        while x != u {
+            let p = parent[&x];
+            let key = (p.min(x), p.max(x));
+            let w = self.weights[&key];
+            let heavier = match best {
+                None => true,
+                Some((bk, bw)) => uw(w, key) > uw(bw, bk),
+            };
+            if heavier {
+                best = Some((key, w));
+            }
+            x = p;
+        }
+        best.expect("endpoints in one component have a non-empty tree path").0
+    }
+
+    /// Vertices tree-reachable from `start` (inclusive), in BFS order.
+    fn tree_reach(&self, start: u32) -> Vec<u32> {
+        let mut seen = HashSet::new();
+        seen.insert(start);
+        let mut order = vec![start];
+        let mut at = 0;
+        while at < order.len() {
+            let x = order[at];
+            at += 1;
+            for &nb in &self.tree_adj[x as usize] {
+                if seen.insert(nb) {
+                    order.push(nb);
+                }
+            }
+        }
+        order
+    }
+
+    /// Localized repair: re-run GHS on the induced subgraph of `comp`
+    /// (sorted, an entire graph component) and splice the resulting
+    /// forest back. Appends the forest diff to `res`.
+    fn repair_component(&mut self, comp: &[u32], res: &mut DeltaResult) -> Result<()> {
+        self.prof.delta_local_repairs += 1;
+        res.local_repairs += 1;
+        // Old forest edges inside the component, for the diff.
+        let old: HashSet<(u32, u32)> = comp
+            .iter()
+            .flat_map(|&x| self.tree_adj[x as usize].iter().map(move |&nb| (x, nb)))
+            .filter(|&(x, nb)| x < nb)
+            .collect();
+        let mut new: HashSet<(u32, u32)> = HashSet::new();
+        let mut sub_msgs = 0u64;
+        let mut sub_components = comp.len() as u64;
+        if comp.len() >= 2 {
+            // Compact ids: position in the sorted component list.
+            let local: HashMap<u32, u32> =
+                comp.iter().enumerate().map(|(i, &x)| (x, i as u32)).collect();
+            let mut sub = EdgeList::with_vertices(comp.len() as u32);
+            for &x in comp {
+                for i in 0..self.adj[x as usize].len() {
+                    let nb = self.adj[x as usize][i];
+                    if nb > x {
+                        sub.push(local[&x], local[&nb], self.weights[&(x, nb)]);
+                    }
+                }
+            }
+            let mut repair_cfg = self.cfg.clone();
+            repair_cfg.n_ranks = self.cfg.n_ranks.min(comp.len() as u32).max(1);
+            repair_cfg.trace = None;
+            repair_cfg.record_timeline = false;
+            // Fresh epoch per sub-run: under chaos, a repair's seq-0
+            // frames must never validate against stale peer windows.
+            self.repair_epoch += 1;
+            repair_cfg.run_epoch = self.repair_epoch;
+            let run = run_kind(self.engine, &sub, repair_cfg)?;
+            sub_msgs = run.sent.total();
+            sub_components = run.forest.n_components as u64;
+            self.prof.delta_repair_msgs += sub_msgs;
+            self.prof.merge(&run.profile);
+            for e in &run.forest.edges {
+                let (a, b) = (comp[e.u as usize], comp[e.v as usize]);
+                new.insert((a.min(b), a.max(b)));
+            }
+        }
+        // Splice: clear forest state inside the component, re-link.
+        for &x in comp {
+            self.tree_adj[x as usize].clear();
+        }
+        for key in &old {
+            self.tree.remove(key);
+        }
+        self.uf.reset_vertices(comp);
+        let mut new_sorted: Vec<(u32, u32)> = new.iter().copied().collect();
+        new_sorted.sort_unstable();
+        for &key in &new_sorted {
+            self.add_tree_edge(key);
+            self.uf.union(key.0, key.1);
+        }
+        for &key in &new_sorted {
+            if !old.contains(&key) {
+                res.edges_added.push(key);
+            }
+        }
+        let mut gone: Vec<(u32, u32)> = old.difference(&new).copied().collect();
+        gone.sort_unstable();
+        res.edges_removed.extend(gone);
+        if self.trace.is_some() {
+            self.pending_repairs.push((comp.len() as u64, sub_msgs, sub_components));
+        }
+        Ok(())
+    }
+
+    // ---- read-side API ----
+
+    /// Snapshot of the maintained forest (edges sorted canonically).
+    pub fn forest(&self) -> Forest {
+        let mut keys: Vec<(u32, u32)> = self.tree.iter().copied().collect();
+        keys.sort_unstable();
+        let edges =
+            keys.iter().map(|&(u, v)| WeightedEdge::new(u, v, self.weights[&(u, v)])).collect();
+        Forest { edges, n_components: self.uf.n_sets() }
+    }
+
+    /// The current graph as an edge list (adjacency order — matches the
+    /// Python oracle's reconstruction bit for bit).
+    pub fn current_graph(&self) -> EdgeList {
+        let mut g = EdgeList::with_vertices(self.n_vertices);
+        for x in 0..self.n_vertices {
+            for &nb in &self.adj[x as usize] {
+                if nb > x {
+                    g.push(x, nb, self.weights[&(x, nb)]);
+                }
+            }
+        }
+        g
+    }
+
+    /// Serving-session counters: bootstrap + repair sub-runs merged, plus
+    /// the `delta_*` serving counters.
+    pub fn counters(&self) -> &ProfileCounters {
+        &self.prof
+    }
+
+    /// Last applied version (0 right after bootstrap).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The full versioned op log.
+    pub fn log(&self) -> &[VersionedOp] {
+        &self.log
+    }
+
+    /// Vertex count (fixed at bootstrap).
+    pub fn n_vertices(&self) -> u32 {
+        self.n_vertices
+    }
+
+    /// Current edge count.
+    pub fn n_edges(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// GHS messages the bootstrap run sent.
+    pub fn bootstrap_msgs(&self) -> u64 {
+        self.bootstrap_msgs
+    }
+
+    /// Serving trace track (one rank-0 track; `None` when tracing is off).
+    pub fn trace_data(&self) -> Option<TraceData> {
+        self.trace
+            .clone()
+            .map(|ring| TraceData { ranks: vec![ring.into_rank_trace(0)], workers: Vec::new() })
+    }
+}
+
+/// Total order on current-graph edges: the §3.2 unique extended weight
+/// derived from a weight and the canonical endpoint pair.
+fn uw(w: f64, key: (u32, u32)) -> crate::ghs::weight::EdgeWeight {
+    crate::ghs::weight::EdgeWeight::new(w, key.0, key.1)
+}
+
+/// Remove undirected edge `{u, v}` from an adjacency structure with the
+/// position + `swap_remove` discipline (mirrored by the Python oracle).
+fn adj_remove(adj: &mut [Vec<u32>], u: u32, v: u32) {
+    for (a, b) in [(u, v), (v, u)] {
+        let list = &mut adj[a as usize];
+        let at = list.iter().position(|&x| x == b).expect("edge present in adjacency");
+        list.swap_remove(at);
+    }
+}
+
+/// Deterministic op-stream generator, mirrored bit for bit by
+/// `pipeline_check.py` (same Xoshiro256 draws in the same order) so the
+/// CI conformance cells replay identical streams in both languages.
+///
+/// Mix weights pick the op class via one `next_below(wi + wd + wr)` draw;
+/// an empty graph forces insert, a complete graph forces reweight.
+/// Inserts rejection-sample an absent pair; deletes/reweights index the
+/// live-edge order list (initial graph order, append on insert,
+/// swap-remove on delete — the same discipline as the adjacency lists).
+pub struct OpStreamGen {
+    rng: Xoshiro256,
+    n: u32,
+    /// Canonical pairs currently present.
+    present: HashSet<(u32, u32)>,
+    /// Live edges in generation order (append / swap_remove).
+    order: Vec<(u32, u32)>,
+    /// Mix weights: insert, delete, reweight.
+    mix: (u64, u64, u64),
+}
+
+impl OpStreamGen {
+    /// Generator over the current edges of `g`, seeded deterministically.
+    pub fn new(g: &EdgeList, seed: u64, mix: (u64, u64, u64)) -> Self {
+        let order: Vec<(u32, u32)> = g.edges.iter().map(|e| e.canonical()).collect();
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            n: g.n_vertices,
+            present: order.iter().copied().collect(),
+            order,
+            mix,
+        }
+    }
+
+    /// Maximum simple-graph edge count for `n` vertices.
+    fn complete(&self) -> bool {
+        self.order.len() as u64 >= self.n as u64 * (self.n as u64 - 1) / 2
+    }
+
+    /// Draw the next op (always valid against the tracked graph).
+    pub fn next_op(&mut self) -> EdgeOp {
+        let (wi, wd, wr) = self.mix;
+        let pick = self.rng.next_below(wi + wd + wr);
+        let insert = pick < wi || self.order.is_empty();
+        if insert && !self.complete() {
+            loop {
+                let u = self.rng.next_below(self.n as u64) as u32;
+                let v = self.rng.next_below(self.n as u64) as u32;
+                if u == v {
+                    continue;
+                }
+                let key = (u.min(v), u.max(v));
+                if self.present.contains(&key) {
+                    continue;
+                }
+                let w = self.rng.next_weight();
+                self.present.insert(key);
+                self.order.push(key);
+                return EdgeOp::Insert { u: key.0, v: key.1, w };
+            }
+        }
+        let at = self.rng.next_below(self.order.len() as u64) as usize;
+        let key = self.order[at];
+        if !insert && pick < wi + wd {
+            self.present.remove(&key);
+            self.order.swap_remove(at);
+            return EdgeOp::Delete { u: key.0, v: key.1 };
+        }
+        let w = self.rng.next_weight();
+        EdgeOp::Reweight { u: key.0, v: key.1, w }
+    }
+
+    /// Draw a whole stream.
+    pub fn take_ops(&mut self, count: usize) -> Vec<EdgeOp> {
+        (0..count).map(|_| self.next_op()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::kruskal::kruskal;
+    use crate::graph::generators::{generate_with_factor, GraphFamily};
+    use crate::graph::preprocess::preprocess;
+
+    fn tri() -> EdgeList {
+        let mut g = EdgeList::with_vertices(3);
+        g.push(0, 1, 0.1);
+        g.push(1, 2, 0.2);
+        g.push(0, 2, 0.9);
+        g
+    }
+
+    fn state(g: &EdgeList) -> MstState {
+        let cfg = GhsConfig { n_ranks: 2, ..GhsConfig::default() };
+        MstState::bootstrap(g, EngineKind::Sequential, cfg).unwrap()
+    }
+
+    fn conforms(s: &MstState) {
+        let oracle = kruskal(&s.current_graph());
+        let f = s.forest();
+        assert_eq!(f.canonical_edges(), oracle.canonical_edges());
+        assert_eq!(f.n_components, oracle.n_components);
+    }
+
+    #[test]
+    fn bootstrap_matches_kruskal() {
+        let s = state(&tri());
+        assert_eq!(s.forest().canonical_edges(), vec![(0, 1), (1, 2)]);
+        assert_eq!(s.version(), 0);
+        assert!(s.counters().serving_counters_zero(), "no delta work before any op");
+        assert!(s.bootstrap_msgs() > 0, "the bootstrap ran a real GHS round");
+        conforms(&s);
+    }
+
+    #[test]
+    fn insert_fast_path_and_swap() {
+        let mut g = EdgeList::with_vertices(4);
+        g.push(0, 1, 0.1);
+        let mut s = state(&g);
+        // 2 and 3 are isolated: both inserts take the fast path.
+        let r = s.apply_batch(&[
+            EdgeOp::Insert { u: 1, v: 2, w: 0.5 },
+            EdgeOp::Insert { u: 2, v: 3, w: 0.6 },
+        ]);
+        let r = r.unwrap();
+        assert_eq!(r.fast_inserts, 2);
+        assert_eq!(r.swaps, 0);
+        assert_eq!((r.first_version, r.last_version), (1, 2));
+        conforms(&s);
+        // 0-3 closes a cycle; it is lighter than the 2-3 path max.
+        let r = s.apply_batch(&[EdgeOp::Insert { u: 0, v: 3, w: 0.2 }]).unwrap();
+        assert_eq!(r.swaps, 1);
+        assert_eq!(r.edges_added, vec![(0, 3)]);
+        assert_eq!(r.edges_removed, vec![(2, 3)]);
+        assert!(s.counters().delta_path_steps > 0);
+        conforms(&s);
+    }
+
+    #[test]
+    fn nontree_delete_is_forest_noop() {
+        let mut s = state(&tri());
+        let r = s.apply_batch(&[EdgeOp::Delete { u: 0, v: 2 }]).unwrap();
+        assert!(r.forest_unchanged());
+        assert_eq!(r.nontree_deletes, 1);
+        assert_eq!(s.counters().delta_local_repairs, 0);
+        conforms(&s);
+    }
+
+    #[test]
+    fn tree_delete_triggers_localized_repair() {
+        let mut s = state(&tri());
+        let r = s.apply_batch(&[EdgeOp::Delete { u: 1, v: 2 }]).unwrap();
+        assert_eq!(r.local_repairs, 1);
+        assert_eq!(r.edges_removed, vec![(1, 2)]);
+        assert_eq!(r.edges_added, vec![(0, 2)], "0-2 is the only reconnecting edge");
+        assert!(s.counters().delta_local_repairs == 1);
+        assert!(s.counters().delta_repair_msgs > 0, "the sub-run sent GHS messages");
+        conforms(&s);
+    }
+
+    #[test]
+    fn reweight_semantics() {
+        let mut s = state(&tri());
+        // Tree edge down / non-tree edge up: no-ops.
+        let r = s
+            .apply_batch(&[
+                EdgeOp::Reweight { u: 0, v: 1, w: 0.05 },
+                EdgeOp::Reweight { u: 0, v: 2, w: 0.95 },
+            ])
+            .unwrap();
+        assert!(r.forest_unchanged());
+        assert_eq!(r.noops, 2);
+        conforms(&s);
+        // Tree edge above the cycle max: exactly one swap via repair.
+        let r = s.apply_batch(&[EdgeOp::Reweight { u: 1, v: 2, w: 0.99 }]).unwrap();
+        assert_eq!(r.local_repairs, 1);
+        assert_eq!(r.edges_added, vec![(0, 2)]);
+        assert_eq!(r.edges_removed, vec![(1, 2)]);
+        conforms(&s);
+        // Non-tree edge dropping below the path max: cycle-check swap.
+        let r = s.apply_batch(&[EdgeOp::Reweight { u: 1, v: 2, w: 0.01 }]).unwrap();
+        assert_eq!(r.swaps, 1);
+        conforms(&s);
+    }
+
+    #[test]
+    fn invalid_ops_fail() {
+        let mut s = state(&tri());
+        assert!(s.apply_batch(&[EdgeOp::Insert { u: 0, v: 1, w: 0.5 }]).is_err(), "dup insert");
+        assert!(s.apply_batch(&[EdgeOp::Delete { u: 0, v: 3 }]).is_err(), "n_vertices is 3");
+        assert!(s.apply_batch(&[EdgeOp::Reweight { u: 1, v: 1, w: 0.5 }]).is_err(), "self loop");
+    }
+
+    #[test]
+    fn randomized_streams_conform_per_batch() {
+        let (g, _) = preprocess(&generate_with_factor(GraphFamily::Rmat, 6, 3, 7));
+        let mut s = state(&g);
+        let mut gen = OpStreamGen::new(&g, 0xD15C0, (5, 3, 2));
+        for _ in 0..12 {
+            let ops = gen.take_ops(10);
+            s.apply_batch(&ops).unwrap();
+            conforms(&s);
+        }
+        assert!(s.counters().delta_ops == 120);
+    }
+
+    #[test]
+    fn delta_apply_events_are_traced() {
+        let cfg = GhsConfig { n_ranks: 2, trace: Some(64), ..GhsConfig::default() };
+        let mut s = MstState::bootstrap(&tri(), EngineKind::Sequential, cfg).unwrap();
+        s.apply_batch(&[EdgeOp::Delete { u: 1, v: 2 }, EdgeOp::Insert { u: 1, v: 2, w: 0.01 }])
+            .unwrap();
+        let data = s.trace_data().unwrap();
+        let kinds: Vec<EventKind> = data.ranks[0].events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::DeltaApply,
+                EventKind::LocalRepair,
+                EventKind::DeltaApply,
+            ]
+        );
+        assert!(data.ranks[0].fingerprint != 0);
+    }
+}

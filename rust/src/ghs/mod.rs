@@ -24,11 +24,14 @@
 //!   (the async engine's per-task inbox)
 //! * [`fault`] — seeded deterministic fault injector (chaos layer)
 //! * [`reliable`] — seq/ack/retransmit reliable-delivery protocol
+//! * [`dynamic`] — incremental serving engine: versioned edge-delta log,
+//!   cycle-check fast paths, localized GHS repair
 //! * [`config`] — the paper's §3.6 tuning parameters + ablation switches
 
 pub mod bufpool;
 pub mod config;
 pub mod deque;
+pub mod dynamic;
 pub mod edge_lookup;
 pub mod engine;
 pub mod fault;

@@ -266,7 +266,7 @@ impl RankState {
             trace_stash: 0,
             chaos: config.faults.as_ref().map(|fc| {
                 Box::new(Chaos {
-                    rel: Reliable::new(rank),
+                    rel: Reliable::with_epoch(rank, config.run_epoch),
                     inj: fc.any_link_fault().then(|| Injector::new(fc.clone(), rank)),
                 })
             }),

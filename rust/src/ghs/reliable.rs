@@ -67,6 +67,22 @@ pub struct Header {
 /// flipped byte anywhere in that span always changes the value (each step
 /// is `(h ^ b) * PRIME` with an odd prime — injective per byte).
 pub fn checksum(seq: u32, ack: u32, src: u16, n_msgs: u16, payload: &[u8]) -> u32 {
+    checksum_epoch(0, seq, ack, src, n_msgs, payload)
+}
+
+/// [`checksum`] bound to a run epoch. A nonzero epoch is folded in after
+/// `n_msgs`, so frames from different epochs (a localized dynamic-engine
+/// repair vs. an earlier run's stale window) can never validate against
+/// each other; epoch `0` skips the fold entirely, keeping static-run frame
+/// bytes identical to the pre-epoch wire format.
+pub fn checksum_epoch(
+    epoch: u64,
+    seq: u32,
+    ack: u32,
+    src: u16,
+    n_msgs: u16,
+    payload: &[u8],
+) -> u32 {
     let mut h = FNV_OFFSET;
     let mut eat = |b: u8| h = (h ^ b as u32).wrapping_mul(FNV_PRIME);
     for b in seq.to_le_bytes() {
@@ -81,15 +97,25 @@ pub fn checksum(seq: u32, ack: u32, src: u16, n_msgs: u16, payload: &[u8]) -> u3
     for b in n_msgs.to_le_bytes() {
         eat(b);
     }
+    if epoch != 0 {
+        for b in epoch.to_le_bytes() {
+            eat(b);
+        }
+    }
     for &b in payload {
         eat(b);
     }
     h
 }
 
-/// Fill the reserved 16-byte header at the front of `buf`.
+/// Fill the reserved 16-byte header at the front of `buf` (epoch 0).
 pub fn write_header(buf: &mut [u8], seq: u32, ack: u32, src: u16, n_msgs: u16) {
-    let sum = checksum(seq, ack, src, n_msgs, &buf[HEADER_LEN..]);
+    write_header_epoch(buf, 0, seq, ack, src, n_msgs);
+}
+
+/// [`write_header`] bound to a run epoch (see [`checksum_epoch`]).
+pub fn write_header_epoch(buf: &mut [u8], epoch: u64, seq: u32, ack: u32, src: u16, n_msgs: u16) {
+    let sum = checksum_epoch(epoch, seq, ack, src, n_msgs, &buf[HEADER_LEN..]);
     buf[0..4].copy_from_slice(&seq.to_le_bytes());
     buf[4..8].copy_from_slice(&ack.to_le_bytes());
     buf[8..12].copy_from_slice(&sum.to_le_bytes());
@@ -165,12 +191,21 @@ pub struct Watchdog {
 /// Per-rank reliability state: one [`Flow`] per peer, created lazily.
 pub struct Reliable {
     rank: u32,
+    /// Run epoch folded into every frame checksum (0 = legacy wire bytes).
+    /// Peers in different epochs reject each other's frames as corrupt, so
+    /// a localized re-run's seq-0 frames never hit stale windows.
+    epoch: u64,
     flows: HashMap<u32, Flow>,
 }
 
 impl Reliable {
     pub fn new(rank: u32) -> Self {
-        Self { rank, flows: HashMap::new() }
+        Self::with_epoch(rank, 0)
+    }
+
+    /// Reliability state bound to a run epoch (`GhsConfig::run_epoch`).
+    pub fn with_epoch(rank: u32, epoch: u64) -> Self {
+        Self { rank, epoch, flows: HashMap::new() }
     }
 
     fn flow(&mut self, peer: u32) -> &mut Flow {
@@ -183,12 +218,13 @@ impl Reliable {
     /// checksums, and clones the framed bytes into the retransmit window.
     pub fn frame(&mut self, dst: u32, buf: &mut [u8], n_msgs: u32, now: u64) {
         let rank = self.rank;
+        let epoch = self.epoch;
         let f = self.flow(dst);
         let seq = f.next_seq;
         debug_assert!(seq != SEQ_ACK_ONLY, "seq space exhausted");
         f.next_seq += 1;
         let ack = f.expect;
-        write_header(buf, seq, ack, rank as u16, n_msgs as u16);
+        write_header_epoch(buf, epoch, seq, ack, rank as u16, n_msgs as u16);
         f.owed_ack = false; // the piggybacked ack settles the debt
         f.window.push_back(SentFrame {
             seq,
@@ -212,7 +248,8 @@ impl Reliable {
             // in-repo injector, which never truncates.)
             None => return RecvVerdict::Corrupt,
         };
-        if h.checksum != checksum(h.seq, h.ack, h.src, h.n_msgs, &buf[HEADER_LEN..]) {
+        let sum = checksum_epoch(self.epoch, h.seq, h.ack, h.src, h.n_msgs, &buf[HEADER_LEN..]);
+        if h.checksum != sum {
             return RecvVerdict::Corrupt;
         }
         let src = h.src as u32;
@@ -261,6 +298,7 @@ impl Reliable {
         acks: &mut Vec<(u32, Vec<u8>, u32)>,
     ) -> Result<(), Watchdog> {
         let rank = self.rank;
+        let epoch = self.epoch;
         // Deterministic scan order (HashMap iteration is not).
         let mut peers: Vec<u32> = self.flows.keys().copied().collect();
         peers.sort_unstable();
@@ -283,13 +321,14 @@ impl Reliable {
                 s.sent_at = now;
                 s.rto = (s.rto * 2).min(RTO_MAX);
                 // Refresh the piggybacked ack and checksum in place.
-                write_header(&mut s.bytes, s.seq, ack_now, rank as u16, s.n_msgs as u16);
+                let nm = s.n_msgs as u16;
+                write_header_epoch(&mut s.bytes, epoch, s.seq, ack_now, rank as u16, nm);
                 retrans.push((peer, s.bytes.clone(), s.n_msgs));
             }
             if f.owed_ack && now.saturating_sub(f.owed_since) >= ACK_IDLE {
                 f.owed_ack = false;
                 let mut buf = vec![0u8; HEADER_LEN];
-                write_header(&mut buf, SEQ_ACK_ONLY, ack_now, rank as u16, 0);
+                write_header_epoch(&mut buf, epoch, SEQ_ACK_ONLY, ack_now, rank as u16, 0);
                 acks.push((peer, buf, 0));
             }
         }
@@ -447,6 +486,45 @@ mod tests {
         assert_eq!(a.accept(bytes, 20), RecvVerdict::AckOnly);
         assert_eq!(a.window_msgs(), 0);
         assert!(!a.has_work(), "acked sender is quiescent");
+    }
+
+    #[test]
+    fn cross_epoch_frames_fail_the_checksum() {
+        // A repair re-run (epoch 1) must not validate against a peer still
+        // holding epoch-0 state, and vice versa — in both directions the
+        // frame lands as Corrupt and the sender's retransmit (in the right
+        // epoch) recovers.
+        let mut old = Reliable::new(0); // epoch 0
+        let mut repair = Reliable::with_epoch(0, 1);
+        let mut peer0 = Reliable::new(1);
+        let mut peer1 = Reliable::with_epoch(1, 1);
+        let mut peer2 = Reliable::with_epoch(1, 2);
+        let mut f = framed(&[5; 4]);
+        repair.frame(1, &mut f, 1, 0);
+        assert_eq!(peer0.accept(&f, 0), RecvVerdict::Corrupt, "epoch 1 -> 0 rejected");
+        assert_eq!(peer2.accept(&f, 0), RecvVerdict::Corrupt, "epoch 1 -> 2 rejected");
+        assert_eq!(peer1.accept(&f, 0), RecvVerdict::Deliver, "matching epoch delivers");
+        let mut g = framed(&[6; 4]);
+        old.frame(1, &mut g, 1, 0);
+        assert_eq!(peer1.accept(&g, 0), RecvVerdict::Corrupt, "epoch 0 -> 1 rejected");
+        assert_eq!(peer0.accept(&g, 0), RecvVerdict::Deliver);
+    }
+
+    #[test]
+    fn epoch_zero_wire_bytes_are_unchanged() {
+        // checksum() / write_header() must stay byte-identical to the
+        // pre-epoch format so every pinned static baseline survives.
+        let payload = b"legacy frame";
+        assert_eq!(checksum(7, 3, 12, 2, payload), checksum_epoch(0, 7, 3, 12, 2, payload));
+        let mut a = framed(payload);
+        let mut b = framed(payload);
+        write_header(&mut a, 7, 3, 12, 2);
+        write_header_epoch(&mut b, 0, 7, 3, 12, 2);
+        assert_eq!(a, b);
+        assert_ne!(
+            checksum_epoch(1, 7, 3, 12, 2, payload),
+            checksum_epoch(0, 7, 3, 12, 2, payload)
+        );
     }
 
     #[test]

@@ -98,6 +98,27 @@ pub struct ProfileCounters {
     pub fault_injected: u64,
     /// Reliability timer passes (one per `flush_all` on chaos runs).
     pub timeout_checks: u64,
+    /// Serving engine: edge-delta ops applied through
+    /// [`crate::ghs::dynamic::MstState::apply_batch`] (all six serving
+    /// counters below are provably zero on static runs — no `serve`, no
+    /// counter twitch, asserted by `rust/tests/dynamic_props.rs`).
+    pub delta_ops: u64,
+    /// Serving engine: inserts accepted on the O(α) different-component
+    /// fast path (union-find check, no tree walk).
+    pub delta_fast_inserts: u64,
+    /// Serving engine: cycle-check swaps (a new/lightened edge displaced
+    /// the max edge on its tree path).
+    pub delta_swaps: u64,
+    /// Serving engine: localized GHS re-runs triggered by tree-edge
+    /// deletes/reweights.
+    pub delta_local_repairs: u64,
+    /// Serving engine: tree-path walk steps (adjacency entries examined
+    /// during bounded BFS path walks).
+    pub delta_path_steps: u64,
+    /// Serving engine: GHS messages sent inside localized repair re-runs
+    /// (informational tally; the messages themselves are priced through
+    /// the merged engine counters, not double-charged here).
+    pub delta_repair_msgs: u64,
 }
 
 impl ProfileCounters {
@@ -155,6 +176,23 @@ impl ProfileCounters {
         self.reorder_buffered += o.reorder_buffered;
         self.fault_injected += o.fault_injected;
         self.timeout_checks += o.timeout_checks;
+        self.delta_ops += o.delta_ops;
+        self.delta_fast_inserts += o.delta_fast_inserts;
+        self.delta_swaps += o.delta_swaps;
+        self.delta_local_repairs += o.delta_local_repairs;
+        self.delta_path_steps += o.delta_path_steps;
+        self.delta_repair_msgs += o.delta_repair_msgs;
+    }
+
+    /// All six serving-engine counters are zero — true for every static
+    /// (non-`serve`) run, pinned by the perf baselines.
+    pub fn serving_counters_zero(&self) -> bool {
+        self.delta_ops == 0
+            && self.delta_fast_inserts == 0
+            && self.delta_swaps == 0
+            && self.delta_local_repairs == 0
+            && self.delta_path_steps == 0
+            && self.delta_repair_msgs == 0
     }
 
     /// The park/wake counter discipline each engine must honour (used by
@@ -279,6 +317,12 @@ mod tests {
             reorder_buffered: 16,
             fault_injected: 17,
             timeout_checks: 18,
+            delta_ops: 19,
+            delta_fast_inserts: 20,
+            delta_swaps: 21,
+            delta_local_repairs: 22,
+            delta_path_steps: 23,
+            delta_repair_msgs: 24,
             ..Default::default()
         };
         a.merge(&b);
@@ -303,6 +347,14 @@ mod tests {
         assert_eq!(a.reorder_buffered, 16);
         assert_eq!(a.fault_injected, 17);
         assert_eq!(a.timeout_checks, 18);
+        assert_eq!(a.delta_ops, 19);
+        assert_eq!(a.delta_fast_inserts, 20);
+        assert_eq!(a.delta_swaps, 21);
+        assert_eq!(a.delta_local_repairs, 22);
+        assert_eq!(a.delta_path_steps, 23);
+        assert_eq!(a.delta_repair_msgs, 24);
+        assert!(!a.serving_counters_zero());
+        assert!(ProfileCounters::default().serving_counters_zero());
         assert_eq!(a.ready_max, 3, "high-water mark merges by max");
         a.merge(&ProfileCounters { ready_max: 2, ..Default::default() });
         assert_eq!(a.ready_max, 3, "smaller high-water marks do not lower the max");

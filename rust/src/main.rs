@@ -46,6 +46,15 @@ COMMANDS
                   --depth N (ring depth)  --out FILE  --format chrome|jsonl
                   --expect HEX (exit nonzero unless the combined per-rank
                   fingerprint matches — the CI trace-conformance gate)
+  serve         Incremental MST serving: bootstrap the forest, then apply a
+                  seeded randomized edge-delta stream in batches
+                  --family --scale --input FILE  --ranks N  --engine E
+                  --workers N  --ops N [default 1000]  --batch N [default 100]
+                  --seed N [default 1]  --mix I:D:R op-class weights [5:3:2]
+                  --verify (forest == Kruskal after every batch)
+                  --trace[=depth]  --trace-out FILE (serving Chrome trace)
+                  --faults SPEC (chaos layer under repairs)
+                  --ops-out FILE (versioned op log, JSONL)
   generate      Generate a graph to a file: --family --scale --out FILE [--binary]
   partition     Print partition quality metrics (vertex/edge balance, edge
                   cut) per strategy: --family --scale --ranks [--top-k N]
@@ -63,6 +72,7 @@ COMMANDS
   fig5          Paper Fig 5 (weak scaling on 32 nodes)
   perf-baseline Deterministic counter snapshot (bytes/probes/postponement
                   orderings pinned by tests/perf_regression.rs)
+  dynamic-baseline  Serving-cost counters per 1k-op stream (RMAT-10, 16 ranks)
   sweep-search  Paper §4.1 (linear vs binary vs hash lookup)
   ablation-test-queue  Paper §3.4 (Test-queue relaxation on/off, RMAT+SSCA2)
   experiments   Run ALL of the above and write results/
@@ -94,6 +104,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     match args.command.as_str() {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "trace" => cmd_trace(&args),
         "generate" => cmd_generate(&args),
         "partition" => cmd_partition(&args),
@@ -101,7 +112,7 @@ fn main() -> Result<()> {
         "accel" => cmd_accel(&args),
         "baseline" => cmd_baseline(&args),
         "table2" | "fig2" | "fig3" | "fig4" | "fig5" | "perf-baseline" | "sweep-search"
-        | "ablation-test-queue" | "experiments" => cmd_experiments(&args),
+        | "ablation-test-queue" | "dynamic-baseline" | "experiments" => cmd_experiments(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -323,6 +334,153 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("wall time       : {}", fmt_seconds(wall.as_secs_f64()));
     if args.get_bool("verify") {
         println!("verified        : forest == Kruskal oracle ✓");
+    }
+    Ok(())
+}
+
+/// Parse a `--mix I:D:R` op-class weight triple (insert:delete:reweight).
+fn parse_mix(s: &str) -> Result<(u64, u64, u64)> {
+    let parts: Vec<u64> = s.split(':').map(|p| p.parse().unwrap_or(u64::MAX)).collect();
+    match parts.as_slice() {
+        [i, d, r] if *i != u64::MAX && *d != u64::MAX && *r != u64::MAX && i + d + r > 0 => {
+            Ok((*i, *d, *r))
+        }
+        _ => bail!("bad --mix {s} (expected I:D:R, e.g. 5:3:2)"),
+    }
+}
+
+/// The serving driver: bootstrap an [`MstState`], draw a deterministic
+/// op stream, apply it in batches, and report the delta counters. With
+/// `--verify`, every batch is differentially checked against a Kruskal
+/// recompute of the mutated graph — the CI dynamic-conformance smoke.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use ghs_mst::ghs::dynamic::{MstState, OpStreamGen};
+    args.expect_flags(&[
+        "family", "scale", "input", "ranks", "engine", "workers", "ops", "batch", "seed",
+        "mix", "verify", "trace", "trace-out", "faults", "ops-out", "quiet",
+    ])?;
+    let (label, clean) = load_or_generate(args)?;
+    let ranks = args.get_num("ranks", 8u32)?;
+    let engine = parse_engine_flag(args)?;
+    let n_ops = args.get_num("ops", 1000usize)?;
+    let batch = args.get_num("batch", 100usize)?.max(1);
+    let seed = args.get_num("seed", 1u64)?;
+    let mix = parse_mix(&args.get("mix", "5:3:2"))?;
+    let verify = args.get_bool("verify");
+    let quiet = args.get_bool("quiet");
+    let mut cfg = GhsConfig::final_version(ranks);
+    cfg.workers = args.get_num("workers", 0u32)?;
+    cfg.trace = parse_trace_flag(args)?;
+    if let Some(spec) = args.get_opt("faults") {
+        cfg.faults = Some(ghs_mst::ghs::fault::FaultConfig::parse(spec)?);
+    }
+    let t0 = std::time::Instant::now();
+    let mut state = MstState::bootstrap(&clean, engine, cfg)?;
+    println!(
+        "bootstrap       : {label} ({} vertices, {} edges), {} engine, {} ranks, \
+         {} GHS messages",
+        clean.n_vertices,
+        clean.n_edges(),
+        engine.label(),
+        ranks,
+        state.bootstrap_msgs()
+    );
+    let mut gen = OpStreamGen::new(&clean, seed, mix);
+    let mut applied = 0usize;
+    while applied < n_ops {
+        let take = batch.min(n_ops - applied);
+        let ops = gen.take_ops(take);
+        let r = state.apply_batch(&ops)?;
+        applied += take;
+        if verify {
+            let oracle = kruskal::kruskal(&state.current_graph());
+            if state.forest().canonical_edges() != oracle.canonical_edges() {
+                bail!(
+                    "dynamic forest diverged from Kruskal after version {} (seed {seed})",
+                    r.last_version
+                );
+            }
+        }
+        if !quiet {
+            println!(
+                "batch v{:>6}-{:<6}: +{} -{} forest edges, {} fast, {} swaps, \
+                 {} repairs, {} nontree-del, {} noops, {} components touched",
+                r.first_version,
+                r.last_version,
+                r.edges_added.len(),
+                r.edges_removed.len(),
+                r.fast_inserts,
+                r.swaps,
+                r.local_repairs,
+                r.nontree_deletes,
+                r.noops,
+                r.affected_components
+            );
+        }
+    }
+    let f = state.forest();
+    let c = state.counters();
+    println!(
+        "forest          : {} edges, {} components, weight {:.6}",
+        f.edges.len(),
+        f.n_components,
+        f.total_weight()
+    );
+    println!(
+        "serving         : {} ops ({} fast inserts, {} swaps, {} local repairs), \
+         {} path steps, {} repair messages",
+        c.delta_ops,
+        c.delta_fast_inserts,
+        c.delta_swaps,
+        c.delta_local_repairs,
+        c.delta_path_steps,
+        c.delta_repair_msgs
+    );
+    let costs = ghs_mst::sim::costmodel::OpCosts::default();
+    let breakdown = ghs_mst::sim::profile::Breakdown::of(c, &costs);
+    let serving_s = breakdown
+        .seconds
+        .iter()
+        .find(|(cat, _)| *cat == ghs_mst::sim::profile::Category::Serving)
+        .map(|&(_, s)| s)
+        .unwrap_or(0.0);
+    println!("modeled serving : {}", fmt_seconds(serving_s));
+    println!("wall time       : {}", fmt_seconds(t0.elapsed().as_secs_f64()));
+    if let Some(out) = args.get_opt("ops-out") {
+        let mut body = String::new();
+        for vo in state.log() {
+            use ghs_mst::ghs::dynamic::EdgeOp;
+            let (u, v) = vo.op.endpoints();
+            body.push_str(&match vo.op {
+                EdgeOp::Insert { w, .. } | EdgeOp::Reweight { w, .. } => format!(
+                    "{{\"version\":{},\"op\":\"{}\",\"u\":{u},\"v\":{v},\"w\":{w:.17}}}\n",
+                    vo.version,
+                    vo.op.label()
+                ),
+                EdgeOp::Delete { .. } => format!(
+                    "{{\"version\":{},\"op\":\"delete\",\"u\":{u},\"v\":{v}}}\n",
+                    vo.version
+                ),
+            });
+        }
+        std::fs::write(out, &body)?;
+        println!("op log          : wrote {} ops to {out}", state.log().len());
+    }
+    if let Some(out) = args.get_opt("trace-out") {
+        let data = state
+            .trace_data()
+            .ok_or_else(|| anyhow::anyhow!("--trace-out needs --trace[=depth]"))?;
+        let body = ghs_mst::obs::chrome::chrome_trace_json(&data);
+        std::fs::write(out, &body)?;
+        println!(
+            "serving trace   : {} events (fp {:#018x}), wrote {} bytes to {out}",
+            data.total_recorded(),
+            data.combined_fingerprint(),
+            body.len()
+        );
+    }
+    if verify {
+        println!("verified        : forest == Kruskal oracle after every batch ✓");
     }
     Ok(())
 }
@@ -682,6 +840,9 @@ fn cmd_experiments(args: &Args) -> Result<()> {
             "ablation-test-queue" => {
                 print_and_write(experiments::ablation_test_queue(&opts)?, "ablation_test_queue")
             }
+            "dynamic-baseline" => {
+                print_and_write(experiments::dynamic_baseline(&opts)?, "dynamic_baseline_rust")
+            }
             _ => unreachable!(),
         }
     };
@@ -694,6 +855,7 @@ fn cmd_experiments(args: &Args) -> Result<()> {
             "fig5",
             "perf-baseline",
             "ablation-test-queue",
+            "dynamic-baseline",
             "table2",
         ] {
             run_one(which)?;

@@ -107,6 +107,14 @@ pub enum EventKind {
     /// Receive side buffered an out-of-order frame: `a` = source rank,
     /// `b` = frame sequence number.
     ReorderHold = 21,
+    /// Dynamic engine applied one edge op: `a` = op tag (0 insert,
+    /// 1 delete, 2 reweight), `b` = version stamp, `c` = outcome tag
+    /// (0 no-op, 1 fast insert, 2 swap, 3 localized repair).
+    DeltaApply = 22,
+    /// Dynamic engine ran a localized GHS repair: `a` = affected component
+    /// size (vertices), `b` = sub-run messages, `c` = resulting component
+    /// count over the affected vertex set.
+    LocalRepair = 23,
 }
 
 impl EventKind {
@@ -135,6 +143,8 @@ impl EventKind {
             EventKind::DupDrop => "dup_drop",
             EventKind::CorruptDrop => "corrupt_drop",
             EventKind::ReorderHold => "reorder_hold",
+            EventKind::DeltaApply => "delta_apply",
+            EventKind::LocalRepair => "local_repair",
         }
     }
 }

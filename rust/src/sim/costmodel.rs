@@ -70,6 +70,22 @@ pub struct OpCosts {
     pub ack_tx: f64,
     /// One retransmit-timer sweep over the send window (per flush cycle).
     pub timeout_check: f64,
+    /// One edge-delta op applied by the serving engine: log append,
+    /// version stamp, edge-map update and the O(α) union-find check. Zero
+    /// on static runs (the counter never moves).
+    pub delta_op: f64,
+    /// One tree-path walk step (adjacency entry examined during the
+    /// cycle-check BFS — a pointer chase through the forest adjacency).
+    pub delta_path_step: f64,
+    /// One cycle-check swap: unlinking the displaced tree edge and
+    /// linking the new one (two adjacency edits each, plus the forest
+    /// set updates).
+    pub delta_swap: f64,
+    /// Fixed launch overhead of one localized GHS repair: component BFS
+    /// bookkeeping, induced-subgraph extraction and engine setup. The
+    /// repair's own message work is priced through the merged engine
+    /// counters, not here.
+    pub delta_repair_launch: f64,
 }
 
 impl Default for OpCosts {
@@ -91,6 +107,10 @@ impl Default for OpCosts {
             retransmit: 500e-9,
             ack_tx: 120e-9,
             timeout_check: 30e-9,
+            delta_op: 80e-9,
+            delta_path_step: 20e-9,
+            delta_swap: 150e-9,
+            delta_repair_launch: 2e-6,
         }
     }
 }
@@ -139,6 +159,15 @@ impl OpCosts {
             + d(now.retransmits, prev.retransmits) * self.retransmit
             + d(now.acks_sent, prev.acks_sent) * self.ack_tx
             + d(now.timeout_checks, prev.timeout_checks) * self.timeout_check
+            // Serving-engine work (dynamic runs). All four counters stay
+            // zero on static runs, so static pricing is byte-identical to
+            // before the Serving category existed. `delta_repair_msgs` is
+            // deliberately absent: repair messages are priced through the
+            // merged engine counters above (no double charge).
+            + d(now.delta_ops, prev.delta_ops) * self.delta_op
+            + d(now.delta_path_steps, prev.delta_path_steps) * self.delta_path_step
+            + d(now.delta_swaps, prev.delta_swaps) * self.delta_swap
+            + d(now.delta_local_repairs, prev.delta_local_repairs) * self.delta_repair_launch
     }
 
     /// Price aggregate counters (from zero) — used for the Fig 3 breakdown.
@@ -251,6 +280,32 @@ mod tests {
             + 21.0 * costs.ack_tx
             + 900.0 * costs.timeout_check;
         assert!((priced - expect).abs() < 1e-15, "recovery churn priced linearly");
+    }
+
+    #[test]
+    fn serving_counters_are_priced_and_zero_when_off() {
+        // Dynamic-engine pricing: delta ops, path walks, swaps and repair
+        // launches must show up in modeled time, and static runs (all four
+        // counters zero) must price exactly as before Serving existed.
+        let costs = OpCosts::default();
+        let zero = ProfileCounters::default();
+        let mut quiet = zero;
+        quiet.msgs_processed_main = 1000;
+        let base = costs.step_time(&zero, &quiet);
+        assert!((base - 1000.0 * costs.process_msg).abs() < 1e-15, "no phantom serving cost");
+        let mut serving = quiet;
+        serving.delta_ops = 100;
+        serving.delta_path_steps = 2_000;
+        serving.delta_swaps = 9;
+        serving.delta_local_repairs = 3;
+        serving.delta_repair_msgs = 5_000; // tally only — never priced
+        let priced = costs.step_time(&zero, &serving);
+        let expect = base
+            + 100.0 * costs.delta_op
+            + 2_000.0 * costs.delta_path_step
+            + 9.0 * costs.delta_swap
+            + 3.0 * costs.delta_repair_launch;
+        assert!((priced - expect).abs() < 1e-15, "serving churn priced linearly");
     }
 
     #[test]

@@ -22,11 +22,15 @@ pub enum Category {
     /// retransmit-timer sweeps). Zero whenever `GhsConfig::faults` is
     /// `None`, so fault-free paper-figure breakdowns are unchanged.
     Recovery,
+    /// Dynamic-engine serving work (delta ops, tree-path walks, swaps,
+    /// localized-repair launches). Zero on static runs, so the paper-figure
+    /// breakdowns are unchanged when serving is off.
+    Serving,
 }
 
 impl Category {
     /// All categories in display order.
-    pub const ALL: [Category; 8] = [
+    pub const ALL: [Category; 9] = [
         Category::ReadMsgs,
         Category::ProcessQueue,
         Category::ProcessTestQueue,
@@ -35,6 +39,7 @@ impl Category {
         Category::LoopOther,
         Category::Scheduler,
         Category::Recovery,
+        Category::Serving,
     ];
 
     /// Display label.
@@ -48,6 +53,7 @@ impl Category {
             Category::LoopOther => "loop_other",
             Category::Scheduler => "scheduler",
             Category::Recovery => "recovery",
+            Category::Serving => "serving",
         }
     }
 }
@@ -97,6 +103,13 @@ impl Breakdown {
                 c.retransmits as f64 * costs.retransmit
                     + c.acks_sent as f64 * costs.ack_tx
                     + c.timeout_checks as f64 * costs.timeout_check,
+            ),
+            (
+                Category::Serving,
+                c.delta_ops as f64 * costs.delta_op
+                    + c.delta_path_steps as f64 * costs.delta_path_step
+                    + c.delta_swaps as f64 * costs.delta_swap
+                    + c.delta_local_repairs as f64 * costs.delta_repair_launch,
             ),
         ];
         Self { seconds }
@@ -183,6 +196,26 @@ mod tests {
         let expect = 6.0 * costs.retransmit + 18.0 * costs.ack_tx + 400.0 * costs.timeout_check;
         assert!((rec - expect).abs() < 1e-15);
         assert!((b.total() - expect).abs() < 1e-15, "only the recovery path did work");
+    }
+
+    #[test]
+    fn serving_category_prices_dynamic_churn() {
+        let mut c = ProfileCounters::default();
+        c.delta_ops = 1_000;
+        c.delta_path_steps = 40_000;
+        c.delta_swaps = 120;
+        c.delta_local_repairs = 7;
+        c.delta_repair_msgs = 9_999; // informational only — never priced here
+        let costs = OpCosts::default();
+        let b = Breakdown::of(&c, &costs);
+        let srv =
+            b.seconds.iter().find(|(cat, _)| *cat == Category::Serving).map(|(_, s)| *s).unwrap();
+        let expect = 1_000.0 * costs.delta_op
+            + 40_000.0 * costs.delta_path_step
+            + 120.0 * costs.delta_swap
+            + 7.0 * costs.delta_repair_launch;
+        assert!((srv - expect).abs() < 1e-15);
+        assert!((b.total() - expect).abs() < 1e-15, "only the serving path did work");
     }
 
     #[test]

@@ -215,6 +215,45 @@ fn async_slowdown_cell_conforms() {
     assert_eq!(fs.degraded, 0);
 }
 
+/// Dynamic serving under chaos: a delta batch whose localized repairs
+/// re-enter the engine over a drop=0.05 interconnect must still converge
+/// on the Kruskal forest of the mutated graph. Every repair sub-run bumps
+/// `run_epoch`, so a retransmitted frame from an earlier repair can never
+/// be accepted by a later one (cross-epoch frames fail the checksum) —
+/// without the epoch, each repair would restart at seq 0 against peers
+/// still holding the previous repair's receive state.
+#[test]
+fn dynamic_repairs_recover_under_drop_faults() {
+    use ghs_mst::baseline::kruskal::kruskal;
+    use ghs_mst::ghs::dynamic::{EdgeOp, MstState, OpStreamGen};
+
+    let (_, clean) = graph_case(matrix_scale(), 0xC4A05, 0); // RMAT
+    let fc = FaultConfig::parse("drop=0.05,seed=41").unwrap();
+    let mut state =
+        MstState::bootstrap(&clean, EngineKind::Sequential, chaos_config(MATRIX_RANKS, fc))
+            .expect("bootstrap recovers under drop faults");
+    // Delete three tree edges outright — each forces a localized repair
+    // whose GHS sub-run rides the lossy interconnect.
+    let doomed: Vec<(u32, u32)> =
+        state.forest().edges.iter().take(3).map(|e| e.canonical()).collect();
+    let dels: Vec<EdgeOp> = doomed.into_iter().map(|(u, v)| EdgeOp::Delete { u, v }).collect();
+    let r = state.apply_batch(&dels).expect("repairs recover under drop faults");
+    assert_eq!(r.local_repairs, 3, "every tree-edge delete launches a repair");
+    // Then a mixed batch on top of the repaired state.
+    let mut gen = OpStreamGen::new(&state.current_graph(), 41, (5, 3, 2));
+    let ops = gen.take_ops(60);
+    state.apply_batch(&ops).expect("mixed batch recovers under drop faults");
+    let c = state.counters();
+    assert!(c.delta_local_repairs >= 3, "repair counter kept counting: {c:?}");
+    assert!(c.fault_injected > 0, "the lossy interconnect actually dropped frames");
+    assert!(c.retransmits > 0, "recovery work happened");
+    assert_eq!(
+        state.forest().canonical_edges(),
+        kruskal(&state.current_graph()).canonical_edges(),
+        "dynamic forest under chaos conforms to Kruskal"
+    );
+}
+
 /// Unrecoverable peer: a rank stalled by the scheduler past the retransmit
 /// watchdog budget must degrade into the structured failure report — the
 /// run errors out (no hang, no wrong forest) naming both ends of the dead

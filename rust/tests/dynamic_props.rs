@@ -1,0 +1,232 @@
+//! Property suite for the incremental serving engine (`ghs::dynamic`).
+//!
+//! The differential gate here is the same one the CI `dynamic-conformance`
+//! lane enforces end to end: after **every** batch of a versioned op
+//! stream, the maintained forest must equal `kruskal(current graph)` —
+//! canonical edges and component counts. Around that sit the local
+//! semantics properties (fast-path inserts, non-tree delete no-ops,
+//! one-for-one reweight swaps), replay determinism of interleaved
+//! streams, degenerate graphs, and the static-baseline guard (a plain
+//! engine run prices zero serving work).
+//!
+//! Scale is `GHS_SCALE`-overridable like the conformance matrix; the
+//! nightly soak lane reruns the randomized matrix bigger and longer.
+
+mod common;
+
+use common::{graph_case, EngineKind};
+use ghs_mst::baseline::kruskal::kruskal;
+use ghs_mst::ghs::config::GhsConfig;
+use ghs_mst::ghs::dynamic::{EdgeOp, MstState, OpStreamGen};
+use ghs_mst::ghs::engine::run_kind;
+use ghs_mst::graph::EdgeList;
+
+/// Matrix scale (2^5 vertices by default — the matrix is 108 cells).
+fn matrix_scale() -> u32 {
+    std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(5)
+}
+
+fn cfg(ranks: u32) -> GhsConfig {
+    GhsConfig::final_version(ranks)
+}
+
+/// The differential assertion: maintained forest == Kruskal of the
+/// current graph, both canonical edges and component count.
+fn conforms(tag: &str, state: &MstState) {
+    let forest = state.forest();
+    let oracle = kruskal(&state.current_graph());
+    assert_eq!(forest.canonical_edges(), oracle.canonical_edges(), "{tag}: forest edges");
+    assert_eq!(forest.n_components, oracle.n_components, "{tag}: component count");
+}
+
+/// Weighted path 0-1-2-3 (.1/.2/.3) closed by a non-tree chord (0,3) at
+/// .5 — small enough to reason about every swap by hand.
+fn diamond() -> EdgeList {
+    let mut g = EdgeList::with_vertices(4);
+    g.push(0, 1, 0.1);
+    g.push(1, 2, 0.2);
+    g.push(2, 3, 0.3);
+    g.push(0, 3, 0.5);
+    g
+}
+
+/// Insert-only streams are incremental Kruskal: starting from an edgeless
+/// vertex set and feeding a real graph's edges as versioned inserts, the
+/// maintained forest equals Kruskal of the prefix after every batch.
+#[test]
+fn insert_only_stream_is_incremental_kruskal() {
+    let (_, full) = graph_case(matrix_scale(), 0xD9A, 0); // RMAT
+    let empty = EdgeList::with_vertices(full.n_vertices);
+    let mut state = MstState::bootstrap(&empty, EngineKind::Sequential, cfg(4)).unwrap();
+    assert_eq!(state.forest().n_components, full.n_vertices);
+    let ops: Vec<EdgeOp> =
+        full.edges.iter().map(|e| EdgeOp::Insert { u: e.u, v: e.v, w: e.w }).collect();
+    for (i, batch) in ops.chunks(16).enumerate() {
+        let r = state.apply_batch(batch).unwrap();
+        assert_eq!(
+            r.fast_inserts + r.swaps + r.noops,
+            batch.len() as u64,
+            "batch {i}: every insert is fast, a swap, or a cycle no-op"
+        );
+        conforms(&format!("insert-only batch {i}"), &state);
+    }
+    assert_eq!(state.n_edges(), full.edges.len());
+    assert_eq!(
+        state.forest().canonical_edges(),
+        kruskal(&full).canonical_edges(),
+        "replaying the whole graph as inserts recovers its MST"
+    );
+}
+
+/// Deleting a non-tree edge is an O(1) forest no-op.
+#[test]
+fn nontree_delete_is_a_forest_noop() {
+    let (_, clean) = graph_case(matrix_scale(), 0xD9A, 1); // SSCA2
+    let mut state = MstState::bootstrap(&clean, EngineKind::Sequential, cfg(4)).unwrap();
+    let before = state.forest();
+    let tree: std::collections::HashSet<(u32, u32)> =
+        before.edges.iter().map(|e| e.canonical()).collect();
+    let (u, v) = clean
+        .edges
+        .iter()
+        .map(|e| e.canonical())
+        .find(|k| !tree.contains(k))
+        .expect("graph has a cycle edge");
+    let r = state.apply_batch(&[EdgeOp::Delete { u, v }]).unwrap();
+    assert!(r.forest_unchanged(), "{r:?}");
+    assert_eq!((r.nontree_deletes, r.noops, r.local_repairs), (1, 1, 0), "{r:?}");
+    assert_eq!(state.forest().canonical_edges(), before.canonical_edges());
+    assert_eq!(state.counters().delta_local_repairs, 0, "no repair launched");
+}
+
+/// Reweighting a tree edge above its cycle alternative swaps exactly one
+/// edge — the localized repair's diff is one-for-one.
+#[test]
+fn reweight_up_forces_exactly_one_swap() {
+    let mut state = MstState::bootstrap(&diamond(), EngineKind::Sequential, cfg(2)).unwrap();
+    assert_eq!(state.forest().canonical_edges(), vec![(0, 1), (1, 2), (2, 3)]);
+    let r = state.apply_batch(&[EdgeOp::Reweight { u: 1, v: 2, w: 0.9 }]).unwrap();
+    assert_eq!(r.local_repairs, 1, "tree reweight-up launches one repair: {r:?}");
+    assert_eq!(r.edges_removed, vec![(1, 2)], "{r:?}");
+    assert_eq!(r.edges_added, vec![(0, 3)], "exactly the chord replaces it: {r:?}");
+    conforms("after reweight-up", &state);
+    // And the dual: reweighting the (now non-tree) edge back *down* below
+    // the cycle max swaps it back in via the O(path) cycle check.
+    let r = state.apply_batch(&[EdgeOp::Reweight { u: 1, v: 2, w: 0.05 }]).unwrap();
+    assert_eq!(r.swaps, 1, "non-tree reweight-down is a cycle-check swap: {r:?}");
+    assert_eq!(r.edges_added, vec![(1, 2)], "{r:?}");
+    assert_eq!(r.edges_removed.len(), 1, "one-for-one: {r:?}");
+    conforms("after reweight-down", &state);
+}
+
+/// Replay determinism: two interleaved op streams applied three times
+/// from scratch give byte-identical `DeltaResult`s, counters, and forest
+/// (the repair sub-runs are sequential-engine deterministic).
+#[test]
+fn interleaved_replay_is_deterministic_across_three_runs() {
+    let (_, clean) = graph_case(matrix_scale(), 0xD9A, 2); // random family
+    let mut baseline: Option<(Vec<String>, String, Vec<(u32, u32)>)> = None;
+    for run in 0..3 {
+        let mut state = MstState::bootstrap(&clean, EngineKind::Sequential, cfg(4)).unwrap();
+        let mut gen_a = OpStreamGen::new(&clean, 7, (5, 3, 2));
+        let mut gen_b = OpStreamGen::new(&clean, 8, (1, 4, 1));
+        let mut results = Vec::new();
+        for _ in 0..3 {
+            // Interleave: a batch from each stream, A then B. The
+            // generators are independent, so B's ops may contradict the
+            // post-A graph — skip (don't fail) replay-stable rejects.
+            results.push(format!("{:?}", state.apply_batch(&gen_a.take_ops(10))));
+            results.push(format!("{:?}", state.apply_batch(&gen_b.take_ops(10))));
+        }
+        let snap = (results, format!("{:?}", state.counters()), state.forest().canonical_edges());
+        match &baseline {
+            None => baseline = Some(snap),
+            Some(b) => assert_eq!(*b, snap, "run {run} diverged from run 0"),
+        }
+    }
+}
+
+/// Degenerate inputs: edgeless bootstrap, empty batches, first insert,
+/// single-edge delete splitting a 2-vertex component.
+#[test]
+fn degenerate_graphs_and_batches() {
+    let empty = EdgeList::with_vertices(5);
+    let mut state = MstState::bootstrap(&empty, EngineKind::Sequential, cfg(2)).unwrap();
+    assert_eq!(state.forest().edges.len(), 0);
+    assert_eq!(state.forest().n_components, 5);
+
+    let r = state.apply_batch(&[]).unwrap();
+    assert!(r.forest_unchanged(), "empty batch: {r:?}");
+    assert_eq!(state.version(), 0, "empty batch mints no versions");
+
+    let r = state.apply_batch(&[EdgeOp::Insert { u: 0, v: 1, w: 0.5 }]).unwrap();
+    assert_eq!(r.fast_inserts, 1, "{r:?}");
+    assert_eq!(state.forest().n_components, 4);
+    conforms("first insert", &state);
+
+    // Deleting the only edge dissolves the 2-vertex component: the
+    // localized repair runs over it and yields two singletons.
+    let r = state.apply_batch(&[EdgeOp::Delete { u: 0, v: 1 }]).unwrap();
+    assert_eq!(r.local_repairs, 1, "{r:?}");
+    assert_eq!(r.edges_removed, vec![(0, 1)], "{r:?}");
+    assert!(r.edges_added.is_empty(), "no replacement exists: {r:?}");
+    assert_eq!(state.forest().n_components, 5);
+    conforms("single-edge delete", &state);
+
+    // Ops contradicting the graph fail without corrupting state.
+    assert!(state.apply_batch(&[EdgeOp::Delete { u: 0, v: 1 }]).is_err());
+    assert!(state.apply_batch(&[EdgeOp::Reweight { u: 2, v: 3, w: 0.1 }]).is_err());
+    conforms("after rejected ops", &state);
+}
+
+/// The randomized differential matrix the CI lane mirrors: three graph
+/// families × four op mixes × three stream seeds, conformance asserted
+/// after every batch. Delete-heavy cells must actually exercise the
+/// localized-repair path, not just the O(1) fast paths.
+#[test]
+fn randomized_streams_conform_across_families_mixes_and_seeds() {
+    let mixes: [(&str, (u64, u64, u64)); 4] = [
+        ("insert", (1, 0, 0)),
+        ("delete", (0, 1, 0)),
+        ("reweight", (0, 0, 1)),
+        ("mixed", (5, 3, 2)),
+    ];
+    let mut delete_cell_repairs = 0u64;
+    for idx in 0..3 {
+        let (family, clean) = graph_case(matrix_scale(), 0xD9A, idx);
+        for (mix_label, mix) in mixes {
+            for seed in [1u64, 2, 3] {
+                let tag = format!("{family}/{mix_label}/seed{seed}");
+                let mut state =
+                    MstState::bootstrap(&clean, EngineKind::Sequential, cfg(4)).unwrap();
+                let mut gen = OpStreamGen::new(&clean, seed, mix);
+                for batch in 0..4 {
+                    let ops = gen.take_ops(25);
+                    state.apply_batch(&ops).unwrap_or_else(|e| panic!("{tag}/b{batch}: {e}"));
+                    conforms(&format!("{tag}/batch{batch}"), &state);
+                }
+                assert_eq!(state.version(), 100, "{tag}");
+                assert_eq!(state.counters().delta_ops, 100, "{tag}");
+                if mix_label == "delete" {
+                    delete_cell_repairs += state.counters().delta_local_repairs;
+                }
+            }
+        }
+    }
+    assert!(delete_cell_repairs > 0, "delete-heavy cells must hit tree edges and repair");
+}
+
+/// Static-baseline guard: a plain (non-serving) engine run reports zero
+/// on every serving counter, so `Category::Serving` prices to exactly
+/// 0 s and the pinned static baselines cannot shift.
+#[test]
+fn static_runs_price_zero_serving_work() {
+    let (_, clean) = graph_case(matrix_scale(), 0xD9A, 0);
+    for kind in EngineKind::ALL {
+        let run = run_kind(kind, &clean, cfg(4)).unwrap();
+        assert!(
+            run.profile.serving_counters_zero(),
+            "{kind:?}: static run leaked serving counters"
+        );
+    }
+}
