@@ -34,14 +34,22 @@ What it validates when run:
      lock-step DynamicState (fast-path inserts, cycle-check swaps,
      localized GHS repairs through the engine above), with the forest
      differentially checked against Kruskal after every batch.
+  8. The codec bake-off (coordinator/codecbench.rs + ghs/wire.rs v2):
+     the captured RMAT message trace re-encoded under all seven
+     candidate wire formats (byte-exact ports of the Rust encoders,
+     every frame round-trip verified), with the size-ordering gates and
+     the ≥25 % template-v2 vs compact-proc-id win asserted exactly as
+     rust/tests/codec_bench.rs does (results/codec_baseline.md).
 
 Usage: python3 python/tools/pipeline_check.py [--quick]
        python3 python/tools/pipeline_check.py dynamic
        python3 python/tools/pipeline_check.py dynamic-baseline [out.md]
+       python3 python/tools/pipeline_check.py codec-baseline [out.md]
 """
 
 import math
 import os
+import struct
 import sys
 from collections import deque
 
@@ -627,9 +635,235 @@ LONG_TAGS = ("I", "T", "P")
 def size_of(fmt, payload):
     if fmt == "naive":
         return 32
+    if fmt == "v2":
+        # WireFormat::TemplateV2.size_of: the flush-threshold *estimate*
+        # (true size known only at frame encode time); bytes_sent for v2
+        # accrues at flush from the encoded frame length instead.
+        return 11 if payload[0] in LONG_TAGS else 2
     if payload[0] in LONG_TAGS:
         return 26 if fmt == "compact" else 19
     return 10
+
+
+# ------------------------------------------------------- wire codecs --
+# Byte-exact port of ghs/wire.rs (and the codec-bench candidate encoders
+# of coordinator/codecbench.rs). Weights travel as f64_to_ordered_bits
+# (weight.rs: sign-flip transform, order-preserving), identities as the
+# packed 16-bit meta header (message.rs pack_meta: 3 b tag, 8 b level,
+# 1 b state).
+
+
+def f64_to_ordered_bits(w):
+    b = struct.unpack("<Q", struct.pack("<d", w))[0]
+    # Flip sign bit for positives, all bits for negatives.
+    return b ^ (1 << 63) if b >> 63 == 0 else (~b) & M64
+
+
+def ordered_bits_to_f64(b):
+    raw = b ^ (1 << 63) if b >> 63 == 1 else (~b) & M64
+    return struct.unpack("<d", struct.pack("<Q", raw))[0]
+
+
+META_MASK = 0x0FFF
+INF_TIE8 = 0xFF
+
+
+def payload_meta(payload):
+    """Payload::to_meta — (packed 16-bit header, weight-or-None)."""
+    tag = payload[0]
+    meta = TAG_INDEX[tag]
+    if tag == "C":
+        return meta | (payload[1] << 3), None
+    if tag == "I":
+        return meta | (payload[1] << 3) | ((1 if payload[3] else 0) << 11), payload[2]
+    if tag == "T":
+        return meta | (payload[1] << 3), payload[2]
+    if tag == "P":
+        return meta, payload[1]
+    return meta, None  # A / R / X
+
+
+META_TAGS = "CITARPX"
+
+
+def meta_payload(meta, weight):
+    """Payload::from_meta — rebuild the payload tuple."""
+    tag = META_TAGS[meta & 0b111]
+    level = (meta >> 3) & 0xFF
+    if tag == "C":
+        return ("C", level)
+    if tag == "I":
+        return ("I", level, weight, (meta >> 11) & 1 == 1)
+    if tag == "T":
+        return ("T", level, weight)
+    if tag == "P":
+        return ("P", weight)
+    return (tag,)
+
+
+def tie8_of(weight):
+    """wire.rs tie8_of: 8-bit proc-id tie; infinity maps to 0xFF."""
+    tie = INF_TIE8 if weight == INF_W else weight[1]
+    assert tie <= 0xFF, f"proc-id tie {tie} exceeds the 8-bit wire field"
+    return tie
+
+
+def decode_weight9(wbits, tie):
+    """wire.rs decode_weight for the proc-id / v2 9-byte weight tail."""
+    if tie == INF_TIE8 and wbits == f64_to_ordered_bits(INF):
+        return INF_W
+    return (ordered_bits_to_f64(wbits), tie)
+
+
+def write_varint(v, buf):
+    """Unsigned LEB128 append; returns bytes written."""
+    n = 0
+    while True:
+        byte = v & 0x7F
+        v >>= 7
+        n += 1
+        if v == 0:
+            buf.append(byte)
+            return n
+        buf.append(byte | 0x80)
+
+
+def read_varint(buf, at):
+    """Unsigned LEB128 read; returns (value, bytes consumed)."""
+    v = 0
+    shift = 0
+    for i in range(at, len(buf)):
+        assert shift < 64, "varint exceeds 64 bits"
+        v |= (buf[i] & 0x7F) << shift
+        if buf[i] & 0x80 == 0:
+            return v, i - at + 1
+        shift += 7
+    raise AssertionError("truncated varint")
+
+
+def zigzag(v):
+    return ((v << 1) ^ (v >> 63)) & M64 if v >= 0 else ((v << 1) ^ -1) & M64
+
+
+def unzigzag(u):
+    return (u >> 1) ^ -(u & 1)
+
+
+V2_MAX_DESCRIPTORS = 12
+V2_ESCAPE = 0xF  # group-byte low-nibble escape -> inline varint(meta)
+V2_RUN_EXT = 0xF  # group-byte high-nibble sentinel -> K = 16 + varint
+
+
+def encode_frame_v2(msgs, src_rank, part):
+    """wire.rs encode_frame_v2_stats: one v2 frame (ordered message
+    stream from src_rank to a single peer). Returns (bytes, stats) with
+    stats = [header, descriptor, group, id, weight] byte counts."""
+    buf = bytearray()
+    st = [0, 0, 0, 0, 0]
+    # Descriptor table: distinct metas in first-appearance order.
+    table = []
+    for (_s, _d, payload) in msgs:
+        meta = payload_meta(payload)[0]
+        if len(table) < V2_MAX_DESCRIPTORS and meta not in table:
+            table.append(meta)
+    # The descriptor count rides the low nibble of the src-rank varint
+    # (n_desc <= 12 < 16): one header byte for ranks 0..7.
+    st[0] += write_varint((src_rank << 4) | len(table), buf)
+    for meta in table:
+        st[1] += write_varint(meta, buf)
+    prev_src = prev_dst = 0
+    i = 0
+    while i < len(msgs):
+        meta = payload_meta(msgs[i][2])[0]
+        k = 1
+        while i + k < len(msgs) and payload_meta(msgs[i + k][2])[0] == meta:
+            k += 1
+        # Selector (low nibble) and run length K-1 (high nibble) share one
+        # byte; runs past 15 spill K-16 into an extension varint.
+        kcap = min(k - 1, V2_RUN_EXT)
+        if meta in table:
+            buf.append(table.index(meta) | (kcap << 4))
+            st[2] += 1
+        else:
+            # Table overflow: lossless inline-header escape.
+            buf.append(V2_ESCAPE | (kcap << 4))
+            st[2] += 1 + write_varint(meta, buf)
+        if kcap == V2_RUN_EXT:
+            st[2] += write_varint(k - 16, buf)
+        for (s, d, payload) in msgs[i : i + k]:
+            assert part.owner(s) == src_rank, "frame src owned by sender"
+            src_local = part.row_of(s)
+            dst_local = part.row_of(d)
+            st[3] += write_varint(zigzag(src_local - prev_src), buf)
+            st[3] += write_varint(zigzag(dst_local - prev_dst), buf)
+            prev_src, prev_dst = src_local, dst_local
+            if payload[0] in LONG_TAGS:
+                weight = payload_meta(payload)[1]
+                buf += f64_to_ordered_bits(weight[0]).to_bytes(8, "little")
+                buf.append(tie8_of(weight))
+                st[4] += 9
+        i += k
+    assert sum(st) == len(buf)
+    return bytes(buf), st
+
+
+def decode_frame_v2(buf, self_rank, part):
+    """wire.rs decode_frame_v2: materialize the frame's message stream
+    (position-dependent — the frame carries local row indices only)."""
+    at = 0
+    hdr, n = read_varint(buf, at)
+    src_rank, n_desc = hdr >> 4, hdr & 0xF
+    assert src_rank < part.p, "v2 source rank outside partition"
+    assert n_desc <= V2_MAX_DESCRIPTORS, "v2 descriptor table too large"
+    at += n
+    table = []
+    for _ in range(n_desc):
+        meta, n = read_varint(buf, at)
+        assert meta <= META_MASK and meta & 0b111 <= 6, "bad v2 meta"
+        table.append(meta)
+        at += n
+    n_src = part.n_local(src_rank)
+    n_dst = part.n_local(self_rank)
+    prev_src = prev_dst = 0
+    out = []
+    while at < len(buf):
+        gb = buf[at]
+        sel = gb & 0x0F
+        kcap = gb >> 4
+        at += 1
+        if sel == V2_ESCAPE:
+            meta, n = read_varint(buf, at)
+            assert meta <= META_MASK and meta & 0b111 <= 6, "bad v2 meta"
+            at += n
+        else:
+            assert sel < n_desc, "v2 group selector outside descriptor table"
+            meta = table[sel]
+        if kcap == V2_RUN_EXT:
+            ext, n = read_varint(buf, at)
+            at += n
+            k = 16 + ext
+        else:
+            k = kcap + 1
+        is_long = META_TAGS[meta & 0b111] in LONG_TAGS
+        for _ in range(k):
+            ds, n = read_varint(buf, at)
+            at += n
+            dd, n = read_varint(buf, at)
+            at += n
+            prev_src += unzigzag(ds)
+            prev_dst += unzigzag(dd)
+            assert 0 <= prev_src < n_src, "v2 source row outside sender partition"
+            assert 0 <= prev_dst < n_dst, "v2 dest row outside receiver partition"
+            src = part.vertex_of(src_rank, prev_src)
+            dst = part.vertex_of(self_rank, prev_dst)
+            if is_long:
+                wbits = int.from_bytes(buf[at : at + 8], "little")
+                weight = decode_weight9(wbits, buf[at + 8])
+                at += 9
+            else:
+                weight = None
+            out.append((src, dst, meta_payload(meta, weight)))
+    return out
 
 
 # ------------------------------------------------------ flight recorder --
@@ -1175,6 +1409,10 @@ class Rank:
         self._pending_msgs = {}  # owner -> [msgs]
         self.dirty = []
         self.flushed = []  # (dst, bytes, n_msgs)
+        # Codec-bench capture (rank.rs `captured`, GhsConfig::
+        # capture_frames): the exact flushed message streams, recorded
+        # pre-reliability-framing / pre-fault-injection.
+        self.captured = [] if cfg.get("capture_frames") else None
         self.prof = Prof()
         self.sent_counts = {}
         self.halts = 0
@@ -1207,10 +1445,16 @@ class Rank:
                 self._pending_msgs[owner] = []
             if box[0] == 0:
                 self.dirty.append(owner)
+                if self.wire == "v2":
+                    box[0] = 2  # frame header estimate (src rank + n_desc)
             size = size_of(self.wire, payload)
             box[0] += size
             box[1] += 1
-            self.prof.bytes_sent += size
+            if self.wire != "v2":
+                # v1: exact per-message sizes accrue at send. v2: box[0]
+                # is only the flush-threshold estimate; bytes_sent accrues
+                # at flush from the encoded frame length (rank.rs).
+                self.prof.bytes_sent += size
             self._pending_msgs[owner].append(msg)
             if box[0] >= self.cfg["max_msg_size"]:
                 self.flush_one(owner)
@@ -1225,12 +1469,25 @@ class Rank:
         else:
             self.prof.buf_alloc += 1
         self.prof.flushes += 1
+        msgs = self._pending_msgs[dst]
+        if self.wire == "v2":
+            # Frame codec: the true payload length is only known now.
+            # Encode (and differentially decode — the port's lock-step
+            # round-trip gate) before reliability framing sees the frame.
+            buf, _st = encode_frame_v2(msgs, self.rank, self.part)
+            assert decode_frame_v2(buf, dst, self.part) == msgs, "v2 round-trip"
+            nbytes = len(buf)
+            self.prof.bytes_sent += nbytes
+        else:
+            nbytes = box[0]
+        if self.captured is not None:
+            self.captured.append((self.rank, dst, list(msgs)))
         if self.chaos is not None:
-            frame = Frame(self.rank, box[1], box[0], self._pending_msgs[dst])
+            frame = Frame(self.rank, box[1], nbytes, msgs)
             self.chaos.rel.frame(dst, frame, self.prof.iterations)
             self._dispatch(dst, frame)
         else:
-            self.flushed.append((dst, box[0], box[1], self._pending_msgs[dst]))
+            self.flushed.append((dst, nbytes, box[1], msgs))
         self._pending_msgs[dst] = []
         box[0] = 0
         box[1] = 0
@@ -1715,11 +1972,13 @@ class Engine:
         p = cfg["n_ranks"]
         part = build_partition(partition, max(n, 1), p, edges)
         wire = cfg["wire"]
-        if wire == "procid":
+        # v2's 9-byte weight tails carry the 8-bit proc-id tie, so it
+        # shares the proc-id feasibility precondition and fallback.
+        if wire in ("procid", "v2"):
             if not (p <= 256 and per_process_weights_unique(edges, part)):
                 wire = "compact"
         cfg = dict(cfg, wire=wire)
-        codec = "proc" if wire == "procid" else "special"
+        codec = "proc" if wire in ("procid", "v2") else "special"
         self.cfg = cfg
         self.pool = [0]  # idle pooled buffers (shared free list)
         self.ranks = [Rank(r, n, edges, part, cfg, codec, self.pool) for r in range(p)]
@@ -2055,11 +2314,12 @@ class AsyncSched:
         p = cfg["n_ranks"]
         part = build_partition(partition, max(n, 1), p, edges)
         wire = cfg["wire"]
-        if wire == "procid":
+        # Same proc-id feasibility fallback as Engine (and engine.rs).
+        if wire in ("procid", "v2"):
             if not (p <= 256 and per_process_weights_unique(edges, part)):
                 wire = "compact"
         cfg = dict(cfg, wire=wire)
-        codec = "proc" if wire == "procid" else "special"
+        codec = "proc" if wire in ("procid", "v2") else "special"
         self.cfg = cfg
         self.pool = [0]
         self.ranks = [Rank(r, n, edges, part, cfg, codec, self.pool) for r in range(p)]
@@ -2376,7 +2636,7 @@ def check_async(label, n, edges, cfg, partition="block", fuzz_seed=None):
 def async_conformance(quick=False):
     print("== async scheduler: forest == Kruskal, steal/termination protocol")
     n7, e7 = workload(7)
-    for wire in ("naive", "compact", "procid"):
+    for wire in ("naive", "compact", "procid", "v2"):
         for sep in (False, True):
             for ranks in (1, 4, 16):
                 cfg = final_version(ranks, wire=wire, separate_test=sep)
@@ -2490,7 +2750,7 @@ def check(label, n, edges, cfg, partition="block"):
 def conformance(quick=False):
     print("== conformance: forest == Kruskal, termination (stash queues)")
     n7, e7 = workload(7)
-    wires = ["naive", "compact", "procid"]
+    wires = ["naive", "compact", "procid", "v2"]
     searches = ["linear", "hash"] if quick else ["linear", "binary", "hash"]
     for wire in wires:
         for search in searches:
@@ -2553,6 +2813,485 @@ def perf_snapshot(scale):
     assert snap["buf_reuse"] > 0, snap
     print("  orderings OK (Naive>Compact bytes; Linear>Hash/Binary probes; sep<=unified)")
     return snap
+
+
+# ------------------------------------------------------ codec bake-off --
+# Lock-step port of coordinator/codecbench.rs: capture the exact message
+# trace of the seeded RMAT run, re-encode the identical trace under every
+# candidate wire format (byte-exact ports of the Rust encoders), round-trip
+# verify every frame, and assert the size-ordering gates plus the ≥25 %
+# template-v2 vs compact-proc-id win that rust/tests/codec_bench.rs pins.
+
+CODEC_CANDIDATES = (
+    "naive",
+    "compact-special-id",
+    "compact-proc-id",
+    "varint-ids",
+    "delta-ids",
+    "group-varint",
+    "template-v2",
+)
+
+
+def encode_v1_msg(msg, fmt, buf):
+    """wire.rs encode (the three per-message v1 formats). Returns the
+    (header, id, weight) byte split of this message."""
+    (src, dst, payload) = msg
+    meta, weight = payload_meta(payload)
+    long = payload[0] in LONG_TAGS
+    if fmt == "naive":
+        buf.append(meta & 0b111)
+        buf.append((meta >> 3) & 0xFF)
+        buf.append((meta >> 11) & 1)
+        buf.append(0)
+        buf += src.to_bytes(4, "little") + dst.to_bytes(4, "little")
+        wbits = f64_to_ordered_bits(weight[0]) if long else 0
+        tie = weight[1] if long else 0
+        buf += wbits.to_bytes(8, "little") + tie.to_bytes(8, "little")
+        buf += b"\x00\x00\x00\x00"  # fixed-struct padding
+        return 4, 8, 20
+    buf += meta.to_bytes(2, "little")
+    buf += src.to_bytes(4, "little") + dst.to_bytes(4, "little")
+    if not long:
+        return 2, 8, 0
+    buf += f64_to_ordered_bits(weight[0]).to_bytes(8, "little")
+    if fmt == "compact-proc-id":
+        buf.append(tie8_of(weight))
+        return 2, 8, 9
+    buf += weight[1].to_bytes(8, "little")
+    return 2, 8, 16
+
+
+def decode_v1(buf, fmt):
+    """wire.rs Decoder for the sequential per-message v1 stream."""
+    out = []
+    at = 0
+    while at < len(buf):
+        if fmt == "naive":
+            meta = buf[at] | (buf[at + 1] << 3) | (buf[at + 2] << 11)
+            src = int.from_bytes(buf[at + 4 : at + 8], "little")
+            dst = int.from_bytes(buf[at + 8 : at + 12], "little")
+            weight = None
+            if META_TAGS[meta & 0b111] in LONG_TAGS:
+                wbits = int.from_bytes(buf[at + 12 : at + 20], "little")
+                tie = int.from_bytes(buf[at + 20 : at + 28], "little")
+                weight = (ordered_bits_to_f64(wbits), tie)
+            at += 32
+        else:
+            meta = int.from_bytes(buf[at : at + 2], "little")
+            src = int.from_bytes(buf[at + 2 : at + 6], "little")
+            dst = int.from_bytes(buf[at + 6 : at + 10], "little")
+            at += 10
+            weight = None
+            if META_TAGS[meta & 0b111] in LONG_TAGS:
+                wbits = int.from_bytes(buf[at : at + 8], "little")
+                if fmt == "compact-proc-id":
+                    weight = decode_weight9(wbits, buf[at + 8])
+                    at += 9
+                else:
+                    tie = int.from_bytes(buf[at + 8 : at + 16], "little")
+                    weight = (ordered_bits_to_f64(wbits), tie)
+                    at += 16
+        out.append((src, dst, meta_payload(meta, weight)))
+    return out
+
+
+def push_weight_tail(payload, buf):
+    """codecbench.rs push_weight_tail: the proc-id 9-byte tail."""
+    if payload[0] not in LONG_TAGS:
+        return 0
+    weight = payload_meta(payload)[1]
+    buf += f64_to_ordered_bits(weight[0]).to_bytes(8, "little")
+    buf.append(tie8_of(weight))
+    return 9
+
+
+def read_weight_tail(buf, at, meta):
+    """Inverse of push_weight_tail; returns (weight_or_None, new_at)."""
+    if META_TAGS[meta & 0b111] not in LONG_TAGS:
+        return None, at
+    wbits = int.from_bytes(buf[at : at + 8], "little")
+    return decode_weight9(wbits, buf[at + 8]), at + 9
+
+
+def encode_varint_ids(msgs, buf):
+    """Candidate: 2 B meta + LEB128 global ids + proc-id weight tail."""
+    h = i = w = 0
+    for (src, dst, payload) in msgs:
+        buf += payload_meta(payload)[0].to_bytes(2, "little")
+        h += 2
+        i += write_varint(src, buf)
+        i += write_varint(dst, buf)
+        w += push_weight_tail(payload, buf)
+    return h, i, w
+
+
+def decode_varint_ids(buf):
+    out = []
+    at = 0
+    while at < len(buf):
+        meta = int.from_bytes(buf[at : at + 2], "little")
+        at += 2
+        src, n = read_varint(buf, at)
+        at += n
+        dst, n = read_varint(buf, at)
+        at += n
+        weight, at = read_weight_tail(buf, at, meta)
+        out.append((src, dst, meta_payload(meta, weight)))
+    return out
+
+
+def encode_delta_ids(msgs, buf):
+    """Candidate: 2 B meta + zigzag-delta LEB128 global ids (delta state
+    reset per frame) + proc-id weight tail."""
+    h = i = w = 0
+    prev_src = prev_dst = 0
+    for (src, dst, payload) in msgs:
+        buf += payload_meta(payload)[0].to_bytes(2, "little")
+        h += 2
+        i += write_varint(zigzag(src - prev_src), buf)
+        i += write_varint(zigzag(dst - prev_dst), buf)
+        prev_src, prev_dst = src, dst
+        w += push_weight_tail(payload, buf)
+    return h, i, w
+
+
+def decode_delta_ids(buf):
+    out = []
+    at = 0
+    prev_src = prev_dst = 0
+    while at < len(buf):
+        meta = int.from_bytes(buf[at : at + 2], "little")
+        at += 2
+        ds, n = read_varint(buf, at)
+        at += n
+        dd, n = read_varint(buf, at)
+        at += n
+        prev_src += unzigzag(ds)
+        prev_dst += unzigzag(dd)
+        weight, at = read_weight_tail(buf, at, meta)
+        out.append((prev_src, prev_dst, meta_payload(meta, weight)))
+    return out
+
+
+def gv_len(v):
+    return 1 if v < 1 << 8 else 2 if v < 1 << 16 else 3 if v < 1 << 24 else 4
+
+
+def encode_group_varint(msgs, buf):
+    """Candidate: group varint over the flattened [meta, src, dst] u32
+    stream (1-byte length tag per 4 values, last chunk zero-padded), then
+    the proc-id weight tails in message order."""
+    h = i = w = 0
+    h += write_varint(len(msgs), buf)
+    vals = []  # (value, is_id)
+    for (src, dst, payload) in msgs:
+        vals.append((payload_meta(payload)[0], False))
+        vals.append((src, True))
+        vals.append((dst, True))
+    while len(vals) % 4 != 0:
+        vals.append((0, False))  # padding charged to header overhead
+    for c in range(0, len(vals), 4):
+        chunk = vals[c : c + 4]
+        tag = 0
+        for k, (v, _) in enumerate(chunk):
+            tag |= (gv_len(v) - 1) << (2 * k)
+        buf.append(tag)
+        h += 1
+        for (v, is_id) in chunk:
+            n = gv_len(v)
+            buf += v.to_bytes(4, "little")[:n]
+            if is_id:
+                i += n
+            else:
+                h += n
+    for (_s, _d, payload) in msgs:
+        w += push_weight_tail(payload, buf)
+    return h, i, w
+
+
+def decode_group_varint(buf):
+    at = 0
+    n_msgs, n = read_varint(buf, at)
+    at += n
+    n_vals = n_msgs * 3
+    vals = []
+    for _ in range((n_vals + 3) // 4):
+        tag = buf[at]
+        at += 1
+        for k in range(4):
+            n = ((tag >> (2 * k)) & 0b11) + 1
+            le = bytes(buf[at : at + n]) + b"\x00" * (4 - n)
+            vals.append(int.from_bytes(le, "little"))
+            at += n
+    out = []
+    for t in range(n_msgs):
+        meta, src, dst = vals[3 * t], vals[3 * t + 1], vals[3 * t + 2]
+        weight, at = read_weight_tail(buf, at, meta)
+        out.append((src, dst, meta_payload(meta, weight)))
+    return out
+
+
+def encode_codec(name, msgs, src_rank, part):
+    """Encode one frame under a candidate. Returns (buf, h, i, w)."""
+    buf = bytearray()
+    if name in ("naive", "compact-special-id", "compact-proc-id"):
+        h = i = w = 0
+        for m in msgs:
+            dh, di, dw = encode_v1_msg(m, name, buf)
+            h, i, w = h + dh, i + di, w + dw
+    elif name == "varint-ids":
+        h, i, w = encode_varint_ids(msgs, buf)
+    elif name == "delta-ids":
+        h, i, w = encode_delta_ids(msgs, buf)
+    elif name == "group-varint":
+        h, i, w = encode_group_varint(msgs, buf)
+    else:
+        assert name == "template-v2", name
+        b, st = encode_frame_v2(msgs, src_rank, part)
+        return b, st[0] + st[1] + st[2], st[3], st[4]
+    assert h + i + w == len(buf), f"{name} breakdown sums"
+    return buf, h, i, w
+
+
+def decode_codec(name, buf, dst_rank, part):
+    if name == "varint-ids":
+        return decode_varint_ids(buf)
+    if name == "delta-ids":
+        return decode_delta_ids(buf)
+    if name == "group-varint":
+        return decode_group_varint(buf)
+    if name == "template-v2":
+        return decode_frame_v2(buf, dst_rank, part)
+    return decode_v1(buf, name)
+
+
+def capture_codec_trace(scale, ranks):
+    """codecbench.rs capture_trace: sequential engine, final-version
+    config, capture_frames on; proc-id must stay feasible."""
+    n, edges = workload(scale)
+    eng = Engine(n, edges, final_version(ranks, capture_frames=True))
+    assert eng.cfg["wire"] == "procid", "codec-bench workload must be proc-id feasible"
+    part = eng.ranks[0].part
+    out = eng.run()
+    want_edges, _ = kruskal(n, edges)
+    assert out["edges"] == want_edges, "capture run: forest != Kruskal"
+    frames = []
+    for r in eng.ranks:
+        frames.extend(r.captured)
+    assert frames, "multi-rank run captured no frames"
+    return frames, part, out["prof"].bytes_sent
+
+
+def codec_bakeoff(scale, ranks):
+    """codecbench.rs run_bakeoff: the full capture + 7-way re-encode,
+    every frame round-trip verified against the captured stream."""
+    frames, part, live_bytes = capture_codec_trace(scale, ranks)
+    cands = {
+        name: dict(name=name, bytes=0, header_bytes=0, id_bytes=0, weight_bytes=0)
+        for name in CODEC_CANDIDATES
+    }
+    n_msgs = n_long = 0
+    for (src, dst, msgs) in frames:
+        n_msgs += len(msgs)
+        n_long += sum(1 for m in msgs if m[2][0] in LONG_TAGS)
+        for name in CODEC_CANDIDATES:
+            buf, h, i, w = encode_codec(name, msgs, src, part)
+            assert h + i + w == len(buf), f"{name} breakdown sums"
+            assert decode_codec(name, buf, dst, part) == msgs, f"{name} round-trip"
+            c = cands[name]
+            c["bytes"] += len(buf)
+            c["header_bytes"] += h
+            c["id_bytes"] += i
+            c["weight_bytes"] += w
+    # The captured run executed on the proc-id wire with no reliability
+    # framing, so that candidate must reproduce the live accounting, and
+    # the fixed v1 layouts make their totals exactly predictable.
+    assert cands["compact-proc-id"]["bytes"] == live_bytes, "proc-id != live bytes_sent"
+    assert cands["naive"]["bytes"] == 32 * n_msgs
+    assert cands["compact-special-id"]["bytes"] == 10 * n_msgs + 16 * n_long
+    assert cands["compact-proc-id"]["bytes"] == 10 * n_msgs + 9 * n_long
+    return dict(
+        workload=f"RMAT-{scale}",
+        n_ranks=ranks,
+        n_frames=len(frames),
+        n_msgs=n_msgs,
+        n_long=n_long,
+        candidates=[cands[name] for name in CODEC_CANDIDATES],
+    )
+
+
+def codec_gates(b):
+    """BakeOff::check_gates: strict paper ordering + the ROADMAP item 3
+    margin (template-v2 ≤ 0.75 × compact-proc-id)."""
+    bo = {c["name"]: c["bytes"] for c in b["candidates"]}
+    assert bo["naive"] > bo["compact-special-id"], bo
+    assert bo["compact-special-id"] >= bo["compact-proc-id"], bo
+    assert bo["compact-proc-id"] >= bo["template-v2"], bo
+    assert bo["template-v2"] <= 0.75 * bo["compact-proc-id"], (
+        f"template-v2 ({bo['template-v2']}) must be >=25% smaller than "
+        f"compact-proc-id ({bo['compact-proc-id']}); got "
+        f"{100.0 * (1.0 - bo['template-v2'] / bo['compact-proc-id']):.1f}%"
+    )
+    return bo
+
+
+def _markdown_table(header, rows):
+    """util/stats.rs markdown_table: column-aligned pipes."""
+    widths = [len(h) for h in header]
+    for row in rows:
+        for i, cell in enumerate(row[: len(header)]):
+            widths[i] = max(widths[i], len(cell))
+    def emit(cells):
+        return "|" + "".join(
+            f" {cells[i] if i < len(cells) else '':<{w}} |" for i, w in enumerate(widths)
+        )
+    lines = [emit(header), "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+    lines += [emit(row) for row in rows]
+    return "\n".join(lines) + "\n"
+
+
+CODEC_TABLE_HEADER = (
+    "format", "bytes", "bytes/msg", "vs naive", "vs proc-id", "header", "ids", "weights",
+)
+
+
+def codec_table_rows(b):
+    """BakeOff::table row formatting, digit-for-digit."""
+    naive = float(b["candidates"][0]["bytes"])
+    procid = float(next(c for c in b["candidates"] if c["name"] == "compact-proc-id")["bytes"])
+    rows = []
+    for c in b["candidates"]:
+        rows.append([
+            c["name"],
+            str(c["bytes"]),
+            f"{c['bytes'] / b['n_msgs']:.2f}",
+            f"{100.0 * c['bytes'] / naive:.1f}%",
+            f"{100.0 * c['bytes'] / procid:.1f}%",
+            str(c["header_bytes"]),
+            str(c["id_bytes"]),
+            str(c["weight_bytes"]),
+        ])
+    return rows
+
+
+def codec_json(b):
+    """BakeOff::to_json, byte-for-byte (stable key order, no json dep)."""
+    s = "{\n"
+    s += f'  "workload": "{b["workload"]}",\n'
+    s += f'  "n_ranks": {b["n_ranks"]},\n'
+    s += f'  "n_frames": {b["n_frames"]},\n'
+    s += f'  "n_msgs": {b["n_msgs"]},\n'
+    s += f'  "n_long": {b["n_long"]},\n'
+    s += '  "candidates": [\n'
+    for i, c in enumerate(b["candidates"]):
+        comma = "" if i + 1 == len(b["candidates"]) else ","
+        s += (
+            f'    {{"name": "{c["name"]}", "bytes": {c["bytes"]}, '
+            f'"header_bytes": {c["header_bytes"]}, "id_bytes": {c["id_bytes"]}, '
+            f'"weight_bytes": {c["weight_bytes"]}}}{comma}\n'
+        )
+    s += "  ]\n}\n"
+    return s
+
+
+def codec_check(quick=False):
+    """The CI cell: run the bake-off at the codec_bench.rs gate scale and
+    assert its gates. Quick mode drops to RMAT-8 and checks the strict
+    ordering only (the ≥25 % margin is pinned at the RMAT-9 gate scale,
+    where larger frames amortize the v2 templating better)."""
+    scale = 8 if quick else 9
+    print(f"== codec bake-off: RMAT-{scale} x 16 ranks, 7 candidates round-tripped")
+    b = codec_bakeoff(scale, 16)
+    for c in b["candidates"]:
+        print(
+            f"  {c['name']:18s} bytes={c['bytes']:7d} header={c['header_bytes']:7d} "
+            f"ids={c['id_bytes']:7d} weights={c['weight_bytes']:7d}"
+        )
+    bo = {c["name"]: c["bytes"] for c in b["candidates"]}
+    if quick:
+        assert bo["naive"] > bo["compact-special-id"], bo
+        assert bo["compact-special-id"] >= bo["compact-proc-id"], bo
+        assert bo["compact-proc-id"] >= bo["template-v2"], bo
+        print("  size ordering OK (margin gate runs at the RMAT-9 scale)")
+    else:
+        codec_gates(b)
+        win = 100.0 * (1.0 - bo["template-v2"] / bo["compact-proc-id"])
+        print(
+            f"  codec gate OK: template-v2 {bo['template-v2']} bytes vs "
+            f"compact-proc-id {bo['compact-proc-id']} ({win:.1f}% smaller, need >=25%)"
+        )
+    return b
+
+
+def codec_baseline(write_path=None):
+    """The `codec-baseline` selector: run the gate-scale bake-off and
+    write results/codec_baseline.{md,csv} + results/BENCH_codec.json in
+    the exact shapes `ghs-mst codec-bench --write` produces (plus the
+    provenance preamble in the markdown)."""
+    b = codec_check(quick=False)
+    codec_gates(b)
+    if write_path is None:
+        write_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "..", "results",
+            "codec_baseline.md",
+        )
+    title = f"Codec bake-off — {b['workload']} × {b['n_ranks']} ranks"
+    rows = codec_table_rows(b)
+    preamble = [
+        "# Codec baseline — measured §3.5 compression (ROADMAP item 3)",
+        "",
+        "One seeded run's exact message trace, re-encoded under every",
+        "candidate wire format; every frame round-trip verified against the",
+        "captured stream before its bytes count. The size ordering and the",
+        "≥25 % template-v2 vs compact-proc-id win are CI gates",
+        "(`rust/tests/codec_bench.rs`). Regenerate with:",
+        "",
+        "```",
+        "ghs-mst codec-bench --write",
+        "```",
+        "",
+        "**Provenance:** recorded in a container without a Rust toolchain.",
+        "The values below were computed with",
+        "`python3 python/tools/pipeline_check.py codec-baseline` — the",
+        "line-by-line port of the sequential pipeline plus byte-exact ports",
+        "of all seven candidate encoders (`coordinator/codecbench.rs`,",
+        "`ghs/wire.rs`). They are *expected* values: on the first",
+        "toolchain-equipped run, regenerate with the command above and",
+        "reconcile (the pipeline is fully deterministic; a difference means",
+        "either a codec change — update this file — or a port discrepancy —",
+        "trust the CLI output and correct both this file and",
+        "`pipeline_check.py`).",
+        "",
+        f"## {title}",
+        "",
+    ]
+    notes = [
+        f"{b['n_frames']} frames, {b['n_msgs']} messages ({b['n_long']} long); "
+        "identical captured trace re-encoded per format, every frame round-trip "
+        "verified.",
+        "Gates: naive > compact-special-id ≥ compact-proc-id ≥ template-v2, "
+        "and template-v2 ≤ 0.75 × compact-proc-id (ROADMAP item 3).",
+    ]
+    md = "\n".join(preamble) + _markdown_table(list(CODEC_TABLE_HEADER), rows)
+    for note in notes:
+        md += f"\n> {note}\n"
+    with open(write_path, "w") as fh:
+        fh.write(md)
+    print(f"  wrote {write_path}")
+    csv_path = write_path[: -len(".md")] + ".csv" if write_path.endswith(".md") else write_path + ".csv"
+    esc = lambda s: '"' + s.replace('"', '""') + '"' if ("," in s or '"' in s) else s
+    csv = ",".join(esc(h) for h in CODEC_TABLE_HEADER) + "\n"
+    for row in rows:
+        csv += ",".join(esc(c) for c in row) + "\n"
+    with open(csv_path, "w") as fh:
+        fh.write(csv)
+    print(f"  wrote {csv_path}")
+    json_path = os.path.join(os.path.dirname(write_path), "BENCH_codec.json")
+    with open(json_path, "w") as fh:
+        fh.write(codec_json(b))
+    print(f"  wrote {json_path}")
+    return b
 
 
 def trace_fingerprints(quick=False):
@@ -2836,6 +3575,22 @@ def chaos_conformance(quick=False):
             )
             total_injected += assert_fault_ledger(f"{glabel}/{plabel}", out)
     assert total_injected > 0, "the matrix must actually inject faults"
+    # -- v2 wire under drop+corrupt (rust/tests/chaos.rs
+    #    v2_wire_recovers_under_drop_and_corrupt_faults): the frame codec
+    #    rides inside reliability framing, so the checksum catches every
+    #    injected flip before the v2 decoder ever sees the frame. --
+    fcv = fault_config(drop=0.05, dup=0.02, reorder=4, corrupt=0.01, seed=19)
+    for (glabel, (n, edges)) in graphs:
+        out = check(
+            f"{glabel}/seq/p=4/v2+mixed", n, edges,
+            final_version(4, wire="v2", faults=fcv),
+        )
+        fs = out["faults"]
+        assert fs["degraded"] == 0, "v2 chaos cell must fully recover"
+        assert out["prof"].corrupt_dropped >= fs["corrupts"], (
+            "every corrupted v2 frame (and corrupted retransmit) is "
+            "checksum-rejected"
+        )
     # -- zero-rate control cell: reliability framing on, nothing injected;
     #    recovers the faults=None forest with zero fault counters. Schedule
     #    identity is NOT asserted: standalone ack frames are real wire
@@ -3338,8 +4093,16 @@ if __name__ == "__main__":
         dynamic_baseline(positional[1] if len(positional) > 1 else default_out)
         print("ALL CHECKS PASSED")
         sys.exit(0)
+    if positional and positional[0] == "codec-baseline":
+        # The codec-bench CI lane: gate-scale bake-off + snapshot files.
+        codec_baseline(positional[1] if len(positional) > 1 else None)
+        print("ALL CHECKS PASSED")
+        sys.exit(0)
     if positional:
-        sys.exit(f"unknown selector {positional[0]!r} (dynamic | dynamic-baseline)")
+        sys.exit(
+            f"unknown selector {positional[0]!r} "
+            "(dynamic | dynamic-baseline | codec-baseline)"
+        )
     conformance(quick)
     async_conformance(quick)
     chaos_conformance(quick)
@@ -3347,6 +4110,7 @@ if __name__ == "__main__":
     sched_snapshot(quick)
     trace_fingerprints(quick)
     multilevel_quality()
+    codec_check(quick)
     snap8 = perf_snapshot(8)
     if not quick:
         snap9 = perf_snapshot(9)

@@ -2,6 +2,7 @@
 //! verification → reporting. One driver per paper table/figure lives in
 //! [`experiments`]; [`report`] renders markdown/CSV.
 
+pub mod codecbench;
 pub mod experiments;
 pub mod report;
 

@@ -138,6 +138,14 @@ pub struct GhsConfig {
     /// against a peer's stale window from an earlier run (epoch `0`, the
     /// default, keeps the wire format byte-identical to static runs).
     pub run_epoch: u64,
+    /// Capture every flushed remote frame as a structured
+    /// [`CapturedFrame`](crate::ghs::wire::CapturedFrame) in
+    /// `GhsRun::frames` — the exact per-peer message streams the codec-bench
+    /// harness re-encodes in every candidate format. `false` (the default)
+    /// allocates nothing. Captures are taken at flush time *before*
+    /// reliability framing and fault injection, so the logical trace is
+    /// identical whether or not the chaos layer retransmits.
+    pub capture_frames: bool,
 }
 
 impl Default for GhsConfig {
@@ -162,6 +170,7 @@ impl Default for GhsConfig {
             trace: None,
             faults: None,
             run_epoch: 0,
+            capture_frames: false,
         }
     }
 }
@@ -223,6 +232,7 @@ mod tests {
         assert!(c.trace.is_none(), "flight recorder is off by default");
         assert!(c.faults.is_none(), "chaos layer is off by default");
         assert_eq!(c.run_epoch, 0, "static runs stay in epoch 0 (legacy wire bytes)");
+        assert!(!c.capture_frames, "frame capture is off by default");
     }
 
     #[test]

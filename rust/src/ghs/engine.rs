@@ -107,14 +107,16 @@ pub(crate) fn prepare_run(
     }
     let part = Partition::build(&config.partition, g, g.n_vertices.max(1), config.n_ranks)?;
     let partition_stats = PartitionStats::compute(g, &part);
-    if config.wire_format == WireFormat::CompactProcId {
+    // TemplateV2's 9-byte weight tails carry the 8-bit proc-id tie, so it
+    // shares the proc-id feasibility precondition and fallback.
+    if matches!(config.wire_format, WireFormat::CompactProcId | WireFormat::TemplateV2) {
         let feasible = config.n_ranks <= 256 && per_process_weights_unique(g, &part);
         if !feasible {
             config.wire_format = WireFormat::CompactSpecialId;
         }
     }
     let codec = match config.wire_format {
-        WireFormat::CompactProcId => IdentityCodec::ProcId,
+        WireFormat::CompactProcId | WireFormat::TemplateV2 => IdentityCodec::ProcId,
         _ => IdentityCodec::SpecialId,
     };
     Ok((part, partition_stats, codec))
@@ -390,12 +392,14 @@ impl Engine {
         let mut per_rank = Vec::with_capacity(self.ranks.len());
         let mut sent = MessageCounts::default();
         let mut timeline = Vec::new();
+        let mut frames = Vec::new();
         let mut faults: Option<crate::ghs::fault::FaultStats> = None;
         for r in &mut self.ranks {
             profile.merge(&r.prof);
             per_rank.push(r.prof);
             sent.merge(&r.sent_counts);
             timeline.append(&mut r.timeline);
+            frames.append(&mut r.captured);
             if let Some(fs) = r.fault_stats() {
                 faults.get_or_insert_with(Default::default).merge(&fs);
             }
@@ -419,6 +423,7 @@ impl Engine {
             profile,
             per_rank,
             timeline,
+            frames,
             sim: self.sim.summary(),
             partition: self.partition_stats,
             trace,
@@ -526,9 +531,12 @@ mod tests {
         let g = generate(GraphFamily::Rmat, 6, 13);
         for search in [SearchStrategy::Linear, SearchStrategy::Binary, SearchStrategy::Hash] {
             for separate in [false, true] {
-                for wire in
-                    [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId]
-                {
+                for wire in [
+                    WireFormat::Naive,
+                    WireFormat::CompactSpecialId,
+                    WireFormat::CompactProcId,
+                    WireFormat::TemplateV2,
+                ] {
                     let mut c = cfg(4);
                     c.search = search;
                     c.separate_test_queue = separate;
@@ -622,6 +630,54 @@ mod tests {
         c.wire_format = WireFormat::CompactProcId;
         let e = Engine::new(&clean, c).unwrap();
         assert_eq!(e.effective_wire, WireFormat::CompactSpecialId);
+    }
+
+    #[test]
+    fn v2_fallback_when_many_ranks() {
+        // TemplateV2 carries the 8-bit proc-id tie in its weight tails, so
+        // it shares CompactProcId's feasibility fallback.
+        let g = generate(GraphFamily::Random, 5, 3);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(2);
+        c.n_ranks = 300;
+        c.wire_format = WireFormat::TemplateV2;
+        let e = Engine::new(&clean, c).unwrap();
+        assert_eq!(e.effective_wire, WireFormat::CompactSpecialId);
+    }
+
+    #[test]
+    fn v2_matches_kruskal_and_accounts_bytes_exactly() {
+        let g = generate(GraphFamily::Rmat, 6, 13);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(4);
+        c.wire_format = WireFormat::TemplateV2;
+        let mut e = Engine::new(&clean, c).unwrap();
+        assert_eq!(e.effective_wire, WireFormat::TemplateV2);
+        let run = e.run().unwrap();
+        let oracle = kruskal(&clean);
+        assert_eq!(run.forest.canonical_edges(), oracle.canonical_edges());
+        // v2 accounts bytes at flush time from the encoded frame length,
+        // so sent and decoded byte totals agree exactly.
+        assert_eq!(run.profile.bytes_sent, run.profile.bytes_decoded);
+        assert!(run.profile.bytes_sent > 0);
+        assert_eq!(run.profile.buf_reuse + run.profile.buf_alloc, run.profile.flushes);
+        assert!(run.frames.is_empty(), "capture off: no frames retained");
+    }
+
+    #[test]
+    fn capture_frames_collects_flushed_streams() {
+        let g = generate(GraphFamily::Rmat, 6, 13);
+        let (clean, _) = preprocess(&g);
+        let mut c = cfg(4);
+        c.capture_frames = true;
+        let run = Engine::new(&clean, c).unwrap().run().unwrap();
+        assert!(!run.frames.is_empty(), "multi-rank run must flush remote frames");
+        let captured_msgs: u64 = run.frames.iter().map(|f| f.msgs.len() as u64).sum();
+        assert!(captured_msgs > 0);
+        for f in &run.frames {
+            assert!(f.src < 4 && f.dst < 4 && f.src != f.dst);
+            assert!(!f.msgs.is_empty(), "empty frames are never flushed");
+        }
     }
 
     #[test]

@@ -232,6 +232,7 @@ pub(crate) fn collect(
     let mut per_rank = Vec::with_capacity(ranks.len());
     let mut sent = MessageCounts::default();
     let mut timeline = Vec::new();
+    let mut frames = Vec::new();
     let mut faults: Option<crate::ghs::fault::FaultStats> = None;
     let supersteps = ranks.iter().map(|r| r.prof.iterations).max().unwrap_or(0);
     for r in &mut ranks {
@@ -239,6 +240,7 @@ pub(crate) fn collect(
         per_rank.push(r.prof);
         sent.merge(&r.sent_counts);
         timeline.append(&mut r.timeline);
+        frames.append(&mut r.captured);
         if let Some(fs) = r.fault_stats() {
             faults.get_or_insert_with(Default::default).merge(&fs);
         }
@@ -264,6 +266,7 @@ pub(crate) fn collect(
         profile,
         per_rank,
         timeline,
+        frames,
         // Threaded mode: real wall clock, no virtual network.
         sim: crate::sim::SimSummary { total_time: wall, ..Default::default() },
         partition: partition_stats,

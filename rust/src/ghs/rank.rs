@@ -139,6 +139,17 @@ pub struct RankState {
     /// Peer slots with a non-empty aggregation buffer (so `flush_all`
     /// does not scan every buffer each SENDING_FREQUENCY iterations).
     dirty_dsts: Vec<u32>,
+    /// Per-peer staged structured messages + estimated frame bytes.
+    /// Allocated only when the wire format is the frame codec
+    /// (`TemplateV2` defers all encoding to flush, where the descriptor
+    /// table and delta chain need the whole frame at once) or when
+    /// `GhsConfig::capture_frames` records the logical frame streams.
+    /// Empty otherwise — the per-message formats never touch it.
+    staged: Vec<(Vec<Message>, usize)>,
+    /// Captured logical frames (`GhsConfig::capture_frames`): the exact
+    /// per-peer message stream of every flush, pre-reliability-framing and
+    /// pre-fault-injection. Drained into `GhsRun::frames` by the engines.
+    pub captured: Vec<wire::CapturedFrame>,
     /// Buffers flushed this superstep, to hand to the interconnect.
     pub flushed: Vec<(u32, Vec<u8>, u32)>, // (dst, bytes, n_msgs)
     /// Shared recycle pool for flushed packet buffers. Engines overwrite
@@ -249,6 +260,12 @@ impl RankState {
             lookup_stats: LookupStats::default(),
             queues: RankQueues::new(config.separate_test_queue),
             outbox: peers.iter().map(|_| (Vec::new(), 0)).collect(),
+            staged: if config.wire_format == WireFormat::TemplateV2 || config.capture_frames {
+                peers.iter().map(|_| (Vec::new(), 0)).collect()
+            } else {
+                Vec::new()
+            },
+            captured: Vec::new(),
             peers,
             adj_peer,
             dirty_dsts: Vec::new(),
@@ -349,19 +366,46 @@ impl RankState {
             self.queues.push_incoming(msg);
         } else {
             debug_assert_eq!(self.part.owner(dst), self.peers[slot as usize]);
-            // Chaos runs reserve header space up front so `flush_peer` can
-            // frame in place without shifting the payload.
-            let hdr = if self.chaos.is_some() { reliable::HEADER_LEN } else { 0 };
-            let (buf, n) = &mut self.outbox[slot as usize];
-            if buf.is_empty() {
-                self.dirty_dsts.push(slot);
-                buf.resize(hdr, 0);
-            }
-            wire::encode(&msg, self.wire, buf);
-            *n += 1;
-            self.prof.bytes_sent += self.wire.size_of(&payload) as u64;
-            if buf.len() - hdr >= self.config.max_msg_size {
-                self.flush_peer(slot as usize);
+            let si = slot as usize;
+            if self.wire == WireFormat::TemplateV2 {
+                // Frame codec: stage the structured message and defer all
+                // encoding — and `bytes_sent` accounting — to `flush_peer`,
+                // where the descriptor table and delta chain see the whole
+                // frame. The per-message `size_of` estimate only drives
+                // the flush threshold.
+                let est_now = {
+                    let (msgs, est) = &mut self.staged[si];
+                    if msgs.is_empty() {
+                        self.dirty_dsts.push(slot);
+                        *est = 2; // frame header: src rank + descriptor count
+                    }
+                    msgs.push(msg);
+                    *est += self.wire.size_of(&payload);
+                    *est
+                };
+                self.outbox[si].1 += 1;
+                if est_now >= self.config.max_msg_size {
+                    self.flush_peer(si);
+                }
+            } else {
+                // Chaos runs reserve header space up front so `flush_peer`
+                // can frame in place without shifting the payload.
+                let hdr = if self.chaos.is_some() { reliable::HEADER_LEN } else { 0 };
+                let (buf, n) = &mut self.outbox[si];
+                if buf.is_empty() {
+                    self.dirty_dsts.push(slot);
+                    buf.resize(hdr, 0);
+                }
+                wire::encode(&msg, self.wire, buf)
+                    .expect("per-message codec feasibility-checked by prepare_run");
+                *n += 1;
+                self.prof.bytes_sent += self.wire.size_of(&payload) as u64;
+                if self.config.capture_frames {
+                    self.staged[si].0.push(msg);
+                }
+                if buf.len() - hdr >= self.config.max_msg_size {
+                    self.flush_peer(si);
+                }
             }
         }
     }
@@ -386,7 +430,12 @@ impl RankState {
     /// [`ProfileCounters::buf_alloc`] record the hit rate.
     fn flush_peer(&mut self, slot: usize) {
         let hdr = if self.chaos.is_some() { reliable::HEADER_LEN } else { 0 };
-        if self.outbox[slot].0.len() <= hdr {
+        let v2 = self.wire == WireFormat::TemplateV2;
+        if v2 {
+            if self.staged[slot].0.is_empty() {
+                return;
+            }
+        } else if self.outbox[slot].0.len() <= hdr {
             return;
         }
         let dst = self.peers[slot];
@@ -396,9 +445,38 @@ impl RankState {
         } else {
             self.prof.buf_alloc += 1;
         }
-        let (buf, n) = &mut self.outbox[slot];
-        let mut bytes = std::mem::replace(buf, replacement);
-        let n_msgs = std::mem::replace(n, 0);
+        let (mut bytes, n_msgs);
+        if v2 {
+            // v2 sends never touched the byte outbox: the pooled buffer
+            // becomes the frame buffer directly and the staged stream is
+            // encoded in one pass (pool recycling still one get per flush).
+            bytes = replacement;
+            debug_assert!(bytes.is_empty(), "pool buffers arrive cleared");
+            bytes.resize(hdr, 0);
+            let (msgs, est) = &mut self.staged[slot];
+            let payload_len = wire::encode_frame_v2(msgs, self.rank, &self.part, &mut bytes)
+                .expect("v2 codec feasibility-checked by prepare_run");
+            n_msgs = std::mem::replace(&mut self.outbox[slot].1, 0);
+            debug_assert_eq!(n_msgs as usize, msgs.len());
+            // Actual frame bytes are only known here; sends deliberately
+            // skipped the estimate, so bytes_sent == bytes_decoded exactly.
+            self.prof.bytes_sent += payload_len as u64;
+            *est = 0;
+            if self.config.capture_frames {
+                let msgs = std::mem::take(msgs);
+                self.captured.push(wire::CapturedFrame { src: self.rank, dst, msgs });
+            } else {
+                msgs.clear();
+            }
+        } else {
+            let (buf, n) = &mut self.outbox[slot];
+            bytes = std::mem::replace(buf, replacement);
+            n_msgs = std::mem::replace(n, 0);
+            if self.config.capture_frames {
+                let msgs = std::mem::take(&mut self.staged[slot].0);
+                self.captured.push(wire::CapturedFrame { src: self.rank, dst, msgs });
+            }
+        }
         self.prof.flushes += 1;
         if self.config.record_timeline {
             self.timeline.push(FlushEvent {
@@ -544,8 +622,12 @@ impl RankState {
     fn decode_payload(&mut self, buf: &[u8]) -> Result<()> {
         self.prof.bytes_decoded += buf.len() as u64;
         self.prof.decode_batches += 1;
-        let n = wire::decode_into(buf, self.wire, &mut self.queues)
-            .map_err(|e| anyhow!("rank {}: {e}", self.rank))?;
+        let n = if self.wire == WireFormat::TemplateV2 {
+            wire::decode_frame_v2_into(buf, self.rank, &self.part, &mut self.queues)
+        } else {
+            wire::decode_into(buf, self.wire, &mut self.queues)
+        }
+        .map_err(|e| anyhow!("rank {}: {e}", self.rank))?;
         self.prof.msgs_decoded += n;
         if self.trace.is_some() {
             self.trace_ev(EventKind::Recv, n, buf.len() as u64, 0);
@@ -850,7 +932,7 @@ mod tests {
         // Encode from r0 to r1 manually.
         let mut buf = Vec::new();
         let msg = Message::new(0, r1.csr.first_vertex(), Payload::Accept);
-        wire::encode(&msg, r0.wire, &mut buf);
+        wire::encode(&msg, r0.wire, &mut buf).unwrap();
         r1.read_buffer(&buf).unwrap();
         assert_eq!(r1.prof.msgs_decoded, 1);
         assert_eq!(r1.queues.total_len(), 1);
@@ -904,6 +986,112 @@ mod tests {
         r1.read_buffer(&buf).unwrap();
         assert_eq!(r1.prof.dup_dropped, 1);
         assert_eq!(r1.queues.total_len(), 3, "exactly-once delivery");
+    }
+
+    /// First cross-rank adjacency entry from rank 0 towards rank 1.
+    fn find_cross(r: &RankState, part: &Partition) -> (VertexId, usize) {
+        for row in 0..r.csr.rows() {
+            let v = r.csr.vertex_of(row);
+            for (i, nbr, _) in r.csr.neighbours(v) {
+                if part.owner(nbr) == 1 {
+                    return (v, i);
+                }
+            }
+        }
+        panic!("scale-6 random graph must have cross edges");
+    }
+
+    #[test]
+    fn v2_remote_send_stages_and_flushes_whole_frames() {
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = Partition::block(g.n_vertices, 2);
+        let mut cfg = GhsConfig { n_ranks: 2, ..GhsConfig::default() };
+        cfg.wire_format = WireFormat::TemplateV2;
+        cfg.max_msg_size = 7; // estimate: 2 header + 3 x 2 per short msg = 8
+        let mut r0 = RankState::new(0, &g, part.clone(), &cfg, IdentityCodec::ProcId);
+        let mut r1 = RankState::new(1, &g, part.clone(), &cfg, IdentityCodec::ProcId);
+        let (v, adj) = find_cross(&r0, &part);
+        r0.send(v, adj, Payload::Accept);
+        r0.send(v, adj, Payload::Accept);
+        assert!(r0.flushed.is_empty(), "6-byte estimate under the 7-byte cap");
+        assert_eq!(r0.prof.bytes_sent, 0, "v2 accounts bytes at flush, not per send");
+        assert_eq!(r0.pending_local(), 2, "staged messages count as pending");
+        r0.send(v, adj, Payload::Accept);
+        assert_eq!(r0.flushed.len(), 1, "estimate crossed the cap -> early flush");
+        let (dst, buf, n) = r0.flushed.pop().unwrap();
+        assert_eq!((dst, n), (1, 3));
+        assert_eq!(r0.prof.bytes_sent, buf.len() as u64, "actual frame bytes");
+        // The frame decodes back to the exact logical stream.
+        let msgs = wire::decode_frame_v2(&buf, 1, &part).unwrap();
+        assert_eq!(msgs.len(), 3);
+        let dst_v = r0.csr.col(adj);
+        for m in &msgs {
+            assert_eq!((m.src, m.dst, m.payload), (v, dst_v, Payload::Accept));
+        }
+        // And the receiving rank's batch path lands it in the queues with
+        // exact byte accounting (bytes_sent == bytes_decoded).
+        r1.read_buffer(&buf).unwrap();
+        assert_eq!(r1.prof.msgs_decoded, 3);
+        assert_eq!(r1.prof.bytes_decoded, r0.prof.bytes_sent);
+        assert_eq!(r1.queues.total_len(), 3);
+    }
+
+    #[test]
+    fn v2_chaos_flush_composes_with_reliable_header() {
+        use crate::ghs::fault::FaultConfig;
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = Partition::block(g.n_vertices, 2);
+        let cfg = GhsConfig {
+            n_ranks: 2,
+            wire_format: WireFormat::TemplateV2,
+            faults: Some(FaultConfig::default()),
+            ..GhsConfig::default()
+        };
+        let mut r0 = RankState::new(0, &g, part.clone(), &cfg, IdentityCodec::ProcId);
+        let mut r1 = RankState::new(1, &g, part.clone(), &cfg, IdentityCodec::ProcId);
+        let (v, adj) = find_cross(&r0, &part);
+        for _ in 0..3 {
+            r0.send(v, adj, Payload::Accept);
+        }
+        r0.flush_one(1);
+        let (dst, buf, n) = r0.flushed.pop().expect("flush produced a frame");
+        assert_eq!((dst, n), (1, 3));
+        let h = reliable::parse_header(&buf).expect("checksum-valid header over v2 payload");
+        assert_eq!((h.seq, h.src, h.n_msgs), (0, 0, 3));
+        assert_eq!(r0.prof.bytes_sent as usize, buf.len() - reliable::HEADER_LEN);
+        // Receiver: checksum verifies, v2 payload decodes after the header.
+        r1.read_buffer(&buf).unwrap();
+        assert_eq!(r1.prof.msgs_decoded, 3);
+        assert_eq!(r1.queues.total_len(), 3);
+        // A corrupted payload byte must be caught by the frame checksum
+        // before the v2 decoder ever sees it.
+        let mut evil = buf.clone();
+        *evil.last_mut().unwrap() ^= 0x40;
+        r1.read_buffer(&evil).unwrap();
+        assert_eq!(r1.prof.corrupt_dropped, 1, "checksum catches the flip");
+        assert_eq!(r1.queues.total_len(), 3, "nothing new delivered");
+    }
+
+    #[test]
+    fn capture_frames_records_logical_streams_on_v1_wire() {
+        let (g, _) = preprocess(&generate(GraphFamily::Random, 6, 3));
+        let part = Partition::block(g.n_vertices, 2);
+        let cfg = GhsConfig { n_ranks: 2, capture_frames: true, ..GhsConfig::default() };
+        let mut r = RankState::new(0, &g, part.clone(), &cfg, IdentityCodec::ProcId);
+        let (v, adj) = find_cross(&r, &part);
+        r.send(v, adj, Payload::Accept);
+        r.send(v, adj, Payload::Reject);
+        r.flush_one(1);
+        assert_eq!(r.captured.len(), 1);
+        let f = &r.captured[0];
+        assert_eq!((f.src, f.dst), (0, 1));
+        assert_eq!(f.msgs.len(), 2);
+        assert_eq!(f.msgs[0].payload, Payload::Accept);
+        assert_eq!(f.msgs[1].payload, Payload::Reject);
+        // The byte path is untouched: same wire bytes as without capture.
+        let (_, buf, n) = r.flushed.pop().unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(buf.len(), 20, "two 10-byte proc-id short messages");
     }
 
     #[test]

@@ -264,6 +264,13 @@ pub struct GhsRun {
     /// Quality report of the partition this run executed under (vertex /
     /// edge balance, edge cut — correlate with `sim` comm costs).
     pub partition: PartitionStats,
+    /// Captured logical frames (only populated when
+    /// `GhsConfig::capture_frames` is set, or always on the v2 wire):
+    /// every flushed aggregated buffer's message stream, pre-framing and
+    /// pre-fault-injection, in flush order per rank. Feed to the codec
+    /// bake-off harness (`coordinator::codecbench`) to re-encode the exact
+    /// trace under every candidate format.
+    pub frames: Vec<crate::ghs::wire::CapturedFrame>,
     /// Flight-recorder tracks (only populated when `GhsConfig::trace` is
     /// set): one event ring per rank, plus one per scheduler worker on
     /// the async engine. Feed to `obs::timeline::fragment_timeline` or

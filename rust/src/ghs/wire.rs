@@ -1,6 +1,7 @@
 //! Wire encodings (paper §3.5, "Messages Length Optimization").
 //!
-//! Three formats, selectable for the Fig 2 ablation:
+//! Four formats, selectable for the Fig 2 ablation and the codec-bench
+//! bake-off:
 //!
 //! * **Naive** — the base version: a fixed 32-byte struct for every message.
 //! * **Compact + special_id** — packed 16-bit header (3 b type, 8 b level,
@@ -13,9 +14,25 @@
 //!   `special_id` is replaced by the 8-bit minimal owning process rank →
 //!   80 / 152 bits ("As a result short and long messages are 80 and 152
 //!   bits size respectively").
+//! * **Template v2** — the §3.5 compression taken to its logical end
+//!   (ROADMAP item 3): a *frame* codec rather than a per-message codec.
+//!   Both endpoints know the partition, so every per-message field the
+//!   (src-rank, dst-rank, msg-type) descriptor determines moves off the
+//!   wire: the frame header names the source rank once, a per-frame
+//!   descriptor table names each distinct packed header (type + level +
+//!   state) once, and a run of K same-descriptor messages pays one
+//!   packed selector + run-length byte for all K. Vertex ids shrink to
+//!   LEB128
+//!   zigzag-deltas of *local row indices* (the `(rank, row) <-> vertex`
+//!   bijection of [`Partition::local_index`] / [`Partition::vertex_of`]),
+//!   with the delta state shared across the whole frame. Long messages
+//!   keep the proc-id 9-byte weight tail (8 B ordered bits + 8-bit tie),
+//!   so v2 inherits the proc-id feasibility precondition. See
+//!   [`encode_frame_v2`] for the byte layout.
 //!
-//! All three formats are byte-aligned per message (10 / 19 / 26 / 32 bytes),
-//! so aggregated buffers decode as a simple sequential stream.
+//! The three v1 formats are byte-aligned per message (10 / 19 / 26 / 32
+//! bytes), so aggregated buffers decode as a simple sequential stream;
+//! v2 frames decode as a single stateful walk ([`decode_frame_v2_into`]).
 
 use crate::ghs::message::{pack_meta, Message, Payload, META_MASK};
 use crate::ghs::queues::RankQueues;
@@ -40,6 +57,16 @@ pub enum DecodeError {
     Truncated { at: usize, need: usize, have: usize },
     /// A message header carries a tag outside the seven GHS types.
     BadTag { at: usize, tag: u8 },
+    /// An encode-side field exceeds its wire width: the 8-bit proc-id tie
+    /// cannot hold `tie`. Previously a `debug_assert!` — a release build
+    /// would silently truncate the tiebreak and corrupt fragment
+    /// identities; now it is a structured error on the encode path.
+    TieOverflow { tie: u64 },
+    /// A structurally invalid frame: a field decodes but violates a frame
+    /// invariant (descriptor table bounds, partition row range, varint
+    /// width, frame-only codec misuse). `what` names the violated
+    /// invariant; `at` is the byte offset of the offending field.
+    Malformed { at: usize, what: &'static str },
 }
 
 impl std::fmt::Display for DecodeError {
@@ -51,6 +78,12 @@ impl std::fmt::Display for DecodeError {
             ),
             DecodeError::BadTag { at, tag } => {
                 write!(f, "invalid message tag {tag} at byte {at} (valid tags are 0..=6)")
+            }
+            DecodeError::TieOverflow { tie } => {
+                write!(f, "proc-id tie {tie} exceeds the 8-bit wire field (max 254 + sentinel)")
+            }
+            DecodeError::Malformed { at, what } => {
+                write!(f, "malformed wire frame at byte {at}: {what}")
             }
         }
     }
@@ -67,10 +100,24 @@ pub enum WireFormat {
     CompactSpecialId,
     /// Packed header; long messages carry the 8-bit min-owner rank.
     CompactProcId,
+    /// Frame codec: template headers + LEB128 zigzag-delta local ids.
+    /// Encode/decode go through [`encode_frame_v2`] /
+    /// [`decode_frame_v2_into`]; the per-message `encode` / `decode_into`
+    /// entry points reject this format with a structured error.
+    TemplateV2,
 }
 
 impl WireFormat {
     /// Encoded size in bytes of a message with the given payload.
+    ///
+    /// For the per-message v1 formats this is exact. For `TemplateV2` the
+    /// true size is only known at frame encode time (descriptor sharing +
+    /// delta widths), so this returns the *estimate* that drives the flush
+    /// threshold and per-send trace events: 2 bytes short (group-byte
+    /// amortization + two 1-byte deltas is the steady state) and 11 long
+    /// (2 + the 9-byte weight tail). Actual `bytes_sent` accounting for v2
+    /// happens at flush from the encoded frame length, so
+    /// `bytes_sent == bytes_decoded` still holds exactly.
     pub fn size_of(&self, payload: &Payload) -> usize {
         match self {
             WireFormat::Naive => 32,
@@ -86,6 +133,13 @@ impl WireFormat {
                     19 // 152 bits
                 } else {
                     10 // 80 bits
+                }
+            }
+            WireFormat::TemplateV2 => {
+                if payload.is_long() {
+                    11 // estimate: 2 + 9-byte weight tail
+                } else {
+                    2 // estimate: amortized group header + two short deltas
                 }
             }
         }
@@ -142,16 +196,32 @@ pub fn per_process_weights_unique(g: &EdgeList, part: &Partition) -> bool {
 
 const INF_TIE8: u64 = 0xFF;
 
-/// Encode `msg` into `buf` (appending). Returns bytes written.
-pub fn encode(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) -> usize {
+/// Encode `msg` into `buf` (appending). Returns bytes written, or a
+/// structured error: [`DecodeError::TieOverflow`] when a proc-id tie does
+/// not fit its 8-bit field (release builds used to truncate silently
+/// behind a `debug_assert!`), or [`DecodeError::Malformed`] for the
+/// frame-only `TemplateV2` format, which has no per-message encoding —
+/// use [`encode_frame_v2`]. On error nothing is appended to `buf`.
+pub fn encode(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) -> Result<usize, DecodeError> {
     let before = buf.len();
     match fmt {
         WireFormat::Naive => encode_naive(msg, buf),
-        WireFormat::CompactSpecialId | WireFormat::CompactProcId => encode_compact(msg, fmt, buf),
+        WireFormat::CompactSpecialId | WireFormat::CompactProcId => {
+            if let Err(e) = encode_compact(msg, fmt, buf) {
+                buf.truncate(before);
+                return Err(e);
+            }
+        }
+        WireFormat::TemplateV2 => {
+            return Err(DecodeError::Malformed {
+                at: 0,
+                what: "TemplateV2 is a frame codec; use encode_frame_v2",
+            });
+        }
     }
     let written = buf.len() - before;
     debug_assert_eq!(written, fmt.size_of(&msg.payload));
-    written
+    Ok(written)
 }
 
 fn payload_fields(p: &Payload) -> (u8, Level, u8, Option<FragmentId>) {
@@ -192,7 +262,7 @@ fn encode_naive(msg: &Message, buf: &mut Vec<u8>) {
 // reserved), so encoding is direct little-endian byte writes. The layout
 // is bit-identical to the BitWriter-based reference encoder, which the
 // `direct_codec_matches_bitpacked_reference` test asserts.
-fn encode_compact(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
+fn encode_compact(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) -> Result<(), DecodeError> {
     let (tag, level, state, wf) = payload_fields(&msg.payload);
     let header: u16 = pack_meta(tag, level, state);
     buf.extend_from_slice(&header.to_le_bytes());
@@ -203,13 +273,24 @@ fn encode_compact(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
         buf.extend_from_slice(&weight.weight_bits().to_le_bytes());
         match fmt {
             WireFormat::CompactProcId => {
-                let tie = if weight.is_infinite() { INF_TIE8 } else { weight.special_id() };
-                debug_assert!(tie <= 0xFF, "proc-id tie {tie} exceeds 8 bits");
-                buf.push(tie as u8);
+                buf.push(tie8_of(&weight)?);
             }
             _ => buf.extend_from_slice(&weight.special_id().to_le_bytes()),
         }
     }
+    Ok(())
+}
+
+/// The 8-bit proc-id tie of a weight (infinity maps to the `0xFF`
+/// sentinel). A tie that does not fit is a structured error — feasibility
+/// normally guarantees ranks ≤ 256, but the guard must hold in release
+/// builds too, not only behind `debug_assert!`.
+fn tie8_of(weight: &FragmentId) -> Result<u8, DecodeError> {
+    let tie = if weight.is_infinite() { INF_TIE8 } else { weight.special_id() };
+    if tie > 0xFF {
+        return Err(DecodeError::TieOverflow { tie });
+    }
+    Ok(tie as u8)
 }
 
 /// Reference encoder via the generic bit packer (kept for the layout
@@ -238,10 +319,11 @@ fn encode_compact_bitpacked(msg: &Message, fmt: WireFormat, buf: &mut Vec<u8>) {
     buf.extend_from_slice(&w.into_bytes());
 }
 
-/// Reconstruct a weight field from its wire parts (the proc-id codec
-/// reserves tie `0xFF` + infinite bits for the infinity sentinel).
-fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
-    if fmt == WireFormat::CompactProcId
+/// Reconstruct a weight field from its wire parts (the proc-id codec —
+/// and v2, which inherits its 9-byte weight tail — reserves tie `0xFF` +
+/// infinite bits for the infinity sentinel).
+pub(crate) fn decode_weight(wbits: u64, tie: u64, fmt: WireFormat) -> FragmentId {
+    if matches!(fmt, WireFormat::CompactProcId | WireFormat::TemplateV2)
         && tie == INF_TIE8
         && wbits == f64_to_ordered_bits(f64::INFINITY)
     {
@@ -325,6 +407,12 @@ pub fn decode_into(
                 queues.push_raw(src, dst, header, weight);
                 n += 1;
             }
+        }
+        WireFormat::TemplateV2 => {
+            return Err(DecodeError::Malformed {
+                at: 0,
+                what: "TemplateV2 is a frame codec; use decode_frame_v2_into",
+            });
         }
     }
     Ok(n)
@@ -424,6 +512,13 @@ impl Iterator for Decoder<'_> {
                 };
                 Some(Ok(Message::new(src, dst, assemble(tag, level, state, weight))))
             }
+            WireFormat::TemplateV2 => {
+                self.at = self.buf.len();
+                Some(Err(DecodeError::Malformed {
+                    at,
+                    what: "TemplateV2 is a frame codec; use decode_frame_v2",
+                }))
+            }
         }
     }
 }
@@ -432,6 +527,393 @@ impl Iterator for Decoder<'_> {
 /// slots' flattened form via [`Payload::from_meta`]).
 fn assemble(tag: u8, level: Level, state: u8, weight: FragmentId) -> Payload {
     Payload::from_meta(pack_meta(tag, level, state), weight)
+}
+
+// ---------------------------------------------------------------------------
+// Template v2 frame codec (ROADMAP item 3).
+// ---------------------------------------------------------------------------
+
+/// Maximum descriptor-table entries per v2 frame. A GHS run has at most
+/// 7 tags × a handful of live levels per flush window, so 12 slots cover
+/// the common case; frames with more distinct packed headers fall back to
+/// the lossless [`V2_ESCAPE`] inline-header groups. Must stay below 15:
+/// table selectors ride the low nibble of the packed group byte, with
+/// `0xF` reserved for the escape.
+pub const V2_MAX_DESCRIPTORS: usize = 12;
+
+/// Group-byte selector nibble that escapes to an inline varint meta (used
+/// when the descriptor table is full). Table selectors are `0..n_desc`,
+/// so the escape is unambiguous (`n_desc <= 12 < 0xF`).
+pub const V2_ESCAPE: u8 = 0xF;
+
+/// Group-byte length nibble signalling a run longer than 15: the actual
+/// run length is `16 + varint` read after the group byte (and after the
+/// escape meta, if present).
+pub const V2_RUN_EXT: u8 = 0xF;
+
+/// Append `v` as an unsigned LEB128 varint. Returns bytes written (1–10).
+pub fn write_varint(mut v: u64, buf: &mut Vec<u8>) -> usize {
+    let mut n = 0usize;
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        n += 1;
+        if v == 0 {
+            buf.push(byte);
+            return n;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read an unsigned LEB128 varint at byte offset `at`. Returns
+/// `(value, bytes consumed)`.
+pub fn read_varint(buf: &[u8], at: usize) -> Result<(u64, usize), DecodeError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in buf[at..].iter().enumerate() {
+        if shift >= 64 {
+            return Err(DecodeError::Malformed { at, what: "varint exceeds 64 bits" });
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok((v, i + 1));
+        }
+        shift += 7;
+    }
+    Err(DecodeError::Truncated { at: buf.len(), need: 1, have: 0 })
+}
+
+/// Zigzag-map a signed delta to an unsigned varint-friendly value.
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// One logical outbound frame captured at flush time (`GhsConfig::
+/// capture_frames`): the exact ordered message stream rank `src` handed
+/// the transport for rank `dst`, before reliability framing or fault
+/// injection. The codec-bench harness re-encodes these streams in every
+/// candidate format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapturedFrame {
+    /// Sending rank.
+    pub src: u32,
+    /// Receiving rank.
+    pub dst: u32,
+    /// Messages in send (FIFO) order.
+    pub msgs: Vec<Message>,
+}
+
+/// Per-frame byte breakdown of a v2 encode, for the codec-bench table.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct V2FrameStats {
+    /// Frame header: the packed src-rank/descriptor-count varint.
+    pub header_bytes: usize,
+    /// Descriptor table entries.
+    pub desc_bytes: usize,
+    /// Packed group bytes, run-length extensions, and inline-escape metas.
+    pub group_bytes: usize,
+    /// Zigzag-delta LEB128 local-id pairs.
+    pub id_bytes: usize,
+    /// 9-byte long-message weight tails.
+    pub weight_bytes: usize,
+}
+
+impl V2FrameStats {
+    /// Total encoded bytes.
+    pub fn total(&self) -> usize {
+        self.header_bytes + self.desc_bytes + self.group_bytes + self.id_bytes + self.weight_bytes
+    }
+
+    /// Accumulate another frame's breakdown.
+    pub fn add(&mut self, o: &V2FrameStats) {
+        self.header_bytes += o.header_bytes;
+        self.desc_bytes += o.desc_bytes;
+        self.group_bytes += o.group_bytes;
+        self.id_bytes += o.id_bytes;
+        self.weight_bytes += o.weight_bytes;
+    }
+}
+
+/// Encode one v2 frame — the ordered message stream from `src_rank` to a
+/// single peer — appending to `buf`. Returns bytes written.
+///
+/// Layout (after any transport/reliability header, which is *not* part of
+/// the frame payload):
+///
+/// ```text
+/// varint(src_rank << 4 | n_desc)       // n_desc = 0 ..= V2_MAX_DESCRIPTORS
+/// n_desc × varint(meta)                // packed headers, first-appearance order
+/// groups until end of buffer:
+///   u8 group byte:
+///     low nibble  = selector           // 0..n_desc → table[sel]; 0xF → inline meta
+///     high nibble = K − 1              // run length 1..15; 0xF → extension
+///   [varint(meta)   if selector nibble == 0xF]
+///   [varint(K − 16) if length nibble == 0xF]
+///   K × body:
+///     varint(zigzag(src_local − prev_src))   // sender-local row index
+///     varint(zigzag(dst_local − prev_dst))   // receiver-local row index
+///     [8 B weight bits LE + 1 B tie, if tag ∈ {Initiate, Test, Report}]
+/// ```
+///
+/// Groups are run-length encoded over *consecutive* same-meta messages, so
+/// message order — and therefore per-edge FIFO — is preserved exactly.
+/// The delta state (`prev_src`, `prev_dst`, both starting at 0) is shared
+/// across groups within the frame and reset per frame, so frame byte
+/// counts do not depend on inter-frame order. Requires every `msg.src` to
+/// be owned by `src_rank` and every `msg.dst` by one single peer rank —
+/// the per-peer outbox guarantees this; both endpoints then reconstruct
+/// global vertex ids from the shared partition. The weight tail is the
+/// proc-id 8-bit tie (with the `0xFF` infinity sentinel), so v2 is only
+/// selected when proc-id feasibility holds; a wider tie is a structured
+/// [`DecodeError::TieOverflow`] and leaves `buf` unchanged past its
+/// original length.
+pub fn encode_frame_v2(
+    msgs: &[Message],
+    src_rank: u32,
+    part: &Partition,
+    buf: &mut Vec<u8>,
+) -> Result<usize, DecodeError> {
+    encode_frame_v2_stats(msgs, src_rank, part, buf).map(|(n, _)| n)
+}
+
+/// [`encode_frame_v2`] variant that also returns the per-section byte
+/// breakdown (codec-bench reporting).
+pub fn encode_frame_v2_stats(
+    msgs: &[Message],
+    src_rank: u32,
+    part: &Partition,
+    buf: &mut Vec<u8>,
+) -> Result<(usize, V2FrameStats), DecodeError> {
+    let before = buf.len();
+    let mut st = V2FrameStats::default();
+
+    // Descriptor table: distinct packed headers in first-appearance order.
+    // Linear scan is fine — the table is at most 12 entries.
+    let mut table: Vec<u16> = Vec::new();
+    for m in msgs {
+        let (meta, _) = m.payload.to_meta();
+        if table.len() < V2_MAX_DESCRIPTORS && !table.contains(&meta) {
+            table.push(meta);
+        }
+    }
+    // The descriptor count rides the low nibble of the src-rank varint
+    // (n_desc ≤ 12 < 16), so the whole frame header is one byte for
+    // ranks 0..7 — and tiny frames dominate real traces.
+    st.header_bytes += write_varint(((src_rank as u64) << 4) | table.len() as u64, buf);
+    for &meta in &table {
+        st.desc_bytes += write_varint(meta as u64, buf);
+    }
+
+    let (mut prev_src, mut prev_dst) = (0i64, 0i64);
+    let mut i = 0usize;
+    while i < msgs.len() {
+        let meta = msgs[i].payload.to_meta().0;
+        let mut k = 1usize;
+        while i + k < msgs.len() && msgs[i + k].payload.to_meta().0 == meta {
+            k += 1;
+        }
+        // Selector and run length share one byte; runs past 15 spill the
+        // remainder into an extension varint (K = 16 + ext). Single-message
+        // frames dominate real traces, so this byte is the whole group
+        // header in the common case.
+        let kcap = (k - 1).min(V2_RUN_EXT as usize) as u8;
+        match table.iter().position(|&t| t == meta) {
+            Some(sel) => {
+                buf.push(sel as u8 | (kcap << 4));
+                st.group_bytes += 1;
+            }
+            None => {
+                // Table overflow: lossless inline-header escape.
+                buf.push(V2_ESCAPE | (kcap << 4));
+                st.group_bytes += 1 + write_varint(meta as u64, buf);
+            }
+        }
+        if kcap == V2_RUN_EXT {
+            st.group_bytes += write_varint((k - 16) as u64, buf);
+        }
+        for m in &msgs[i..i + k] {
+            debug_assert_eq!(part.owner(m.src), src_rank, "frame src owned by sender");
+            let src_local = part.local_index(m.src) as i64;
+            let dst_local = part.local_index(m.dst) as i64;
+            st.id_bytes += write_varint(zigzag(src_local - prev_src), buf);
+            st.id_bytes += write_varint(zigzag(dst_local - prev_dst), buf);
+            prev_src = src_local;
+            prev_dst = dst_local;
+            if m.payload.is_long() {
+                let weight = m.payload.to_meta().1;
+                buf.extend_from_slice(&weight.weight_bits().to_le_bytes());
+                match tie8_of(&weight) {
+                    Ok(t) => buf.push(t),
+                    Err(e) => {
+                        buf.truncate(before);
+                        return Err(e);
+                    }
+                }
+                st.weight_bytes += 9;
+            }
+        }
+        i += k;
+    }
+    debug_assert_eq!(buf.len() - before, st.total());
+    Ok((buf.len() - before, st))
+}
+
+/// Walk a v2 frame, handing each decoded message's flattened fields to
+/// `sink`. Shared core of [`decode_frame_v2_into`] (hot path, straight
+/// into queue slots) and [`decode_frame_v2`] (reference, materializes
+/// [`Message`]s). `self_rank` is the receiving rank — the frame only
+/// carries receiver-local row indices, so decode is position-dependent by
+/// design. Every field is validated: rank and row ranges against the
+/// partition, metas against the 12-bit header space, tags against the
+/// seven GHS types.
+fn walk_frame_v2(
+    buf: &[u8],
+    self_rank: u32,
+    part: &Partition,
+    mut sink: impl FnMut(VertexId, VertexId, u16, FragmentId),
+) -> Result<u64, DecodeError> {
+    let mut at = 0usize;
+    let (hdr, n) = read_varint(buf, at)?;
+    let (src_rank, n_desc) = (hdr >> 4, hdr & 0xF);
+    if src_rank >= part.n_ranks() as u64 {
+        return Err(DecodeError::Malformed { at, what: "v2 source rank outside partition" });
+    }
+    if n_desc as usize > V2_MAX_DESCRIPTORS {
+        return Err(DecodeError::Malformed { at, what: "v2 descriptor table too large" });
+    }
+    at += n;
+    let src_rank = src_rank as u32;
+    let mut table = [0u16; V2_MAX_DESCRIPTORS];
+    for slot in table.iter_mut().take(n_desc as usize) {
+        let (meta, n) = read_varint(buf, at)?;
+        *slot = check_meta(meta, at)?;
+        at += n;
+    }
+    let n_src = part.n_local(src_rank) as i64;
+    let n_dst = part.n_local(self_rank) as i64;
+    let (mut prev_src, mut prev_dst) = (0i64, 0i64);
+    let mut count = 0u64;
+    while at < buf.len() {
+        let group_at = at;
+        let gb = buf[at];
+        let sel = gb & 0x0F;
+        let kcap = gb >> 4;
+        at += 1;
+        let meta = if sel == V2_ESCAPE {
+            let (meta, n) = read_varint(buf, at)?;
+            let meta = check_meta(meta, at)?;
+            at += n;
+            meta
+        } else {
+            if sel as u64 >= n_desc {
+                return Err(DecodeError::Malformed {
+                    at: group_at,
+                    what: "v2 group selector outside descriptor table",
+                });
+            }
+            table[sel as usize]
+        };
+        let k = if kcap == V2_RUN_EXT {
+            let (ext, n) = read_varint(buf, at)?;
+            at += n;
+            16u64.checked_add(ext).ok_or(DecodeError::Malformed {
+                at: group_at,
+                what: "v2 group run length overflows",
+            })?
+        } else {
+            kcap as u64 + 1
+        };
+        let is_long = matches!((meta & 0b111) as u8, 1 | 2 | 5);
+        for _ in 0..k {
+            let (ds, n) = read_varint(buf, at)?;
+            at += n;
+            let (dd, n) = read_varint(buf, at)?;
+            at += n;
+            prev_src = prev_src
+                .checked_add(unzigzag(ds))
+                .ok_or(DecodeError::Malformed { at, what: "v2 source delta overflows" })?;
+            prev_dst = prev_dst
+                .checked_add(unzigzag(dd))
+                .ok_or(DecodeError::Malformed { at, what: "v2 dest delta overflows" })?;
+            if prev_src < 0 || prev_src >= n_src {
+                return Err(DecodeError::Malformed {
+                    at,
+                    what: "v2 source row outside sender partition",
+                });
+            }
+            if prev_dst < 0 || prev_dst >= n_dst {
+                return Err(DecodeError::Malformed {
+                    at,
+                    what: "v2 dest row outside receiver partition",
+                });
+            }
+            let src = part.vertex_of(src_rank, prev_src as u32);
+            let dst = part.vertex_of(self_rank, prev_dst as u32);
+            let weight = if is_long {
+                if buf.len() - at < 9 {
+                    return Err(DecodeError::Truncated { at, need: 9, have: buf.len() - at });
+                }
+                let wbits = u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+                let tie = buf[at + 8] as u64;
+                at += 9;
+                decode_weight(wbits, tie, WireFormat::TemplateV2)
+            } else {
+                EdgeWeight::infinity()
+            };
+            sink(src, dst, meta, weight);
+            count += 1;
+        }
+    }
+    Ok(count)
+}
+
+/// Validate a decoded meta: must fit the 12-bit packed header and carry
+/// one of the seven GHS tags. A meta with bits above [`META_MASK`] is the
+/// wire image of "level 256" — out of the 8-bit level range — and is
+/// rejected structurally rather than silently masked.
+fn check_meta(meta: u64, at: usize) -> Result<u16, DecodeError> {
+    if meta > META_MASK as u64 {
+        return Err(DecodeError::Malformed { at, what: "v2 meta exceeds the 12-bit header" });
+    }
+    let tag = (meta & 0b111) as u8;
+    if tag > 6 {
+        return Err(DecodeError::BadTag { at, tag });
+    }
+    Ok(meta as u16)
+}
+
+/// Batch-decode a whole v2 frame straight into queue slots (the v2
+/// counterpart of [`decode_into`]). Returns messages decoded.
+pub fn decode_frame_v2_into(
+    buf: &[u8],
+    self_rank: u32,
+    part: &Partition,
+    queues: &mut RankQueues,
+) -> Result<u64, DecodeError> {
+    walk_frame_v2(buf, self_rank, part, |src, dst, meta, weight| {
+        queues.push_raw(src, dst, meta, weight);
+    })
+}
+
+/// Reference v2 decoder: materializes the frame's [`Message`] stream
+/// (codec-bench round-trip gate and tests; the hot path is
+/// [`decode_frame_v2_into`]).
+pub fn decode_frame_v2(
+    buf: &[u8],
+    self_rank: u32,
+    part: &Partition,
+) -> Result<Vec<Message>, DecodeError> {
+    let mut out = Vec::new();
+    walk_frame_v2(buf, self_rank, part, |src, dst, meta, weight| {
+        out.push(Message::new(src, dst, Payload::from_meta(meta, weight)));
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -487,7 +969,7 @@ mod tests {
                 let mut buf = Vec::new();
                 let mut expect_bytes = 0;
                 for m in &msgs {
-                    expect_bytes += encode(m, fmt, &mut buf);
+                    expect_bytes += encode(m, fmt, &mut buf).unwrap();
                 }
                 assert_eq!(buf.len(), expect_bytes);
                 let decoded: Vec<Message> =
@@ -516,7 +998,7 @@ mod tests {
                 let msgs = sample_messages(g, fmt == WireFormat::CompactProcId);
                 for m in &msgs {
                     let mut direct = Vec::new();
-                    encode(m, fmt, &mut direct);
+                    encode(m, fmt, &mut direct).unwrap();
                     let mut reference = Vec::new();
                     encode_compact_bitpacked(m, fmt, &mut reference);
                     assert_eq!(direct, reference, "{m:?}");
@@ -568,7 +1050,7 @@ mod tests {
                 for payload in payloads {
                     let m = Message::new(src, dst, payload);
                     let mut buf = Vec::new();
-                    let written = encode(&m, fmt, &mut buf);
+                    let written = encode(&m, fmt, &mut buf).unwrap();
                     assert_eq!(written, fmt.size_of(&payload), "size accounting");
                     let out: Vec<Message> =
                         Decoder::new(&buf, fmt).collect::<Result<_, _>>().unwrap();
@@ -597,7 +1079,7 @@ mod tests {
             ];
             let mut buf = Vec::new();
             for m in &msgs {
-                encode(m, fmt, &mut buf);
+                encode(m, fmt, &mut buf).unwrap();
             }
             let out: Vec<Message> = Decoder::new(&buf, fmt).collect::<Result<_, _>>().unwrap();
             assert_eq!(out, msgs, "{fmt:?}");
@@ -616,7 +1098,7 @@ mod tests {
                     let msgs = sample_messages(g, fmt == WireFormat::CompactProcId);
                     let mut buf = Vec::new();
                     for m in &msgs {
-                        encode(m, fmt, &mut buf);
+                        encode(m, fmt, &mut buf).unwrap();
                     }
                     // Reference: per-message decode + route.
                     let mut want = RankQueues::new(separate_test);
@@ -649,8 +1131,9 @@ mod tests {
         let w = EdgeWeight::with_tie(0.5, 3);
         for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
             let mut buf = Vec::new();
-            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
-            encode(&Message::new(2, 3, Payload::Test { level: 4, fragment: w }), fmt, &mut buf);
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf).unwrap();
+            encode(&Message::new(2, 3, Payload::Test { level: 4, fragment: w }), fmt, &mut buf)
+                .unwrap();
             for cut in 1..buf.len() {
                 let short = &buf[..cut];
                 let mut q = RankQueues::new(false);
@@ -677,8 +1160,8 @@ mod tests {
     fn bad_tags_are_rejected_with_offset() {
         // Tag 7 is the one reserved value in the 3-bit tag space.
         let mut naive = Vec::new();
-        encode(&Message::new(1, 2, Payload::Accept), WireFormat::Naive, &mut naive);
-        encode(&Message::new(2, 3, Payload::Reject), WireFormat::Naive, &mut naive);
+        encode(&Message::new(1, 2, Payload::Accept), WireFormat::Naive, &mut naive).unwrap();
+        encode(&Message::new(2, 3, Payload::Reject), WireFormat::Naive, &mut naive).unwrap();
         naive[32] = 7; // second message's tag byte
         let mut q = RankQueues::new(false);
         assert_eq!(
@@ -688,7 +1171,7 @@ mod tests {
         assert_eq!(q.main_len(), 1, "messages before the bad one already landed");
         for fmt in [WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
             let mut buf = Vec::new();
-            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf).unwrap();
             buf[0] |= 0b111; // force tag bits to 7
             let mut q = RankQueues::new(false);
             assert_eq!(decode_into(&buf, fmt, &mut q), Err(DecodeError::BadTag { at: 0, tag: 7 }));
@@ -704,7 +1187,7 @@ mod tests {
         // decoded fine.
         for fmt in [WireFormat::Naive, WireFormat::CompactSpecialId, WireFormat::CompactProcId] {
             let mut buf = Vec::new();
-            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf);
+            encode(&Message::new(1, 2, Payload::Accept), fmt, &mut buf).unwrap();
             let good = buf.len();
             buf.extend_from_slice(&[0u8; 3]);
             let mut q = RankQueues::new(false);
@@ -730,7 +1213,7 @@ mod tests {
     fn infinity_report_survives_procid() {
         let m = Message::new(1, 2, Payload::Report { best: EdgeWeight::infinity() });
         let mut buf = Vec::new();
-        encode(&m, WireFormat::CompactProcId, &mut buf);
+        encode(&m, WireFormat::CompactProcId, &mut buf).unwrap();
         let out: Vec<Message> =
             Decoder::new(&buf, WireFormat::CompactProcId).collect::<Result<_, _>>().unwrap();
         match out[0].payload {
@@ -791,5 +1274,373 @@ mod tests {
         let spec = PartitionSpec::Explicit(std::sync::Arc::new(vec![0, 1, 0, 1]));
         let part = Partition::build(&spec, &g, 4, 2).unwrap();
         assert!(!per_process_weights_unique(&g, &part));
+    }
+
+    // -- Template v2 ------------------------------------------------------
+
+    /// Random single-peer message stream: every src owned by `src_rank`,
+    /// every dst owned by `dst_rank` (the per-peer outbox invariant).
+    fn v2_frame(
+        g: &mut crate::util::minitest::Gen,
+        part: &Partition,
+        src_rank: u32,
+        dst_rank: u32,
+        n: usize,
+    ) -> Vec<Message> {
+        let mut msgs = Vec::new();
+        for _ in 0..n {
+            let srow = g.u64_below(part.n_local(src_rank) as u64) as u32;
+            let drow = g.u64_below(part.n_local(dst_rank) as u64) as u32;
+            let src = part.vertex_of(src_rank, srow);
+            let dst = part.vertex_of(dst_rank, drow);
+            let level = g.u64_below(256) as Level;
+            let w = EdgeWeight::with_tie(g.f64(), g.u64_below(0xFF));
+            let payload = match g.u64_below(8) {
+                0 => Payload::Connect { level },
+                1 => Payload::Initiate {
+                    level,
+                    fragment: w,
+                    state: if g.bool(0.5) { VertexState::Find } else { VertexState::Found },
+                },
+                2 => Payload::Test { level, fragment: w },
+                3 => Payload::Accept,
+                4 => Payload::Reject,
+                5 => Payload::Report { best: w },
+                6 => Payload::Report { best: EdgeWeight::infinity() },
+                _ => Payload::ChangeCore,
+            };
+            msgs.push(Message::new(src, dst, payload));
+        }
+        msgs
+    }
+
+    #[test]
+    fn varint_zigzag_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, 0x3FFF, 0x4000, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            let n = write_varint(v, &mut buf);
+            assert_eq!(n, buf.len());
+            assert_eq!(read_varint(&buf, 0).unwrap(), (v, n), "varint {v}");
+            // Truncating the last byte must be a structured error.
+            let err = read_varint(&buf[..n - 1], 0);
+            if n > 1 {
+                assert!(matches!(err, Err(DecodeError::Truncated { .. })), "{v}");
+            }
+        }
+        props("zigzag roundtrip", 300, |g| {
+            let v = g.u64() as i64;
+            assert_eq!(unzigzag(zigzag(v)), v);
+        });
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    /// ≥1k-message traces across partition shapes: v2 frames round-trip
+    /// exactly through both the reference decoder and the batch
+    /// queue-slot path, and the batch path matches the v1 reference
+    /// stream (the differential gate).
+    #[test]
+    fn v2_frames_roundtrip_and_match_v1_payload_stream() {
+        props("v2 roundtrip + differential", 150, |g| {
+            let n_vertices = g.usize_in(4, 2000) as u32;
+            let ranks = (1 + g.u64_below(16) as u32).min(n_vertices);
+            let part = Partition::block(n_vertices, ranks);
+            let src_rank = g.u64_below(ranks as u64) as u32;
+            let dst_rank = g.u64_below(ranks as u64) as u32;
+            let n = g.usize_in(0, 30);
+            let msgs = v2_frame(g, &part, src_rank, dst_rank, n);
+
+            let mut buf = Vec::new();
+            let written = encode_frame_v2(&msgs, src_rank, &part, &mut buf).unwrap();
+            assert_eq!(written, buf.len());
+
+            // Reference decode reproduces the exact message stream.
+            let out = decode_frame_v2(&buf, dst_rank, &part).unwrap();
+            assert_eq!(out, msgs);
+
+            // Batch decode lands the same queue contents as the v1
+            // per-message reference path over the same Payload stream.
+            let mut want = RankQueues::new(false);
+            for m in &msgs {
+                want.push_incoming(*m);
+            }
+            let mut got = RankQueues::new(false);
+            let decoded = decode_frame_v2_into(&buf, dst_rank, &part, &mut got).unwrap();
+            assert_eq!(decoded as usize, msgs.len());
+            while let Some(a) = got.pop_main() {
+                assert_eq!(a, want.pop_main().unwrap());
+            }
+            while let Some(a) = got.pop_test() {
+                assert_eq!(a, want.pop_test().unwrap());
+            }
+            assert!(want.pop_main().is_none() && want.pop_test().is_none());
+        });
+    }
+
+    #[test]
+    fn v2_boundary_rows_and_levels_roundtrip() {
+        // Adversarial id distribution: a near-u32::MAX vertex space, rows
+        // at both partition edges (so deltas swing ±n_local), level at the
+        // 8-bit maximum, ties at the sentinel edge.
+        use crate::ghs::types::MAX_WIRE_LEVEL;
+        let part = Partition::block(u32::MAX - 4, 2);
+        let (last0, last1) = (part.n_local(0) - 1, part.n_local(1) - 1);
+        let w = EdgeWeight::with_tie(1.0 - f64::EPSILON, 0xFE);
+        let msgs = vec![
+            Message::new(
+                part.vertex_of(0, 0),
+                part.vertex_of(1, last1),
+                Payload::Connect { level: MAX_WIRE_LEVEL },
+            ),
+            Message::new(
+                part.vertex_of(0, last0),
+                part.vertex_of(1, 0),
+                Payload::Test { level: MAX_WIRE_LEVEL, fragment: w },
+            ),
+            Message::new(
+                part.vertex_of(0, 0),
+                part.vertex_of(1, last1),
+                Payload::Report { best: EdgeWeight::infinity() },
+            ),
+            Message::new(part.vertex_of(0, last0), part.vertex_of(1, last1), Payload::Accept),
+        ];
+        let mut buf = Vec::new();
+        encode_frame_v2(&msgs, 0, &part, &mut buf).unwrap();
+        assert_eq!(decode_frame_v2(&buf, 1, &part).unwrap(), msgs);
+    }
+
+    #[test]
+    fn v2_empty_single_and_uniform_frames() {
+        let part = Partition::block(64, 4);
+        // Empty frame: one packed src-rank/descriptor-count varint.
+        let mut buf = Vec::new();
+        let (n, st) = encode_frame_v2_stats(&[], 3, &part, &mut buf).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(st.header_bytes, 1);
+        assert_eq!(st.total(), 1);
+        assert_eq!(decode_frame_v2(&buf, 0, &part).unwrap(), vec![]);
+
+        // Single-message frame.
+        let single = vec![Message::new(part.vertex_of(1, 5), part.vertex_of(2, 7), Payload::Accept)];
+        let mut buf = Vec::new();
+        let (_, st) = encode_frame_v2_stats(&single, 1, &part, &mut buf).unwrap();
+        assert_eq!(st.desc_bytes, 1, "one descriptor");
+        assert_eq!(st.group_bytes, 1, "one packed selector + run-length byte");
+        assert_eq!(decode_frame_v2(&buf, 2, &part).unwrap(), single);
+
+        // All-same-type frame: the descriptor is paid once for the whole
+        // run — one table entry, one packed group byte for K messages.
+        let uniform: Vec<Message> = (0..10)
+            .map(|i| {
+                Message::new(part.vertex_of(1, i), part.vertex_of(2, i), Payload::Connect {
+                    level: 20, // meta 160: exercises a 2-byte descriptor varint
+                })
+            })
+            .collect();
+        let mut buf = Vec::new();
+        let (_, st) = encode_frame_v2_stats(&uniform, 1, &part, &mut buf).unwrap();
+        assert_eq!(st.desc_bytes, 2, "one 12-bit descriptor (2-byte varint)");
+        assert_eq!(st.group_bytes, 1, "one packed byte: selector 0, length 10");
+        assert_eq!(decode_frame_v2(&buf, 2, &part).unwrap(), uniform);
+
+        // A run past 15 spills into the length-extension varint: the
+        // packed byte's length nibble saturates and K − 16 follows it.
+        let long_run: Vec<Message> = (0..16)
+            .map(|i| Message::new(part.vertex_of(1, i), part.vertex_of(2, i), Payload::Accept))
+            .collect();
+        let mut buf = Vec::new();
+        let (_, st) = encode_frame_v2_stats(&long_run, 1, &part, &mut buf).unwrap();
+        assert_eq!(st.group_bytes, 2, "packed byte + varint(16 − 16) extension");
+        assert_eq!(decode_frame_v2(&buf, 2, &part).unwrap(), long_run);
+    }
+
+    #[test]
+    fn v2_descriptor_overflow_falls_back_to_inline_headers_losslessly() {
+        // 20 distinct (tag, level) headers overflow the 12-entry table;
+        // the overflowing groups escape to inline metas and the frame
+        // still round-trips exactly.
+        let part = Partition::block(256, 2);
+        let msgs: Vec<Message> = (0..20u32)
+            .map(|i| {
+                Message::new(part.vertex_of(0, i), part.vertex_of(1, i), Payload::Connect {
+                    level: i as Level,
+                })
+            })
+            .collect();
+        let mut buf = Vec::new();
+        encode_frame_v2(&msgs, 0, &part, &mut buf).unwrap();
+        assert!(
+            buf.contains(&V2_ESCAPE),
+            "the 13th+ distinct header must use the inline escape"
+        );
+        assert_eq!(decode_frame_v2(&buf, 1, &part).unwrap(), msgs);
+    }
+
+    #[test]
+    fn v2_truncation_at_every_byte_is_structured() {
+        let part = Partition::block(64, 2);
+        let w = EdgeWeight::with_tie(0.5, 3);
+        let msgs = vec![
+            Message::new(part.vertex_of(0, 1), part.vertex_of(1, 2), Payload::Accept),
+            Message::new(
+                part.vertex_of(0, 3),
+                part.vertex_of(1, 4),
+                Payload::Test { level: 200, fragment: w },
+            ),
+            Message::new(part.vertex_of(0, 5), part.vertex_of(1, 6), Payload::ChangeCore),
+        ];
+        let mut buf = Vec::new();
+        encode_frame_v2(&msgs, 0, &part, &mut buf).unwrap();
+        for cut in 0..buf.len() {
+            // Never a panic; either a structured error or a clean prefix
+            // decode of strictly fewer messages (a cut at a group
+            // boundary, the v2 analogue of a v1 frame boundary).
+            match decode_frame_v2(&buf[..cut], 1, &part) {
+                Ok(out) => assert!(out.len() < msgs.len(), "cut={cut}"),
+                Err(
+                    DecodeError::Truncated { .. } | DecodeError::Malformed { .. },
+                ) => {}
+                Err(e) => panic!("cut={cut}: unexpected {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rejects_malformed_frames_structurally() {
+        let part = Partition::block(64, 2);
+        // Source rank outside the partition (packed header: rank 7, no
+        // descriptors).
+        let mut buf = Vec::new();
+        write_varint(7 << 4, &mut buf);
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 source rank outside partition", .. })
+        ));
+        // Descriptor count above V2_MAX_DESCRIPTORS in the header nibble.
+        let mut buf = Vec::new();
+        write_varint(15, &mut buf); // rank 0, n_desc 15 > 12
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 descriptor table too large", .. })
+        ));
+        // Descriptor meta above the 12-bit header space: the wire image of
+        // "level 256" — one past MAX_WIRE_LEVEL — must be rejected, not
+        // silently masked to level 0. (The satellite boundary regression:
+        // level 255 round-trips in `v2_boundary_rows_and_levels_roundtrip`,
+        // level 256 is structurally impossible to decode.)
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint((META_MASK as u64) + 1, &mut buf); // level bit 8 set
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 meta exceeds the 12-bit header", .. })
+        ));
+        // Reserved tag 7 in a descriptor.
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint(7, &mut buf);
+        assert!(matches!(decode_frame_v2(&buf, 0, &part), Err(DecodeError::BadTag { tag: 7, .. })));
+        // Group selector nibble outside the descriptor table (the packed
+        // byte's low nibble; length nibble 0 = run of 1).
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint(pack_meta(3, 0, 0) as u64, &mut buf);
+        buf.push(1); // only selector 0 exists
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 group selector outside descriptor table", .. })
+        ));
+        // A run-length extension far past the buffer must fail with a
+        // structured Truncated at the first missing body — never a hang
+        // or an allocation proportional to the claimed count.
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint(pack_meta(3, 0, 0) as u64, &mut buf);
+        buf.push(V2_RUN_EXT << 4); // selector 0, length nibble 0xF
+        write_varint(u64::MAX - 16, &mut buf); // K = u64::MAX
+        assert!(matches!(decode_frame_v2(&buf, 0, &part), Err(DecodeError::Truncated { .. })));
+        // And an extension that overflows K = 16 + ext is Malformed.
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint(pack_meta(3, 0, 0) as u64, &mut buf);
+        buf.push(V2_RUN_EXT << 4);
+        write_varint(u64::MAX, &mut buf);
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 group run length overflows", .. })
+        ));
+        // Row outside the sender's partition slice.
+        let mut buf = Vec::new();
+        write_varint(1, &mut buf); // packed header: rank 0, one descriptor
+        write_varint(pack_meta(3, 0, 0) as u64, &mut buf);
+        buf.push(0); // group byte: selector 0, run of 1
+        write_varint(zigzag(part.n_local(0) as i64), &mut buf); // one past the end
+        write_varint(zigzag(0), &mut buf);
+        assert!(matches!(
+            decode_frame_v2(&buf, 0, &part),
+            Err(DecodeError::Malformed { what: "v2 source row outside sender partition", .. })
+        ));
+    }
+
+    #[test]
+    fn tie_overflow_is_a_structured_error_in_release_builds() {
+        // A 9-bit tie cannot ride the 8-bit proc-id field: both the
+        // per-message and the frame encoder must fail structurally (the
+        // old debug_assert! silently truncated in release builds), and
+        // must leave the output buffer untouched.
+        let part = Partition::block(64, 2);
+        let wide = EdgeWeight::with_tie(0.5, 0x100);
+        let m = Message::new(part.vertex_of(0, 1), part.vertex_of(1, 1), Payload::Report {
+            best: wide,
+        });
+        let mut buf = vec![0xAA];
+        assert_eq!(
+            encode(&m, WireFormat::CompactProcId, &mut buf),
+            Err(DecodeError::TieOverflow { tie: 0x100 })
+        );
+        assert_eq!(buf, vec![0xAA], "failed encode must not leave partial bytes");
+        assert_eq!(
+            encode_frame_v2(&[m], 0, &part, &mut buf),
+            Err(DecodeError::TieOverflow { tie: 0x100 })
+        );
+        assert_eq!(buf, vec![0xAA]);
+        // The boundary itself is fine: tie 0xFE encodes, and finite-weight
+        // tie 0xFF round-trips (the sentinel also requires infinite bits).
+        for tie in [0xFEu64, 0xFF] {
+            let ok = EdgeWeight::with_tie(0.5, tie);
+            let m = Message::new(part.vertex_of(0, 1), part.vertex_of(1, 1), Payload::Report {
+                best: ok,
+            });
+            let mut buf = Vec::new();
+            encode_frame_v2(&[m], 0, &part, &mut buf).unwrap();
+            assert_eq!(decode_frame_v2(&buf, 1, &part).unwrap(), vec![m], "tie {tie}");
+        }
+    }
+
+    #[test]
+    fn per_message_entry_points_reject_v2() {
+        let m = Message::new(1, 2, Payload::Accept);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            encode(&m, WireFormat::TemplateV2, &mut buf),
+            Err(DecodeError::Malformed { .. })
+        ));
+        assert!(buf.is_empty());
+        let mut q = RankQueues::new(false);
+        assert!(matches!(
+            decode_into(&[0u8; 4], WireFormat::TemplateV2, &mut q),
+            Err(DecodeError::Malformed { .. })
+        ));
+        let got: Vec<_> = Decoder::new(&[0u8; 4], WireFormat::TemplateV2).collect();
+        assert_eq!(got.len(), 1);
+        assert!(matches!(got[0], Err(DecodeError::Malformed { .. })));
+    }
+
+    #[test]
+    fn v2_size_estimate_is_documented_2_and_11() {
+        let w = EdgeWeight::with_tie(0.5, 3);
+        assert_eq!(WireFormat::TemplateV2.size_of(&Payload::Accept), 2);
+        assert_eq!(WireFormat::TemplateV2.size_of(&Payload::Test { level: 1, fragment: w }), 11);
     }
 }

@@ -33,7 +33,7 @@ COMMANDS
   run           Run the GHS engine on a generated or loaded graph
                   --family rmat|ssca2|random  --scale N  --ranks N
                   --engine sequential|threaded|async  --workers N (async pool)
-                  --search linear|binary|hash  --wire naive|compact|procid
+                  --search linear|binary|hash  --wire naive|compact|procid|v2
                   --partition block|degree|hub|multilevel[:eps]|file:<path>
                   --hash-sizing paper|pow2 (mask-indexed hash table)
                   --no-test-queue  --input FILE  --threaded  --verify
@@ -72,6 +72,12 @@ COMMANDS
   fig5          Paper Fig 5 (weak scaling on 32 nodes)
   perf-baseline Deterministic counter snapshot (bytes/probes/postponement
                   orderings pinned by tests/perf_regression.rs)
+  codec-bench   Codec bake-off: capture a seeded run's message trace, re-encode
+                  it under all 7 candidate wire formats, gate the size ordering
+                  (naive > compact ≥ procid ≥ v2, v2 ≤ 0.75 × procid)
+                  --scale N [default 9]  --ranks N [default 16]
+                  --json (machine-readable)  --write (results/codec_baseline.*
+                  + results/BENCH_codec.json)  --quiet
   dynamic-baseline  Serving-cost counters per 1k-op stream (RMAT-10, 16 ranks)
   sweep-search  Paper §4.1 (linear vs binary vs hash lookup)
   ablation-test-queue  Paper §3.4 (Test-queue relaxation on/off, RMAT+SSCA2)
@@ -111,6 +117,7 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&args),
         "accel" => cmd_accel(&args),
         "baseline" => cmd_baseline(&args),
+        "codec-bench" => cmd_codec_bench(&args),
         "table2" | "fig2" | "fig3" | "fig4" | "fig5" | "perf-baseline" | "sweep-search"
         | "ablation-test-queue" | "dynamic-baseline" | "experiments" => cmd_experiments(&args),
         "help" | "--help" | "-h" => {
@@ -216,6 +223,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "naive" => cfg.wire_format = WireFormat::Naive,
         "compact" => cfg.wire_format = WireFormat::CompactSpecialId,
         "procid" => cfg.wire_format = WireFormat::CompactProcId,
+        "v2" | "template" => cfg.wire_format = WireFormat::TemplateV2,
         w => bail!("bad --wire {w}"),
     }
     cfg.partition = parse_partition_flag(args)?;
@@ -786,6 +794,39 @@ fn cmd_accel(args: &Args) -> Result<()> {
     } else {
         bail!("forest mismatch vs Kruskal")
     }
+}
+
+/// The codec bake-off driver (`results/codec_baseline.md` +
+/// `results/BENCH_codec.json`; CI perf-smoke gate). Exits nonzero when
+/// the size-ordering gates fail.
+fn cmd_codec_bench(args: &Args) -> Result<()> {
+    args.expect_flags(&["scale", "ranks", "json", "write", "quiet"])?;
+    let scale = args.get_num("scale", 9u32)?;
+    let ranks = args.get_num("ranks", 16u32)?;
+    if !args.get_bool("quiet") && !args.get_bool("json") {
+        eprintln!("codec-bench: capturing RMAT-{scale} × {ranks} ranks trace...");
+    }
+    let b = ghs_mst::coordinator::codecbench::run_bakeoff(scale, ranks)?;
+    if args.get_bool("json") {
+        print!("{}", b.to_json());
+    } else {
+        println!("{}", b.table().to_markdown());
+    }
+    if args.get_bool("write") {
+        let path = b.write()?;
+        eprintln!("  [exp] wrote {path:?} (+ .csv, BENCH_codec.json)");
+    }
+    b.check_gates()?;
+    if !args.get_bool("json") {
+        let procid = b.bytes_of("compact-proc-id");
+        let v2 = b.bytes_of("template-v2");
+        println!(
+            "codec gate OK: template-v2 {v2} bytes vs compact-proc-id {procid} \
+             ({:.1}% smaller, need ≥25%)",
+            100.0 * (1.0 - v2 as f64 / procid as f64)
+        );
+    }
+    Ok(())
 }
 
 fn cmd_baseline(args: &Args) -> Result<()> {

@@ -199,6 +199,35 @@ fn sequential_ledger_reconciles_exactly() {
     assert_eq!(fs.degraded, 0);
 }
 
+/// TemplateV2 chaos cell: the v2 frame payload rides the same 16-byte
+/// reliability header, so a lossy/corrupting interconnect must recover to
+/// the Kruskal forest with the checksum catching every flipped v2 frame
+/// *before* the frame decoder runs (the decoder's structural validation is
+/// the defense-in-depth tier behind it).
+#[test]
+fn v2_wire_recovers_under_drop_and_corrupt_faults() {
+    for &kind in &ENGINE_KINDS {
+        for (label, clean) in &chaos_graphs() {
+            let tag = format!("{kind:?}/v2-chaos/{label}");
+            let fc =
+                FaultConfig::parse("drop=0.05,dup=0.02,reorder=4,corrupt=0.01,seed=19").unwrap();
+            let mut cfg = conformance_config(WireFormat::TemplateV2, SearchStrategy::Hash, MATRIX_RANKS);
+            cfg.faults = Some(fc);
+            let run = run_engine(kind, clean, cfg);
+            verify_against_oracle(&tag, clean, &run);
+            let fs = run.faults.as_ref().unwrap_or_else(|| panic!("{tag}: no fault stats"));
+            assert_eq!(fs.degraded, 0, "{tag}: every fault recovered");
+            assert!(
+                run.profile.corrupt_dropped >= fs.corrupts,
+                "{tag}: the checksum must catch every corrupted v2 frame \
+                 ({} corrupted, {} rejected)",
+                fs.corrupts,
+                run.profile.corrupt_dropped
+            );
+        }
+    }
+}
+
 /// Scheduler-side faults: worker slowdowns perturb the async schedule but
 /// the reliability layer (and the scheduler's quiescence accounting) must
 /// still converge on the oracle forest, with the slowdowns counted.

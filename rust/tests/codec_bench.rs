@@ -1,0 +1,89 @@
+//! Codec bake-off regression gate (ROADMAP item 3): the §3.5 compression
+//! claim measured, not asserted by hand. One seeded RMAT trace is captured
+//! and re-encoded under every candidate wire format; the size ordering
+//! (Naive > CompactSpecialId ≥ CompactProcId ≥ TemplateV2) and the ≥25 %
+//! v2-vs-ProcId win are CI gates, like `perf_regression.rs`.
+//!
+//! Scale defaults to 9 in the PR path and is raised by the nightly soak
+//! lane via `GHS_SCALE` (the workload seed is fixed by `Workload::new`,
+//! so every number here is replayable bit-for-bit). The same table is
+//! reproduced lock-step by `python/tools/pipeline_check.py` and snapshotted
+//! in `results/codec_baseline.md` + `results/BENCH_codec.json`.
+
+use std::sync::OnceLock;
+
+use ghs_mst::coordinator::codecbench::{run_bakeoff, BakeOff, CANDIDATES};
+
+fn scale() -> u32 {
+    std::env::var("GHS_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(9)
+}
+
+/// The RMAT-9 baseline rank count (matches `ghs-mst codec-bench` defaults).
+const RANKS: u32 = 16;
+
+/// The capture run + 7-way re-encode is deterministic and not free at soak
+/// scale — compute once per test binary, share across tests.
+fn bakeoff() -> &'static BakeOff {
+    static B: OnceLock<BakeOff> = OnceLock::new();
+    B.get_or_init(|| run_bakeoff(scale(), RANKS).unwrap())
+}
+
+#[test]
+fn size_ordering_and_v2_margin_gate() {
+    // Naive > Compact ≥ ProcId ≥ v2, and v2 ≤ 0.75 × ProcId — the
+    // ROADMAP item 3 target, asserted on the measured byte totals.
+    bakeoff().check_gates().unwrap();
+}
+
+#[test]
+fn every_candidate_encodes_and_round_trips() {
+    let b = bakeoff();
+    assert_eq!(b.candidates.len(), CANDIDATES.len());
+    for (c, &name) in b.candidates.iter().zip(CANDIDATES.iter()) {
+        assert_eq!(c.name, name, "report order matches the candidate registry");
+        assert!(c.bytes > 0, "{name} encoded nothing");
+        assert_eq!(
+            c.bytes,
+            c.header_bytes + c.id_bytes + c.weight_bytes,
+            "{name}: byte breakdown must sum to the total"
+        );
+    }
+    assert!(b.n_frames > 0 && b.n_msgs > b.n_frames, "multi-message frames captured");
+}
+
+#[test]
+fn v1_totals_follow_their_fixed_layouts() {
+    // The fixed per-message v1 layouts make the totals exactly predictable
+    // from the trace shape — a drift here means the capture changed, not
+    // the codec.
+    let b = bakeoff();
+    assert_eq!(b.bytes_of("naive"), 32 * b.n_msgs);
+    assert_eq!(b.bytes_of("compact-special-id"), 10 * b.n_msgs + 16 * b.n_long);
+    assert_eq!(b.bytes_of("compact-proc-id"), 10 * b.n_msgs + 9 * b.n_long);
+}
+
+#[test]
+fn bakeoff_is_deterministic_at_gate_scale() {
+    let a = bakeoff();
+    let b = run_bakeoff(scale(), RANKS).unwrap();
+    assert_eq!(a.n_frames, b.n_frames);
+    assert_eq!(a.n_msgs, b.n_msgs);
+    assert_eq!(a.n_long, b.n_long);
+    for (x, y) in a.candidates.iter().zip(&b.candidates) {
+        assert_eq!(x.bytes, y.bytes, "{}: bytes drifted between identical runs", x.name);
+        assert_eq!(x.header_bytes, y.header_bytes, "{}: header bytes drifted", x.name);
+        assert_eq!(x.id_bytes, y.id_bytes, "{}: id bytes drifted", x.name);
+        assert_eq!(x.weight_bytes, y.weight_bytes, "{}: weight bytes drifted", x.name);
+    }
+}
+
+#[test]
+fn json_snapshot_is_machine_readable() {
+    let b = bakeoff();
+    let json = b.to_json();
+    assert!(json.contains(&format!("\"workload\": \"RMAT-{}\"", scale())));
+    assert!(json.contains(&format!("\"n_msgs\": {}", b.n_msgs)));
+    for name in CANDIDATES {
+        assert!(json.contains(&format!("\"name\": \"{name}\"")), "{name} missing from json");
+    }
+}

@@ -14,7 +14,9 @@
 //! 63-cell wire × lookup × graph sub-matrix, so the async scheduler faces
 //! the same oracle wall the other two do — plus a partition axis
 //! {Block, DegreeBalanced, HubScatter, Multilevel, Explicit} with an
-//! edge-cut regression gate, a schedule-randomizing fuzz cell
+//! edge-cut regression gate, a TemplateV2 wire axis ({v2} × 3 engines ×
+//! 7 graph cases with exact byte accounting plus a frame-level
+//! differential encode/decode gate), a schedule-randomizing fuzz cell
 //! (`GHS_FUZZ_SCHED`), forest / rank-sweep / duplicate-weight sweeps)
 //! against the sequential Kruskal oracle, asserting
 //! for every cell: canonical-edge equality, MSF-weight equality, component
@@ -78,6 +80,60 @@ fn full_matrix_conforms_to_kruskal_oracle() {
         }
     });
     assert!(cells >= 150, "conformance matrix covered only {cells} cells (need >= 150)");
+}
+
+/// Wire-axis extension for the v2 frame codec: {TemplateV2} × 3 engines ×
+/// 7 graph families, each cell Kruskal-checked. A separate test fn — the
+/// 27-combo pin above is the frozen v1 matrix; v2 rides its own axis.
+/// Every cell additionally asserts exact byte accounting: v2 charges
+/// `bytes_sent` from the encoded frame length at flush, so sent and
+/// decoded totals must agree to the byte on every engine.
+#[test]
+fn v2_wire_matrix_conforms_to_kruskal_oracle() {
+    let mut cells = 0usize;
+    props("conformance v2 wire matrix", ENGINE_KINDS.len(), |g| {
+        let kind = ENGINE_KINDS[g.case];
+        for (label, clean) in &graph_cases(matrix_scale(), g.u64()) {
+            let cfg =
+                conformance_config(WireFormat::TemplateV2, SearchStrategy::Hash, MATRIX_RANKS);
+            let run = run_engine(kind, clean, cfg);
+            verify_against_oracle(&format!("{kind:?}/TemplateV2/{label}"), clean, &run);
+            assert_eq!(
+                run.profile.bytes_sent, run.profile.bytes_decoded,
+                "{kind:?}/{label}: v2 flush-time byte accounting must match decode"
+            );
+            cells += 1;
+        }
+    });
+    assert_eq!(cells, ENGINE_KINDS.len() * N_GRAPH_CASES, "3 engines x 7 graph cases");
+}
+
+/// Differential encode/decode gate: on every v2 conformance cell the frame
+/// streams a sequential run hands the transport must decode bit-identically
+/// to the v1 `Payload` stream — the captured logical messages re-encoded
+/// through `encode_frame_v2` and decoded back equal the originals exactly,
+/// frame by frame.
+#[test]
+fn v2_frames_decode_bit_identically_to_v1_payload_stream() {
+    use ghs_mst::ghs::wire::{decode_frame_v2, encode_frame_v2};
+    use ghs_mst::graph::partition::Partition;
+    props("conformance v2 differential", 4, |g| {
+        let idx = g.u64_below(N_GRAPH_CASES as u64) as usize;
+        let (label, clean) = graph_case(matrix_scale(), g.u64(), idx);
+        let mut cfg =
+            conformance_config(WireFormat::CompactProcId, SearchStrategy::Hash, MATRIX_RANKS);
+        cfg.capture_frames = true;
+        let run = run_engine(EngineKind::Sequential, &clean, cfg);
+        let n = clean.n_vertices.max(1);
+        let part = Partition::build(&PartitionSpec::Block, &clean, n, MATRIX_RANKS).unwrap();
+        assert!(!run.frames.is_empty(), "{label}: no frames captured");
+        for f in &run.frames {
+            let mut buf = Vec::new();
+            encode_frame_v2(&f.msgs, f.src, &part, &mut buf).unwrap();
+            let back = decode_frame_v2(&buf, f.dst, &part).unwrap();
+            assert_eq!(back, f.msgs, "{label}: v2 round-trip diverged from the v1 stream");
+        }
+    });
 }
 
 /// Partition axis of the matrix: {Block, DegreeBalanced, HubScatter,
